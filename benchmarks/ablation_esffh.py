@@ -1,0 +1,47 @@
+"""ESFF-H component ablation: which of the three fixes buys what, per
+capacity regime (EXPERIMENTS.md §Repro)."""
+from __future__ import annotations
+
+from benchmarks.common import default_trace, emit
+from repro.core import simulate
+from repro.core.esff_h import ESFFH
+
+
+def variant(beta=2.0, lru=True, coldcount=True):
+    class V(ESFFH):
+        pass
+    V.beta = beta
+    V.lru_victim = lru
+    if not coldcount:
+        V._drain_estimate = lambda self, fn_id, window: \
+            super(ESFFH, self)._drain_estimate(fn_id, window)
+    return V()
+
+
+CONFIGS = [
+    ("esff (paper)", dict(beta=1.0, lru=False, coldcount=False)),
+    ("+hysteresis", dict(beta=2.0, lru=False, coldcount=False)),
+    ("+coldcount", dict(beta=2.0, lru=False, coldcount=True)),
+    ("+lru (esff_h)", dict(beta=2.0, lru=True, coldcount=True)),
+]
+
+
+def run(seed: int = 0):
+    rows = []
+    for cap in (8, 16, 32):
+        for name, kw in CONFIGS:
+            tr = default_trace(seed)
+            r = simulate(tr, variant(**kw), cap)
+            rows.append(dict(capacity=cap, variant=name,
+                             mean_response=r.mean_response,
+                             cold_starts=r.server.cold_starts))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows, rows[0].keys())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Shared benchmark machinery: the paper's default evaluation setup and
+CSV emission."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+from typing import Dict, Iterable, List
+
+from repro.core import simulate
+from repro.traces import synth_azure_trace
+
+# Paper §VI-A defaults (scaled for CPU wall-time; full-scale via env)
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+N_REQUESTS = int(30_000 * SCALE)
+N_FUNCTIONS = 200
+CAPACITY = 16
+POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
+            "openwhisk_v2")
+TRACE_KW = dict(utilization=0.2, exec_median=0.1, exec_sigma=1.4,
+                burst_frac=0.3)
+
+
+def default_trace(seed: int = 0, **kw):
+    params = dict(TRACE_KW)
+    params.update(kw)
+    return synth_azure_trace(n_functions=N_FUNCTIONS,
+                             n_requests=N_REQUESTS, seed=seed, **params)
+
+
+def run_policy(trace, policy: str, capacity: int = CAPACITY):
+    return simulate(trace.head(len(trace)), policy, capacity)
+
+
+def emit(rows: List[Dict], header: Iterable[str], out=None) -> None:
+    out = out or sys.stdout
+    w = csv.DictWriter(out, fieldnames=list(header))
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)
+                    for k, v in r.items()})
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    best = float("inf")
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return result, best

@@ -1,0 +1,42 @@
+"""Paper Fig. 5: mean response / slowdown / cold-start time vs edge
+server capacity (8..32) for ESFF and the baselines."""
+from __future__ import annotations
+
+from benchmarks.common import POLICIES, default_trace, emit, run_policy
+
+CAPACITIES = (8, 12, 16, 20, 24, 28, 32)
+
+
+def run(seed: int = 0):
+    rows = []
+    for cap in CAPACITIES:
+        for policy in POLICIES:
+            tr = default_trace(seed)
+            r = run_policy(tr, policy, cap)
+            rows.append(dict(
+                capacity=cap, policy=policy,
+                mean_response=r.mean_response,
+                mean_slowdown=r.mean_slowdown,
+                cold_time_per_request=r.cold_time_per_request,
+                cold_starts=r.server.cold_starts,
+                p99=r.percentile(99),
+            ))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows, rows[0].keys())
+    # the paper's headline: ESFF vs the best baseline per capacity
+    print()
+    for cap in CAPACITIES:
+        here = {r["policy"]: r["mean_response"] for r in rows
+                if r["capacity"] == cap}
+        base = min(v for k, v in here.items()
+                   if k not in ("esff", "esff_h"))
+        gain = 100 * (1 - here["esff"] / base)
+        print(f"# capacity {cap}: ESFF vs best baseline: {gain:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 6: metrics vs workload-intensity ratio (0.6..1.4 interval
+scaling; >1 = lighter load)."""
+from __future__ import annotations
+
+from benchmarks.common import (CAPACITY, POLICIES, default_trace, emit,
+                               run_policy)
+
+RATIOS = (0.6, 0.8, 1.0, 1.2, 1.4)
+
+
+def run(seed: int = 0):
+    rows = []
+    base = default_trace(seed)
+    for ratio in RATIOS:
+        tr = base.scaled(ratio)
+        for policy in POLICIES:
+            r = run_policy(tr, policy, CAPACITY)
+            rows.append(dict(
+                intensity=ratio, policy=policy,
+                mean_response=r.mean_response,
+                mean_slowdown=r.mean_slowdown,
+                cold_time_per_request=r.cold_time_per_request,
+            ))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows, rows[0].keys())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 7: response-time and slowdown CDFs (+P95/P99 table)."""
+from __future__ import annotations
+
+from benchmarks.common import (CAPACITY, POLICIES, default_trace, emit,
+                               run_policy)
+
+
+def run(seed: int = 0, points: int = 20):
+    rows, pct = [], []
+    for policy in POLICIES:
+        tr = default_trace(seed)
+        r = run_policy(tr, policy, CAPACITY)
+        xs, ys = r.cdf("responses", points)
+        for x, y in zip(xs, ys):
+            rows.append(dict(policy=policy, response=float(x),
+                             cdf=float(y)))
+        pct.append(dict(policy=policy,
+                        p50=r.percentile(50), p95=r.percentile(95),
+                        p99=r.percentile(99),
+                        p99_slowdown=r.percentile(99, "slowdowns")))
+    return rows, pct
+
+
+def main():
+    rows, pct = run()
+    emit(pct, pct[0].keys())
+    print()
+    emit(rows, rows[0].keys())
+
+
+if __name__ == "__main__":
+    main()

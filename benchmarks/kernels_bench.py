@@ -1,0 +1,95 @@
+"""Kernel microbenchmarks: wall time per call (interpret mode on CPU —
+correctness-path timing; compiled-TPU numbers come from the roofline)
+plus the XLA-path equivalents for speedup context."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _t(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # compile/warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run():
+    rows = []
+
+    q = jnp.asarray(RNG.normal(size=(1, 512, 8, 128)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 512, 2, 128)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 512, 2, 128)), jnp.float32)
+    rows.append(dict(name="flash_attention_512_pallas_interp",
+                     us_per_call=_t(ops.flash_attention, q, k, v,
+                                    interpret=True),
+                     derived="B1xS512xH8xD128 GQA4"))
+    rref = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    rows.append(dict(name="flash_attention_512_xla_ref",
+                     us_per_call=_t(rref, q, k, v),
+                     derived="same shape, naive softmax"))
+
+    kc = jnp.asarray(RNG.normal(size=(4, 2048, 2, 128)), jnp.float32)
+    vc = jnp.asarray(RNG.normal(size=(4, 2048, 2, 128)), jnp.float32)
+    qd = jnp.asarray(RNG.normal(size=(4, 1, 8, 128)), jnp.float32)
+    rows.append(dict(name="decode_attention_2k_pallas_interp",
+                     us_per_call=_t(ops.decode_attention, qd, kc, vc,
+                                    jnp.int32(2000), interpret=True),
+                     derived="B4xT2048 cache"))
+
+    x = jnp.asarray(RNG.normal(size=(8, 512, 1024)), jnp.float32)
+    w = jnp.ones((1024,), jnp.float32)
+    rows.append(dict(name="rmsnorm_pallas_interp",
+                     us_per_call=_t(ops.rmsnorm, x, w, interpret=True),
+                     derived="(8,512,1024)"))
+    rows.append(dict(name="rmsnorm_xla_ref",
+                     us_per_call=_t(jax.jit(ref.rmsnorm_ref), x, w),
+                     derived="same shape"))
+
+    b, nc, c, h, p, n = 1, 8, 64, 4, 64, 128
+    xs = jnp.asarray(RNG.normal(size=(b, nc, c, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, nc, c, h)), jnp.float32)
+    A = -jnp.ones((h,), jnp.float32)
+    cum = jnp.cumsum(dt * A, axis=2)
+    B = jnp.asarray(RNG.normal(size=(b, nc, c, h, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, nc, c, h, n)), jnp.float32)
+    rows.append(dict(name="ssd_chunk_pallas_interp",
+                     us_per_call=_t(ops.ssd_chunk, xs, dt, cum, B, C,
+                                    interpret=True),
+                     derived=f"b{b} nc{nc} c{c} h{h} p{p} n{n}"))
+
+    F = 65536
+    te = jnp.asarray(RNG.uniform(0.001, 10, F), jnp.float32)
+    tl = jnp.asarray(RNG.uniform(0.5, 1.5, F), jnp.float32)
+    tv = jnp.asarray(RNG.uniform(0.5, 1.5, F), jnp.float32)
+    nw = jnp.asarray(RNG.integers(0, 4, F), jnp.int32)
+    K = jnp.asarray(RNG.integers(0, 3, F), jnp.int32)
+    rows.append(dict(name="frp_select_64k_pallas_interp",
+                     us_per_call=_t(ops.frp_select, te, tl, tv, nw, K,
+                                    1.0, 7, interpret=True),
+                     derived="Azure-fleet 64k functions"))
+    rows.append(dict(name="frp_select_64k_xla_ref",
+                     us_per_call=_t(jax.jit(ref.frp_select_ref), te, tl,
+                                    tv, nw, K, 1.0, 7),
+                     derived="same"))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows, ("name", "us_per_call", "derived"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun.jsonl (so the report regenerates from artifacts)."""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+
+def load(path="results/dryrun.jsonl"):
+    rows = []
+    seen = {}
+    for line in Path(path).read_text().splitlines():
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"])
+        seen[key] = r          # last occurrence wins (reruns)
+    return list(seen.values())
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | lower+compile s | args GB/dev | "
+           "temp GB/dev | collectives (top) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"])):
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"FAIL | - | - | {r['error'][:40]} |")
+            continue
+        m = r["memory"]
+        coll = r["roofline"]["collective_breakdown"]
+        top = sorted(coll.items(), key=lambda kv: -kv[1])[:2]
+        tops = ", ".join(f"{k} {v:.1f}GB" for k, v in top if v > 0.01) \
+            or "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['lower_s']:.0f}+{r['compile_s']:.0f} | "
+            f"{m['argument_size_in_bytes'] / 2**30:.1f} | "
+            f"{m['temp_size_in_bytes'] / 2**30:.1f} | {tops} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="pod16x16"):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO flop | roofline step s | MFU @ roofline |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or "error" in r:
+            continue
+        f = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {f['compute_s']:.4g} | "
+            f"{f['memory_s']:.4g} | {f['collective_s']:.4g} | "
+            f"**{f['dominant']}** | {f['useful_flop_ratio']:.2f} | "
+            f"{f['step_time_s']:.4g} | {f['mfu']:.2e} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else
+                "results/dryrun.jsonl")
+    print("## Dry-run matrix\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

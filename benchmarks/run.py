@@ -1,0 +1,40 @@
+"""Benchmark aggregator — one section per paper table/figure plus kernel
+and simulator microbenches. Prints ``name,us_per_call,derived`` CSV
+blocks; REPRO_BENCH_SCALE scales trace sizes.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "kernels",
+            "simthroughput")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+
+    from benchmarks import (ablation_esffh, fig5_capacity, fig6_intensity,
+                            fig7_cdf, fig8_timeline, kernels_bench,
+                            sim_throughput)
+    mods = dict(fig5=fig5_capacity, fig6=fig6_intensity, fig7=fig7_cdf,
+                fig8=fig8_timeline, ablation=ablation_esffh,
+                kernels=kernels_bench, simthroughput=sim_throughput)
+    for name in SECTIONS:
+        if name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        mods[name].main()
+        print(f"# section {name}: {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

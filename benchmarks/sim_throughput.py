@@ -1,0 +1,64 @@
+"""Scheduler-simulation throughput: Python event engine vs the
+vectorised JAX simulator (single trace + vmap'd parameter sweep)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import simulate
+from repro.core.jax_sim import simulate_esff_jax
+from repro.traces import synth_azure_trace
+
+
+def run():
+    jax.config.update("jax_enable_x64", True)
+    rows = []
+    tr = synth_azure_trace(n_functions=50, n_requests=5_000,
+                           utilization=0.2, seed=2)
+    t0 = time.perf_counter()
+    simulate(tr, "esff", capacity=16)
+    t_py = time.perf_counter() - t0
+    rows.append(dict(name="python_event_engine_5k",
+                     us_per_call=t_py * 1e6,
+                     derived=f"{len(tr) / t_py:.0f} req/s"))
+
+    a = tr.to_arrays()
+    args = (jnp.asarray(a["fn_id"]), jnp.asarray(a["arrival"]),
+            jnp.asarray(a["exec_time"]), jnp.asarray(a["cold_start"]),
+            jnp.asarray(a["evict"]))
+    kw = dict(n_fns=tr.n_functions, capacity=16, queue_cap=1024)
+    jax.block_until_ready(simulate_esff_jax(*args, **kw)["completion"])
+    t0 = time.perf_counter()
+    jax.block_until_ready(simulate_esff_jax(*args, **kw)["completion"])
+    t_jx = time.perf_counter() - t0
+    rows.append(dict(name="jax_sim_5k", us_per_call=t_jx * 1e6,
+                     derived=f"{len(tr) / t_jx:.0f} req/s"))
+
+    # vmap sweep: 8 hysteresis betas in one device call
+    betas = np.linspace(1.0, 3.0, 8)
+
+    def run_beta(beta):
+        return simulate_esff_jax(*args, beta=beta, **kw)["completion"]
+
+    sweep = jax.jit(jax.vmap(run_beta))
+    jax.block_until_ready(sweep(jnp.asarray(betas)))
+    t0 = time.perf_counter()
+    jax.block_until_ready(sweep(jnp.asarray(betas)))
+    t_sw = time.perf_counter() - t0
+    rows.append(dict(
+        name="jax_sim_vmap8_sweep", us_per_call=t_sw * 1e6,
+        derived=f"{8 * len(tr) / t_sw:.0f} req/s aggregate"))
+    return rows
+
+
+def main():
+    rows = run()
+    emit(rows, ("name", "us_per_call", "derived"))
+
+
+if __name__ == "__main__":
+    main()

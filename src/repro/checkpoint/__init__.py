@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
+                                           restore, save)
+
+__all__ = ["Checkpointer", "save", "restore", "latest_step"]

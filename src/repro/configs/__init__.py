@@ -1,0 +1,7 @@
+"""Assigned architecture configs (``--arch <id>``) + the paper's own
+edge-serving scenario config. Each ``<id>.py`` holds the exact published
+configuration; ``ARCHS[name]()`` returns its :class:`ModelConfig`.
+"""
+from repro.configs.registry import ARCHS, SHAPES, get_arch, shape_cells
+
+__all__ = ["ARCHS", "SHAPES", "get_arch", "shape_cells"]

@@ -1,0 +1,23 @@
+"""InternVL2-76B [arXiv:2404.16821]: InternViT frontend STUB + Llama3-70B
+class backbone: 80L, d=8192, 64H (GQA kv=8), d_ff=28672, vocab=128256.
+input_specs provides precomputed ViT patch embeddings (256 prefix
+positions)."""
+from repro.configs.registry import ARCHS
+from repro.models.config import ModelConfig
+
+
+@ARCHS.register("internvl2-76b")
+def internvl2_76b() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        n_patches=256,
+        rope_theta=5e5,
+    )

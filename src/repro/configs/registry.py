@@ -1,0 +1,68 @@
+"""Architecture & input-shape registry.
+
+Shapes (assignment):
+  train_4k     seq_len=4096   global_batch=256   -> train_step
+  prefill_32k  seq_len=32768  global_batch=32    -> prefill_step
+  decode_32k   seq_len=32768  global_batch=128   -> decode_step (1 token)
+  long_500k    seq_len=524288 global_batch=1     -> decode_step (1 token)
+
+``long_500k`` runs only for sub-quadratic archs (ssm / hybrid); quadratic
+full-attention archs skip it (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from repro.models.config import ModelConfig
+from repro.utils.registry import Registry
+
+ARCHS = Registry("architectures")
+
+_ARCH_MODULES = [
+    "internlm2_20b", "qwen3_14b", "qwen1_5_4b", "qwen3_4b", "mamba2_780m",
+    "deepseek_v3_671b", "deepseek_moe_16b", "whisper_tiny", "zamba2_2_7b",
+    "internvl2_76b", "paper_edge",
+]
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _load_all() -> None:
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def get_arch(name: str) -> ModelConfig:
+    _load_all()
+    return ARCHS[name]()
+
+
+def shape_cells(arch: str = None) -> List[Tuple[str, str]]:
+    """All runnable (arch, shape) cells per the assignment rules."""
+    _load_all()
+    names = [a for a in ARCHS.keys() if a != "paper_edge"] \
+        if arch is None else [arch]
+    cells = []
+    for a in names:
+        cfg = ARCHS[a]()
+        for s, sc in SHAPES.items():
+            if s == "long_500k" and not cfg.sub_quadratic:
+                continue   # quadratic attention: skipped per assignment
+            cells.append((a, s))
+    return cells

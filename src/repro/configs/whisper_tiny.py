@@ -1,0 +1,24 @@
+"""Whisper-tiny [arXiv:2212.04356]: 4 encoder + 4 decoder layers, d=384,
+6H, d_ff=1536, vocab=51865, enc-dec with conv frontend STUB (input_specs
+provides precomputed log-mel frame embeddings, 1500 positions)."""
+from repro.configs.registry import ARCHS
+from repro.models.config import ModelConfig
+
+
+@ARCHS.register("whisper-tiny")
+def whisper_tiny() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny",
+        family="encdec",
+        n_layers=8,              # 4 enc + 4 dec
+        enc_layers=4,
+        dec_layers=4,
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=51865,
+        n_enc_positions=1500,
+        norm_eps=1e-5,
+    )

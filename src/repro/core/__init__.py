@@ -1,0 +1,18 @@
+"""Core paper library: SFS problem model, ESFF scheduler, SSFS optimum,
+baselines and the discrete-event simulator."""
+from repro.core import baselines as _baselines  # noqa: F401 (registers)
+from repro.core import esff as _esff            # noqa: F401 (registers)
+from repro.core import esff_h as _esff_h        # noqa: F401 (registers)
+from repro.core.metrics import SimResult
+from repro.core.policy import POLICIES, Policy
+from repro.core.request import FunctionProfile, Request, Trace
+from repro.core.server import EdgeServer, ExecTimeEstimator, Instance
+from repro.core.simulator import simulate
+from repro.core.ssfs import (SSFSFunction, brute_force_best, sequence_cost,
+                             ssfs_schedule)
+
+__all__ = [
+    "POLICIES", "Policy", "SimResult", "FunctionProfile", "Request",
+    "Trace", "EdgeServer", "ExecTimeEstimator", "Instance", "simulate",
+    "SSFSFunction", "brute_force_best", "sequence_cost", "ssfs_schedule",
+]

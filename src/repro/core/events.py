@@ -1,0 +1,57 @@
+"""Discrete-event engine.
+
+A single binary heap of ``(time, priority, seq)`` keys. Priorities order
+simultaneous events so that capacity freed at time t is visible to an
+arrival at the same t:
+
+    EXEC_DONE < COLD_DONE < TIMER < ARRIVAL
+
+``seq`` breaks remaining ties FIFO, keeping runs fully deterministic.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Any, Optional
+
+
+class EventKind(IntEnum):
+    EXEC_DONE = 0   # an instance finished a request       -> FRP hook
+    COLD_DONE = 1   # a (re)initialisation finished        -> instance ready
+    TIMER = 2       # policy-armed timer (OpenWhisk V2 threshold)
+    ARRIVAL = 3     # a request arrives                    -> FCP hook
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    kind: int
+    seq: int
+    payload: Any = field(compare=False, default=None)
+    cancelled: bool = field(compare=False, default=False)
+
+
+class EventQueue:
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+
+    def push(self, time: float, kind: EventKind, payload: Any = None) -> Event:
+        ev = Event(time, int(kind), next(self._seq), payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Optional[Event]:
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if not ev.cancelled:
+                return ev
+        return None
+
+    def __len__(self) -> int:
+        return sum(1 for e in self._heap if not e.cancelled)
+
+    def __bool__(self) -> bool:
+        return any(not e.cancelled for e in self._heap)

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (ShardingRules, Sharder,
+                                        logical_to_pspec, make_sharder,
+                                        param_shardings)
+
+__all__ = ["ShardingRules", "Sharder", "logical_to_pspec", "make_sharder",
+           "param_shardings"]

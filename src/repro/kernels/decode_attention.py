@@ -1,0 +1,110 @@
+"""Flash-decode — single-token GQA attention over a KV cache.
+
+One new query position per sequence attends a (B, T, KVH, D) cache.
+Grid: (batch, kv_heads, n_kv_blocks); the kv axis is the sequential
+reduction carrying online-softmax state for the whole q-head *group*
+(G = H/KVH rows) in VMEM scratch, so the q-head group shares one pass
+over its kv head's cache — the roofline-optimal decode data movement
+(cache read exactly once).
+
+Length masking: positions >= length contribute NEG_INF; the kernel reads
+``length`` from SMEM (scalar prefetch).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, block_k: int, group: int):
+    kj = pl.program_id(2)
+    n_k = pl.num_programs(2)
+    length = len_ref[0]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kj * block_k <= length)   # skip blocks past the length
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bk)
+        pos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (group, block_k), 1)
+        s = jnp.where(pos <= length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 512,
+                     scale=None, interpret: bool = True):
+    """q (B,1,H,D); caches (B,T,KVH,D); length scalar int32.
+    Returns (B,1,H,Dv)."""
+    B, _, H, D = q.shape
+    _, T, KVH, Dv = v_cache.shape
+    G = H // KVH
+    scale = scale or 1.0 / math.sqrt(D)
+    block_k = min(block_k, T)
+    pk = (-T) % block_k
+    kp = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk \
+        else k_cache
+    vp = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk \
+        else v_cache
+    n_k = (T + pk) // block_k
+    # (B, KVH, G, D) query groups; caches (B, KVH, T, D)
+    qg = q[:, 0].reshape(B, KVH, G, D)
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=block_k, group=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j, *_: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv), lambda b, h, j, *_: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Dv), q.dtype),
+        interpret=interpret,
+    )(length, qg, kp, vp)
+    return out.reshape(B, 1, H, Dv)

@@ -1,0 +1,124 @@
+"""Flash attention (prefill/train) — Pallas TPU kernel.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks); the innermost kv axis is
+the sequential reduction dim, carrying the online-softmax state (m, l,
+acc) in VMEM scratch. Block shapes are MXU-aligned (q/kv blocks x
+head_dim, head_dim padded to 128 multiples by the caller). GQA is
+expressed in the k/v BlockSpec index maps (q head h reads kv head
+h // group); no H-wide kv materialisation.
+
+Causal blocks above the diagonal are masked via in-kernel predication
+(pl.when skips the matmul entirely for fully-masked tiles, so the MXU
+work matches exact causal FLOPs).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_k                           # kv padding
+        if causal:
+            mask &= q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip fully-masked tiles: first q row of block qi is qi*bq;
+        # last k col of block kj is kj*bk + bk - 1
+        pl.when(kj * block_k <= qi * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == n_k - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, scale=None, interpret: bool = True):
+    """q (B,S,H,D); k,v (B,T,KVH,D) -> (B,S,H,D). H % KVH == 0."""
+    B, S, H, D = q.shape
+    _, T, KVH, Dv = v.shape
+    G = H // KVH
+    scale = scale or 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    pq = (-S) % block_q
+    pk = (-T) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    # layout: (B, H, S, D) blocks
+    qp = qp.transpose(0, 2, 1, 3)
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+    n_q = (S + pq) // block_q
+    n_k = (T + pk) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, seq_q=S, seq_k=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dv),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S + pq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.transpose(0, 2, 1, 3)[:, :S]

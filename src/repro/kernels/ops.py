@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True in this container (no TPU); on real
+hardware set ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to
+run the compiled kernels.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.rmsnorm import rmsnorm_residual as _rmsnorm_res
+from repro.kernels.sched_weights import frp_select as _frp
+from repro.kernels.ssd_chunk import ssd_chunk_kernel as _ssd
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 512,
+                     interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _decode(q, k_cache, v_cache, length, block_k=block_k,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _rmsnorm(x, weight, eps=eps, block_rows=block_rows,
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm_residual(x, residual, weight, *, eps: float = 1e-6,
+                     block_rows: int = 256, interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _rmsnorm_res(x, residual, weight, eps=eps,
+                        block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, cum, B, C, *, interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssd(x, dt, cum, B, C, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def frp_select(t_e, t_l, t_v, n_w, K, tv_j, self_idx, *,
+               block: int = 1024, interpret: bool = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _frp(t_e, t_l, t_v, n_w, K, tv_j, self_idx, block=block,
+                interpret=interpret)

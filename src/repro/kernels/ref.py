@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the references the
+per-kernel allclose tests sweep against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    B, S, H, D = q.shape
+    _, T, KVH, Dv = v.shape
+    g = H // KVH
+    scale = scale or 1.0 / math.sqrt(D)
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kf) * scale
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, vf).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    B, _, H, D = q.shape
+    _, T, KVH, Dv = v_cache.shape
+    g = H // KVH
+    kf = jnp.repeat(k_cache, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v_cache, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(D)
+    valid = jnp.arange(T) <= length
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, vf).astype(q.dtype)
+
+
+def rmsnorm_ref(x, weight, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * weight
+
+
+def rmsnorm_residual_ref(x, residual, weight, *, eps: float = 1e-6):
+    s = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    var = jnp.mean(jnp.square(s), axis=-1, keepdims=True)
+    normed = (s * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)
+    return normed.astype(x.dtype), s.astype(x.dtype)
+
+
+def ssd_chunk_ref(x, dt, cum, B, C):
+    """Intra-chunk SSD oracle (same shapes as kernels.ssd_chunk)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    cumf = cum.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    c = x.shape[2]
+    diff = cumf[:, :, :, None, :] - cumf[:, :, None, :, :]  # (b,nc,s,t,h)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -jnp.inf)
+    scores = jnp.einsum("bcshn,bcthn->bcsth", Cf, Bf)
+    y = jnp.einsum("bcsth,bcth,bcthp->bcshp",
+                   scores * jnp.exp(diff), dtf, xf)
+    total = cumf[:, :, -1]
+    decay_in = jnp.exp(total[:, :, None, :] - cumf) * dtf
+    S = jnp.einsum("bcthn,bcth,bcthp->bchpn", Bf, decay_in, xf)
+    return y, S
+
+
+def frp_select_ref(t_e, t_l, t_v, n_w, K, tv_j, self_idx):
+    te = jnp.asarray(t_e, jnp.float32)
+    tl = jnp.asarray(t_l, jnp.float32)
+    tv = jnp.asarray(t_v, jnp.float32)
+    nw = jnp.asarray(n_w, jnp.float32)
+    k = jnp.asarray(K, jnp.float32)
+    n_e = nw + 1.0 - (tl + tv_j) * k / jnp.maximum(te, 1e-9)
+    w = te + (tl + tv) * (k + 1.0) / jnp.maximum(n_e, 1e-9)
+    idx = jnp.arange(te.shape[0])
+    valid = (nw > 0) & (n_e > 0) & (idx != self_idx)
+    w = jnp.where(valid, w, 1e30)
+    i = jnp.argmin(w)
+    return w[i], jnp.where(w[i] >= 1e30, -1, i).astype(jnp.int32)

@@ -1,0 +1,100 @@
+"""ESFF FRP candidate selection — the control-plane hot loop as a kernel.
+
+At every request completion, FRP (paper Alg. 3) scans all functions with
+waiting requests, computes the drain estimate n^e_{j',j} (Eq. 7) and the
+candidate weight w_{j'} (Eq. 10), and takes the argmin. At Azure fleet
+scale (~70k functions) and edge event rates this scan dominates the
+scheduler's cycle budget; the kernel fuses the weight computation with a
+blocked argmin reduction (running (min, argmin) carried in VMEM scratch
+across function blocks).
+
+Inputs (F-vectors): t_e (running-mean exec), t_l (cold), t_v (evict),
+n_w (queue lengths), K (instance counts); scalars: t_v_j of the finishing
+instance, current weight w_j. Output: (best weight, best index); callers
+replace iff best weight < w_j (index -1 when none qualifies).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BIG = 1e30
+
+
+def _weights_kernel(scalars_ref, te_ref, tl_ref, tv_ref, nw_ref, k_ref,
+                    best_w_ref, best_i_ref, minw_ref, mini_ref, *,
+                    block: int, n_fns: int):
+    j = pl.program_id(0)
+    n_b = pl.num_programs(0)
+    tv_j = scalars_ref[0]      # eviction time of the finishing instance
+    self_idx = scalars_ref[1].astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        minw_ref[...] = jnp.full_like(minw_ref, BIG)
+        mini_ref[...] = jnp.full_like(mini_ref, -1)
+
+    te = te_ref[...].astype(jnp.float32)
+    tl = tl_ref[...].astype(jnp.float32)
+    tv = tv_ref[...].astype(jnp.float32)
+    nw = nw_ref[...].astype(jnp.float32)
+    K = k_ref[...].astype(jnp.float32)
+
+    # Eq. (7): n_e = n_w + 1 - (t_l_{j'} + t_v_j) * K_{j'} / t_e_{j'}
+    n_e = nw + 1.0 - (tl + tv_j) * K / jnp.maximum(te, 1e-9)
+    # Eq. (10): w = t_e + (t_l + t_v) * (K + 1) / n_e
+    w = te + (tl + tv) * (K + 1.0) / jnp.maximum(n_e, 1e-9)
+    idx = j * block + jax.lax.broadcasted_iota(jnp.int32, w.shape, 1)
+    valid = (nw > 0) & (n_e > 0) & (idx < n_fns) & (idx != self_idx)
+    w = jnp.where(valid, w, BIG)
+
+    bw = w.min(-1, keepdims=True)
+    bi = idx[0, jnp.argmin(w[0])].reshape(1, 1)
+
+    better = bw < minw_ref[...]
+    mini_ref[...] = jnp.where(better, bi, mini_ref[...])
+    minw_ref[...] = jnp.where(better, bw, minw_ref[...])
+
+    @pl.when(j == n_b - 1)
+    def _final():
+        best_w_ref[...] = minw_ref[...]
+        best_i_ref[...] = mini_ref[...]
+
+
+def frp_select(t_e, t_l, t_v, n_w, K, tv_j, self_idx, *,
+               block: int = 1024, interpret: bool = True):
+    """Blocked FRP candidate selection. All inputs (F,) vectors.
+    Returns (best_weight (), best_index ()) — index -1 if none."""
+    F = t_e.shape[0]
+    block = min(block, max(F, 8))
+    pad = (-F) % block
+    pad_to = F + pad
+
+    def prep(x, dtype=jnp.float32):
+        x = jnp.asarray(x, dtype)
+        return jnp.pad(x, (0, pad))[None, :]      # (1, F+pad)
+
+    scalars = jnp.stack([jnp.asarray(tv_j, jnp.float32),
+                         jnp.asarray(self_idx, jnp.float32)]).reshape(2)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pad_to // block,),
+        in_specs=[pl.BlockSpec((1, block), lambda j, *_: (0, j))] * 5,
+        out_specs=[pl.BlockSpec((1, 1), lambda j, *_: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda j, *_: (0, 0))],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.int32)],
+    )
+    kernel = functools.partial(_weights_kernel, block=block, n_fns=F)
+    bw, bi = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(scalars, prep(t_e), prep(t_l), prep(t_v), prep(n_w), prep(K))
+    return bw[0, 0], bi[0, 0]

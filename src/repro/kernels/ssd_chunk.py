@@ -1,0 +1,91 @@
+"""Mamba2 SSD intra-chunk kernel — the quadratic block of the state-space
+duality decomposition, fused in VMEM.
+
+Per (batch, chunk, head) the kernel computes, without materialising the
+(c x c) decay tensor in HBM (the XLA path's dominant memory cost — see
+EXPERIMENTS.md §Roofline, mamba2 train cell):
+
+    y_diag = ((C B^T) .* L .* dt) x      L[s,t] = exp(cum[s]-cum[t]), s>=t
+    S_c    = (B .* exp(total-cum) .* dt)^T x         (chunk state update)
+
+The inter-chunk recurrence (linear scan over chunk states) stays in JAX —
+it is O(L/c) and latency-bound, not a kernel candidate.
+
+Inputs per grid cell: x (c,p), dt/cum (c,1), B/C (c,n). All fp32 math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, s_ref):
+    x = x_ref[0, 0].astype(jnp.float32)          # (c, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (c, 1)
+    cum = cum_ref[0, 0].astype(jnp.float32)      # (c, 1)
+    B = b_ref[0, 0].astype(jnp.float32)          # (c, n)
+    C = c_ref[0, 0].astype(jnp.float32)          # (c, n)
+    c = x.shape[0]
+
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (c, c) = C B^T
+    diff = cum - cum.reshape(1, c)               # cum[s] - cum[t]
+    s_pos = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    diff = jnp.where(s_pos >= t_pos, diff, NEG_INF)
+    kernel = scores * jnp.exp(diff) * dt.reshape(1, c)
+    y_ref[0, 0] = jax.lax.dot_general(
+        kernel, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    total = cum[c - 1]
+    decay_in = jnp.exp(total - cum) * dt         # (c, 1)
+    s_ref[0, 0] = jax.lax.dot_general(
+        B * decay_in, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(s_ref.dtype)  # (n, p)
+
+
+def ssd_chunk_kernel(x, dt, cum, B, C, *, interpret: bool = True):
+    """Intra-chunk SSD.
+
+    x (b, nc, c, h, p); dt, cum (b, nc, c, h); B, C (b, nc, c, h, n)
+    (already head-broadcast). Returns (y_diag (b,nc,c,h,p),
+    states (b,nc,h,n,p))."""
+    b, nc, c, h, p = x.shape
+    n = B.shape[-1]
+    # layout: grid cell = (b, nc, h)
+    xt = x.transpose(0, 1, 3, 2, 4).reshape(b, nc * h, c, p)
+    dtt = dt.transpose(0, 1, 3, 2).reshape(b, nc * h, c, 1)
+    cumt = cum.transpose(0, 1, 3, 2).reshape(b, nc * h, c, 1)
+    Bt = B.transpose(0, 1, 3, 2, 4).reshape(b, nc * h, c, n)
+    Ct = C.transpose(0, 1, 3, 2, 4).reshape(b, nc * h, c, n)
+
+    y, s = pl.pallas_call(
+        _ssd_kernel,
+        grid=(b, nc * h),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc * h, c, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc * h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dtt, cumt, Bt, Ct)
+    y = y.reshape(b, nc, h, c, p).transpose(0, 1, 3, 2, 4)
+    s = s.reshape(b, nc, h, n, p).transpose(0, 1, 2, 4, 3)  # (b,nc,h,p,n)
+    return y, s

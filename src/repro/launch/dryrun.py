@@ -1,0 +1,296 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the right step
+function with production shardings from ShapeDtypeStructs (no
+allocation), compiles it, and records memory_analysis / cost_analysis /
+collective bytes for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch internlm2-20b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod both --out results/
+"""
+# The placeholder-device flag MUST precede any jax import (device count
+# locks on first backend init). Do not move; do not set globally.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_arch, shape_cells       # noqa: E402
+from repro.distributed.sharding import (ShardingRules, Sharder,  # noqa: E402
+                                        logical_to_pspec)
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.models import build_model                           # noqa: E402
+from repro.optim import AdamWConfig, adamw_init, opt_state_axes  # noqa: E402
+from repro.roofline import analyze                             # noqa: E402
+from repro.train import TrainConfig, make_train_step           # noqa: E402
+from repro.utils import get_logger                             # noqa: E402
+
+log = get_logger("dryrun")
+
+# Per-arch training knobs (microbatch count chosen so the per-device
+# microbatch is >=1 on both meshes; optimizer memory options so the big
+# configs fit 16 GB/chip — see EXPERIMENTS.md §Dry-run).
+TRAIN_KNOBS = {
+    "deepseek-v3-671b": dict(microbatches=8, moment_dtype="bfloat16",
+                             quantize_nu=True, fsdp=True,
+                             accum_dtype="bfloat16"),
+    "internvl2-76b": dict(microbatches=8, moment_dtype="bfloat16",
+                          quantize_nu=True, fsdp=True,
+                          accum_dtype="bfloat16"),
+    "internlm2-20b": dict(microbatches=4, fsdp=True),
+    "qwen3-14b": dict(microbatches=4, fsdp=True),
+    "deepseek-moe-16b": dict(microbatches=2, fsdp=True),
+    "zamba2-2.7b": dict(microbatches=2),
+    "qwen1.5-4b": dict(microbatches=2, fsdp=True),
+    "qwen3-4b": dict(microbatches=2),
+    "mamba2-780m": dict(microbatches=8),
+    "whisper-tiny": dict(microbatches=1),
+}
+
+# Serving-side knobs: the two biggest archs need params 2D-sharded even
+# for inference (params/16 > HBM); everything else keeps pure TP.
+SERVE_KNOBS = {
+    "deepseek-v3-671b": dict(fsdp=True),
+    "internvl2-76b": dict(fsdp=True),
+}
+
+
+def input_specs(cfg, shape_cfg):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if shape_cfg.kind in ("train",):
+        toks = S
+        out = {"tokens": jax.ShapeDtypeStruct((B, toks), i32),
+               "labels": jax.ShapeDtypeStruct((B, toks), i32)}
+        if cfg.family == "vlm":
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.n_patches),
+                                                 i32)
+            out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_enc_positions, cfg.d_model), f32)
+        return out
+    if shape_cfg.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.n_patches),
+                                                 i32)
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_enc_positions, cfg.d_model), f32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def _mesh_and_rules(cfg, shape_cfg, multi_pod: bool, fsdp: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules.for_config(cfg, mesh, shape_cfg.kind, fsdp=fsdp)
+    dp = rules.rules.get("batch")
+    dp_size = 1
+    if dp:
+        for a in (dp if isinstance(dp, tuple) else (dp,)):
+            dp_size *= mesh.shape[a]
+    if shape_cfg.global_batch % max(dp_size, 1) != 0:
+        # long_500k (batch 1): replicate batch over the data axes
+        rules = ShardingRules(dict(rules.rules, batch=None),
+                              name=rules.name + "/batch-replicated")
+    return mesh, rules
+
+
+def _shardings(mesh, rules, axes_tree):
+    specs = logical_to_pspec(axes_tree, rules)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               compile_: bool = True, extra_knobs=None):
+    cfg = get_arch(arch)
+    shape_cfg = SHAPES[shape]
+    if shape == "long_500k":
+        # sub-quadratic archs only; hybrid uses its sliding window
+        window = cfg.long_context_window if cfg.family == "hybrid" else None
+    else:
+        window = None
+    knobs0 = dict(TRAIN_KNOBS.get(arch, {})) if shape_cfg.kind == "train" \
+        else dict(SERVE_KNOBS.get(arch, {}))
+    knobs0.update(extra_knobs or {})
+    fsdp = knobs0.pop("fsdp", False)
+    mesh, rules = _mesh_and_rules(cfg, shape_cfg, multi_pod, fsdp=fsdp)
+    sharder = Sharder(mesh, rules)
+    model = build_model(cfg)
+
+    abstract_params = jax.eval_shape(lambda k: model.init(k)[0],
+                                     jax.random.key(0))
+    # spec tree (eager side-channel of init)
+    _, param_axes = model.init_abstract()
+    param_sh = _shardings(mesh, rules, param_axes)
+    batch_specs = input_specs(cfg, shape_cfg)
+    batch_sh = {k: NamedSharding(mesh, rules.resolve(
+        ("batch",) + (None,) * (v.ndim - 1)))
+        for k, v in batch_specs.items()}
+
+    t0 = time.perf_counter()
+    if shape_cfg.kind == "train":
+        knobs = knobs0
+        mb = knobs.pop("microbatches", 1)
+        adt = knobs.pop("accum_dtype", "float32")
+        opt = AdamWConfig(**{k: v for k, v in knobs.items()
+                             if k in AdamWConfig.__dataclass_fields__})
+        tcfg = TrainConfig(microbatches=mb, optimizer=opt,
+                           accum_dtype=adt)
+        step = make_train_step(model, tcfg, sharder)
+        abstract_opt = jax.eval_shape(
+            lambda p: adamw_init(opt, p), abstract_params)
+        opt_axes = opt_state_axes(opt, param_axes)
+        opt_sh = _shardings(mesh, rules, opt_axes)
+        fn = jax.jit(step,
+                     in_shardings=(param_sh, opt_sh, batch_sh),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(abstract_params, abstract_opt, batch_specs)
+    elif shape_cfg.kind == "prefill":
+        cspec = model.cache_spec(shape_cfg.global_batch, shape_cfg.seq_len,
+                                 window)
+        cache_sds = cspec.shape_dtype_structs()
+        cache_sh = {k: NamedSharding(mesh, rules.resolve(cspec.axes[k]))
+                    for k in cspec.shapes}
+        cache_sh["length"] = NamedSharding(mesh, P())
+
+        def prefill(params, batch, cache):
+            return model.prefill(params, batch, cache, sharder)
+
+        fn = jax.jit(prefill,
+                     in_shardings=(param_sh, batch_sh, cache_sh),
+                     donate_argnums=(2,))
+        lowered = fn.lower(abstract_params, batch_specs, cache_sds)
+    else:  # decode
+        cspec = model.cache_spec(shape_cfg.global_batch, shape_cfg.seq_len,
+                                 window)
+        cache_sds = cspec.shape_dtype_structs()
+        cache_sh = {k: NamedSharding(mesh, rules.resolve(cspec.axes[k]))
+                    for k in cspec.shapes}
+        cache_sh["length"] = NamedSharding(mesh, P())
+
+        def decode(params, tokens, cache):
+            return model.decode_step(params, tokens, cache, sharder)
+
+        fn = jax.jit(decode,
+                     in_shardings=(param_sh, batch_sh["tokens"], cache_sh),
+                     donate_argnums=(2,))
+        lowered = fn.lower(abstract_params, batch_specs["tokens"],
+                           cache_sds)
+    t_lower = time.perf_counter() - t0
+
+    result = dict(arch=arch, shape=shape,
+                  mesh="pod2x16x16" if multi_pod else "pod16x16",
+                  chips=512 if multi_pod else 256,
+                  rules=rules.name, lower_s=round(t_lower, 1))
+    if not compile_:
+        return result, lowered, None
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.perf_counter() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    mem_stats = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_stats[attr] = int(v)
+    result["memory"] = mem_stats
+    cost = compiled.cost_analysis()
+    result["cost"] = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float))
+                      and k in ("flops", "bytes accessed")}
+    hlo = compiled.as_text()
+    rep = analyze(arch, shape, result["mesh"], result["chips"],
+                  cost, hlo, cfg, shape_cfg, mem_stats)
+    result["roofline"] = rep.to_json()
+    return result, lowered, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    results_file = outdir / "dryrun.jsonl"
+    done = set()
+    if args.skip_existing and results_file.exists():
+        for line in results_file.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    cells = shape_cells(args.arch) if (args.all or not args.shape) \
+        else [(args.arch, args.shape)]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    n_fail = 0
+    with results_file.open("a") as f:
+        for arch, shape in cells:
+            for mp in pods:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                if (arch, shape, mesh_name) in done:
+                    log.info("skip %s %s %s (done)", arch, shape, mesh_name)
+                    continue
+                log.info("=== %s x %s on %s", arch, shape, mesh_name)
+                try:
+                    res, _, compiled = lower_cell(arch, shape, mp)
+                    log.info("  ok: lower %.1fs compile %.1fs "
+                             "temp/dev %.2f GB args/dev %.2f GB",
+                             res["lower_s"], res["compile_s"],
+                             res["memory"].get("temp_size_in_bytes", 0)
+                             / 2**30,
+                             res["memory"].get("argument_size_in_bytes", 0)
+                             / 2**30)
+                    del compiled
+                except Exception as e:           # noqa: BLE001
+                    n_fail += 1
+                    res = dict(arch=arch, shape=shape, mesh=mesh_name,
+                               error=f"{type(e).__name__}: {e}",
+                               tb=traceback.format_exc()[-2000:])
+                    log.error("  FAIL %s", res["error"])
+                f.write(json.dumps(res) + "\n")
+                f.flush()
+    log.info("done, %d failures", n_fail)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

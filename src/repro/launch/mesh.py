@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The single-pod production mesh is a 16x16
+(256-chip, one v5e pod) (data, model) grid; the multi-pod mesh adds an
+outer "pod" axis (2 pods = 512 chips) used as an extra data-parallel
+dimension whose gradient all-reduce crosses the inter-pod DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))

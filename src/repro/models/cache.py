@@ -1,0 +1,105 @@
+"""Decode-time cache pytrees.
+
+Layout notes: per-layer tensors are stacked on a leading ``layers`` axis so
+the decode step can ``lax.scan`` over layers with the cache as scanned
+input/output. KV caches keep keys *already rotary-encoded* (rope applied at
+write time), the standard serving layout.
+
+Sharding: the cache sequence axis carries the logical axis ``"cache_seq"``
+which the production rules map to the ``model`` mesh axis — split-KV
+(context-parallel) decoding. The batch axis maps to data axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass
+class CacheSpec:
+    """Shapes + logical axes for every cache leaf of a config."""
+
+    shapes: Dict[str, Tuple[int, ...]]
+    dtypes: Dict[str, Any]
+    axes: Dict[str, Tuple]
+
+    def zeros(self):
+        out = {k: jnp.zeros(s, self.dtypes[k])
+               for k, s in self.shapes.items()}
+        out["length"] = jnp.zeros((), jnp.int32)
+        return out
+
+    def shape_dtype_structs(self):
+        import jax
+        out = {k: jax.ShapeDtypeStruct(s, self.dtypes[k])
+               for k, s in self.shapes.items()}
+        out["length"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return out
+
+
+def cache_spec(cfg, batch: int, max_len: int,
+               window: Optional[int] = None) -> CacheSpec:
+    """Build the cache spec for a config. ``window`` bounds the attention
+    cache length (sliding-window serving for hybrid long-context)."""
+    shapes, dtypes, axes = {}, {}, {}
+    dt = cfg.cdtype
+    attn_len = min(max_len, window) if window else max_len
+
+    def add(name, shape, ax, dtype=dt):
+        shapes[name] = shape
+        dtypes[name] = dtype
+        axes[name] = ax
+
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+        add("k", (L, batch, attn_len, kv, hd),
+            ("layers", "batch", "cache_seq", "kv_heads", None))
+        add("v", (L, batch, attn_len, kv, hd),
+            ("layers", "batch", "cache_seq", "kv_heads", None))
+    elif cfg.family == "moe":
+        if cfg.mla:
+            add("c_kv", (L, batch, attn_len, cfg.kv_lora_rank),
+                ("layers", "batch", "cache_seq", None))
+            add("k_rope", (L, batch, attn_len, cfg.qk_rope_dim),
+                ("layers", "batch", "cache_seq", None))
+        else:
+            kv, hd = cfg.n_kv_heads, cfg.head_dim_
+            add("k", (L, batch, attn_len, kv, hd),
+                ("layers", "batch", "cache_seq", "kv_heads", None))
+            add("v", (L, batch, attn_len, kv, hd),
+                ("layers", "batch", "cache_seq", "kv_heads", None))
+    elif cfg.family == "ssm":
+        _add_ssm(add, cfg, L, batch)
+    elif cfg.family == "hybrid":
+        _add_ssm(add, cfg, L, batch)
+        n_shared = cfg.n_layers // cfg.attn_every
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+        add("k", (n_shared, batch, attn_len, kv, hd),
+            ("layers", "batch", "cache_seq", "kv_heads", None))
+        add("v", (n_shared, batch, attn_len, kv, hd),
+            ("layers", "batch", "cache_seq", "kv_heads", None))
+    elif cfg.family == "encdec":
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+        Ld = cfg.dec_layers
+        add("k", (Ld, batch, attn_len, kv, hd),
+            ("layers", "batch", "cache_seq", "kv_heads", None))
+        add("v", (Ld, batch, attn_len, kv, hd),
+            ("layers", "batch", "cache_seq", "kv_heads", None))
+        add("cross_k", (Ld, batch, cfg.n_enc_positions, kv, hd),
+            ("layers", "batch", None, "kv_heads", None))
+        add("cross_v", (Ld, batch, cfg.n_enc_positions, kv, hd),
+            ("layers", "batch", None, "kv_heads", None))
+    else:
+        raise ValueError(cfg.family)
+    return CacheSpec(shapes, dtypes, axes)
+
+
+def _add_ssm(add, cfg, L, batch):
+    conv_c = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    add("conv", (L, batch, cfg.ssm_conv - 1, conv_c),
+        ("layers", "batch", None, "ssm_inner"))
+    add("ssm", (L, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+        ("layers", "batch", "ssm_heads", None, None), dtype=jnp.float32)

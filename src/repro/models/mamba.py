@@ -1,0 +1,209 @@
+"""Mamba2 (state-space duality) block — chunked SSD scan in pure JAX.
+
+Train/prefill uses the chunked block decomposition of Dao & Gu 2024
+(arXiv:2405.21060): intra-chunk quadratic attention-like term plus an
+inter-chunk state recurrence (``lax.scan`` over chunks). Decode is the
+O(1) per-token recurrence on the (heads, headdim, state) SSM state.
+
+``ssd_reference`` (token-by-token recurrence) is the oracle used by the
+unit tests and by the Pallas kernel tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamSet, rms_norm
+
+
+def init_mamba(ps: ParamSet, cfg) -> None:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    ps.param("w_xz", (d, 2 * di), ("embed", "ssm_inner"))
+    ps.param("w_bc", (d, 2 * g * n), ("embed", None))
+    ps.param("w_dt", (d, h), ("embed", "ssm_heads"))
+    ps.param("dt_bias", (h,), ("ssm_heads",), init="zeros")
+    ps.param("A_log", (h,), ("ssm_heads",), init="ones")
+    ps.param("D", (h,), ("ssm_heads",), init="ones")
+    ps.param("conv_w", (cfg.ssm_conv, di + 2 * g * n), (None, "ssm_inner"))
+    ps.param("conv_b", (di + 2 * g * n,), ("ssm_inner",), init="zeros")
+    ps.param("gate_norm", (di,), ("ssm_inner",), init="ones")
+    ps.param("w_out", (di, d), ("ssm_inner", "embed"))
+
+
+def _depthwise_causal_conv(x, w, b, state=None):
+    """x (B, L, C), w (K, C) depthwise causal; optional carry-in state
+    (B, K-1, C). Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  (b, l, h, p)    values
+    dt: (b, l, h)       softplus-activated step sizes (>0)
+    A:  (h,)            negative decay rates
+    B, C: (b, l, g, n)  input/output projections (g groups)
+    init_state: (b, h, p, n) or None.
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert h % g == 0
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (l + pad) // chunk
+    hg = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+
+    dA = dtc * A.astype(jnp.float32)                 # (b, nc, c, h) <= 0
+    cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+    total = cum[:, :, -1]                            # (b, nc, h)
+
+    # intra-chunk ("diagonal block"): attention-like with decay kernel
+    # L[s, t] = exp(cum[s] - cum[t]) for s >= t. Mask BEFORE exp: the
+    # masked diffs are positive (overflow + NaN grads through where).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,s,t,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -jnp.inf)
+    Ldec = jnp.exp(diff)
+    scores = jnp.einsum("bcsgn,bctgn->bcstg", Cc, Bc)       # (b,nc,s,t,g)
+    scores = jnp.repeat(scores, hg, axis=-1) * Ldec         # (b,nc,s,t,h)
+    y_diag = jnp.einsum("bcsth,bcth,bcthp->bcshp", scores, dtc,
+                        xc.astype(jnp.float32))
+
+    # chunk states: S_c = sum_t exp(total - cum[t]) * dt[t] * B[t] x[t]^T
+    decay_in = jnp.exp(total[:, :, None, :] - cum)          # (b,nc,c,h)
+    Bh = jnp.repeat(Bc, hg, axis=3)                         # (b,nc,c,h,n)
+    dBx = jnp.einsum("bcthn,bcth,bcthp->bchpn",
+                     Bh, decay_in * dtc, xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+
+    def step(S, inp):
+        dBx_c, tot_c = inp                                  # (b,h,p,n),(b,h)
+        S_out = S                                           # state BEFORE
+        S = S * jnp.exp(tot_c)[..., None, None] + dBx_c
+        return S, S_out
+
+    dBx_t = jnp.moveaxis(dBx, 1, 0)                         # (nc,b,h,p,n)
+    tot_t = jnp.moveaxis(total, 1, 0)                       # (nc,b,h)
+    final, S_prev = lax.scan(step, init_state, (dBx_t, tot_t))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                     # (b,nc,h,p,n)
+
+    # inter-chunk contribution: y[s] += exp(cum[s]) * C[s] . S_prev
+    Cg = jnp.repeat(Cc, hg, axis=3)                         # (b,nc,c,h,n)
+    y_off = jnp.einsum("bcshn,bchpn->bcshp", Cg * jnp.exp(cum)[..., None],
+                       S_prev)
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)[:, :l]
+    return y.astype(x.dtype), final
+
+
+def ssd_reference(x, dt, A, B, C, init_state=None):
+    """Token-by-token recurrence oracle (slow, exact)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(S, inp):
+        x_t, dt_t, B_t, C_t = inp   # (b,h,p),(b,h),(b,g,n),(b,g,n)
+        dA = jnp.exp(dt_t * A)                               # (b,h)
+        Bh = jnp.repeat(B_t, hg, axis=1)                     # (b,h,n)
+        Ch = jnp.repeat(C_t, hg, axis=1)
+        S = S * dA[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt_t, x_t.astype(jnp.float32), Bh)
+        y = jnp.einsum("bhpn,bhn->bhp", S, Ch)
+        return S, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    S, ys = lax.scan(step, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), S
+
+
+def mamba_apply(params, cfg, x, sharder, *, conv_state=None,
+                ssm_state=None, return_state: bool = False):
+    """Full-sequence Mamba2 block. x (B, L, d_model)."""
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    xz = jnp.einsum("bld,de->ble", x, params["w_xz"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("bld,de->ble", x, params["w_bc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, new_conv = _depthwise_causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state)
+    xin = conv_out[..., :di]
+    B = conv_out[..., di:di + g * n].reshape(*x.shape[:2], g, n)
+    C = conv_out[..., di + g * n:].reshape(*x.shape[:2], g, n)
+    xh = xin.reshape(*x.shape[:2], h, cfg.ssm_headdim)
+    xh = sharder(xh, ("batch", "seq_q", "ssm_heads", None))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked(xh, dt, A, B, C, chunk=cfg.ssm_chunk,
+                           init_state=ssm_state)
+    y = y + xh * params["D"].astype(y.dtype)[:, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["w_out"])
+    if return_state:
+        return out, (new_conv, final)
+    return out
+
+
+def mamba_decode_step(params, cfg, x, conv_state, ssm_state):
+    """Single-token decode. x (B, 1, d). Returns (y, (conv, ssm))."""
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    xz = jnp.einsum("bld,de->ble", x, params["w_xz"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("bld,de->ble", x, params["w_bc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))[:, 0]       # (B,h)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, new_conv = _depthwise_causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state)
+    xin = conv_out[..., :di]
+    B = conv_out[:, 0, di:di + g * n].reshape(-1, g, n)
+    C = conv_out[:, 0, di + g * n:].reshape(-1, g, n)
+    xh = xin[:, 0].reshape(-1, h, cfg.ssm_headdim)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                     # (B,h)
+    hg = h // g
+    Bh = jnp.repeat(B, hg, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, hg, axis=1).astype(jnp.float32)
+    S = (ssm_state * dA[..., None, None]
+         + jnp.einsum("bh,bhp,bhn->bhpn", dt,
+                      xh.astype(jnp.float32), Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", S, Ch)
+    y = y + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, params["w_out"]), (new_conv, S)

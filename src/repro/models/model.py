@@ -1,0 +1,1029 @@
+"""Model assembly: builds init / loss / prefill / decode for every family.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods are pure
+functions of ``(params, batch)`` — ready for ``jax.jit`` with shardings
+from ``distributed/sharding.py``. Layers of one kind are stacked and
+``lax.scan``-ned (fast compile, layer-boundary remat); heterogeneous
+stacks (MoE first-dense, hybrid shared-attention) become scan *groups*.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.cache import CacheSpec, cache_spec
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _identity_sharder(x, axes):
+    return x
+
+
+# --------------------------------------------------------------- blocks
+def init_dense_block(ps: L.ParamSet, cfg, d_ff: Optional[int] = None,
+                     gelu: bool = False, cross: bool = False) -> None:
+    d = cfg.d_model
+    ln = ("ones",)
+    if gelu:   # whisper-style LayerNorm blocks
+        ps.param("ln1_s", (d,), ("embed",), init="ones")
+        ps.param("ln1_b", (d,), ("embed",), init="zeros")
+        ps.param("ln2_s", (d,), ("embed",), init="ones")
+        ps.param("ln2_b", (d,), ("embed",), init="zeros")
+        if cross:
+            ps.param("lnx_s", (d,), ("embed",), init="ones")
+            ps.param("lnx_b", (d,), ("embed",), init="zeros")
+    else:
+        ps.param("norm1", (d,), ("embed",), init="ones")
+        ps.param("norm2", (d,), ("embed",), init="ones")
+    attn = ps.child()
+    if cfg.mla:
+        L.init_mla(attn, cfg)
+    else:
+        L.init_attention(attn, cfg)
+    ps.sub("attn", attn)
+    if cross:
+        xa = ps.child()
+        L.init_attention(xa, cfg)
+        ps.sub("cross_attn", xa)
+    mlp = ps.child()
+    L.init_mlp(mlp, cfg, d_ff=d_ff, gelu=gelu)
+    ps.sub("mlp", mlp)
+
+
+def init_moe_block(ps: L.ParamSet, cfg) -> None:
+    d = cfg.d_model
+    ps.param("norm1", (d,), ("embed",), init="ones")
+    ps.param("norm2", (d,), ("embed",), init="ones")
+    attn = ps.child()
+    if cfg.mla:
+        L.init_mla(attn, cfg)
+    else:
+        L.init_attention(attn, cfg)
+    ps.sub("attn", attn)
+    moe = ps.child()
+    L.init_moe(moe, cfg)
+    ps.sub("moe", moe)
+
+
+def init_mamba_block(ps: L.ParamSet, cfg) -> None:
+    ps.param("norm1", (cfg.d_model,), ("embed",), init="ones")
+    blk = ps.child()
+    M.init_mamba(blk, cfg)
+    ps.sub("mamba", blk)
+
+
+def _stack_init(n: int, key, init_fn, dtype) -> Tuple[Params, Any]:
+    """Initialise n identical layers and stack leaves on a leading axis."""
+    keys = jax.random.split(key, n)
+
+    def one(k):
+        ps = L.ParamSet(k, dtype)
+        init_fn(ps)
+        return ps.params
+
+    params = jax.vmap(one)(keys)
+    ps = L.ParamSet(key, dtype)
+    init_fn(ps)
+    specs = jax.tree.map(
+        lambda ax: ("layers",) + ax, ps.specs,
+        is_leaf=lambda x: isinstance(x, tuple) and (
+            not x or not isinstance(x[0], dict)))
+    return params, specs
+
+
+def _moe_capacity(cfg, tokens_per_row: int) -> int:
+    """Expert capacity per (batch row, expert): dispatch slots are a
+    per-row cumsum, so capacity scales with the row's tokens, not the
+    global batch."""
+    cap = int(cfg.capacity_factor * tokens_per_row * cfg.topk
+              / max(cfg.n_experts, 1))
+    return max(cap, 1)
+
+
+def _moe_impl(cfg, sharder=None) -> str:
+    if cfg.moe_impl != "auto":
+        return cfg.moe_impl
+    if cfg.n_experts <= 8:
+        return "dense"
+    # shard_map EP needs a mesh (and experts divisible by it)
+    mesh = getattr(sharder, "mesh", None)
+    if mesh is not None and "model" in mesh.axis_names \
+            and cfg.n_experts % mesh.shape["model"] == 0:
+        return "ep_shardmap"
+    return "ep"
+
+
+def _moe_call(impl, params, cfg, x, sharder, capacity):
+    if impl == "dense":
+        return L.moe_apply_dense(params, cfg, x, sharder)
+    if impl == "ep_shardmap":
+        return L.moe_apply_ep_shardmap(params, cfg, x, sharder, capacity)
+    return L.moe_apply_capacity(params, cfg, x, sharder, capacity)
+
+
+# ------------------------------------------------------------ assembly
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Tuple[Params, Any]:
+        cfg = self.cfg
+        ps = L.ParamSet(key, cfg.pdtype)
+        L.init_embeddings(ps, cfg)
+        params, specs = ps.done()
+        key_l = jax.random.fold_in(key, 1)
+
+        if cfg.family in ("dense", "vlm"):
+            p, s = _stack_init(cfg.n_layers, key_l,
+                               lambda q: init_dense_block(q, cfg),
+                               cfg.pdtype)
+            params["blocks"], specs["blocks"] = p, s
+        elif cfg.family == "moe":
+            nd = cfg.first_dense_layers
+            if nd:
+                dcfg = cfg.replace(n_experts=0)
+                p, s = _stack_init(
+                    nd, key_l,
+                    lambda q: init_dense_block(q, dcfg, d_ff=cfg.d_ff),
+                    cfg.pdtype)
+                params["dense_blocks"], specs["dense_blocks"] = p, s
+            p, s = _stack_init(cfg.n_layers - nd,
+                               jax.random.fold_in(key_l, 2),
+                               lambda q: init_moe_block(q, cfg),
+                               cfg.pdtype)
+            params["moe_blocks"], specs["moe_blocks"] = p, s
+            if cfg.mtp:
+                ps2 = L.ParamSet(jax.random.fold_in(key_l, 3), cfg.pdtype)
+                ps2.param("mtp_proj", (2 * cfg.d_model, cfg.d_model),
+                          ("embed", "embed"))
+                blk = ps2.child()
+                init_dense_block(blk, cfg.replace(n_experts=0),
+                                 d_ff=cfg.d_ff)
+                ps2.sub("mtp_block", blk)
+                mp, msp = ps2.done()
+                params["mtp"], specs["mtp"] = mp, msp
+        elif cfg.family == "ssm":
+            p, s = _stack_init(cfg.n_layers, key_l,
+                               lambda q: init_mamba_block(q, cfg),
+                               cfg.pdtype)
+            params["blocks"], specs["blocks"] = p, s
+        elif cfg.family == "hybrid":
+            p, s = _stack_init(cfg.n_layers, key_l,
+                               lambda q: init_mamba_block(q, cfg),
+                               cfg.pdtype)
+            params["blocks"], specs["blocks"] = p, s
+            ps2 = L.ParamSet(jax.random.fold_in(key_l, 4), cfg.pdtype)
+            ps2.param("shared_in", (2 * cfg.d_model, cfg.d_model),
+                      ("embed", "embed"))
+            init_dense_block(ps2, cfg)
+            sp, ss = ps2.done()
+            params["shared_attn"], specs["shared_attn"] = sp, ss
+        elif cfg.family == "encdec":
+            ps2 = L.ParamSet(jax.random.fold_in(key_l, 5), cfg.pdtype)
+            ps2.param("enc_pos", (cfg.n_enc_positions, cfg.d_model),
+                      (None, "embed"), scale=0.02)
+            ep, es = ps2.done()
+            params.update(ep)
+            specs.update(es)
+            p, s = _stack_init(
+                cfg.enc_layers, key_l,
+                lambda q: init_dense_block(q, cfg, gelu=True), cfg.pdtype)
+            params["enc_blocks"], specs["enc_blocks"] = p, s
+            p, s = _stack_init(
+                cfg.dec_layers, jax.random.fold_in(key_l, 6),
+                lambda q: init_dense_block(q, cfg, gelu=True, cross=True),
+                cfg.pdtype)
+            params["dec_blocks"], specs["dec_blocks"] = p, s
+        else:
+            raise ValueError(cfg.family)
+        return params, specs
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.key(0))[1] if False \
+            else self.init_abstract()[1]
+
+    def init_abstract(self):
+        """Shape-only init (no allocation) — used by the dry-run."""
+        out = jax.eval_shape(lambda k: self.init(k)[0], jax.random.key(0))
+        # specs must be computed eagerly (they are python data, not arrays)
+        _, specs = _specs_only(self)
+        return out, specs
+
+    # --------------------------------------------------------- forward
+    def _rope(self, positions):
+        cfg = self.cfg
+        if cfg.family in ("encdec", "ssm"):
+            return None, None
+        dim = cfg.qk_rope_dim if cfg.mla else cfg.head_dim_
+        return L.rope_angles(positions, dim, cfg.rope_theta)
+
+    def _trunk(self, params, h, cos, sin, sharder, window=None):
+        """Full-sequence trunk over all layers. Returns (h, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "vlm"):
+            def body(carry, p):
+                h, aux = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                y, _ = L.attention_apply(p["attn"], cfg, x, cos, sin,
+                                         sharder, window=window)
+                h = h + y
+                x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                h = h + L.mlp_apply(p["mlp"], x, sharder)
+                h = sharder(h, ("batch", "seq_q", "embed"))
+                return (h, aux), None
+            (h, aux), _ = lax.scan(jax.checkpoint(body), (h, aux),
+                                   params["blocks"])
+
+        elif cfg.family == "moe":
+            capacity = _moe_capacity(cfg, h.shape[1])
+            impl = _moe_impl(cfg, sharder)
+
+            def dense_body(carry, p):
+                h, aux = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                if cfg.mla:
+                    y, _ = L.mla_apply(p["attn"], cfg, x, cos, sin, sharder)
+                else:
+                    y, _ = L.attention_apply(p["attn"], cfg, x, cos, sin,
+                                             sharder)
+                h = h + y
+                x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                h = h + L.mlp_apply(p["mlp"], x, sharder)
+                return (h, aux), None
+
+            def moe_body(carry, p):
+                h, aux = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                if cfg.mla:
+                    y, _ = L.mla_apply(p["attn"], cfg, x, cos, sin, sharder)
+                else:
+                    y, _ = L.attention_apply(p["attn"], cfg, x, cos, sin,
+                                             sharder)
+                h = h + y
+                x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                y, a = _moe_call(impl, p["moe"], cfg, x, sharder,
+                                 capacity)
+                h = h + y
+                h = sharder(h, ("batch", "seq_q", "embed"))
+                return (h, aux + a), None
+
+            if cfg.first_dense_layers:
+                (h, aux), _ = lax.scan(jax.checkpoint(dense_body), (h, aux),
+                                       params["dense_blocks"])
+            (h, aux), _ = lax.scan(jax.checkpoint(moe_body), (h, aux),
+                                   params["moe_blocks"])
+
+        elif cfg.family == "ssm":
+            def body(carry, p):
+                h, aux = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                h = h + M.mamba_apply(p["mamba"], cfg, x, sharder)
+                h = sharder(h, ("batch", "seq_q", "embed"))
+                return (h, aux), None
+            (h, aux), _ = lax.scan(jax.checkpoint(body), (h, aux),
+                                   params["blocks"])
+
+        elif cfg.family == "hybrid":
+            h0 = h   # original embeddings feed every shared block
+            k = cfg.attn_every
+            n_groups = cfg.n_layers // k
+            rest = cfg.n_layers - n_groups * k
+            blocks = params["blocks"]
+            grouped = jax.tree.map(
+                lambda x: x[:n_groups * k].reshape(
+                    (n_groups, k) + x.shape[1:]), blocks)
+            shared = params["shared_attn"]
+
+            def mamba_body(carry, p):
+                h, aux = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                h = h + M.mamba_apply(p["mamba"], cfg, x, sharder)
+                return (h, aux), None
+
+            def group_body(carry, pg):
+                (h, aux), _ = lax.scan(jax.checkpoint(mamba_body), carry, pg)
+                # shared attention block on concat(h, embeddings)
+                z = jnp.concatenate([h, h0], axis=-1)
+                z = jnp.einsum("bse,ed->bsd", z, shared["shared_in"])
+                x = L.rms_norm(z, shared["norm1"], cfg.norm_eps)
+                y, _ = L.attention_apply(shared["attn"], cfg, x, cos, sin,
+                                         sharder, window=window)
+                z = z + y
+                x = L.rms_norm(z, shared["norm2"], cfg.norm_eps)
+                z = z + L.mlp_apply(shared["mlp"], x, sharder)
+                h = h + z
+                h = sharder(h, ("batch", "seq_q", "embed"))
+                return (h, aux), None
+
+            (h, aux), _ = lax.scan(group_body, (h, aux), grouped)
+            if rest:
+                tail = jax.tree.map(lambda x: x[n_groups * k:], blocks)
+                (h, aux), _ = lax.scan(jax.checkpoint(mamba_body), (h, aux),
+                                       tail)
+        else:
+            raise ValueError(cfg.family)
+        return h, aux
+
+    # ------------------------------------------------------------- loss
+    def loss(self, params, batch, sharder=_identity_sharder):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._loss_encdec(params, batch, sharder)
+        tokens, labels = batch["tokens"], batch["labels"]
+        h = L.embed_tokens(params, cfg, tokens)
+        if cfg.family == "vlm":
+            patches = batch["patch_embeds"].astype(cfg.cdtype)
+            h = jnp.concatenate([patches, h], axis=1)
+        h = sharder(h, ("batch", "seq_q", "embed"))
+        S = h.shape[1]
+        positions = jnp.arange(S)
+        cos, sin = self._rope(positions)
+        h, aux = self._trunk(params, h, cos, sin, sharder)
+        logits = L.logits_from_hidden(params, cfg, h, sharder)
+        ce = L.cross_entropy(logits, labels, cfg.vocab_size)
+        loss = ce + cfg.router_aux_coef * aux
+        if cfg.mtp and "mtp" in params:
+            loss = loss + cfg.mtp_coef * self._mtp_loss(
+                params, h, tokens, labels, cos, sin, sharder)
+        return loss, {"ce": ce, "aux": aux}
+
+    def _mtp_loss(self, params, h, tokens, labels, cos, sin, sharder):
+        """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from
+        trunk hidden at t combined with the embedding of token t+1."""
+        cfg = self.cfg
+        mp = params["mtp"]
+        emb_next = L.embed_tokens(params, cfg, tokens)[:, 1:]
+        z = jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+        z = jnp.einsum("bse,ed->bsd", z, mp["mtp_proj"])
+        p = mp["mtp_block"]
+        x = L.rms_norm(z, p["norm1"], cfg.norm_eps)
+        if cfg.mla:
+            y, _ = L.mla_apply(p["attn"], cfg, x, cos[:-1], sin[:-1],
+                               sharder)
+        else:
+            y, _ = L.attention_apply(p["attn"], cfg, x, cos[:-1], sin[:-1],
+                                     sharder)
+        z = z + y
+        x = L.rms_norm(z, p["norm2"], cfg.norm_eps)
+        z = z + L.mlp_apply(p["mlp"], x, sharder)
+        logits = L.logits_from_hidden(params, cfg, z, sharder)
+        labels2 = jnp.pad(labels[:, 2:], ((0, 0), (0, 1)),
+                          constant_values=-1)[:, :logits.shape[1]]
+        return L.cross_entropy(logits, labels2, cfg.vocab_size)
+
+    def _loss_encdec(self, params, batch, sharder):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], sharder)
+        tokens, labels = batch["tokens"], batch["labels"]
+        h = L.embed_tokens(params, cfg, tokens)
+        S = h.shape[1]
+        pos = _sinusoidal(S, cfg.d_model).astype(h.dtype)
+        h = h + pos
+        h = sharder(h, ("batch", "seq_q", "embed"))
+
+        def body(carry, p):
+            h, _ = carry
+            x = L.layer_norm(h, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+            y, _ = L.attention_apply(p["attn"], cfg, x, None, None, sharder)
+            h = h + y
+            x = L.layer_norm(h, p["lnx_s"], p["lnx_b"], cfg.norm_eps)
+            kx = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wk"])
+            vx = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wv"])
+            y, _ = L.attention_apply(p["cross_attn"], cfg, x, None, None,
+                                     sharder, causal=False,
+                                     kv_override=(kx, vx))
+            h = h + y
+            x = L.layer_norm(h, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+            h = h + L.mlp_apply(p["mlp"], x, sharder, gelu=True)
+            return (h, 0.0), None
+
+        (h, _), _ = lax.scan(jax.checkpoint(body), (h, 0.0),
+                             params["dec_blocks"])
+        logits = L.logits_from_hidden(params, cfg, h, sharder)
+        ce = L.cross_entropy(logits, labels, cfg.vocab_size)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def encode(self, params, frames, sharder=_identity_sharder):
+        """Whisper encoder over precomputed (stub) frame embeddings."""
+        cfg = self.cfg
+        h = frames.astype(cfg.cdtype) + params["enc_pos"].astype(cfg.cdtype)
+        h = sharder(h, ("batch", None, "embed"))
+
+        def body(carry, p):
+            h = carry
+            x = L.layer_norm(h, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+            y, _ = L.attention_apply(p["attn"], cfg, x, None, None, sharder,
+                                     causal=False)
+            h = h + y
+            x = L.layer_norm(h, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+            h = h + L.mlp_apply(p["mlp"], x, sharder, gelu=True)
+            return h, None
+
+        h, _ = lax.scan(jax.checkpoint(body), h, params["enc_blocks"])
+        return h
+
+    # ---------------------------------------------------------- serving
+    def prefill(self, params, batch, cache, sharder=_identity_sharder):
+        """Full-sequence forward that also fills the decode cache.
+        Returns (last-position logits, cache)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._prefill_encdec(params, batch, cache, sharder)
+        tokens = batch["tokens"]
+        h = L.embed_tokens(params, cfg, tokens)
+        if cfg.family == "vlm":
+            h = jnp.concatenate(
+                [batch["patch_embeds"].astype(cfg.cdtype), h], axis=1)
+        h = sharder(h, ("batch", "seq_q", "embed"))
+        S = h.shape[1]
+        cos, sin = self._rope(jnp.arange(S))
+        h, cache = self._trunk_cached_prefill(params, h, cos, sin, cache,
+                                              sharder)
+        logits = L.logits_from_hidden(params, cfg, h[:, -1:], sharder)
+        cache["length"] = jnp.asarray(S, jnp.int32)
+        return logits, cache
+
+    def _trunk_cached_prefill(self, params, h, cos, sin, cache, sharder):
+        cfg = self.cfg
+        window = cache["k"].shape[2] if "k" in cache else None
+        if cfg.family in ("dense", "vlm"):
+            def body(carry, p):
+                h = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                y, (k, v) = L.attention_apply(p["attn"], cfg, x, cos, sin,
+                                              sharder)
+                h = h + y
+                x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                h = h + L.mlp_apply(p["mlp"], x, sharder)
+                return h, (k, v)
+            h, (ks, vs) = lax.scan(jax.checkpoint(body), h,
+                                   params["blocks"])
+            cache["k"] = _write_prefix(cache["k"], ks)
+            cache["v"] = _write_prefix(cache["v"], vs)
+        elif cfg.family == "moe":
+            capacity = _moe_capacity(cfg, h.shape[1])
+            impl = _moe_impl(cfg, sharder)
+
+            def attn(p, x):
+                if cfg.mla:
+                    y, kv = L.mla_apply(p["attn"], cfg, x, cos, sin, sharder)
+                else:
+                    y, kv = L.attention_apply(p["attn"], cfg, x, cos, sin,
+                                              sharder)
+                return y, kv
+
+            caches_d = None
+            if cfg.first_dense_layers:
+                def dbody(carry, p):
+                    h = carry
+                    x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                    y, kv = attn(p, x)
+                    h = h + y
+                    x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                    h = h + L.mlp_apply(p["mlp"], x, sharder)
+                    return h, kv
+                h, caches_d = lax.scan(jax.checkpoint(dbody), h,
+                                       params["dense_blocks"])
+
+            def mbody(carry, p):
+                h = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                y, kv = attn(p, x)
+                h = h + y
+                x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                y, _ = _moe_call(impl, p["moe"], cfg, x, sharder,
+                                 capacity)
+                h = h + y
+                return h, kv
+            h, caches_m = lax.scan(jax.checkpoint(mbody), h,
+                                   params["moe_blocks"])
+            caches = (jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                caches_d, caches_m) if caches_d is not None else caches_m)
+            if cfg.mla:
+                cache["c_kv"] = _write_prefix(cache["c_kv"], caches[0])
+                cache["k_rope"] = _write_prefix(cache["k_rope"], caches[1])
+            else:
+                cache["k"] = _write_prefix(cache["k"], caches[0])
+                cache["v"] = _write_prefix(cache["v"], caches[1])
+        elif cfg.family == "ssm":
+            def body(carry, p):
+                h = carry
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                y, st = M.mamba_apply(p["mamba"], cfg, x, sharder,
+                                      return_state=True)
+                return h + y, st
+            h, (convs, ssms) = lax.scan(jax.checkpoint(body), h,
+                                        params["blocks"])
+            cache["conv"], cache["ssm"] = convs, ssms
+        elif cfg.family == "hybrid":
+            h, cache = self._hybrid_prefill(params, h, cos, sin, cache,
+                                            sharder, window)
+        else:
+            raise ValueError(cfg.family)
+        return h, cache
+
+    def _hybrid_prefill(self, params, h, cos, sin, cache, sharder, window):
+        cfg = self.cfg
+        assert cfg.n_layers % cfg.attn_every == 0, \
+            "hybrid serving requires n_layers % attn_every == 0"
+        h0 = h
+        k_every = cfg.attn_every
+        n_groups = cfg.n_layers // k_every
+        blocks = params["blocks"]
+        grouped = jax.tree.map(
+            lambda x: x[:n_groups * k_every].reshape(
+                (n_groups, k_every) + x.shape[1:]), blocks)
+        shared = params["shared_attn"]
+        S = h.shape[1]
+        W = cache["k"].shape[2]
+
+        def mamba_body(carry, p):
+            h = carry
+            x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+            y, st = M.mamba_apply(p["mamba"], cfg, x, sharder,
+                                  return_state=True)
+            return h + y, st
+
+        def group_body(carry, pg):
+            h = carry
+            h, st = lax.scan(jax.checkpoint(mamba_body), h, pg)
+            z = jnp.concatenate([h, h0], axis=-1)
+            z = jnp.einsum("bse,ed->bsd", z, shared["shared_in"])
+            x = L.rms_norm(z, shared["norm1"], cfg.norm_eps)
+            y, (k, v) = L.attention_apply(shared["attn"], cfg, x, cos, sin,
+                                          sharder, window=window)
+            z = z + y
+            x = L.rms_norm(z, shared["norm2"], cfg.norm_eps)
+            z = z + L.mlp_apply(shared["mlp"], x, sharder)
+            h = h + z
+            # keep only the last W positions for the sliding-window cache
+            return h, (st, k[:, -W:] if S >= W else k, v[:, -W:] if S >= W
+                       else v)
+
+        h, (states, ks, vs) = lax.scan(group_body, h, grouped)
+        convs, ssms = states
+        # (G, k_every, B, ...) -> (L, B, ...)
+        cache["conv"] = convs.reshape((-1,) + convs.shape[2:])
+        cache["ssm"] = ssms.reshape((-1,) + ssms.shape[2:])
+        cache["k"] = _write_prefix(cache["k"], ks)
+        cache["v"] = _write_prefix(cache["v"], vs)
+        return h, cache
+
+    def _prefill_encdec(self, params, batch, cache, sharder):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], sharder)
+        # precompute cross k/v per decoder layer
+        def cross(p):
+            k = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wv"])
+            return k, v
+        ks, vs = jax.vmap(
+            cross, in_axes=(0,))(params["dec_blocks"]) \
+            if False else _map_layers(cross, params["dec_blocks"])
+        cache["cross_k"], cache["cross_v"] = ks, vs
+
+        tokens = batch["tokens"]
+        h = L.embed_tokens(params, cfg, tokens)
+        S = h.shape[1]
+        h = h + _sinusoidal(S, cfg.d_model).astype(h.dtype)
+        h = sharder(h, ("batch", "seq_q", "embed"))
+
+        def body(carry, inp):
+            h = carry
+            p, kx, vx = inp
+            x = L.layer_norm(h, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+            y, (k, v) = L.attention_apply(p["attn"], cfg, x, None, None,
+                                          sharder)
+            h = h + y
+            x = L.layer_norm(h, p["lnx_s"], p["lnx_b"], cfg.norm_eps)
+            y, _ = L.attention_apply(p["cross_attn"], cfg, x, None, None,
+                                     sharder, causal=False,
+                                     kv_override=(kx, vx))
+            h = h + y
+            x = L.layer_norm(h, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+            h = h + L.mlp_apply(p["mlp"], x, sharder, gelu=True)
+            return h, (k, v)
+
+        h, (ks2, vs2) = lax.scan(jax.checkpoint(body), h,
+                                 (params["dec_blocks"], ks, vs))
+        cache["k"] = _write_prefix(cache["k"], ks2)
+        cache["v"] = _write_prefix(cache["v"], vs2)
+        cache["length"] = jnp.asarray(S, jnp.int32)
+        logits = L.logits_from_hidden(params, cfg, h[:, -1:], sharder)
+        return logits, cache
+
+    # -------------------------------------------------------------- decode
+    def decode_step(self, params, tokens, cache,
+                    sharder=_identity_sharder):
+        """One-token decode against the cache. tokens (B, 1)."""
+        cfg = self.cfg
+        length = cache["length"]
+        h = L.embed_tokens(params, cfg, tokens)
+        h = sharder(h, ("batch", None, "embed"))
+        if cfg.family == "encdec":
+            h = h + _sinusoidal_at(length, cfg.d_model).astype(h.dtype)
+            cos = sin = None
+        elif cfg.family == "ssm":
+            cos = sin = None
+        else:
+            dim = cfg.qk_rope_dim if cfg.mla else cfg.head_dim_
+            cos, sin = L.rope_angles(length[None], dim, cfg.rope_theta)
+
+        if cfg.family in ("dense", "vlm"):
+            # NOTE (§Perf decode iteration 2, REFUTED): threading the
+            # stacked cache through the scan carry with slot-only DUS
+            # writes was tried to avoid the 2x67 MB/layer ys re-stacking;
+            # SPMD rematerialises the sharded cache on every traced-index
+            # update (measured 27x WORSE memory term). The ys path keeps
+            # the per-layer slice update local to its shards.
+            def body(h, pc):
+                p, (k, v) = pc
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                y, (k, v) = _decode_attention(p["attn"], cfg, x, cos, sin,
+                                              k, v, length, sharder)
+                h = h + y
+                x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                h = h + L.mlp_apply(p["mlp"], x, sharder)
+                return h, (k, v)
+            h, (ks, vs) = _scan_layers(body, h,
+                                       (params["blocks"],
+                                        (cache["k"], cache["v"])))
+            cache["k"], cache["v"] = ks, vs
+        elif cfg.family == "moe":
+            h, cache = self._decode_moe(params, h, cos, sin, cache, sharder)
+        elif cfg.family == "ssm":
+            def body(h, pc):
+                p, (cs, ss) = pc
+                x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+                y, (cs, ss) = M.mamba_decode_step(p["mamba"], cfg, x, cs, ss)
+                return h + y, (cs, ss)
+            h, (convs, ssms) = _scan_layers(
+                body, h, (params["blocks"], (cache["conv"], cache["ssm"])))
+            cache["conv"], cache["ssm"] = convs, ssms
+        elif cfg.family == "hybrid":
+            h, cache = self._decode_hybrid(params, h, cos, sin, cache,
+                                           sharder)
+        elif cfg.family == "encdec":
+            def body(h, pc):
+                p, (k, v, kx, vx) = pc
+                x = L.layer_norm(h, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+                y, (k, v) = _decode_attention(p["attn"], cfg, x, None, None,
+                                              k, v, length, sharder)
+                h = h + y
+                x = L.layer_norm(h, p["lnx_s"], p["lnx_b"], cfg.norm_eps)
+                y = _cross_attention_step(p["cross_attn"], cfg, x, kx, vx,
+                                          sharder)
+                h = h + y
+                x = L.layer_norm(h, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+                h = h + L.mlp_apply(p["mlp"], x, sharder, gelu=True)
+                return h, (k, v)
+            h, (ks, vs) = _scan_layers(
+                body, h, (params["dec_blocks"],
+                          (cache["k"], cache["v"],
+                           cache["cross_k"], cache["cross_v"])))
+            cache["k"], cache["v"] = ks, vs
+        logits = L.logits_from_hidden(params, cfg, h, sharder)
+        cache["length"] = length + 1
+        return logits, cache
+
+    def _decode_moe(self, params, h, cos, sin, cache, sharder):
+        cfg = self.cfg
+        length = cache["length"]
+        capacity = _moe_capacity(cfg, 1)   # decode: one token per row
+        impl = _moe_impl(cfg, sharder)
+        if impl == "ep_shardmap":
+            # decode moves ~1 token/row: the shard_map boundary re-gathers
+            # FSDP expert weights every step (+44 % collective measured on
+            # deepseek-v3 decode_32k); pjit's gather placement wins here.
+            impl = "ep"
+        nd = cfg.first_dense_layers
+
+        if cfg.mla:
+            def attn_step(p, x, kv):
+                return _decode_mla(p["attn"], cfg, x, cos, sin, kv[0],
+                                   kv[1], length, sharder)
+            kv_names = ("c_kv", "k_rope")
+        else:
+            def attn_step(p, x, kv):
+                return _decode_attention(p["attn"], cfg, x, cos, sin,
+                                         kv[0], kv[1], length, sharder)
+            kv_names = ("k", "v")
+        kv_all = (cache[kv_names[0]], cache[kv_names[1]])
+
+        def dbody(h, pc):
+            p, kv = pc
+            x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+            y, kv = attn_step(p, x, kv)
+            h = h + y
+            x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+            h = h + L.mlp_apply(p["mlp"], x, sharder)
+            return h, kv
+
+        def mbody(h, pc):
+            p, kv = pc
+            x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+            y, kv = attn_step(p, x, kv)
+            h = h + y
+            x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+            y, _ = _moe_call(impl, p["moe"], cfg, x, sharder,
+                             capacity)
+            h = h + y
+            return h, kv
+
+        if nd:
+            h, kv_d = _scan_layers(
+                dbody, h, (params["dense_blocks"],
+                           jax.tree.map(lambda x: x[:nd], kv_all)))
+        h, kv_m = _scan_layers(
+            mbody, h, (params["moe_blocks"],
+                       jax.tree.map(lambda x: x[nd:], kv_all)))
+        if nd:
+            kv_new = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), kv_d, kv_m)
+        else:
+            kv_new = kv_m
+        cache[kv_names[0]], cache[kv_names[1]] = kv_new
+        return h, cache
+
+    def _decode_hybrid(self, params, h, cos, sin, cache, sharder):
+        cfg = self.cfg
+        length = cache["length"]
+        k_every = cfg.attn_every
+        n_groups = cfg.n_layers // k_every
+        blocks = params["blocks"]
+        grouped = jax.tree.map(
+            lambda x: x[:n_groups * k_every].reshape(
+                (n_groups, k_every) + x.shape[1:]), blocks)
+        shared = params["shared_attn"]
+        h0 = h
+        W = cache["k"].shape[2]
+
+        def mamba_body(h, pc):
+            p, (cs, ss) = pc
+            x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+            y, (cs, ss) = M.mamba_decode_step(p["mamba"], cfg, x, cs, ss)
+            return h + y, (cs, ss)
+
+        def group_body(h, pc):
+            pg, (cs, ss, k, v) = pc
+            h, (cs, ss) = _scan_layers(mamba_body, h, (pg, (cs, ss)))
+            z = jnp.concatenate([h, h0], axis=-1)
+            z = jnp.einsum("bse,ed->bsd", z, shared["shared_in"])
+            x = L.rms_norm(z, shared["norm1"], cfg.norm_eps)
+            y, (k, v) = _decode_attention(shared["attn"], cfg, x, cos, sin,
+                                          k, v, length, sharder,
+                                          ring=True)
+            z = z + y
+            x = L.rms_norm(z, shared["norm2"], cfg.norm_eps)
+            z = z + L.mlp_apply(shared["mlp"], x, sharder)
+            return h + z, (cs, ss, k, v)
+
+        gconv = jax.tree.map(
+            lambda x: x.reshape((n_groups, k_every) + x.shape[1:]),
+            cache["conv"])
+        gssm = jax.tree.map(
+            lambda x: x.reshape((n_groups, k_every) + x.shape[1:]),
+            cache["ssm"])
+        h, (convs, ssms, ks, vs) = _scan_layers(
+            group_body, h, (grouped, (gconv, gssm, cache["k"], cache["v"])))
+        cache["conv"] = convs.reshape(cache["conv"].shape)
+        cache["ssm"] = ssms.reshape(cache["ssm"].shape)
+        cache["k"], cache["v"] = ks, vs
+        return h, cache
+
+    # ----------------------------------------------------------- caches
+    def cache_spec(self, batch: int, max_len: int,
+                   window: Optional[int] = None) -> CacheSpec:
+        return cache_spec(self.cfg, batch, max_len, window)
+
+
+# --------------------------------------------------------------- helpers
+def _specs_only(model: Model):
+    """Spec tree without touching device memory: init under eval_shape
+    only returns shapes, so run the spec-collection side eagerly via a
+    ParamSet with a dummy key. Specs are plain python, so this is cheap."""
+    import numpy as np
+
+    class _Dummy:
+        pass
+
+    # Re-run init in eval_shape to collect specs: ParamSet.param stores
+    # specs as a side effect during tracing, which eval_shape executes.
+    specs_box = {}
+
+    def run(k):
+        params, specs = model.init(k)
+        specs_box["specs"] = specs
+        return params
+
+    jax.eval_shape(run, jax.random.key(0))
+    return None, specs_box["specs"]
+
+
+def _write_prefix(cache_buf, stacked):
+    """Write (L, B, S, ...) prefill tensors into (L, B, S_max, ...) cache."""
+    S = min(stacked.shape[2], cache_buf.shape[2])
+    return lax.dynamic_update_slice(
+        cache_buf, stacked[:, :, -S:].astype(cache_buf.dtype),
+        (0,) * cache_buf.ndim)
+
+
+def _scan_layers(body, h, xs):
+    """scan over the layer axis with (params, cache) as scanned xs/ys."""
+    def wrapped(carry, x):
+        h, aux = carry, None
+        h, ys = body(h, x)
+        return h, ys
+    h, ys = lax.scan(wrapped, h, xs)
+    return h, ys
+
+
+def _map_layers(fn, stacked_params):
+    """vmap a function over the stacked layer axis of a param subtree."""
+    return jax.vmap(fn)(stacked_params)
+
+
+def _sinusoidal(S: int, d: int):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _sinusoidal_at(pos, d: int):
+    i = jnp.arange(d // 2).astype(jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+
+
+def _decode_attention_stacked(params, cfg, x, cos, sin, kc, vc, li,
+                              length, sharder):
+    """Decode attention writing the new token directly into the STACKED
+    (L, B, T, KVH, hd) carry — the write touches one token slot, not the
+    layer's whole cache (§Perf decode iteration 2)."""
+    import math as _m
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    B, T = kc.shape[1], kc.shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k_new = k_new + params["bk"]
+        v_new = v_new + params["bv"]
+    if cfg.qk_norm:
+        q = L.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = L.rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    if cos is not None:
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+    slot = jnp.minimum(length, T - 1)
+    z = jnp.zeros((), slot.dtype)
+    li = li.astype(slot.dtype)
+    kc = lax.dynamic_update_slice(
+        kc, k_new[None].astype(kc.dtype), (li, z, slot, z, z))
+    vc = lax.dynamic_update_slice(
+        vc, v_new[None].astype(vc.dtype), (li, z, slot, z, z))
+    k_l = lax.dynamic_index_in_dim(kc, li, 0, keepdims=False)
+    v_l = lax.dynamic_index_in_dim(vc, li, 0, keepdims=False)
+    g = h // kvh
+    qg = q.reshape(B, kvh, g, hd)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg, k_l,
+                        preferred_element_type=jnp.float32)
+    scores = scores / _m.sqrt(hd)
+    valid = jnp.arange(T) <= length
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(x.dtype), v_l,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(B, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, kc, vc
+
+
+def _decode_attention(params, cfg, x, cos, sin, k_cache, v_cache, length,
+                      sharder, ring: bool = False):
+    """Single-token attention against a (B, T, KVH, hd) cache.
+
+    The cache sequence axis may be sharded ('model'); softmax and the
+    value contraction reduce over it, which SPMD lowers to the split-KV
+    partial-softmax + combine pattern (tiny (B,H) collectives).
+    ``ring=True`` treats the cache as a ring buffer of its own length
+    (sliding-window serving).
+    """
+    import math as _m
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    B, T = k_cache.shape[0], k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k_new = k_new + params["bk"]
+        v_new = v_new + params["bv"]
+    if cfg.qk_norm:
+        q = rms = L.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = L.rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    if cos is not None:
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+    slot = (length % T) if ring else jnp.minimum(length, T - 1)
+    z = jnp.zeros((), slot.dtype)   # match index dtypes (x64-safe)
+    k_cache = lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (z, slot, z, z))
+    v_cache = lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (z, slot, z, z))
+    g = h // kvh
+    qg = q.reshape(B, kvh, g, hd)
+    # keep cache reads in their storage dtype (memory-bound step: the f32
+    # upcast doubled HBM bytes — §Perf internlm2/decode_32k iteration);
+    # the dot still accumulates in fp32.
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / _m.sqrt(hd)
+    pos = jnp.arange(T)
+    valid = pos <= (length % T) if ring else pos <= length
+    if ring:
+        valid = valid | (length >= T)
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(x.dtype), v_cache,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(B, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, (k_cache, v_cache)
+
+
+def _decode_mla(params, cfg, x, cos, sin, ckv_cache, krope_cache, length,
+                sharder):
+    """MLA decode with weight absorption: attends in the compressed
+    (kv_lora + rope) space; cache per token is kv_lora_rank+qk_rope_dim."""
+    import math as _m
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    B, T = ckv_cache.shape[0], ckv_cache.shape[1]
+    q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q = L.rms_norm(q, params["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, params["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    # absorb W_UK: q_nope (B,1,H,dn) @ wk_b (kvr,H,dn) -> (B,1,H,kvr)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_new = L.rms_norm(kv[..., :cfg.kv_lora_rank], params["kv_a_norm"],
+                       cfg.norm_eps)
+    kr_new = L.apply_rope(kv[..., None, cfg.kv_lora_rank:], cos, sin)[:, :, 0]
+    slot = jnp.minimum(length, T - 1)
+    z = jnp.zeros((), slot.dtype)
+    ckv_cache = lax.dynamic_update_slice(
+        ckv_cache, c_new[:, 0:1].astype(ckv_cache.dtype), (z, slot, z))
+    krope_cache = lax.dynamic_update_slice(
+        krope_cache, kr_new[:, 0:1].astype(krope_cache.dtype),
+        (z, slot, z))
+
+    s_nope = jnp.einsum("bshr,btr->bhst", q_abs, ckv_cache,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, krope_cache,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) / _m.sqrt(dn + dr)
+    valid = jnp.arange(T) <= length
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    # attend in latent space then decompress through wv_b (absorbed into o)
+    lat = jnp.einsum("bhst,btr->bshr", p.astype(x.dtype), ckv_cache,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bshr,rhk->bshk", lat.astype(x.dtype), params["wv_b"])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, (ckv_cache, krope_cache)
+
+
+def _cross_attention_step(params, cfg, x, kx, vx, sharder):
+    import math as _m
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    B = x.shape[0]
+    g = h // kvh
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    qg = q.reshape(B, 1, kvh, g, hd)
+    scores = jnp.einsum("bshgk,bthk->bhgst", qg.astype(jnp.float32),
+                        kx.astype(jnp.float32)) / _m.sqrt(hd)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthk->bshgk", p, vx.astype(jnp.float32))
+    out = out.reshape(B, 1, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

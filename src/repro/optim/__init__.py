@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               opt_state_axes)
+from repro.optim.schedules import cosine_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_state_axes",
+           "cosine_schedule"]

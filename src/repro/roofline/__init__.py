@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HW_V5E, RooflineReport, analyze,
+                                     collective_bytes_from_hlo)
+
+__all__ = ["HW_V5E", "RooflineReport", "analyze",
+           "collective_bytes_from_hlo"]

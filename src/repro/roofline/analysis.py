@@ -1,0 +1,233 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = sum over collective ops of operand_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program
+totals across all devices). Collective bytes are NOT in cost_analysis: we
+parse the optimized HLO text and sum operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops (these
+are per-shard shapes; bytes counted are what each device moves, summed
+program-wide).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+HW_V5E = dict(
+    peak_flops=197e12,     # bf16 FLOP/s
+    hbm_bw=819e9,          # bytes/s
+    ici_bw=50e9,           # bytes/s per link (~4 usable links/chip on the
+                           # 2D torus; we charge the single-link figure as
+                           # the conservative per-hop bandwidth)
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one HLO shape like 'bf16[8,4096,128]' or a tuple of them."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    Uses the op's *result* shape (per-participant shard bytes). all-reduce
+    moves ~2x its buffer in a ring; we report raw buffer bytes and apply
+    algorithm factors in `analyze`.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # matches:  %name = bf16[...] all-reduce(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\s+"
+                     r"([a-z\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES:
+            op = op.replace("-start", "").replace("-done", "")
+        if op not in _COLLECTIVES:
+            continue
+        if "-done" in s.split("=")[1][:60]:
+            continue
+        out[op] += _shape_bytes(m.group(1))
+        counts[op] += 1
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float          # whole-program FLOPs / 1e9
+    hlo_gbytes: float          # whole-program HBM traffic / 1e9
+    collective_gbytes: float   # per-device collective bytes / 1e9
+    collective_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_gflops: float        # 6*N*D (or 6*N_active*D for MoE)
+    bytes_per_device: Dict[str, float] = field(default_factory=dict)
+    notes: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s,
+                     collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return (self.model_gflops / self.hlo_gflops
+                if self.hlo_gflops else 0.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline step time."""
+        chips_flops = self.chips * HW_V5E["peak_flops"]
+        t = self.step_time_s
+        return (self.model_gflops * 1e9) / (chips_flops * t) if t else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, step_time_s=self.step_time_s,
+                 useful_flop_ratio=self.useful_flop_ratio, mfu=self.mfu)
+        return d
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                n_params_active: Optional[float] = None) -> float:
+    """6*N*D for train, 2*N*D for forward-only (prefill), 2*N*B for one
+    decode token. N = active params (MoE: routed fraction only)."""
+    n = n_params_active if n_params_active is not None else 0.0
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * global_batch
+
+
+def active_params(cfg) -> float:
+    """Parameter count with MoE counted at top-k routed + shared experts."""
+    d, L_ = cfg.d_model, cfg.n_layers
+    v = cfg.padded_vocab
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        di = cfg.d_inner
+        per = d * 2 * di + d * 2 * cfg.ssm_ngroups * cfg.ssm_state \
+            + d * cfg.ssm_heads + di * d
+        return emb + L_ * per
+    if cfg.family == "encdec":
+        att = 4 * d * cfg.n_heads * cfg.head_dim_
+        mlp = 2 * d * cfg.d_ff
+        return emb + cfg.enc_layers * (att + mlp) \
+            + cfg.dec_layers * (2 * att + mlp)
+    if cfg.mla:
+        att = (d * cfg.q_lora_rank
+               + cfg.q_lora_rank * cfg.n_heads
+               * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+               + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+               + cfg.kv_lora_rank * cfg.n_heads
+               * (cfg.qk_nope_dim + cfg.v_head_dim)
+               + cfg.n_heads * cfg.v_head_dim * d)
+    else:
+        att = d * cfg.n_heads * cfg.head_dim_ * 2 \
+            + d * cfg.n_kv_heads * cfg.head_dim_ * 2
+    mlp_dense = 3 * d * cfg.d_ff
+    if cfg.family == "moe":
+        f = cfg.moe_d_ff
+        act_experts = cfg.topk + cfg.n_shared_experts
+        moe = 3 * d * f * act_experts + d * cfg.n_experts  # + router
+        nd = cfg.first_dense_layers
+        total = emb + nd * (att + mlp_dense) + (L_ - nd) * (att + moe)
+        return total
+    if cfg.family == "hybrid":
+        di = cfg.d_inner
+        per = d * 2 * di + d * 2 * cfg.ssm_ngroups * cfg.ssm_state \
+            + d * cfg.ssm_heads + di * d
+        shared = (2 * d) * d + att + mlp_dense   # one shared block
+        n_shared_uses = L_ // cfg.attn_every
+        return emb + L_ * per + shared * max(n_shared_uses, 1)
+    total = emb + L_ * (att + mlp_dense)
+    if cfg.family == "vlm":
+        pass  # frontend stubbed; backbone only
+    return total
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, cfg, shape_cfg,
+            memory_stats: Optional[dict] = None) -> RooflineReport:
+    """Roofline terms from the compiled module.
+
+    FLOPs/bytes/collectives come from our own HLO analyzer
+    (roofline/hlo_cost.py) because ``compiled.cost_analysis()`` counts
+    while-loop bodies ONCE — models lowered as scan-over-layers inside
+    scan-over-microbatches would be underreported by the product of trip
+    counts. ``cost`` (XLA's numbers) is kept in the record for
+    comparison.
+    """
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    summary = analyze_hlo(hlo_text)
+    flops = summary.flops
+    bts = summary.bytes_accessed
+    weighted = summary.weighted_collective_bytes
+    n_active = active_params(cfg)
+    mf = model_flops(cfg, shape_cfg.kind, shape_cfg.seq_len,
+                     shape_cfg.global_batch, n_active)
+    # HLO totals are per-program = per-device under SPMD
+    compute_s = flops / HW_V5E["peak_flops"]
+    memory_s = bts / HW_V5E["hbm_bw"]
+    collective_s = weighted / HW_V5E["ici_bw"]
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=bts / 1e9,
+        collective_gbytes=weighted / 1e9,
+        collective_breakdown={k: v / 1e9 for k, v
+                              in summary.collective_bytes.items()},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_gflops=mf / 1e9 / chips,   # per-device share of model FLOPs
+        bytes_per_device=memory_stats or {},
+    )

@@ -1,0 +1,3 @@
+from repro.serving.engine import EdgeServingEngine, ServedFunction
+
+__all__ = ["EdgeServingEngine", "ServedFunction"]

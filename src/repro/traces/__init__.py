@@ -1,0 +1,3 @@
+from repro.traces.generator import synth_azure_trace, trace_from_lists
+
+__all__ = ["synth_azure_trace", "trace_from_lists"]

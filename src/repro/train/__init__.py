@@ -1,0 +1,4 @@
+from repro.train.train_step import TrainConfig, make_train_step
+from repro.train.data import synthetic_lm_batches
+
+__all__ = ["TrainConfig", "make_train_step", "synthetic_lm_batches"]

@@ -1,0 +1,87 @@
+"""Training step factory: loss + grad + AdamW, with optional microbatch
+gradient accumulation (``lax.scan`` over microbatches — activation memory
+is bounded by one microbatch) and int8 gradient compression across the
+data axes (error feedback kept in the optimizer state is NOT needed
+because quantisation happens before the *reduction*, see
+distributed/compression.py)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.compression import compress_grads_int8
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    optimizer: AdamWConfig = AdamWConfig()
+    compress_grads: bool = False
+    # gradient accumulator dtype: fp32 default; bf16 halves the resident
+    # accumulator for the 100B+ configs (mean-of-microbatches keeps the
+    # bf16 error bounded; see tests/test_train.py)
+    accum_dtype: str = "float32"
+
+
+def make_train_step(model, tcfg: TrainConfig,
+                    sharder=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics). ``batch`` leaves have leading
+    global-batch dim; with microbatching it is reshaped to
+    (microbatches, mb, ...) and accumulated under lax.scan."""
+    sharder = sharder or (lambda x, ax: x)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, sharder)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        n_mb = tcfg.microbatches
+        if n_mb > 1:
+            batch_r = jax.tree.map(
+                lambda x: x.reshape((n_mb, x.shape[0] // n_mb)
+                                    + x.shape[1:]), batch)
+
+            adt = jnp.dtype(tcfg.accum_dtype)
+
+            def mb_step(carry, mb):
+                acc, metr = carry
+                (loss, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(adt), acc, g)
+                metr = jax.tree.map(jnp.add, metr,
+                                    {"loss": loss, **m})
+                return (acc, metr), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            zeros_m = {"loss": jnp.zeros((), jnp.float32),
+                       "ce": jnp.zeros((), jnp.float32),
+                       "aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = lax.scan(mb_step, (zeros_g, zeros_m),
+                                           batch_r)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            metrics = jax.tree.map(lambda m: m / n_mb, metrics)
+        else:
+            (loss, m), grads = grad_fn(params, batch)
+            metrics = {"loss": loss, **m}
+
+        if tcfg.compress_grads:
+            grads = compress_grads_int8(grads)
+        params, opt_state, om = adamw_update(
+            tcfg.optimizer, params, grads, opt_state)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_optimizer(tcfg: TrainConfig, params):
+    return adamw_init(tcfg.optimizer, params)

@@ -1,0 +1,215 @@
+"""Layer-level correctness: chunked attention vs naive softmax, SSD
+chunked vs token recurrence, MoE capacity vs dense oracle, rope, norms."""
+import math
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.config import ModelConfig
+
+
+def naive_attention(q, k, v, causal=True, q_offset=0, window=None):
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    g = H // KVH
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(D)
+    if causal:
+        aq = jnp.arange(Sq) + q_offset
+        ak = jnp.arange(Skv)
+        mask = aq[:, None] >= ak[None, :]
+        if window is not None:
+            mask &= (aq[:, None] - ak[None, :]) <= window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, vf)
+    return o.astype(q.dtype)
+
+
+@pytest.mark.parametrize("Sq,Skv,H,KVH,chunk,offset,window", [
+    (32, 32, 4, 4, 8, 0, None),
+    (32, 32, 4, 2, 8, 0, None),
+    (16, 48, 4, 1, 16, 32, None),     # decode-continuation style
+    (64, 64, 2, 2, 16, 0, 24),        # sliding window
+    (33, 50, 4, 2, 16, 0, None),      # ragged (padding paths)
+])
+def test_chunked_attention_matches_naive(Sq, Skv, H, KVH, chunk, offset,
+                                         window):
+    rng = np.random.default_rng(0)
+    D = 16
+    q = jnp.array(rng.normal(size=(2, Sq, H, D)), jnp.float32)
+    k = jnp.array(rng.normal(size=(2, Skv, KVH, D)), jnp.float32)
+    v = jnp.array(rng.normal(size=(2, Skv, KVH, D)), jnp.float32)
+    if offset % max(chunk, 1) != 0:
+        pytest.skip("offset must be chunk aligned")
+    got = L.chunked_attention(q, k, v, chunk=chunk, q_offset=offset,
+                              window=window)
+    want = naive_attention(q, k, v, q_offset=offset, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_attention_noncausal():
+    rng = np.random.default_rng(1)
+    q = jnp.array(rng.normal(size=(1, 24, 2, 8)), jnp.float32)
+    k = jnp.array(rng.normal(size=(1, 40, 2, 8)), jnp.float32)
+    v = jnp.array(rng.normal(size=(1, 40, 2, 8)), jnp.float32)
+    got = L.chunked_attention(q, k, v, chunk=16, causal=False)
+    want = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_attention_grads_finite():
+    rng = np.random.default_rng(2)
+    q = jnp.array(rng.normal(size=(1, 32, 2, 8)), jnp.float32)
+    k = jnp.array(rng.normal(size=(1, 32, 1, 8)), jnp.float32)
+    v = jnp.array(rng.normal(size=(1, 32, 1, 8)), jnp.float32)
+    g = jax.grad(lambda q: L.chunked_attention(q, k, v, chunk=8).sum())(q)
+    assert jnp.isfinite(g).all()
+
+
+# ------------------------------------------------------------------ SSD
+@pytest.mark.parametrize("Lq,chunk,h,p,g,n", [
+    (64, 16, 4, 8, 1, 16),
+    (50, 16, 4, 8, 2, 8),       # ragged length + groups
+    (32, 32, 2, 4, 1, 4),       # single chunk
+])
+def test_ssd_chunked_matches_reference(Lq, chunk, h, p, g, n):
+    rng = np.random.default_rng(0)
+    b = 2
+    x = jnp.array(rng.normal(size=(b, Lq, h, p)), jnp.float32)
+    dt = jnp.array(rng.uniform(0.01, 0.2, size=(b, Lq, h)), jnp.float32)
+    A = -jnp.array(rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B = jnp.array(rng.normal(size=(b, Lq, g, n)), jnp.float32)
+    C = jnp.array(rng.normal(size=(b, Lq, g, n)), jnp.float32)
+    y1, s1 = M.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y2, s2 = M.ssd_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_carry():
+    """Chunked SSD with an initial state == reference run over the
+    concatenated sequence."""
+    rng = np.random.default_rng(3)
+    b, l1, l2, h, p, g, n = 1, 32, 32, 2, 4, 1, 8
+    mk = lambda s: jnp.array(rng.normal(size=s), jnp.float32)
+    x = mk((b, l1 + l2, h, p))
+    dt = jnp.array(rng.uniform(0.01, 0.2, size=(b, l1 + l2, h)), jnp.float32)
+    A = -jnp.array(rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B = mk((b, l1 + l2, g, n))
+    C = mk((b, l1 + l2, g, n))
+    y_all, s_all = M.ssd_reference(x, dt, A, B, C)
+    _, s1 = M.ssd_chunked(x[:, :l1], dt[:, :l1], A, B[:, :l1], C[:, :l1],
+                          chunk=16)
+    y2, s2 = M.ssd_chunked(x[:, l1:], dt[:, l1:], A, B[:, l1:], C[:, l1:],
+                           chunk=16, init_state=s1)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_all[:, l1:]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_grads_finite():
+    rng = np.random.default_rng(4)
+    b, l, h, p, g, n = 1, 32, 2, 4, 1, 8
+    x = jnp.array(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.array(rng.uniform(0.01, 0.2, size=(b, l, h)), jnp.float32)
+    A = -jnp.ones((h,), jnp.float32)
+    B = jnp.array(rng.normal(size=(b, l, g, n)), jnp.float32)
+    C = jnp.array(rng.normal(size=(b, l, g, n)), jnp.float32)
+    gr = jax.grad(lambda x: M.ssd_chunked(x, dt, A, B, C, chunk=8)[0].sum())(x)
+    assert jnp.isfinite(gr).all()
+
+
+# ------------------------------------------------------------------ MoE
+def _moe_cfg(**kw):
+    base = dict(n_experts=8, topk=2, moe_d_ff=32, d_model=16,
+                capacity_factor=8.0, n_shared_experts=0,
+                param_dtype="float32", compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_capacity_matches_dense_when_uncapped():
+    cfg = _moe_cfg()
+    ps = L.ParamSet(jax.random.key(0), jnp.float32)
+    L.init_moe(ps, cfg)
+    params, _ = ps.done()
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(2, 12, cfg.d_model)), jnp.float32)
+    ident = lambda a, ax: a
+    y_dense, aux_d = L.moe_apply_dense(params, cfg, x, ident)
+    capacity = 2 * 12 * cfg.topk  # uncapped
+    y_cap, aux_c = L.moe_apply_capacity(params, cfg, x, ident, capacity)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_cap),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_d), float(aux_c), rtol=1e-5)
+
+
+def test_moe_capacity_drops_overflow():
+    cfg = _moe_cfg()
+    ps = L.ParamSet(jax.random.key(0), jnp.float32)
+    L.init_moe(ps, cfg)
+    params, _ = ps.done()
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(1, 64, cfg.d_model)), jnp.float32)
+    ident = lambda a, ax: a
+    y_small, _ = L.moe_apply_capacity(params, cfg, x, ident, capacity=2)
+    y_big, _ = L.moe_apply_capacity(params, cfg, x, ident, capacity=256)
+    # dropping must change results (overflowed tokens fall back to 0)
+    assert not np.allclose(np.asarray(y_small), np.asarray(y_big))
+    assert jnp.isfinite(y_small).all()
+
+
+@given(st.integers(1, 30), st.integers(1, 8), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_moe_dispatch_slots_unique(n_tokens, n_experts, k):
+    k = min(k, n_experts)
+    rng = np.random.default_rng(n_tokens * 31 + n_experts)
+    top_e = jnp.array(rng.integers(0, n_experts, (1, n_tokens, k)))
+    top_p = jnp.ones((1, n_tokens, k), jnp.float32) / k
+    cap = 4
+    slot, w = L.moe_dispatch_indices(top_e, top_p, n_experts, cap)
+    # no two kept (expert, slot) pairs may collide
+    kept = [(int(e), int(s)) for e, s, ww in
+            zip(np.asarray(top_e).ravel(), np.asarray(slot).ravel(),
+                np.asarray(w).ravel()) if s < cap and ww > 0]
+    assert len(kept) == len(set(kept))
+    assert (np.asarray(slot) <= cap).all()
+
+
+# ------------------------------------------------------------------ misc
+def test_rope_rotation_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    cos, sin = L.rope_angles(jnp.arange(8), 16, 1e4)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rms_norm_unit_scale():
+    x = jnp.full((2, 4, 8), 3.0, jnp.float32)
+    y = L.rms_norm(x, jnp.ones((8,)), 1e-6)
+    np.testing.assert_allclose(np.asarray(y), np.ones((2, 4, 8)),
+                               rtol=1e-5)
+
+
+def test_cross_entropy_masks_padded_vocab():
+    logits = jnp.zeros((1, 4, 16))
+    labels = jnp.array([[1, 2, -1, 3]])
+    loss = L.cross_entropy(logits, labels, vocab_size=10)
+    assert float(loss) == pytest.approx(math.log(16), rel=1e-5)

@@ -1,0 +1,106 @@
+"""Faithfulness tests against the paper's own worked examples (Figs. 1, 4)."""
+import pytest
+
+from repro.core import simulate
+from repro.traces import trace_from_lists
+
+
+def fig1_trace():
+    """Fig. 1: two long requests of f1 arrive before three short of f2."""
+    return trace_from_lists(
+        fn_ids=[0, 0, 1, 1, 1],
+        arrivals=[0.0, 0.1, 1.0, 1.1, 1.2],
+        exec_times=[10.0, 10.0, 0.5, 0.5, 0.5],
+        cold=[1.0, 1.0], evict=[1.0, 1.0],
+    )
+
+
+class TestFig1:
+    def test_openwhisk_blocks_short_requests(self):
+        tr = fig1_trace()
+        simulate(tr, "openwhisk", capacity=1, oracle_exec=True)
+        order = sorted(tr.requests, key=lambda r: r.start)
+        # Fig. 1(a): arrival order — r3..r5 blocked behind both long requests
+        assert [r.req_id for r in order] == [0, 1, 2, 3, 4]
+
+    def test_openwhisk_v2_still_blocks(self):
+        tr = fig1_trace()
+        simulate(tr, "openwhisk_v2", capacity=1, oracle_exec=True)
+        order = sorted(tr.requests, key=lambda r: r.start)
+        # Fig. 1(b): r2 is already waiting when r1 finishes, so f1's
+        # instance keeps processing its own queue.
+        assert [r.req_id for r in order] == [0, 1, 2, 3, 4]
+
+    def test_esff_reorders_like_fig1c(self):
+        tr = fig1_trace()
+        simulate(tr, "esff", capacity=1, oracle_exec=True)
+        order = sorted(tr.requests, key=lambda r: r.start)
+        # Fig. 1(c): after r1, ESFF replaces f1 by f2 (short), then returns.
+        assert [r.req_id for r in order] == [0, 2, 3, 4, 1]
+
+    def test_esff_wins_on_mean_response(self):
+        results = {}
+        for p in ("openwhisk", "openwhisk_v2", "esff"):
+            tr = fig1_trace()
+            results[p] = simulate(tr, p, capacity=1,
+                                  oracle_exec=True).mean_response
+        assert results["esff"] < results["openwhisk"]
+        assert results["esff"] < results["openwhisk_v2"]
+
+
+class TestFig4:
+    """Fig. 4: C=2; f1: r1,r2,r3; f2: r4,r5. FCP starts a second f1
+    instance for r2; r3 queues; at r1's completion FRP replaces f1's
+    instance with f2 (w2 < w1)."""
+
+    def make(self):
+        # f1 moderately long, f2 short; timings chosen so all Fig. 4
+        # decision points occur.
+        return trace_from_lists(
+            fn_ids=[0, 0, 0, 1, 1],
+            arrivals=[0.0, 0.5, 1.0, 1.5, 1.6],
+            exec_times=[6.0, 6.0, 6.0, 0.5, 0.5],
+            cold=[1.0, 1.0], evict=[0.5, 0.5],
+        )
+
+    def test_fcp_creates_second_instance_for_r2(self):
+        tr = self.make()
+        simulate(tr, "esff", capacity=2, oracle_exec=True)
+        r1, r2 = tr.requests[0], tr.requests[1]
+        # r2 must not wait for r1's instance (runs on a fresh instance
+        # after its own cold start, not after r1 completes at t=7).
+        assert r2.start < r1.completion
+
+    def test_frp_replaces_for_f2_at_r1_completion(self):
+        tr = self.make()
+        simulate(tr, "esff", capacity=2, oracle_exec=True)
+        r1 = tr.requests[0]
+        r4, r5 = tr.requests[3], tr.requests[4]
+        # f2's requests are served right after r1's completion + swap
+        # (eviction 0.5 + cold 1.0), NOT after the second f1 instance
+        # finishes r2 and r3.
+        assert r4.start == pytest.approx(r1.completion + 1.5, abs=1e-6)
+        assert r5.start == pytest.approx(r4.completion, abs=1e-6)
+        # r3 waits for the other f1 instance (no third slot).
+        r2, r3 = tr.requests[1], tr.requests[2]
+        assert r3.start == pytest.approx(r2.completion, abs=1e-6)
+
+
+class TestCostModel:
+    def test_replacement_pays_evict_plus_cold(self):
+        # Single slot: f0 request, then f1 request -> swap must cost
+        # t_v(f0) + t_l(f1).
+        tr = trace_from_lists(
+            fn_ids=[0, 1], arrivals=[0.0, 0.1], exec_times=[1.0, 1.0],
+            cold=[0.7, 1.1], evict=[0.3, 0.9])
+        simulate(tr, "esff", capacity=1, oracle_exec=True)
+        r0, r1 = tr.requests
+        assert r0.start == pytest.approx(0.7)          # own cold start
+        # r1: after r0 completes (1.7), evict f0 (0.3) + cold f1 (1.1)
+        assert r1.start == pytest.approx(1.7 + 0.3 + 1.1)
+
+    def test_first_cold_start_paid(self):
+        tr = trace_from_lists([0], [0.0], [2.0], cold=[1.25], evict=[0.5])
+        r = simulate(tr, "esff", capacity=1, oracle_exec=True)
+        assert tr.requests[0].completion == pytest.approx(1.25 + 2.0)
+        assert r.mean_response == pytest.approx(3.25)

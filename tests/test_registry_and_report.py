@@ -1,0 +1,85 @@
+"""Registry completeness, shape-cell rules, roofline report rendering,
+and dry-run results sanity (runs against the committed artifacts)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_cells
+
+ASSIGNED = [
+    "internlm2-20b", "qwen3-14b", "qwen1.5-4b", "qwen3-4b", "mamba2-780m",
+    "deepseek-v3-671b", "deepseek-moe-16b", "whisper-tiny", "zamba2-2.7b",
+    "internvl2-76b",
+]
+
+
+def test_all_assigned_archs_registered():
+    for a in ASSIGNED:
+        cfg = get_arch(a)
+        assert cfg.name == a
+
+
+def test_shape_cells_rules():
+    cells = shape_cells()
+    assert len(cells) == 32   # 10 archs x 3 + 2 long_500k
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"mamba2-780m", "zamba2-2.7b"}
+    for a in ASSIGNED:
+        assert (a, "train_4k") in cells
+        assert (a, "prefill_32k") in cells
+        assert (a, "decode_32k") in cells
+
+
+def test_shapes_match_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_divisibility_production_mesh():
+    """Every arch's TP-sharded dims must divide the 16-wide model axis
+    (the dry-run would fail otherwise; this is the fast guard)."""
+    for a in ASSIGNED:
+        cfg = get_arch(a)
+        assert cfg.padded_vocab % 16 == 0, a
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0, a
+        if cfg.n_experts:
+            assert cfg.n_experts % 16 == 0, a
+        if cfg.ssm_state:
+            assert cfg.d_inner % 16 == 0, a
+
+
+@pytest.mark.skipif(not Path("results/dryrun.jsonl").exists(),
+                    reason="dry-run artifacts not present")
+def test_dryrun_artifacts_complete_and_clean():
+    seen = {}
+    for line in Path("results/dryrun.jsonl").read_text().splitlines():
+        r = json.loads(line)
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    cells = shape_cells()
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for a, s in cells:
+            key = (a, s, mesh)
+            assert key in seen, f"missing cell {key}"
+            assert "error" not in seen[key], f"failed cell {key}"
+            rf = seen[key]["roofline"]
+            assert rf["compute_s"] >= 0
+            assert rf["memory_s"] > 0
+            assert rf["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.skipif(not Path("results/dryrun.jsonl").exists(),
+                    reason="dry-run artifacts not present")
+def test_roofline_report_renders():
+    from benchmarks.roofline_report import dryrun_table, load, \
+        roofline_table
+    rows = load("results/dryrun.jsonl")
+    t1 = dryrun_table(rows)
+    t2 = roofline_table(rows)
+    assert "internlm2-20b" in t1 and "internlm2-20b" in t2
+    assert t2.count("|") > 100

@@ -1,0 +1,98 @@
+"""Distributed-numerics tests on a multi-device host mesh.
+
+These run in a subprocess because the placeholder device count must be
+set before jax initialises (the main test process keeps 1 device, per
+the dry-run isolation rule).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.distributed.sharding import ShardingRules, Sharder, \\
+        logical_to_pspec
+    from repro.models import build_model
+    from repro.train.data import synthetic_lm_batch
+
+    assert len(jax.devices()) == 8
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    out = {}
+    for arch in ("qwen3-4b", "deepseek-moe-16b", "mamba2-780m"):
+        cfg = get_arch(arch).smoke().replace(param_dtype="float32",
+                                             compute_dtype="float32")
+        model = build_model(cfg)
+        params, axes = model.init(jax.random.key(0))
+        batch = {k: jnp.asarray(v)
+                 for k, v in synthetic_lm_batch(cfg, 4, 32, 0).items()}
+
+        loss_local = float(jax.jit(
+            lambda p, b: model.loss(p, b)[0])(params, batch))
+
+        rules = ShardingRules.for_config(cfg, mesh, "train")
+        sharder = Sharder(mesh, rules)
+        specs = logical_to_pspec(axes, rules)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        params_sh = jax.tree.map(jax.device_put, params, sh)
+        bsh = {k: jax.device_put(v, NamedSharding(
+            mesh, P(*( ("data",) + (None,)*(v.ndim-1) ))))
+            for k, v in batch.items()}
+        loss_sharded = float(jax.jit(
+            lambda p, b: model.loss(p, b, sharder)[0])(params_sh, bsh))
+        out[arch] = (loss_local, loss_sharded)
+
+    # sequence-parallel attention (indivisible head count) numerics
+    cfg = get_arch("qwen3-4b").smoke().replace(
+        n_heads=6, n_kv_heads=2, head_dim=16, d_model=96, d_ff=192,
+        param_dtype="float32", compute_dtype="float32", attn_chunk=16)
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.key(1))
+    batch = {k: jnp.asarray(v)
+             for k, v in synthetic_lm_batch(cfg, 4, 32, 1).items()}
+    loss_local = float(jax.jit(
+        lambda p, b: model.loss(p, b)[0])(params, batch))
+    rules = ShardingRules.for_config(cfg, mesh, "train")
+    assert rules.rules.get("_seq_attn"), "seq-attn rule not active"
+    sharder = Sharder(mesh, rules)
+    specs = logical_to_pspec(axes, rules)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    params_sh = jax.tree.map(jax.device_put, params, sh)
+    bsh = {k: jax.device_put(v, NamedSharding(
+        mesh, P(*(("data",) + (None,)*(v.ndim-1)))))
+        for k, v in batch.items()}
+    loss_sp = float(jax.jit(
+        lambda p, b: model.loss(p, b, sharder)[0])(params_sh, bsh))
+    out["seq_attn_6h"] = (loss_local, loss_sp)
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_loss_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    res = json.loads(line[len("RESULT"):])
+    for arch, (a, b) in res.items():
+        assert abs(a - b) / max(abs(a), 1e-6) < 2e-2, (arch, a, b)

@@ -1,0 +1,134 @@
+"""System-behaviour tests: invariants that must hold for every policy."""
+import numpy as np
+import pytest
+
+from repro.core import POLICIES, simulate
+from repro.traces import synth_azure_trace, trace_from_lists
+
+ALL_POLICIES = list(POLICIES)
+
+
+@pytest.fixture(scope="module")
+def small_trace():
+    return synth_azure_trace(n_functions=30, n_requests=1500,
+                             utilization=0.2, seed=7)
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_all_requests_complete(small_trace, policy):
+    tr = small_trace.head(len(small_trace))
+    res = simulate(tr, policy, capacity=8)
+    assert len(res.responses) == len(tr)
+    assert (res.responses > 0).all()
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_response_at_least_exec(small_trace, policy):
+    tr = small_trace.head(len(small_trace))
+    res = simulate(tr, policy, capacity=8)
+    assert (res.responses >= res.exec_times - 1e-9).all()
+    assert (res.slowdowns >= 1 - 1e-9).all()
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_capacity_never_exceeded(small_trace, policy):
+    """Reconstruct concurrent busy+cold occupancy from request times."""
+    tr = small_trace.head(len(small_trace))
+    capacity = 4
+    res = simulate(tr, policy, capacity=capacity)
+    # busy intervals: (start, completion). Cold occupancy isn't directly
+    # visible from requests, so check the weaker-but-sharp busy bound.
+    events = []
+    for r in tr.requests:
+        events.append((r.start, 1))
+        events.append((r.completion, -1))
+    events.sort()
+    conc, peak = 0, 0
+    for _, d in events:
+        conc += d
+        peak = max(peak, conc)
+    assert peak <= capacity
+    assert res.server.cold_starts >= 1
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_no_start_before_arrival(small_trace, policy):
+    tr = small_trace.head(len(small_trace))
+    simulate(tr, policy, capacity=8)
+    for r in tr.requests:
+        assert r.start >= r.arrival - 1e-9
+        assert r.completion == pytest.approx(r.start + r.exec_time)
+
+
+def test_single_request_pays_exactly_cold_plus_exec():
+    for policy in ALL_POLICIES:
+        tr = trace_from_lists([0], [0.0], [1.0], cold=[0.8], evict=[0.2])
+        res = simulate(tr, policy, capacity=2)
+        # OpenWhisk V2 waits its 100 ms head-of-queue threshold first.
+        expected = 1.9 if policy == "openwhisk_v2" else 1.8
+        assert res.mean_response == pytest.approx(expected), policy
+
+
+def test_warm_reuse_no_second_cold_start():
+    """Two spaced requests of one function: second runs warm everywhere."""
+    for policy in ALL_POLICIES:
+        tr = trace_from_lists([0, 0], [0.0, 10.0], [1.0, 1.0],
+                              cold=[0.8], evict=[0.2])
+        res = simulate(tr, policy, capacity=2)
+        assert res.server.cold_starts == 1, policy
+        assert tr.requests[1].start == pytest.approx(10.0), policy
+
+
+def test_determinism():
+    tr1 = synth_azure_trace(n_functions=20, n_requests=800, seed=42)
+    tr2 = synth_azure_trace(n_functions=20, n_requests=800, seed=42)
+    r1 = simulate(tr1, "esff", capacity=8)
+    r2 = simulate(tr2, "esff", capacity=8)
+    np.testing.assert_allclose(r1.responses, r2.responses)
+    assert r1.server.cold_starts == r2.server.cold_starts
+
+
+def test_more_capacity_reduces_cold_starts():
+    # Paper Fig. 5(c): in the non-saturated regime, more slots => fewer
+    # replacements => less cold-start time. (Under deep saturation the
+    # relation inverts — no idle victims — which EXPERIMENTS.md discusses.)
+    tr_fn = lambda: synth_azure_trace(n_functions=60, n_requests=6000,
+                                      utilization=0.08, seed=11)
+    cold, resp = [], []
+    for c in (8, 16, 32):
+        r = simulate(tr_fn(), "esff", capacity=c)
+        cold.append(r.server.cold_starts)
+        resp.append(r.mean_response)
+    assert cold[0] >= cold[1] >= cold[2]
+    assert resp[0] >= resp[1] >= resp[2]
+
+
+def test_esff_beats_paper_baselines_default_setup():
+    """The paper's headline claim under the default-like setup."""
+    results = {}
+    for p in ("esff", "openwhisk", "openwhisk_v2", "faascache"):
+        tr = synth_azure_trace(n_functions=200, n_requests=20_000,
+                               utilization=0.2, seed=5)
+        results[p] = simulate(tr, p, capacity=16).mean_response
+    assert results["esff"] < min(v for k, v in results.items()
+                                 if k != "esff")
+
+
+def test_intensity_scaling():
+    tr = synth_azure_trace(n_functions=20, n_requests=500, seed=1)
+    sc = tr.scaled(1.4)
+    assert sc.requests[10].arrival == pytest.approx(
+        tr.requests[10].arrival * 1.4)
+    assert sc.requests[10].exec_time == tr.requests[10].exec_time
+
+
+def test_trace_npz_roundtrip(tmp_path):
+    tr = synth_azure_trace(n_functions=10, n_requests=200, seed=2)
+    p = str(tmp_path / "t.npz")
+    tr.save_npz(p)
+    tr2 = type(tr).load_npz(p)
+    assert len(tr2) == len(tr)
+    assert tr2.requests[5].exec_time == pytest.approx(
+        tr.requests[5].exec_time)
+    assert tr2.functions[3].cold_start == pytest.approx(
+        tr.functions[3].cold_start)

@@ -1,0 +1,77 @@
+"""Theorem 2 (SSFS optimality): property tests vs exhaustive search."""
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (SSFSFunction, brute_force_best, sequence_cost,
+                        ssfs_schedule)
+
+
+def fns_strategy(max_fns=3, max_reqs=3):
+    """Small SSFS instances (brute force is factorial in total requests)."""
+    fn = st.tuples(
+        st.integers(1, max_reqs),                        # n_j
+        st.floats(0.01, 10.0, allow_nan=False),          # exec
+        st.floats(0.0, 3.0, allow_nan=False),            # cold
+        st.floats(0.0, 3.0, allow_nan=False),            # evict
+    )
+    return st.lists(fn, min_size=1, max_size=max_fns).map(
+        lambda rows: [SSFSFunction(i, n, e, c, v)
+                      for i, (n, e, c, v) in enumerate(rows)]
+    )
+
+
+@given(fns_strategy())
+@settings(max_examples=60, deadline=None)
+def test_weight_order_matches_brute_force(fns):
+    total_reqs = sum(f.n for f in fns)
+    if total_reqs > 7:          # keep enumeration tractable
+        fns = fns[:2]
+    _, algo_cost = ssfs_schedule(fns)
+    _, best_cost = brute_force_best(fns)
+    assert algo_cost == pytest.approx(best_cost, rel=1e-9, abs=1e-9)
+
+
+@given(fns_strategy(max_fns=4, max_reqs=4))
+@settings(max_examples=40, deadline=None)
+def test_schedule_cost_consistency(fns):
+    """ssfs_schedule's cost equals sequence_cost of its own expansion."""
+    order, cost = ssfs_schedule(fns)
+    by_id = {f.fn_id: f for f in fns}
+    seq = []
+    for fid in order:
+        seq.extend([fid] * by_id[fid].n)
+    assert cost == pytest.approx(sequence_cost(fns, seq), rel=1e-9)
+
+
+@given(fns_strategy(max_fns=4, max_reqs=4))
+@settings(max_examples=40, deadline=None)
+def test_contiguity_never_hurts(fns):
+    """Splitting a function's batch (paper Fig. 2) never beats contiguous."""
+    order, cost = ssfs_schedule(fns)
+    by_id = {f.fn_id: f for f in fns}
+    if len(fns) < 2 or by_id[order[0]].n < 2:
+        return
+    # interleave: first function's requests split around the second's
+    f0, f1 = order[0], order[1]
+    seq = [f0] * (by_id[f0].n - 1) + [f1] * by_id[f1].n + [f0]
+    for fid in order[2:]:
+        seq.extend([fid] * by_id[fid].n)
+    assert sequence_cost(fns, seq) >= cost - 1e-9
+
+
+def test_paper_weight_formula():
+    f = SSFSFunction(0, n=4, exec=2.0, cold=1.0, evict=0.5)
+    assert f.weight == pytest.approx(2.0 + 1.5 / 4)
+
+
+def test_ascending_weight_order():
+    fns = [
+        SSFSFunction(0, n=1, exec=5.0, cold=1.0, evict=1.0),   # w = 7.0
+        SSFSFunction(1, n=10, exec=0.1, cold=1.0, evict=1.0),  # w = 0.3
+        SSFSFunction(2, n=2, exec=1.0, cold=0.5, evict=0.5),   # w = 1.5
+    ]
+    order, _ = ssfs_schedule(fns)
+    assert order == [1, 2, 0]

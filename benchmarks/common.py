@@ -19,6 +19,9 @@ N_FUNCTIONS = 200
 CAPACITY = 16
 POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
             "openwhisk_v2")
+# policies with a vectorised kernel (repro.core.jax_policies) — swept in
+# batched device calls; the rest fall back to the Python event engine
+VEC_POLICIES = ("esff", "esff_h", "sff", "openwhisk", "openwhisk_v2")
 TRACE_KW = dict(utilization=0.2, exec_median=0.1, exec_sigma=1.4,
                 burst_frac=0.3)
 
@@ -31,7 +34,8 @@ def default_trace(seed: int = 0, **kw):
 
 
 def run_policy(trace, policy: str, capacity: int = CAPACITY):
-    return simulate(trace.head(len(trace)), policy, capacity)
+    # simulate() resets per-request state, so traces are reusable as-is
+    return simulate(trace, policy, capacity)
 
 
 def emit(rows: List[Dict], header: Iterable[str], out=None) -> None:

@@ -3,6 +3,11 @@ and simulator microbenches. Prints ``name,us_per_call,derived`` CSV
 blocks; REPRO_BENCH_SCALE scales trace sizes.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5,kernels]
+    PYTHONPATH=src python -m benchmarks.run --smoke   # <60s CI gate
+
+``--smoke`` runs every scheduling policy on a tiny trace through both
+engines and exits non-zero on any Python/JAX mismatch — cheap enough to
+sit next to tier-1 in CI.
 """
 from __future__ import annotations
 
@@ -14,10 +19,55 @@ SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "kernels",
             "simthroughput")
 
 
+def smoke() -> int:
+    import numpy as np
+
+    from benchmarks.common import POLICIES, VEC_POLICIES
+    from repro.core import simulate
+    from repro.core.jax_engine import simulate_policy_from_trace
+    from repro.traces import synth_azure_trace
+
+    tr = synth_azure_trace(n_functions=12, n_requests=400,
+                           utilization=0.25, seed=3)
+    capacity = 6
+    failures = 0
+    for policy in POLICIES:
+        py = simulate(tr, policy, capacity)
+        line = f"{policy:13s} python={py.mean_response:8.4f}s"
+        if policy in VEC_POLICIES:
+            jx = simulate_policy_from_trace(tr, policy, capacity,
+                                            queue_cap=256)
+            resp_py = np.array([r.response for r in tr.requests])
+            ok = (int(jx["overflow"]) == 0
+                  and int(jx["stalled"]) == 0
+                  and int(jx["cold_starts"]) == py.server.cold_starts
+                  and np.allclose(jx["response"], resp_py, rtol=1e-9,
+                                  atol=1e-9))
+            failures += 0 if ok else 1
+            line += (f"  jax={jx['mean_response']:8.4f}s  "
+                     + ("OK" if ok else "MISMATCH"))
+        else:
+            line += "  (python engine only)"
+        print(line)
+    print(f"# smoke: {len(POLICIES)} policies, "
+          f"{len(VEC_POLICIES)} engine-equivalence checks, "
+          f"{failures} failures")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace, all policies, both engines; "
+                         "exits non-zero on mismatch (<60s)")
     args = ap.parse_args()
+    if args.smoke:
+        t0 = time.perf_counter()
+        failures = smoke()
+        print(f"# smoke total: {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+        sys.exit(1 if failures else 0)
     only = set(args.only.split(",")) if args.only else set(SECTIONS)
 
     from benchmarks import (ablation_esffh, fig5_capacity, fig6_intensity,

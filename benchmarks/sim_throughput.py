@@ -1,5 +1,8 @@
 """Scheduler-simulation throughput: Python event engine vs the
-vectorised JAX simulator (single trace + vmap'd parameter sweep)."""
+vectorised JAX engine — single runs, a hysteresis vmap sweep, and the
+headline batched policy x capacity grid (one device call per policy via
+`repro.core.jax_engine.sweep`) against looping the Python engine over
+the same grid."""
 from __future__ import annotations
 
 import time
@@ -10,12 +13,16 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import simulate
+from repro.core.jax_engine import sweep
 from repro.core.jax_sim import simulate_esff_jax
 from repro.traces import synth_azure_trace
 
+GRID_POLICIES = ("esff", "sff", "openwhisk")
+GRID_CAPS = (8, 12, 16, 24)
+GRID_SEEDS = (2, 3, 4, 5)
+
 
 def run():
-    jax.config.update("jax_enable_x64", True)
     rows = []
     tr = synth_azure_trace(n_functions=50, n_requests=5_000,
                            utilization=0.2, seed=2)
@@ -44,14 +51,49 @@ def run():
     def run_beta(beta):
         return simulate_esff_jax(*args, beta=beta, **kw)["completion"]
 
-    sweep = jax.jit(jax.vmap(run_beta))
-    jax.block_until_ready(sweep(jnp.asarray(betas)))
+    sweep_b = jax.jit(jax.vmap(run_beta))
+    jax.block_until_ready(sweep_b(jnp.asarray(betas)))
     t0 = time.perf_counter()
-    jax.block_until_ready(sweep(jnp.asarray(betas)))
+    jax.block_until_ready(sweep_b(jnp.asarray(betas)))
     t_sw = time.perf_counter() - t0
     rows.append(dict(
         name="jax_sim_vmap8_sweep", us_per_call=t_sw * 1e6,
         derived=f"{8 * len(tr) / t_sw:.0f} req/s aggregate"))
+
+    # batched policy x capacity x seed grid: the fleet-sizing workload.
+    # The Python engine loops the grid; the JAX engine packs each
+    # policy's capacity x trace plane into engine lanes.
+    grid_traces = [synth_azure_trace(n_functions=50, n_requests=5_000,
+                                     utilization=0.2, seed=s)
+                   for s in GRID_SEEDS]
+    n_cfg = len(GRID_POLICIES) * len(GRID_CAPS) * len(grid_traces)
+    n_req = n_cfg * len(tr)
+    t0 = time.perf_counter()
+    for p in GRID_POLICIES:
+        for c in GRID_CAPS:
+            for g in grid_traces:
+                simulate(g, p, capacity=c)
+    t_py_grid = time.perf_counter() - t0
+    agg_py = n_req / t_py_grid
+    rows.append(dict(
+        name=f"python_grid_{n_cfg}cfg", us_per_call=t_py_grid * 1e6,
+        derived=f"{agg_py:.0f} req/s aggregate"))
+
+    sweep(grid_traces, policies=GRID_POLICIES, capacities=GRID_CAPS,
+          queue_cap=1024)   # warm the compile cache
+    t0 = time.perf_counter()
+    out = sweep(grid_traces, policies=GRID_POLICIES,
+                capacities=GRID_CAPS, queue_cap=1024)
+    t_jx_grid = time.perf_counter() - t0
+    assert int(out["overflow"].sum()) == 0
+    assert int(out["stalled"].sum()) == 0
+    agg_jx = n_req / t_jx_grid
+    rows.append(dict(
+        name=f"jax_sweep_grid_{n_cfg}cfg", us_per_call=t_jx_grid * 1e6,
+        derived=f"{agg_jx:.0f} req/s aggregate"))
+    rows.append(dict(
+        name="grid_speedup_jax_vs_python", us_per_call=0.0,
+        derived=f"{agg_jx / agg_py:.1f}x aggregate throughput"))
     return rows
 
 

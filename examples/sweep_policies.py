@@ -1,47 +1,51 @@
-"""Fleet-scale policy sweep on the vectorised JAX simulator: evaluate a
-(capacity x hysteresis) grid in a few device calls and print the best
-configuration — the kind of fleet-sizing study the Python engine is too
-slow for.
+"""Fleet-scale scheduling sweep on the vectorised engine: evaluate a
+policy x capacity grid plus an ESFF hysteresis scan in a handful of
+device calls and print the best configuration — the kind of
+fleet-sizing study the Python event engine is too slow for (compare
+LaSS, arXiv:2104.14087, which sizes capacity per latency target from
+exactly this surface).
 
     PYTHONPATH=src python examples/sweep_policies.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.jax_sim import simulate_esff_jax
+from repro.core.jax_engine import sweep
 from repro.traces import synth_azure_trace
+
+POLICIES = ("esff", "esff_h", "sff", "openwhisk", "openwhisk_v2")
+CAPS = (8, 16, 24, 32)
 
 
 def main():
-    jax.config.update("jax_enable_x64", True)
     tr = synth_azure_trace(n_functions=60, n_requests=8_000,
                            utilization=0.3, seed=4)
-    a = tr.to_arrays()
-    args = (jnp.asarray(a["fn_id"]), jnp.asarray(a["arrival"]),
-            jnp.asarray(a["exec_time"]), jnp.asarray(a["cold_start"]),
-            jnp.asarray(a["evict"]))
-    C = 32
-    caps = (8, 16, 24, 32)
+
+    # policy x capacity plane (per-policy default betas)
+    grid = sweep(tr, policies=POLICIES, capacities=CAPS,
+                 queue_cap=2048)
+    mr = grid["mean_response"][:, 0, :, 0]          # (P, K)
+    print(f"{'policy':>13s} " + " ".join(f"C={c:<5d}" for c in CAPS))
+    for pi, p in enumerate(POLICIES):
+        print(f"{p:>13s} " + " ".join(f"{v:7.3f}" for v in mr[pi]))
+    pi, ci = np.unravel_index(mr.argmin(), mr.shape)
+    print(f"\nbest policy/capacity: {POLICIES[pi]} @ C={CAPS[ci]} "
+          f"(mean response {mr[pi, ci]:.3f}s)")
+
+    # ESFF hysteresis scan on top of the winning capacity axis
     betas = np.linspace(1.0, 3.0, 6)
-
-    def run(mask, beta):
-        out = simulate_esff_jax(*args, n_fns=tr.n_functions, capacity=C,
-                                queue_cap=2048, beta=beta, cap_mask=mask)
-        return (out["completion"] - jnp.asarray(a["arrival"])).mean()
-
-    sweep = jax.jit(jax.vmap(jax.vmap(run, in_axes=(None, 0)),
-                             in_axes=(0, None)))
-    masks = jnp.stack([jnp.arange(C) < c for c in caps])
-    grid = np.asarray(sweep(masks, jnp.asarray(betas)))
-
+    hyst = sweep(tr, policies=("esff",), capacities=CAPS, betas=betas,
+                 queue_cap=2048)
+    hr = hyst["mean_response"][0, 0]                 # (K, B)
+    print(f"\nESFF beta scan ({'x'.join(str(c) for c in CAPS)} caps x "
+          f"{len(betas)} betas, one batched call):")
     print(f"{'cap':>4s} " + " ".join(f"b={b:.1f}" for b in betas))
-    for c, row in zip(caps, grid):
+    for c, row in zip(CAPS, hr):
         print(f"{c:4d} " + " ".join(f"{v:5.2f}" for v in row))
-    i, j = np.unravel_index(grid.argmin(), grid.shape)
-    print(f"\nbest: capacity={caps[i]} beta={betas[j]:.2f} "
-          f"mean response {grid[i, j]:.3f}s "
-          f"({grid.size} configs swept on device)")
+    ci, bi = np.unravel_index(hr.argmin(), hr.shape)
+    n_cfg = mr.size + hr.size
+    print(f"\nbest ESFF config: capacity={CAPS[ci]} beta={betas[bi]:.2f} "
+          f"mean response {hr[ci, bi]:.3f}s "
+          f"({n_cfg} configs swept on device)")
 
 
 if __name__ == "__main__":

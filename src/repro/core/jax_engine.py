@@ -1,0 +1,757 @@
+"""Policy-agnostic fixed-shape event core for vectorised scheduling.
+
+The Python event engine (`repro.core.simulator`) replays ~10^4 req/s;
+policy x capacity x trace sweeps need orders of magnitude more. This
+module owns everything that is *policy independent* about simulating a
+C-slot edge server in JAX — the state layout, the queue ops, the slot
+primitives (`dispatch` / `start_cold`), the running-mean estimator and
+the ``lax.while_loop`` event loop — while the *decisions* live in
+pure-function policy kernels (`repro.core.jax_policies`). A kernel is
+selected by a static argument, so ``jax.jit`` specialises the loop body
+per policy, and the engine carries a leading *lane* dimension so a whole
+policy x capacity x beta x trace grid runs as one device call (`sweep`).
+
+State layout (static F functions, C slots, N requests, L lanes; all
+arrays carry the leading L):
+
+  slots:  slot_fn    (C,) i32  function resident in the slot (-1 empty)
+          slot_state (C,) i32  {0 COLD (warming), 1 IDLE, 2 BUSY}
+          slot_ready (C,) f64  next slot event time (cold-done for COLD,
+                               exec-done for BUSY; BIG when IDLE/empty)
+          slot_req   (C,) i32  request id being executed (BUSY only)
+          slot_used  (C,) f64  last dispatch time (LRU bookkeeping;
+                               0.0 for a never-used instance)
+          slot_seq   (C,) i32  creation sequence number of the resident
+                               instance — mirrors the Python engine's
+                               monotonically increasing ``inst_id`` so
+                               iteration-order tie-breaks (LRU, victim
+                               scans) reproduce exactly
+  queues: per-function FIFOs as a successor linked list over requests —
+          q_next (N,) i32 (next queued request of the same function),
+          q_head_rid/q_tail_rid (F,) i32, q_len (F,) i32. A request is
+          queued at most once, so each link is written at most once.
+          ``queue_cap`` bounds the backlog: a push onto a function with
+          queue_cap waiting requests is dropped and counted in
+          ``overflow`` (must stay 0 for a valid run).
+  est:    est_sum/est_n (F,) + g_sum/g_n () — running means of observed
+          execution times with global-mean, then `prior`, fallback
+  timers: original timers ride the queue push order (they are armed
+          exactly at q_push, at the request's arrival time, so the fire
+          time is arrival + threshold and the successor is q_next) —
+          tmr_head_rid/tmr_len (F,) i32 + tmr_next (F,) f64 head fire
+          time; re-arms (only ever the current queue head) get a
+          one-slot cache rearm_t (F,) f64 / rearm_rid (F,) i32.
+          Allocated only when the kernel sets ``has_timers``.
+  out:    start/completion (N,) f64, cold_starts/evictions/overflow i32,
+          cold_time/evict_time f64, stalled i32
+
+Event arbitration mirrors `repro.core.events`: at equal times
+EXEC_DONE < COLD_DONE < TIMER < ARRIVAL, so capacity freed at time t is
+visible to an arrival at the same t. ``cap_mask`` masks slots so
+capacity is sweepable across lanes without retracing; ``stalled`` flags
+lanes that ran out of events or iteration budget before every request
+completed (overflowed requests can never finish).
+
+Performance shape — the three rules the layout follows, measured on the
+XLA CPU backend:
+
+1. *No control flow inside the body.* Every handler runs every
+   iteration gated by an ``on`` predicate, and all writes are guarded
+   scatters — ``mode="drop"`` with an out-of-bounds sentinel index when
+   disabled (`_gidx`). A ``lax.cond`` under vmap lowers to a `select`
+   over every carried array, i.e. a dense copy of the whole state per
+   event.
+2. *Lanes live inside the loop.* One ``while_loop`` carries (L, ...)
+   state and the branchless body is vmapped per lane; finished lanes
+   no-op through their guards. Vmapping the ``while_loop`` itself would
+   mask finished lanes with per-event dense selects over all state.
+3. *No large carried array is both gathered and scattered in one loop
+   body.* XLA's copy-insertion materialises a full copy of such a
+   buffer every iteration (~200 KB per event for a ring layout — the
+   dominant cost of a naive spelling). Hence the linked-list queue: the
+   only per-event read of a large carried array is the successor lookup
+   at pop time, and those reads go through a small per-segment overlay
+   (w_idx/w_val) while the writes are batch-applied to ``q_next`` once
+   per SEG-event segment, amortising the one unavoidable copy.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Sequence, Union
+
+# The engine's event loop is hundreds of tiny fused ops per simulated
+# event; XLA:CPU's thunk runtime pays a dispatch overhead per op that
+# slows the loop ~10x vs the legacy single-LLVM-function emitter. Ask
+# for the legacy runtime before JAX initialises its CPU client (no-op
+# for other backends, and respected only if the backend isn't live yet;
+# callers can override by setting the flag themselves).
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_cpu_use_thunk_runtime" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_cpu_use_thunk_runtime=false").strip()
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax import lax             # noqa: E402
+
+from repro.core.request import Trace  # noqa: E402
+
+BIG = 1e30
+COLD, IDLE, BUSY = 0, 1, 2
+I32_MAX = np.iinfo(np.int32).max
+SEG = 32          # events per segment (deferred q_next write window)
+LANE_CHUNK = 16   # lanes per device call (XLA:CPU regresses beyond)
+
+
+def ensure_x64() -> None:
+    """Enable f64 before anything is traced.
+
+    Event times need f64 for exact agreement with the Python engine over
+    multi-hour traces. Flipping the flag mid-run (the old
+    ``simulate_jax_from_trace`` behaviour) invalidates already-traced
+    f32 jits elsewhere; importing this module instead performs the
+    switch once, at import time, before the engine traces anything.
+    """
+    if not jax.config.jax_enable_x64:
+        jax.config.update("jax_enable_x64", True)
+
+
+ensure_x64()
+
+
+class EngineCtx:
+    """Per-lane view of the run handed to policy kernels.
+
+    Bundles the (traced) trace arrays, the (static) shape constants, the
+    scalar knobs and the current segment step ``k``. Built inside the
+    jitted entry point — it never crosses a jit boundary itself.
+
+    Trace arrays are *shared* (T, ...) operands indexed by the lane's
+    ``tix``: under vmap a gather whose operand is unbatched lowers to a
+    single efficient gather, whereas a batched operand takes a generic
+    path that is orders of magnitude slower on the CPU backend. The
+    per-request reads (`fn_at` / `arrival_at` / `exec_at`, and `next_of`
+    over the lane-flattened ``q_next``) all go through that fast path.
+    """
+
+    def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2, tix,
+                 lane, q_next_flat, cap_mask, beta, prior, threshold,
+                 k, n, f, c, q):
+        self._fn = fn_id2          # (T, N) shared
+        self._arr = arrival2       # (T, N) shared
+        self._ex = exec2           # (T, N) shared
+        self.tix = tix             # this lane's trace index
+        self.t_cold = cold2[tix]   # (F,) row of the shared (T, F)
+        self.t_evict = evict2[tix]
+        self._q_next = q_next_flat  # (L*N,) shared view of the links
+        self._off = lane * n
+        self.cap_mask = cap_mask
+        self.beta = beta
+        self.prior = prior
+        self.threshold = threshold
+        self.k = k                  # segment step (overlay slot)
+        self.N, self.F, self.C, self.Q = n, f, c, q
+
+    def fn_at(self, rid):
+        return self._fn[self.tix, jnp.clip(rid, 0, self.N - 1)]
+
+    def arrival_at(self, rid):
+        return self._arr[self.tix, jnp.clip(rid, 0, self.N - 1)]
+
+    def exec_at(self, rid):
+        return self._ex[self.tix, jnp.clip(rid, 0, self.N - 1)]
+
+    def next_of(self, rid):
+        return self._q_next[self._off + jnp.clip(rid, 0, self.N - 1)]
+
+
+class PolicyKernel:
+    """Interface a vectorised policy implements over the engine state.
+
+    Each hook is a pure function ``state -> state`` gated by an ``on``
+    predicate (guarded-write style — hooks run every iteration, their
+    writes are masked); the engine has already done the
+    policy-independent bookkeeping — cursor advance for arrivals,
+    estimator update + slot release for exec-done, slot release for
+    cold-done, timer consumption for timers — exactly mirroring
+    `repro.core.simulator.simulate`.
+    """
+
+    name = "base"
+    has_timers = False
+    default_beta = 1.0
+
+    def on_arrival(self, ctx, s, rid, t, on):
+        raise NotImplementedError
+
+    def on_cold_done(self, ctx, s, slot, t, on):
+        raise NotImplementedError
+
+    def on_exec_done(self, ctx, s, slot, rid, t, on):
+        raise NotImplementedError
+
+    def on_timer(self, ctx, s, rid, t, on):  # pragma: no cover
+        return s
+
+
+# --------------------------------------------------------------- helpers
+def _gidx(on, idx, size):
+    """Guarded scatter index: ``idx`` when enabled and valid, else an
+    out-of-bounds sentinel that ``mode="drop"`` discards."""
+    return jnp.where(on & (idx >= 0), idx, size)
+
+
+def lex_argmin(primary, secondary, valid):
+    """First index minimising ``(primary, secondary)`` among ``valid``.
+
+    Reproduces the Python engine's deterministic scans: iterate in
+    ``secondary`` (creation / fn-id) order, keep on strict improvement.
+    """
+    p = jnp.where(valid, primary, BIG)
+    tie = valid & (p <= jnp.min(p))
+    return jnp.argmin(jnp.where(tie, secondary, I32_MAX))
+
+
+def argmin_i32(vals, valid):
+    """First valid index minimising an i32 key (sentinel-masked)."""
+    return jnp.argmin(jnp.where(valid, vals, I32_MAX))
+
+
+def est_means(ctx, s):
+    """Per-function running means with global-mean / prior fallback."""
+    counts = s["est_n"].astype(jnp.float64)
+    gcount = s["g_n"].astype(jnp.float64)
+    g = jnp.where(s["g_n"] > 0, s["g_sum"] / jnp.maximum(gcount, 1),
+                  ctx.prior)
+    return jnp.where(s["est_n"] > 0,
+                     s["est_sum"] / jnp.maximum(counts, 1), g)
+
+
+def k_counts(ctx, s):
+    """|K^j| — slots assigned to each function, any state."""
+    return jnp.zeros((ctx.F,), jnp.int32).at[
+        jnp.where(s["slot_fn"] >= 0, s["slot_fn"], jnp.int32(ctx.F))
+    ].add(jnp.int32(1), mode="drop")
+
+
+def cold_counts(ctx, s):
+    """Slots currently warming up (state COLD) per function."""
+    warming = s["slot_state"] == COLD
+    return jnp.zeros((ctx.F,), jnp.int32).at[
+        jnp.where((s["slot_fn"] >= 0) & warming, s["slot_fn"],
+                  jnp.int32(ctx.F))
+    ].add(jnp.int32(1), mode="drop")
+
+
+def idle_own(ctx, s, fn):
+    """Mask of usable idle slots already resident with ``fn``."""
+    return ((s["slot_fn"] == fn) & (s["slot_state"] == IDLE)
+            & ctx.cap_mask)
+
+
+def pick_idle_own(ctx, s, fn):
+    """(mask.any(), earliest-created idle own slot) — Python's
+    ``idle_of`` picks the lowest ``inst_id``."""
+    mask = idle_own(ctx, s, fn)
+    return mask.any(), argmin_i32(s["slot_seq"], mask)
+
+
+def q_read_next(ctx, s, rid):
+    """Successor of ``rid`` in its function's queue: the per-segment
+    overlay first (links written since the last q_next flush), else the
+    q_next snapshot. Each link is written at most once, so at most one
+    overlay slot can match."""
+    snap = ctx.next_of(rid)
+    hit = s["w_idx"] == rid
+    return jnp.where(hit.any(), s["w_val"][jnp.argmax(hit)], snap)
+
+
+def q_head(ctx, s, fn):
+    """Request id at the head of ``fn``'s queue (garbage when empty —
+    callers gate on ``q_len``)."""
+    return s["q_head_rid"][jnp.clip(fn, 0, ctx.F - 1)]
+
+
+def q_push(ctx, s, fn, rid, on):
+    """Append ``rid``; returns (state, pushed). A push onto a full
+    backlog (q_len == queue_cap) is dropped and counted in overflow."""
+    fc = jnp.clip(fn, 0, ctx.F - 1)
+    was_empty = s["q_len"][fc] == 0
+    full = s["q_len"][fc] >= ctx.Q
+    do = on & ~full
+    fi = _gidx(do, fn, ctx.F)
+    link = do & ~was_empty
+    s = dict(s)
+    # successor link from the old tail — deferred to the segment flush
+    s["w_idx"] = s["w_idx"].at[ctx.k].set(
+        jnp.where(link, s["q_tail_rid"][fc], jnp.int32(ctx.N)))
+    s["w_val"] = s["w_val"].at[ctx.k].set(jnp.asarray(rid, jnp.int32))
+    s["q_head_rid"] = s["q_head_rid"].at[
+        _gidx(do & was_empty, fn, ctx.F)].set(
+        jnp.asarray(rid, jnp.int32), mode="drop")
+    s["q_tail_rid"] = s["q_tail_rid"].at[fi].set(
+        jnp.asarray(rid, jnp.int32), mode="drop")
+    s["q_len"] = s["q_len"].at[fi].add(1, mode="drop")
+    s["overflow"] = s["overflow"] + (on & full).astype(jnp.int32)
+    return s, do
+
+
+def q_pop(ctx, s, fn, on):
+    """Consume the head of ``fn``'s queue; returns (state, rid)."""
+    rid = q_head(ctx, s, fn)
+    succ = q_read_next(ctx, s, rid)
+    fi = _gidx(on, fn, ctx.F)
+    s = dict(s)
+    # when the queue empties the head is garbage until the next push
+    # (which sees q_len == 0 and rewrites it) — reads gate on q_len
+    s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
+    s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+    return s, rid
+
+
+def arm_timer(ctx, s, fn, rid, on):
+    """Register the original timer of a just-pushed request.
+
+    Original timers fire at arrival + threshold in push order, so they
+    share the queue's successor links; only the head bookkeeping is
+    materialised."""
+    fc = jnp.clip(fn, 0, ctx.F - 1)
+    was_empty = s["tmr_len"][fc] == 0
+    hi = _gidx(on & was_empty, fn, ctx.F)
+    s = dict(s)
+    s["tmr_head_rid"] = s["tmr_head_rid"].at[hi].set(
+        jnp.asarray(rid, jnp.int32), mode="drop")
+    s["tmr_next"] = s["tmr_next"].at[hi].set(
+        ctx.arrival_at(rid) + ctx.threshold, mode="drop")
+    s["tmr_len"] = s["tmr_len"].at[_gidx(on, fn, ctx.F)].add(
+        1, mode="drop")
+    return s
+
+
+def rearm_timer(ctx, s, fn, rid, t_fire, on):
+    """Re-arm the (unique) blocked queue head of ``fn`` at ``t_fire``."""
+    fi = _gidx(on, fn, ctx.F)
+    s = dict(s)
+    s["rearm_t"] = s["rearm_t"].at[fi].set(t_fire, mode="drop")
+    s["rearm_rid"] = s["rearm_rid"].at[fi].set(
+        jnp.asarray(rid, jnp.int32), mode="drop")
+    return s
+
+
+def dispatch(ctx, s, slot, rid, t, on):
+    """Run ``rid`` on an idle ``slot`` of its function.
+
+    The per-request start/completion record goes into the segment
+    overlay (d_*), not the (N,) result arrays — those are flushed once
+    per segment so no large carried array is touched per event. At most
+    one dispatch happens per event (call sites are mutually exclusive),
+    so the overlay slot is indexed by the segment step and disabled
+    sites drop instead of clobbering it."""
+    s = dict(s)
+    comp = t + ctx.exec_at(rid)
+    si = _gidx(on, slot, ctx.C)
+    ki = jnp.where(on, ctx.k, SEG)
+    s["slot_state"] = s["slot_state"].at[si].set(BUSY, mode="drop")
+    s["slot_ready"] = s["slot_ready"].at[si].set(comp, mode="drop")
+    s["slot_req"] = s["slot_req"].at[si].set(
+        jnp.asarray(rid, jnp.int32), mode="drop")
+    s["slot_used"] = s["slot_used"].at[si].set(t, mode="drop")
+    s["d_rid"] = s["d_rid"].at[ki].set(
+        jnp.asarray(rid, jnp.int32), mode="drop")
+    s["d_start"] = s["d_start"].at[ki].set(t, mode="drop")
+    s["d_comp"] = s["d_comp"].at[ki].set(comp, mode="drop")
+    return s
+
+
+def start_cold(ctx, s, slot, fn, t, evict_fn, on):
+    """Claim/convert ``slot`` for ``fn`` (``evict_fn`` = -1 -> empty slot,
+    otherwise the resident function paying its eviction cost first)."""
+    s = dict(s)
+    fn = jnp.asarray(fn, jnp.int32)  # argmin/argmax indices are i64
+    evict_fn = jnp.asarray(evict_fn, jnp.int32)
+    fc = jnp.clip(fn, 0, ctx.F - 1)
+    evicting = on & (evict_fn >= 0)
+    ev_cost = jnp.where(evicting,
+                        ctx.t_evict[jnp.clip(evict_fn, 0, ctx.F - 1)],
+                        0.0)
+    si = _gidx(on, slot, ctx.C)
+    s["slot_fn"] = s["slot_fn"].at[si].set(fn, mode="drop")
+    s["slot_state"] = s["slot_state"].at[si].set(COLD, mode="drop")
+    s["slot_ready"] = s["slot_ready"].at[si].set(
+        t + ctx.t_cold[fc] + ev_cost, mode="drop")
+    s["slot_req"] = s["slot_req"].at[si].set(-1, mode="drop")
+    s["slot_used"] = s["slot_used"].at[si].set(0.0, mode="drop")
+    s["slot_seq"] = s["slot_seq"].at[si].set(s["seq_ctr"], mode="drop")
+    on_i = on.astype(jnp.int32)
+    s["seq_ctr"] = s["seq_ctr"] + on_i
+    s["cold_starts"] = s["cold_starts"] + on_i
+    s["cold_time"] = s["cold_time"] + jnp.where(on, ctx.t_cold[fc], 0.0)
+    s["evictions"] = s["evictions"] + evicting.astype(jnp.int32)
+    s["evict_time"] = s["evict_time"] + ev_cost
+    return s
+
+
+# ------------------------------------------------------------ event loop
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "n_fns", "capacity",
+                                    "queue_cap"))
+def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
+              cap_mask, beta, prior, threshold, *, kernel, n_fns,
+              capacity, queue_cap):
+    """Lane-batched engine. Trace arrays are shared (T, ...) operands;
+    ``trace_ix``, ``cap_mask`` and ``beta`` carry the leading lane
+    dimension L (one lane per sweep point). One ``while_loop`` runs all
+    lanes in segments of SEG events; the branchless per-event body is
+    vmapped per lane and finished lanes no-op via their guards."""
+    L = trace_ix.shape[0]
+    N = fn_id.shape[1]
+    F, C, Q = n_fns, capacity, queue_cap
+
+    fn_id = fn_id.astype(jnp.int32)
+    arrival = arrival.astype(jnp.float64)
+    exec_time = exec_time.astype(jnp.float64)
+    t_cold = t_cold.astype(jnp.float64)
+    t_evict = t_evict.astype(jnp.float64)
+    trace_ix = trace_ix.astype(jnp.int32)
+    prior = jnp.float64(prior)
+    threshold = jnp.float64(threshold)
+
+    s = dict(
+        slot_fn=jnp.full((L, C), -1, jnp.int32),
+        slot_state=jnp.full((L, C), IDLE, jnp.int32),
+        slot_ready=jnp.full((L, C), BIG, jnp.float64),
+        slot_req=jnp.full((L, C), -1, jnp.int32),
+        slot_used=jnp.zeros((L, C), jnp.float64),
+        slot_seq=jnp.full((L, C), I32_MAX, jnp.int32),
+        q_next=jnp.full((L * N,), -1, jnp.int32),
+        q_head_rid=jnp.full((L, F), -1, jnp.int32),
+        q_tail_rid=jnp.full((L, F), -1, jnp.int32),
+        q_len=jnp.zeros((L, F), jnp.int32),
+        w_idx=jnp.full((L, SEG), N, jnp.int32),
+        w_val=jnp.full((L, SEG), -1, jnp.int32),
+        d_rid=jnp.full((L, SEG), N, jnp.int32),
+        d_start=jnp.zeros((L, SEG), jnp.float64),
+        d_comp=jnp.zeros((L, SEG), jnp.float64),
+        est_sum=jnp.zeros((L, F), jnp.float64),
+        est_n=jnp.zeros((L, F), jnp.int32),
+        g_sum=jnp.zeros((L,), jnp.float64),
+        g_n=jnp.zeros((L,), jnp.int32),
+        seq_ctr=jnp.zeros((L,), jnp.int32),
+        start=jnp.full((L, N), -1.0, jnp.float64),
+        completion=jnp.full((L, N), -1.0, jnp.float64),
+        next_arrival=jnp.zeros((L,), jnp.int32),
+        done=jnp.zeros((L,), jnp.int32),
+        iters=jnp.zeros((L,), jnp.int32),
+        stalled=jnp.zeros((L,), jnp.int32),
+        cold_starts=jnp.zeros((L,), jnp.int32),
+        cold_time=jnp.zeros((L,), jnp.float64),
+        evictions=jnp.zeros((L,), jnp.int32),
+        evict_time=jnp.zeros((L,), jnp.float64),
+        overflow=jnp.zeros((L,), jnp.int32),
+    )
+    if kernel.has_timers:
+        s["tmr_head_rid"] = jnp.full((L, F), -1, jnp.int32)
+        s["tmr_len"] = jnp.zeros((L, F), jnp.int32)
+        s["tmr_next"] = jnp.full((L, F), BIG, jnp.float64)
+        s["rearm_t"] = jnp.full((L, F), BIG, jnp.float64)
+        s["rearm_rid"] = jnp.full((L, F), -1, jnp.int32)
+
+    max_iters = 256 * N + 4096
+
+    def lane_step(k, q_next_flat, s, lane, tix, cap_mask, beta):
+        ctx = EngineCtx(fn_id2=fn_id, arrival2=arrival, exec2=exec_time,
+                        cold2=t_cold, evict2=t_evict, tix=tix,
+                        lane=lane, q_next_flat=q_next_flat,
+                        cap_mask=cap_mask, beta=beta, prior=prior,
+                        threshold=threshold, k=k, n=N, f=F, c=C, q=Q)
+        active = (s["done"] < N) & (s["stalled"] == 0)
+        na = s["next_arrival"]
+        t_arr = jnp.where(na < N, ctx.arrival_at(na), BIG)
+        ready = jnp.where(cap_mask, s["slot_ready"], BIG)
+        t_slot = jnp.min(ready)
+        if kernel.has_timers:
+            t_orig = jnp.min(s["tmr_next"])
+            t_re = jnp.min(s["rearm_t"])
+            t_timer = jnp.minimum(t_orig, t_re)
+        else:
+            t_timer = jnp.float64(BIG)
+        t_next = jnp.minimum(jnp.minimum(t_slot, t_timer), t_arr)
+        live = active & (t_next < BIG)
+        # same-time priority: EXEC/COLD (slot) < TIMER < ARRIVAL
+        ev_slot = live & (t_slot <= jnp.minimum(t_timer, t_arr))
+        ev_timer = live & ~ev_slot & (t_timer <= t_arr)
+        ev_arr = live & ~ev_slot & ~ev_timer
+
+        # ------------------------------------------------- slot event
+        # EXEC_DONE outranks COLD_DONE at equal times (events.py order)
+        slot = lex_argmin(
+            jnp.where(s["slot_state"] == BUSY, 0.0, 1.0),
+            jnp.arange(C, dtype=jnp.int32), ready <= t_slot)
+        t_s = s["slot_ready"][slot]
+        is_cold = s["slot_state"][slot] == COLD
+        cold_on = ev_slot & is_cold
+        exec_on = ev_slot & ~is_cold
+        rid_done = s["slot_req"][slot]
+        j_done = s["slot_fn"][slot]
+        e_done = ctx.exec_at(rid_done)
+        si = _gidx(ev_slot, slot, C)
+        ji = _gidx(exec_on, j_done, F)
+        s = dict(s)
+        s["slot_state"] = s["slot_state"].at[si].set(IDLE, mode="drop")
+        s["slot_ready"] = s["slot_ready"].at[si].set(BIG, mode="drop")
+        s["slot_req"] = s["slot_req"].at[si].set(-1, mode="drop")
+        # estimator sees the completion before the policy reacts
+        s["est_sum"] = s["est_sum"].at[ji].add(e_done, mode="drop")
+        s["est_n"] = s["est_n"].at[ji].add(1, mode="drop")
+        s["g_sum"] = s["g_sum"] + jnp.where(exec_on, e_done, 0.0)
+        s["g_n"] = s["g_n"] + exec_on.astype(jnp.int32)
+        s["done"] = s["done"] + exec_on.astype(jnp.int32)
+        s = kernel.on_cold_done(ctx, s, slot, t_s, cold_on)
+        s = kernel.on_exec_done(ctx, s, slot, rid_done, t_s, exec_on)
+
+        # ------------------------------------------------ timer event
+        if kernel.has_timers:
+            # originals (arrival + threshold, queue push order) vs the
+            # unique re-armed head; originals win exact ties (FIFO seq)
+            fire_orig = ev_timer & (t_orig <= t_re)
+            fire_re = ev_timer & ~fire_orig
+            f_o = jnp.argmin(s["tmr_next"])
+            rid_o = s["tmr_head_rid"][f_o]
+            succ = q_read_next(ctx, s, rid_o)
+            more = s["tmr_len"][f_o] > 1
+            oi = _gidx(fire_orig, f_o, F)
+            f_r = jnp.argmin(s["rearm_t"])
+            rid_r = s["rearm_rid"][f_r]
+            s = dict(s)
+            s["tmr_head_rid"] = s["tmr_head_rid"].at[oi].set(
+                succ, mode="drop")
+            s["tmr_next"] = s["tmr_next"].at[oi].set(
+                jnp.where(more, ctx.arrival_at(succ) + threshold, BIG),
+                mode="drop")
+            s["tmr_len"] = s["tmr_len"].at[oi].add(-1, mode="drop")
+            s["rearm_t"] = s["rearm_t"].at[
+                _gidx(fire_re, f_r, F)].set(BIG, mode="drop")
+            rid_t = jnp.where(fire_orig, rid_o, rid_r)
+            s = kernel.on_timer(ctx, s, rid_t, t_timer, ev_timer)
+
+        # ---------------------------------------------------- arrival
+        rid_a = jnp.minimum(na, N - 1)
+        s = dict(s)
+        s["next_arrival"] = na + ev_arr.astype(jnp.int32)
+        s = kernel.on_arrival(ctx, s, rid_a, t_arr, ev_arr)
+
+        s = dict(s)
+        s["iters"] = s["iters"] + active.astype(jnp.int32)
+        s["stalled"] = jnp.where(
+            active & ~live, 1,
+            jnp.where(active & (s["iters"] >= max_iters), 2,
+                      s["stalled"]))
+        return s
+
+    step_lanes = jax.vmap(lane_step, in_axes=(None, None, 0, 0, 0, 0,
+                                              0))
+    lanes = jnp.arange(L, dtype=jnp.int32)
+    lane_iota = lanes[:, None]
+
+    def cond(s):
+        return jnp.any((s["done"] < N) & (s["stalled"] == 0))
+
+    def segment(s):
+        s = dict(s)
+        s["w_idx"] = jnp.full((L, SEG), N, jnp.int32)
+        s["w_val"] = jnp.full((L, SEG), -1, jnp.int32)
+        s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+
+        def step(k, s):
+            q_next_flat = s["q_next"]   # read-only within the segment
+            rest = {k2: v for k2, v in s.items() if k2 != "q_next"}
+            rest = step_lanes(k, q_next_flat, rest, lanes, trace_ix,
+                              cap_mask, beta)
+            rest["q_next"] = q_next_flat
+            return rest
+
+        s = lax.fori_loop(0, SEG, step, s)
+        # flush the segment's successor links and dispatch records in
+        # one batched scatter each — the only writes to the large (N,)
+        # carried arrays, so their per-iteration copies are paid once
+        # per SEG events, not per event
+        s = dict(s)
+        flat_w = jnp.where(s["w_idx"] < N,
+                           lane_iota * N + s["w_idx"],
+                           jnp.int32(L * N))
+        s["q_next"] = s["q_next"].at[flat_w].set(s["w_val"],
+                                                 mode="drop")
+        s["start"] = s["start"].at[lane_iota, s["d_rid"]].set(
+            s["d_start"], mode="drop")
+        s["completion"] = s["completion"].at[lane_iota, s["d_rid"]].set(
+            s["d_comp"], mode="drop")
+        return s
+
+    final = lax.while_loop(cond, segment, s)
+    return dict(start=final["start"], completion=final["completion"],
+                cold_starts=final["cold_starts"],
+                cold_time=final["cold_time"],
+                evictions=final["evictions"],
+                evict_time=final["evict_time"],
+                overflow=final["overflow"], stalled=final["stalled"],
+                n_events=final["iters"])
+
+
+# ------------------------------------------------------------ public API
+def simulate_policy_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
+                        policy: str = "esff", n_fns: int, capacity: int,
+                        queue_cap: int = 512, beta=None,
+                        prior: float = 0.1, threshold: float = 0.1,
+                        cap_mask=None) -> Dict[str, jnp.ndarray]:
+    """Run ``policy`` over a (sorted-by-arrival) request stream.
+
+    ``policy`` selects a kernel from `repro.core.jax_policies.KERNELS`
+    statically, so each policy gets its own jit specialisation. ``beta``
+    defaults to the kernel's own default (2.0 for ESFF-H, else 1.0).
+    Returns per-request start/completion plus the counter block (cold
+    starts, evictions, overflow, stalled).
+    """
+    from repro.core.jax_policies import KERNELS  # deferred: cycle-free
+    kernel = KERNELS[policy]
+    if beta is None:
+        beta = kernel.default_beta
+    if cap_mask is None:
+        cap_mask = jnp.ones((capacity,), bool)
+    share = lambda x: jnp.expand_dims(jnp.asarray(x), 0)  # noqa: E731
+    out = _simulate(share(fn_id), share(arrival), share(exec_time),
+                    share(t_cold), share(t_evict),
+                    jnp.zeros((1,), jnp.int32),
+                    jnp.expand_dims(jnp.asarray(cap_mask), 0),
+                    jnp.asarray(beta, jnp.float64).reshape((1,)),
+                    jnp.float64(prior), jnp.float64(threshold),
+                    kernel=kernel, n_fns=n_fns, capacity=capacity,
+                    queue_cap=queue_cap)
+    return {k: jnp.squeeze(v, axis=0) for k, v in out.items()}
+
+
+def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
+                               *, beta=None, queue_cap: int = 1024,
+                               prior: float = 0.1,
+                               threshold: float = 0.1
+                               ) -> Dict[str, np.ndarray]:
+    """Trace-object convenience wrapper mirroring ``simulate()``."""
+    a = trace.to_arrays()
+    out = simulate_policy_jax(
+        jnp.asarray(a["fn_id"]), jnp.asarray(a["arrival"]),
+        jnp.asarray(a["exec_time"]), jnp.asarray(a["cold_start"]),
+        jnp.asarray(a["evict"]), policy=policy,
+        n_fns=trace.n_functions, capacity=capacity, queue_cap=queue_cap,
+        beta=beta, prior=prior, threshold=threshold)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    out["response"] = out["completion"] - a["arrival"]
+    out["mean_response"] = float(out["response"].mean())
+    return out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "n_fns", "capacity",
+                                    "queue_cap"))
+def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
+                   threshold, *, kernel, n_fns, capacity, queue_cap):
+    """Lane-batched run + on-device metric reduction (per-request
+    arrays stay on device; only (L,) metric vectors come back)."""
+    out = _simulate(fn, arr, ex, cold, ev, tix, masks, betas, prior,
+                    threshold, kernel=kernel, n_fns=n_fns,
+                    capacity=capacity, queue_cap=queue_cap)
+    resp = out["completion"] - arr[tix]
+    slow = resp / jnp.maximum(ex[tix], 1e-9)
+    return dict(mean_response=resp.mean(axis=1),
+                mean_slowdown=slow.mean(axis=1),
+                p99_response=jnp.percentile(resp, 99.0, axis=1),
+                cold_starts=out["cold_starts"],
+                cold_time=out["cold_time"],
+                evictions=out["evictions"],
+                overflow=out["overflow"], stalled=out["stalled"])
+
+
+def sweep(traces: Union[Trace, Sequence[Trace]],
+          policies: Sequence[str] = ("esff", "esff_h", "sff",
+                                     "openwhisk", "openwhisk_v2"),
+          capacities: Sequence[int] = (8, 16, 32),
+          betas=None, *, queue_cap: int = 2048, prior: float = 0.1,
+          threshold: float = 0.1) -> Dict[str, np.ndarray]:
+    """Batched policy x trace x capacity x beta sweep in one device call
+    per policy.
+
+    The grid is flattened to engine lanes: every (trace, capacity, beta)
+    combination becomes one lane of a single lane-batched ``while_loop``
+    (capacities as slot masks over a static ``capacity=max(capacities)``,
+    so one jit specialisation per policy covers the whole grid).
+
+    ``betas=None`` uses each kernel's default (so ESFF-H keeps its
+    hysteresis). Returns metric arrays of shape (P, T, K, B) keyed by
+    metric name, plus the axis values under ``"axes"``.
+    """
+    from repro.core.jax_policies import KERNELS
+    if isinstance(traces, Trace):
+        traces = [traces]
+    traces = list(traces)
+    F = traces[0].n_functions
+    N = len(traces[0])
+    for tr in traces:
+        if tr.n_functions != F or len(tr) != N:
+            raise ValueError("sweep traces must share shape "
+                             "(n_functions, n_requests)")
+    arrs = [tr.to_arrays() for tr in traces]
+    stacked = {k: np.stack([np.asarray(a[k]) for a in arrs])
+               for k in ("fn_id", "arrival", "exec_time", "cold_start",
+                         "evict")}
+    T, K = len(traces), len(capacities)
+    C = max(capacities)
+    masks = np.stack([np.arange(C) < c for c in capacities])
+
+    shared = {k: jnp.asarray(v) for k, v in stacked.items()}
+
+    def run_chunk(p, tix_l, mask_l, beta_l):
+        out = _sweep_metrics(
+            shared["fn_id"], shared["arrival"], shared["exec_time"],
+            shared["cold_start"], shared["evict"], jnp.asarray(tix_l),
+            jnp.asarray(mask_l), jnp.asarray(beta_l),
+            jnp.float64(prior), jnp.float64(threshold),
+            kernel=KERNELS[p], n_fns=F, capacity=C,
+            queue_cap=queue_cap)
+        return jax.device_get(out)
+
+    chunks = []
+    for p in policies:
+        bs = np.asarray([KERNELS[p].default_beta] if betas is None
+                        else list(betas), np.float64)
+        B = len(bs)
+        # lane order: trace-major, then capacity, then beta
+        tix_l = np.repeat(np.arange(T, dtype=np.int32), K * B)
+        mask_l = np.tile(np.repeat(masks, B, axis=0), (T, 1))
+        beta_l = np.tile(bs, T * K)
+        for lo in range(0, T * K * B, LANE_CHUNK):
+            hi = lo + LANE_CHUNK
+            chunks.append((p, tix_l[lo:hi], mask_l[lo:hi],
+                           beta_l[lo:hi]))
+
+    # device calls overlap on the host thread pool (XLA releases the
+    # GIL while a computation runs); lanes are chunked to LANE_CHUNK
+    # per call to stay in XLA:CPU's fast regime
+    from concurrent.futures import ThreadPoolExecutor
+    with ThreadPoolExecutor(max_workers=2) as tp:
+        outs = list(tp.map(lambda c: run_chunk(*c), chunks))
+
+    per_policy = []
+    for pi, p in enumerate(policies):
+        B = 1 if betas is None else len(betas)
+        mine = [o for c, o in zip(chunks, outs) if c[0] == p]
+        cat = {k: np.concatenate([np.asarray(o[k]) for o in mine])
+               for k in mine[0]}
+        per_policy.append({k: v.reshape((T, K, B))
+                           for k, v in cat.items()})
+
+    out = {k: np.stack([r[k] for r in per_policy])
+           for k in per_policy[0]}
+    out["axes"] = dict(policy=list(policies), trace=len(traces),
+                       capacity=list(capacities),
+                       beta=(None if betas is None else list(betas)))
+    return out

@@ -1,0 +1,261 @@
+"""Policy kernels for the vectorised event core (`repro.core.jax_engine`).
+
+Each kernel re-expresses one Python scheduling policy as pure functions
+over the engine's fixed-shape state, request-for-request equivalent to
+its event-driven counterpart (tests/test_jax_engine.py):
+
+* **esff** — FCP (Alg. 2) / FRP (Alg. 3) with running-mean estimation;
+  ``beta`` = 1.0 recovers the paper-faithful scheduler and > 1 adds the
+  ESFF-H hysteresis on the conversion setup cost.
+* **esff_h** — ESFF plus the three ESFF-H fixes (`repro.core.esff_h`):
+  beta hysteresis (default 2.0), cold-aware drain estimates (in-flight
+  instances claim a waiting request) and LRU victim choice in Eq. 8.
+* **sff / openwhisk** — the central-queue baselines: immediate scale-up
+  on arrival (LRU eviction at capacity), warm reuse of a freed slot's
+  own queue, otherwise retarget to the central-queue head (at most one
+  warming replica). SFF orders the central queue by running-mean
+  execution time, OpenWhisk by arrival.
+* **openwhisk_v2** — per-function queues; a queue head must wait
+  ``threshold`` (100 ms) before scale-up, enforced with engine timers.
+
+Hooks follow the engine's guarded-write convention: they execute every
+loop iteration, compute with possibly-garbage values when their ``on``
+predicate is false, and fold the predicate into every state write (so
+disabled paths cost dropped scatters instead of dense selects under
+vmap). Tie-breaking faithfully mirrors the Python engine's iteration
+order via the per-slot creation sequence numbers (``slot_seq``) the
+engine maintains: victim scans break ties toward the earliest-created
+instance, exactly like scanning ``instances`` in ``inst_id`` order with
+strict inequalities.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.jax_engine import (BIG, COLD, IDLE, EngineCtx,
+                                   PolicyKernel, arm_timer, cold_counts,
+                                   dispatch, est_means, k_counts,
+                                   lex_argmin, pick_idle_own, q_head,
+                                   q_pop, q_push, rearm_timer,
+                                   start_cold)
+
+
+class ESFFKernel(PolicyKernel):
+    """ESFF (Algorithms 1-3); flags select the ESFF-H variants."""
+
+    def __init__(self, name: str, *, lru_victim: bool = False,
+                 cold_aware: bool = False, default_beta: float = 1.0):
+        self.name = name
+        self.lru_victim = lru_victim
+        self.cold_aware = cold_aware
+        self.default_beta = default_beta
+
+    def _drain_terms(self, ctx: EngineCtx, s):
+        """means, |K|, and the cold-instance correction of Eq. 6/7."""
+        means = est_means(ctx, s)
+        K = k_counts(ctx, s)
+        coldK = (cold_counts(ctx, s).astype(jnp.float64)
+                 if self.cold_aware else None)
+        return means, K, coldK
+
+    # ------------------------------------------------- FCP (Algorithm 2)
+    def on_arrival(self, ctx, s, rid, t, on):
+        j = ctx.fn_at(rid)
+        means, K, coldK = self._drain_terms(ctx, s)
+        has_own, own_slot = pick_idle_own(ctx, s, j)
+        direct = on & has_own & (s["q_len"][j] == 0)
+        s = dispatch(ctx, s, own_slot, rid, t, direct)
+        queued = on & ~direct
+
+        empty = (s["slot_fn"] < 0) & ctx.cap_mask
+        n_e = s["q_len"][j] + 1.0 - ctx.t_cold[j] * K[j] / means[j]
+        if self.cold_aware:
+            n_e = n_e - coldK[j]
+        s = start_cold(ctx, s, jnp.argmax(empty), j, t, -1,
+                       queued & empty.any() & (n_e > 0))
+
+        idle = ((s["slot_state"] == IDLE) & (s["slot_fn"] >= 0)
+                & (s["slot_fn"] != j) & ctx.cap_mask)
+        sf = jnp.where(s["slot_fn"] >= 0, s["slot_fn"], 0)
+        n_e2 = (s["q_len"][j] + 1.0
+                - (ctx.t_cold[j] + ctx.t_evict[sf]) * K[j] / means[j])
+        if self.cold_aware:
+            n_e2 = n_e2 - coldK[j]
+        elig = idle & (n_e2 > 0)
+        # Eq. 8 victim: argmax t̄_e (ESFF) or LRU (ESFF-H), ties toward
+        # the earliest-created instance
+        primary = s["slot_used"] if self.lru_victim else -means[sf]
+        victim = lex_argmin(primary, s["slot_seq"], elig)
+        s = start_cold(ctx, s, victim, j, t, s["slot_fn"][victim],
+                       queued & ~empty.any() & elig.any())
+        s, _ = q_push(ctx, s, j, rid, queued)
+        return s
+
+    # ----------------------------------------------------- instance ready
+    def on_cold_done(self, ctx, s, slot, t, on):
+        j = s["slot_fn"][slot]
+        take = on & (s["q_len"][jnp.clip(j, 0, ctx.F - 1)] > 0)
+        s, rid = q_pop(ctx, s, j, take)
+        return dispatch(ctx, s, slot, rid, t, take)
+
+    # ------------------------------------------------- FRP (Algorithm 3)
+    def on_exec_done(self, ctx, s, slot, rid, t, on):
+        j = s["slot_fn"][slot]
+        jc = jnp.clip(j, 0, ctx.F - 1)
+        means, K, coldK = self._drain_terms(ctx, s)
+        K = K.astype(jnp.float64)
+        nw = s["q_len"].astype(jnp.float64)
+        # Eq. (9)
+        w_own = jnp.where(
+            nw[jc] > 0,
+            means[jc] + ctx.t_evict[jc] * K[jc]
+            / jnp.maximum(nw[jc], 1),
+            BIG)
+        # Eq. (7) swapped + Eq. (10) with beta hysteresis
+        n_e = nw + 1.0 - (ctx.t_cold + ctx.t_evict[jc]) * K / means
+        if self.cold_aware:
+            n_e = n_e - coldK
+        w = (means + ctx.beta * (ctx.t_cold + ctx.t_evict) * (K + 1.0)
+             / jnp.maximum(n_e, 1e-30))
+        idx = jnp.arange(ctx.F)
+        valid = (nw > 0) & (n_e > 0) & (idx != jc)
+        w = jnp.where(valid, w, BIG)
+        best = jnp.argmin(w)
+
+        replace = on & (w[best] < w_own) & valid.any()
+        s = start_cold(ctx, s, slot, best, t, j, replace)
+        take = on & ~replace & (s["q_len"][jc] > 0)
+        s, rid2 = q_pop(ctx, s, j, take)
+        return dispatch(ctx, s, slot, rid2, t, take)
+
+
+class CentralQueueKernel(PolicyKernel):
+    """OpenWhisk / SFF: central queue + immediate scale-up + LRU keep-
+    alive, with warm reuse of a freed slot's own waiting requests."""
+
+    def __init__(self, name: str, *, order: str = "fifo"):
+        assert order in ("fifo", "sff")
+        self.name = name
+        self.order = order
+
+    def _head_fn(self, ctx, s):
+        """Central-queue head: (exists, fn). Requests are globally
+        FIFO-comparable by id (traces are arrival-sorted), so OpenWhisk
+        minimises the head id and SFF (t̄_e, id) lexicographically."""
+        heads = s["q_head_rid"]
+        valid = s["q_len"] > 0
+        if self.order == "sff":
+            f = lex_argmin(est_means(ctx, s), heads, valid)
+        else:
+            f = lex_argmin(jnp.zeros((ctx.F,)), heads, valid)
+        return valid.any(), f
+
+    def _scale_up(self, ctx, s, j, t, on):
+        """No idle instance for an arrival of ``j``: claim a free slot,
+        else evict the LRU idle instance (ties: earliest-created)."""
+        empty = (s["slot_fn"] < 0) & ctx.cap_mask
+        s = start_cold(ctx, s, jnp.argmax(empty), j, t, -1,
+                       on & empty.any())
+        idle = (s["slot_state"] == IDLE) & (s["slot_fn"] >= 0) \
+            & ctx.cap_mask
+        victim = lex_argmin(s["slot_used"], s["slot_seq"], idle)
+        return start_cold(ctx, s, victim, j, t, s["slot_fn"][victim],
+                          on & ~empty.any() & idle.any())
+
+    def on_arrival(self, ctx, s, rid, t, on):
+        j = ctx.fn_at(rid)
+        has_own, own_slot = pick_idle_own(ctx, s, j)
+        s = dispatch(ctx, s, own_slot, rid, t, on & has_own)
+        queued = on & ~has_own
+        s, _ = q_push(ctx, s, j, rid, queued)
+        return self._scale_up(ctx, s, j, t, queued)
+
+    def _serve_or_replace(self, ctx, s, slot, t, on):
+        """Central-queue discipline for a freed idle slot: drain its own
+        function's earliest request (warm reuse), else retarget to the
+        queue-head function — at most one warming replica at a time."""
+        j = s["slot_fn"][slot]
+        own = on & (s["q_len"][jnp.clip(j, 0, ctx.F - 1)] > 0)
+        s, rid = q_pop(ctx, s, j, own)
+        s = dispatch(ctx, s, slot, rid, t, own)
+
+        exists, f = self._head_fn(ctx, s)
+        warming = ((s["slot_fn"] == f) & (s["slot_state"] == COLD)
+                   & ctx.cap_mask).any()
+        return start_cold(ctx, s, slot, f, t, j,
+                          on & ~own & exists & ~warming)
+
+    def on_cold_done(self, ctx, s, slot, t, on):
+        return self._serve_or_replace(ctx, s, slot, t, on)
+
+    def on_exec_done(self, ctx, s, slot, rid, t, on):
+        return self._serve_or_replace(ctx, s, slot, t, on)
+
+
+class OpenWhiskV2Kernel(PolicyKernel):
+    """Per-function queues + head-wait threshold before scale-up.
+
+    Timers replicate the event engine exactly, including its quirks: a
+    timer firing for a non-head request is dropped (the then-head's own
+    timer is relied upon), so a request can lose its timer and then wait
+    for a warm instance of its function — same as the Python policy.
+    The Python policy's ``req.start >= 0`` guard is subsumed by the
+    head check: a dispatched request was popped from its queue, so it
+    can never still be the head.
+    """
+
+    name = "openwhisk_v2"
+    has_timers = True
+
+    def on_arrival(self, ctx, s, rid, t, on):
+        j = ctx.fn_at(rid)
+        has_own, own_slot = pick_idle_own(ctx, s, j)
+        direct = on & has_own & (s["q_len"][j] == 0)
+        s = dispatch(ctx, s, own_slot, rid, t, direct)
+        queued = on & ~direct
+        s, pushed = q_push(ctx, s, j, rid, queued)
+        return arm_timer(ctx, s, j, rid, pushed)
+
+    def on_timer(self, ctx, s, rid, t, on):
+        j = ctx.fn_at(rid)
+        is_head = (s["q_len"][j] > 0) & (q_head(ctx, s, j) == rid)
+        act = on & is_head
+        warming = ((s["slot_fn"] == j) & (s["slot_state"] == COLD)
+                   & ctx.cap_mask).any()
+
+        empty = (s["slot_fn"] < 0) & ctx.cap_mask
+        scale = act & ~warming
+        s = start_cold(ctx, s, jnp.argmax(empty), j, t, -1,
+                       scale & empty.any())
+        idle = (s["slot_state"] == IDLE) & (s["slot_fn"] >= 0) \
+            & ctx.cap_mask
+        victim = lex_argmin(s["slot_used"], s["slot_seq"], idle)
+        s = start_cold(ctx, s, victim, j, t, s["slot_fn"][victim],
+                       scale & ~empty.any() & idle.any())
+        # blocked (still warming, or nothing evictable): retry later
+        rearm = (act & warming) | (scale & ~empty.any() & ~idle.any())
+        return rearm_timer(ctx, s, j, rid, t + ctx.threshold, rearm)
+
+    def _drain_own(self, ctx, s, slot, t, on):
+        j = s["slot_fn"][slot]
+        take = on & (s["q_len"][jnp.clip(j, 0, ctx.F - 1)] > 0)
+        s, rid = q_pop(ctx, s, j, take)
+        return dispatch(ctx, s, slot, rid, t, take)
+
+    def on_cold_done(self, ctx, s, slot, t, on):
+        return self._drain_own(ctx, s, slot, t, on)
+
+    def on_exec_done(self, ctx, s, slot, rid, t, on):
+        return self._drain_own(ctx, s, slot, t, on)
+
+
+# Kernel singletons: stable identities keep the jit cache warm across
+# calls (the kernel is a static argument of the engine).
+KERNELS = {
+    "esff": ESFFKernel("esff"),
+    "esff_h": ESFFKernel("esff_h", lru_victim=True, cold_aware=True,
+                         default_beta=2.0),
+    "sff": CentralQueueKernel("sff", order="sff"),
+    "openwhisk": CentralQueueKernel("openwhisk", order="fifo"),
+    "openwhisk_v2": OpenWhiskV2Kernel(),
+}

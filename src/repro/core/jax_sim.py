@@ -1,48 +1,26 @@
-"""Vectorised ESFF simulator in JAX (``lax.while_loop``, fixed shapes).
+"""Vectorised ESFF simulator — compatibility facade.
 
-The event-driven Python engine replays ~10^4 requests/s; sweeping
-schedules (capacities x hysteresis x traces) for fleet-sizing needs
-orders of magnitude more. This simulator keeps the FULL ESFF semantics —
-FCP (Alg. 2), FRP (Alg. 3), running-mean estimation, slot lifecycle —
-in fixed-shape arrays, so one ``jax.jit`` + ``vmap`` evaluates a policy
-grid in parallel on device. Equivalence with the Python engine is tested
-request-for-request (tests/test_jax_sim.py).
-
-State layout (static F functions, C slots, Q queue depth, N requests):
-  slots:   fn (C,) i32 [-1 empty] | state (C,) {0 cold,1 idle,2 busy}
-           ready (C,) f64 (cold-done / exec-done time) | req (C,) i32
-  queues:  ring (F, Q) i32 request ids | head/len (F,) i32
-  est:     per-fn sum/count + global sum/count (running means)
-  results: start/completion (N,)
-
-Event loop: next event = min(arrival cursor, busy/cold slot readies);
-slot events win ties (matching the Python engine's priority order).
-``beta`` is the ESFF-H hysteresis (1.0 = paper-faithful ESFF) and
-``cap_mask`` masks slots, so capacity can be swept under vmap.
+The monolithic ``lax.while_loop`` simulator that used to live here has
+been split into a policy-agnostic event core (`repro.core.jax_engine`,
+which owns the state layout and the loop) and per-policy kernels
+(`repro.core.jax_policies`). ``simulate_esff_jax`` keeps its original
+signature as a thin wrapper over the engine's ESFF kernel; ``beta`` is
+still the ESFF-H hysteresis (1.0 = paper-faithful ESFF) and ``cap_mask``
+still masks slots so capacity can be swept under vmap. Use
+`repro.core.jax_engine.simulate_policy_jax` / ``sweep`` for the other
+policies and for batched policy x capacity x trace grids.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
+from repro.core.jax_engine import (simulate_policy_from_trace,
+                                   simulate_policy_jax)
 from repro.core.request import Trace
 
-BIG = 1e30
-COLD, IDLE, BUSY = 0, 1, 2
 
-
-def _mean(sums, counts, gsum, gcount, prior):
-    g = jnp.where(gcount > 0, gsum / jnp.maximum(gcount, 1), prior)
-    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1), g)
-
-
-@functools.partial(jax.jit, static_argnames=("n_fns", "capacity",
-                                             "queue_cap"))
 def simulate_esff_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
                       n_fns: int, capacity: int, queue_cap: int = 512,
                       beta: float = 1.0, prior: float = 0.1,
@@ -52,226 +30,15 @@ def simulate_esff_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
     Returns dict with start/completion (N,), cold_starts, overflow count
     (requests that found a full ring buffer — must be 0 for valid runs).
     """
-    N = fn_id.shape[0]
-    F, C, Q = n_fns, capacity, queue_cap
-    if cap_mask is None:
-        cap_mask = jnp.ones((C,), bool)
-
-    state = dict(
-        slot_fn=jnp.full((C,), -1, jnp.int32),
-        slot_state=jnp.full((C,), IDLE, jnp.int32),
-        slot_ready=jnp.full((C,), BIG, jnp.float64),
-        slot_req=jnp.full((C,), -1, jnp.int32),
-        q_ring=jnp.full((F, Q), -1, jnp.int32),
-        q_head=jnp.zeros((F,), jnp.int32),
-        q_len=jnp.zeros((F,), jnp.int32),
-        est_sum=jnp.zeros((F,), jnp.float64),
-        est_n=jnp.zeros((F,), jnp.int32),
-        g_sum=jnp.zeros((), jnp.float64),
-        g_n=jnp.zeros((), jnp.int32),
-        start=jnp.full((N,), -1.0, jnp.float64),
-        completion=jnp.full((N,), -1.0, jnp.float64),
-        next_arrival=jnp.zeros((), jnp.int32),
-        done=jnp.zeros((), jnp.int32),
-        cold_starts=jnp.zeros((), jnp.int32),
-        overflow=jnp.zeros((), jnp.int32),
-    )
-
-    fn_id = fn_id.astype(jnp.int32)
-    arrival = arrival.astype(jnp.float64)
-    exec_time = exec_time.astype(jnp.float64)
-    t_cold = t_cold.astype(jnp.float64)
-    t_evict = t_evict.astype(jnp.float64)
-
-    def k_counts(s):
-        return jnp.zeros((F,), jnp.int32).at[
-            jnp.where(s["slot_fn"] >= 0, s["slot_fn"],
-                      jnp.int32(F))
-        ].add(jnp.int32(1), mode="drop")
-
-    def est_means(s):
-        return _mean(s["est_sum"], s["est_n"].astype(jnp.float64),
-                     s["g_sum"], s["g_n"].astype(jnp.float64), prior)
-
-    def q_push(s, fn, rid):
-        pos = (s["q_head"][fn] + s["q_len"][fn]) % Q
-        full = s["q_len"][fn] >= Q
-        s = dict(s)
-        s["q_ring"] = s["q_ring"].at[fn, pos].set(
-            jnp.where(full, s["q_ring"][fn, pos], rid))
-        s["q_len"] = s["q_len"].at[fn].add(
-            jnp.where(full, 0, 1))
-        s["overflow"] = s["overflow"] + full.astype(jnp.int32)
-        return s
-
-    def q_pop(s, fn):
-        rid = s["q_ring"][fn, s["q_head"][fn]]
-        s = dict(s)
-        s["q_head"] = s["q_head"].at[fn].set((s["q_head"][fn] + 1) % Q)
-        s["q_len"] = s["q_len"].at[fn].add(-1)
-        return s, rid
-
-    def dispatch(s, slot, rid, t):
-        """slot -> busy on request rid."""
-        s = dict(s)
-        comp = t + exec_time[rid]
-        s["slot_state"] = s["slot_state"].at[slot].set(BUSY)
-        s["slot_ready"] = s["slot_ready"].at[slot].set(comp)
-        s["slot_req"] = s["slot_req"].at[slot].set(rid)
-        s["start"] = s["start"].at[rid].set(t)
-        s["completion"] = s["completion"].at[rid].set(comp)
-        return s
-
-    def start_cold(s, slot, fn, t, evict_fn):
-        """claim/convert slot for fn (evict_fn = -1 -> empty slot)."""
-        s = dict(s)
-        delay = t_cold[fn] + jnp.where(evict_fn >= 0,
-                                       t_evict[evict_fn], 0.0)
-        s["slot_fn"] = s["slot_fn"].at[slot].set(fn)
-        s["slot_state"] = s["slot_state"].at[slot].set(COLD)
-        s["slot_ready"] = s["slot_ready"].at[slot].set(t + delay)
-        s["cold_starts"] = s["cold_starts"] + 1
-        return s
-
-    # ------------------------------------------------------ FCP (Alg 2)
-    def on_arrival(s):
-        rid = s["next_arrival"]
-        t = arrival[rid]
-        j = fn_id[rid]
-        s = dict(s)
-        s["next_arrival"] = rid + 1
-        means = est_means(s)
-        K = k_counts(s)
-
-        idle_own = (s["slot_fn"] == j) & (s["slot_state"] == IDLE) \
-            & cap_mask
-        has_idle_own = idle_own.any() & (s["q_len"][j] == 0)
-        own_slot = jnp.argmax(idle_own)
-
-        def direct(s):
-            return dispatch(s, own_slot, rid, t)
-
-        def queued(s):
-            empty = (s["slot_fn"] < 0) & cap_mask
-            has_empty = empty.any()
-            n_e = (s["q_len"][j] + 1.0
-                   - t_cold[j] * K[j] / means[j])
-
-            def free_path(s):
-                slot = jnp.argmax(empty)
-                return lax.cond(n_e > 0,
-                                lambda s: start_cold(s, slot, j, t, -1),
-                                lambda s: s, s)
-
-            def replace_path(s):
-                idle = (s["slot_state"] == IDLE) & (s["slot_fn"] >= 0) \
-                    & (s["slot_fn"] != j) & cap_mask
-                sf = jnp.where(s["slot_fn"] >= 0, s["slot_fn"], 0)
-                n_e2 = (s["q_len"][j] + 1.0
-                        - (t_cold[j] + t_evict[sf]) * K[j] / means[j])
-                elig = idle & (n_e2 > 0)
-                score = jnp.where(elig, means[sf], -BIG)
-                slot = jnp.argmax(score)
-                return lax.cond(elig.any(),
-                                lambda s: start_cold(
-                                    s, slot, j, t, s["slot_fn"][slot]),
-                                lambda s: s, s)
-
-            s = lax.cond(has_empty, free_path, replace_path, s)
-            return q_push(s, j, rid)
-
-        return lax.cond(has_idle_own, direct, queued, s)
-
-    # ------------------------------------------------- slot events
-    def on_slot_event(s):
-        slot = jnp.argmin(jnp.where(cap_mask, s["slot_ready"], BIG))
-        t = s["slot_ready"][slot]
-        j = s["slot_fn"][slot]
-        is_cold = s["slot_state"][slot] == COLD
-
-        def cold_done(s):
-            s = dict(s)
-            s["slot_state"] = s["slot_state"].at[slot].set(IDLE)
-            s["slot_ready"] = s["slot_ready"].at[slot].set(BIG)
-
-            def take(s):
-                s, rid = q_pop(s, j)
-                return dispatch(s, slot, rid, t)
-            return lax.cond(s["q_len"][j] > 0, take, lambda s: s, s)
-
-        def exec_done(s):
-            rid = s["slot_req"][slot]
-            s = dict(s)
-            s["est_sum"] = s["est_sum"].at[j].add(exec_time[rid])
-            s["est_n"] = s["est_n"].at[j].add(1)
-            s["g_sum"] = s["g_sum"] + exec_time[rid]
-            s["g_n"] = s["g_n"] + 1
-            s["done"] = s["done"] + 1
-            s["slot_state"] = s["slot_state"].at[slot].set(IDLE)
-            s["slot_ready"] = s["slot_ready"].at[slot].set(BIG)
-            s["slot_req"] = s["slot_req"].at[slot].set(-1)
-
-            means = est_means(s)
-            K = k_counts(s).astype(jnp.float64)
-            nw = s["q_len"].astype(jnp.float64)
-            # Eq. (9)
-            w_own = jnp.where(
-                nw[j] > 0,
-                means[j] + t_evict[j] * K[j] / jnp.maximum(nw[j], 1),
-                BIG)
-            # Eq. (7) swapped + Eq. (10) with beta hysteresis
-            n_e = nw + 1.0 - (t_cold + t_evict[j]) * K / means
-            w = means + beta * (t_cold + t_evict) * (K + 1.0) \
-                / jnp.maximum(n_e, 1e-30)
-            idx = jnp.arange(F)
-            valid = (nw > 0) & (n_e > 0) & (idx != j)
-            w = jnp.where(valid, w, BIG)
-            best = jnp.argmin(w)
-
-            def replace(s):
-                return start_cold(s, slot, best, t, j)
-
-            def keep(s):
-                def take(s):
-                    s2, rid2 = q_pop(s, j)
-                    return dispatch(s2, slot, rid2, t)
-                return lax.cond(s["q_len"][j] > 0, take, lambda s: s, s)
-
-            return lax.cond((w[best] < w_own) & valid.any(),
-                            replace, keep, s)
-
-        return lax.cond(is_cold, cold_done, exec_done, s)
-
-    # --------------------------------------------------------- the loop
-    def cond(s):
-        return s["done"] < N
-
-    def body(s):
-        t_arr = jnp.where(s["next_arrival"] < N,
-                          arrival[jnp.minimum(s["next_arrival"], N - 1)],
-                          BIG)
-        t_slot = jnp.min(jnp.where(cap_mask, s["slot_ready"], BIG))
-        return lax.cond(t_slot <= t_arr, on_slot_event, on_arrival, s)
-
-    final = lax.while_loop(cond, body, state)
-    return dict(start=final["start"], completion=final["completion"],
-                cold_starts=final["cold_starts"],
-                overflow=final["overflow"])
+    return simulate_policy_jax(
+        fn_id, arrival, exec_time, t_cold, t_evict, policy="esff",
+        n_fns=n_fns, capacity=capacity, queue_cap=queue_cap, beta=beta,
+        prior=prior, cap_mask=cap_mask)
 
 
 def simulate_jax_from_trace(trace: Trace, capacity: int, *,
                             beta: float = 1.0, queue_cap: int = 1024,
                             prior: float = 0.1) -> Dict[str, np.ndarray]:
-    # event times need f64 precision for exact agreement with the
-    # Python engine over multi-hour traces
-    jax.config.update("jax_enable_x64", True)
-    a = trace.to_arrays()
-    out = simulate_esff_jax(
-        jnp.asarray(a["fn_id"]), jnp.asarray(a["arrival"]),
-        jnp.asarray(a["exec_time"]), jnp.asarray(a["cold_start"]),
-        jnp.asarray(a["evict"]), n_fns=trace.n_functions,
-        capacity=capacity, queue_cap=queue_cap, beta=beta, prior=prior)
-    out = {k: np.asarray(v) for k, v in out.items()}
-    out["response"] = out["completion"] - a["arrival"]
-    out["mean_response"] = float(out["response"].mean())
-    return out
+    return simulate_policy_from_trace(
+        trace, "esff", capacity, beta=beta, queue_cap=queue_cap,
+        prior=prior)

@@ -103,7 +103,9 @@ class EdgeServer:
         return len(self.by_fn[fn_id])
 
     def idle_of(self, fn_id: int) -> Optional[Instance]:
-        for iid in self.by_fn[fn_id]:
+        # sorted => earliest-created first: deterministic across runs and
+        # engines (set iteration order would leak hash-table layout)
+        for iid in sorted(self.by_fn[fn_id]):
             inst = self.instances[iid]
             if inst.state == InstanceState.IDLE:
                 return inst

@@ -1,0 +1,95 @@
+"""Policy-kernel engine (`repro.core.jax_engine`): per-policy
+request-for-request equivalence with the Python event engine, overflow
+accounting, and the batched sweep API."""
+import numpy as np
+import pytest
+
+from repro.core import simulate
+from repro.core.jax_engine import (simulate_policy_from_trace,
+                                   simulate_policy_jax, sweep)
+from repro.traces import synth_azure_trace, trace_from_lists
+
+VEC_POLICIES = ("esff", "esff_h", "sff", "openwhisk", "openwhisk_v2")
+
+
+@pytest.mark.parametrize("policy", VEC_POLICIES)
+@pytest.mark.parametrize("seed,capacity,n", [(5, 8, 400), (1, 4, 300)])
+def test_policy_equivalence_with_python_engine(policy, seed, capacity,
+                                               n):
+    tr = synth_azure_trace(n_functions=20, n_requests=n,
+                           utilization=0.2, seed=seed)
+    py = simulate(tr, policy, capacity=capacity)
+    jx = simulate_policy_from_trace(tr, policy, capacity)
+    assert int(jx["overflow"]) == 0
+    assert int(jx["stalled"]) == 0
+    assert int(jx["cold_starts"]) == py.server.cold_starts
+    resp_py = np.array([r.response for r in tr.requests])
+    np.testing.assert_allclose(jx["response"], resp_py, rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_esff_h_default_beta_matches_python_class():
+    """The esff_h kernel must carry ESFF-H's hysteresis default."""
+    from repro.core.esff_h import ESFFH
+    from repro.core.jax_policies import KERNELS
+    assert KERNELS["esff_h"].default_beta == ESFFH.beta
+
+
+def test_queue_overflow_is_reported_not_silent():
+    """queue_cap saturation must surface in the overflow counter (and
+    the run flagged as stalled, since dropped requests never finish)."""
+    n = 12
+    tr = trace_from_lists(
+        fn_ids=[0] * n,
+        arrivals=[0.01 * i for i in range(n)],
+        exec_times=[1.0] * n,
+        cold=[0.5], evict=[0.2])
+    a = tr.to_arrays()
+    import jax.numpy as jnp
+    out = simulate_policy_jax(
+        jnp.asarray(a["fn_id"]), jnp.asarray(a["arrival"]),
+        jnp.asarray(a["exec_time"]), jnp.asarray(a["cold_start"]),
+        jnp.asarray(a["evict"]), policy="esff", n_fns=1, capacity=1,
+        queue_cap=2)
+    overflow = int(out["overflow"])
+    assert overflow > 0
+    assert int(out["stalled"]) == 1
+    # exactly the dropped requests never complete
+    assert int((np.asarray(out["completion"]) < 0).sum()) == overflow
+
+
+def test_sweep_grid_matches_single_runs():
+    tr1 = synth_azure_trace(n_functions=15, n_requests=250,
+                            utilization=0.25, seed=11)
+    tr2 = synth_azure_trace(n_functions=15, n_requests=250,
+                            utilization=0.25, seed=12)
+    caps = (4, 8)
+    out = sweep([tr1, tr2], policies=("esff", "openwhisk"),
+                capacities=caps, queue_cap=128)
+    assert out["mean_response"].shape == (2, 2, 2, 1)
+    assert int(out["overflow"].sum()) == 0
+    assert int(out["stalled"].sum()) == 0
+    for pi, p in enumerate(("esff", "openwhisk")):
+        for ti, tr in enumerate((tr1, tr2)):
+            for ci, c in enumerate(caps):
+                single = simulate_policy_from_trace(tr, p, c,
+                                                    queue_cap=128)
+                np.testing.assert_allclose(
+                    out["mean_response"][pi, ti, ci, 0],
+                    single["mean_response"], rtol=1e-9)
+
+
+def test_sweep_beta_axis():
+    tr = synth_azure_trace(n_functions=15, n_requests=250,
+                           utilization=0.3, seed=13)
+    out = sweep(tr, policies=("esff",), capacities=(4,),
+                betas=(1.0, 2.0), queue_cap=128)
+    assert out["mean_response"].shape == (1, 1, 1, 2)
+    base = simulate_policy_from_trace(tr, "esff", 4, beta=1.0,
+                                      queue_cap=128)
+    hyst = simulate_policy_from_trace(tr, "esff", 4, beta=2.0,
+                                      queue_cap=128)
+    np.testing.assert_allclose(out["mean_response"][0, 0, 0, 0],
+                               base["mean_response"], rtol=1e-9)
+    np.testing.assert_allclose(out["mean_response"][0, 0, 0, 1],
+                               hyst["mean_response"], rtol=1e-9)

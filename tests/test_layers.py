@@ -2,12 +2,12 @@
 chunked vs token recurrence, MoE capacity vs dense oracle, rope, norms."""
 import math
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.models import layers as L
 from repro.models import mamba as M

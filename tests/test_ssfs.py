@@ -1,9 +1,9 @@
 """Theorem 2 (SSFS optimality): property tests vs exhaustive search."""
 import math
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (SSFSFunction, brute_force_best, sequence_cost,
                         ssfs_schedule)

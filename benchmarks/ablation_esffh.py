@@ -41,6 +41,7 @@ def run(seed: int = 0):
 def main():
     rows = run()
     emit(rows, rows[0].keys())
+    return rows
 
 
 if __name__ == "__main__":

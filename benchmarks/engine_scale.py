@@ -1,0 +1,79 @@
+"""Engine scaling with trace length: req/s at N in {3e4, 3e5, 1e6}.
+
+The streaming engine carries O(F + C + SEG + HIST_BINS) state per
+lane regardless of N (jax_engine perf-contract rule 4), so a
+10^6-request synthetic Azure stream — the scale of the paper's §VI
+Azure evaluation and beyond — runs through the batched grid on one CPU.
+Traces come from the columnar generator (`synth_azure_arrays`); Request
+objects are never materialised.
+
+    PYTHONPATH=src python -m benchmarks.engine_scale [--quick]
+
+``--quick`` stops at 3e5 requests (CI-friendly); the default sweeps the
+full 10^6. REPRO_SCALE_POLICIES overrides the policy set.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from benchmarks.common import (default_trace_arrays, emit,
+                               enable_compilation_cache)
+from repro.core.jax_engine import sweep
+
+NS = (30_000, 300_000, 1_000_000)
+POLICIES = tuple(os.environ.get(
+    "REPRO_SCALE_POLICIES", "esff,sff,openwhisk").split(","))
+CAPACITY = 16
+# a backlog bound, not storage: positional queues carry O(F) cursors
+# whatever the cap, and a 10^6-request bursty trace really does queue
+# >4096 requests behind one hot function at times
+QUEUE_CAP = 1 << 17
+
+
+def run(ns=NS, policies=POLICIES):
+    rows = []
+    for n in ns:
+        t0 = time.perf_counter()
+        arrs = default_trace_arrays(seed=0, n_requests=n)
+        t_gen = time.perf_counter() - t0
+        for policy in policies:
+            # one warm pass per (policy, N) jit specialisation, then
+            # the timed pass
+            kw = dict(policies=(policy,), capacities=(CAPACITY,),
+                      queue_cap=QUEUE_CAP, stream=True)
+            sweep(arrs, **kw)
+            t0 = time.perf_counter()
+            out = sweep(arrs, **kw)
+            dt = time.perf_counter() - t0
+            bad = (int(out["overflow"].sum())
+                   or int(out["stalled"].sum()))
+            if bad:
+                raise RuntimeError(
+                    f"engine_scale {policy} N={n} overflowed/stalled "
+                    "— raise queue_cap")
+            rows.append(dict(
+                name=f"{policy}_N{n}", n_requests=n, policy=policy,
+                us_per_call=dt * 1e6, req_s=n / dt,
+                mean_response=float(out["mean_response"][0, 0, 0, 0]),
+                p99_response=float(out["p99_response"][0, 0, 0, 0]),
+                derived=f"{n / dt:.0f} req/s (gen {t_gen:.1f}s)"))
+    return rows
+
+
+def main(argv=None):
+    enable_compilation_cache()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="stop at 3e5 requests")
+    args = ap.parse_args(argv)
+    ns = tuple(n for n in NS if n <= 300_000) if args.quick else NS
+    rows = run(ns=ns)
+    emit(rows, ("name", "n_requests", "policy", "us_per_call", "req_s",
+                "mean_response", "p99_response", "derived"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

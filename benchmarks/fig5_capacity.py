@@ -1,14 +1,16 @@
 """Paper Fig. 5: mean response / slowdown / cold-start time vs edge
 server capacity (8..32) for ESFF and the baselines.
 
-The five vectorised policies sweep every capacity in one batched device
-call each (`repro.core.jax_engine.sweep`, capacities as vmapped slot
-masks); FaasCache has no JAX kernel yet and stays on the Python engine.
+All six policies (FaasCache included, via its GREEDY-DUAL kernel) sweep
+every capacity in batched device calls (`repro.core.jax_engine.sweep`,
+capacities as vmapped slot masks) in streaming-metrics mode — no
+Python-engine fallback. p99 is histogram-derived (exact to one
+~1.33x log bin).
 """
 from __future__ import annotations
 
-from benchmarks.common import (POLICIES, VEC_POLICIES, default_trace,
-                               emit, run_policy)
+from benchmarks.common import (POLICIES, default_trace, emit,
+                               enable_compilation_cache)
 from repro.core.jax_engine import sweep
 
 CAPACITIES = (8, 12, 16, 20, 24, 28, 32)
@@ -17,42 +19,31 @@ CAPACITIES = (8, 12, 16, 20, 24, 28, 32)
 def run(seed: int = 0):
     tr = default_trace(seed)
     n = len(tr)
-    vec = sweep(tr, policies=VEC_POLICIES, capacities=CAPACITIES,
+    vec = sweep(tr, policies=POLICIES, capacities=CAPACITIES,
                 queue_cap=4096)
     if int(vec["overflow"].sum()) or int(vec["stalled"].sum()):
         raise RuntimeError("fig5 sweep overflowed/stalled — raise "
                            "queue_cap")
     rows = []
     for ci, cap in enumerate(CAPACITIES):
-        for policy in POLICIES:
-            if policy in VEC_POLICIES:
-                pi = VEC_POLICIES.index(policy)
-                cell = {k: vec[k][pi, 0, ci, 0]
-                        for k in ("mean_response", "mean_slowdown",
-                                  "cold_time", "cold_starts",
-                                  "p99_response")}
-                rows.append(dict(
-                    capacity=cap, policy=policy,
-                    mean_response=float(cell["mean_response"]),
-                    mean_slowdown=float(cell["mean_slowdown"]),
-                    cold_time_per_request=float(cell["cold_time"]) / n,
-                    cold_starts=int(cell["cold_starts"]),
-                    p99=float(cell["p99_response"]),
-                ))
-            else:
-                r = run_policy(tr, policy, cap)
-                rows.append(dict(
-                    capacity=cap, policy=policy,
-                    mean_response=r.mean_response,
-                    mean_slowdown=r.mean_slowdown,
-                    cold_time_per_request=r.cold_time_per_request,
-                    cold_starts=r.server.cold_starts,
-                    p99=r.percentile(99),
-                ))
+        for pi, policy in enumerate(POLICIES):
+            cell = {k: vec[k][pi, 0, ci, 0]
+                    for k in ("mean_response", "mean_slowdown",
+                              "cold_time", "cold_starts",
+                              "p99_response")}
+            rows.append(dict(
+                capacity=cap, policy=policy,
+                mean_response=float(cell["mean_response"]),
+                mean_slowdown=float(cell["mean_slowdown"]),
+                cold_time_per_request=float(cell["cold_time"]) / n,
+                cold_starts=int(cell["cold_starts"]),
+                p99=float(cell["p99_response"]),
+            ))
     return rows
 
 
 def main():
+    enable_compilation_cache()
     rows = run()
     emit(rows, rows[0].keys())
     # the paper's headline: ESFF vs the best baseline per capacity
@@ -64,6 +55,7 @@ def main():
                    if k not in ("esff", "esff_h"))
         gain = 100 * (1 - here["esff"] / base)
         print(f"# capacity {cap}: ESFF vs best baseline: {gain:+.1f}%")
+    return rows
 
 
 if __name__ == "__main__":

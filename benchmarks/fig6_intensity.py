@@ -1,15 +1,15 @@
 """Paper Fig. 6: metrics vs workload-intensity ratio (0.6..1.4 interval
 scaling; >1 = lighter load).
 
-All intensity scalings share one request-array shape, so the five
-vectorised policies evaluate the whole ratio axis as a vmapped trace
-batch (`repro.core.jax_engine.sweep`); FaasCache stays on the Python
-engine.
+All intensity scalings share one request-array shape, so all six
+policies (FaasCache included) evaluate the whole ratio axis as a
+vmapped trace batch in one streaming sweep
+(`repro.core.jax_engine.sweep`) — no Python-engine fallback.
 """
 from __future__ import annotations
 
-from benchmarks.common import (CAPACITY, POLICIES, VEC_POLICIES,
-                               default_trace, emit, run_policy)
+from benchmarks.common import (CAPACITY, POLICIES, default_trace,
+                               emit, enable_compilation_cache)
 from repro.core.jax_engine import sweep
 
 RATIOS = (0.6, 0.8, 1.0, 1.2, 1.4)
@@ -19,39 +19,31 @@ def run(seed: int = 0):
     base = default_trace(seed)
     traces = [base.scaled(r) for r in RATIOS]
     n = len(base)
-    vec = sweep(traces, policies=VEC_POLICIES, capacities=(CAPACITY,),
+    vec = sweep(traces, policies=POLICIES, capacities=(CAPACITY,),
                 queue_cap=4096)
     if int(vec["overflow"].sum()) or int(vec["stalled"].sum()):
         raise RuntimeError("fig6 sweep overflowed/stalled — raise "
                            "queue_cap")
     rows = []
     for ti, ratio in enumerate(RATIOS):
-        for policy in POLICIES:
-            if policy in VEC_POLICIES:
-                pi = VEC_POLICIES.index(policy)
-                rows.append(dict(
-                    intensity=ratio, policy=policy,
-                    mean_response=float(
-                        vec["mean_response"][pi, ti, 0, 0]),
-                    mean_slowdown=float(
-                        vec["mean_slowdown"][pi, ti, 0, 0]),
-                    cold_time_per_request=float(
-                        vec["cold_time"][pi, ti, 0, 0]) / n,
-                ))
-            else:
-                r = run_policy(traces[ti], policy, CAPACITY)
-                rows.append(dict(
-                    intensity=ratio, policy=policy,
-                    mean_response=r.mean_response,
-                    mean_slowdown=r.mean_slowdown,
-                    cold_time_per_request=r.cold_time_per_request,
-                ))
+        for pi, policy in enumerate(POLICIES):
+            rows.append(dict(
+                intensity=ratio, policy=policy,
+                mean_response=float(
+                    vec["mean_response"][pi, ti, 0, 0]),
+                mean_slowdown=float(
+                    vec["mean_slowdown"][pi, ti, 0, 0]),
+                cold_time_per_request=float(
+                    vec["cold_time"][pi, ti, 0, 0]) / n,
+            ))
     return rows
 
 
 def main():
+    enable_compilation_cache()
     rows = run()
     emit(rows, rows[0].keys())
+    return rows
 
 
 if __name__ == "__main__":

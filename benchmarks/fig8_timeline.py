@@ -26,6 +26,7 @@ def main():
     resp = np.array([r["mean_response"] for r in rows])
     corr = np.corrcoef(n, resp)[0, 1]
     print(f"# corr(request-count, response) = {corr:.3f}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -89,6 +89,7 @@ def run():
 def main():
     rows = run()
     emit(rows, ("name", "us_per_call", "derived"))
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,30 +1,38 @@
 """Benchmark aggregator — one section per paper table/figure plus kernel
 and simulator microbenches. Prints ``name,us_per_call,derived`` CSV
-blocks; REPRO_BENCH_SCALE scales trace sizes.
+blocks; REPRO_BENCH_SCALE scales trace sizes. Every section run also
+emits a machine-readable ``BENCH_<stamp>.json`` (per-section wall time
+plus each section's rows — req/s per config for the throughput and
+engine-scale sections) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5,kernels]
     PYTHONPATH=src python -m benchmarks.run --smoke   # <60s CI gate
 
 ``--smoke`` runs every scheduling policy on a tiny trace through both
-engines and exits non-zero on any Python/JAX mismatch — cheap enough to
-sit next to tier-1 in CI.
+engines and exits non-zero on any Python/JAX mismatch — including the
+streaming-vs-exact gate (bitwise-equal means, p99 within one histogram
+bin) — cheap enough to sit next to tier-1 in CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "kernels",
-            "simthroughput")
+            "simthroughput", "enginescale")
 
 
 def smoke() -> int:
     import numpy as np
 
-    from benchmarks.common import POLICIES, VEC_POLICIES
+    from benchmarks.common import POLICIES
     from repro.core import simulate
-    from repro.core.jax_engine import simulate_policy_from_trace
+    from repro.core.jax_engine import (hist_edges,
+                                       simulate_policy_from_trace,
+                                       sweep)
     from repro.traces import synth_azure_trace
 
     tr = synth_azure_trace(n_functions=12, n_requests=400,
@@ -33,25 +41,41 @@ def smoke() -> int:
     failures = 0
     for policy in POLICIES:
         py = simulate(tr, policy, capacity)
-        line = f"{policy:13s} python={py.mean_response:8.4f}s"
-        if policy in VEC_POLICIES:
-            jx = simulate_policy_from_trace(tr, policy, capacity,
-                                            queue_cap=256)
-            resp_py = np.array([r.response for r in tr.requests])
-            ok = (int(jx["overflow"]) == 0
-                  and int(jx["stalled"]) == 0
-                  and int(jx["cold_starts"]) == py.server.cold_starts
-                  and np.allclose(jx["response"], resp_py, rtol=1e-9,
-                                  atol=1e-9))
-            failures += 0 if ok else 1
-            line += (f"  jax={jx['mean_response']:8.4f}s  "
-                     + ("OK" if ok else "MISMATCH"))
-        else:
-            line += "  (python engine only)"
-        print(line)
+        jx = simulate_policy_from_trace(tr, policy, capacity,
+                                        queue_cap=256)
+        resp_py = np.array([r.response for r in tr.requests])
+        ok = (int(jx["overflow"]) == 0
+              and int(jx["stalled"]) == 0
+              and int(jx["cold_starts"]) == py.server.cold_starts
+              and np.allclose(jx["response"], resp_py, rtol=1e-9,
+                              atol=1e-9))
+        failures += 0 if ok else 1
+        print(f"{policy:13s} python={py.mean_response:8.4f}s  "
+              f"jax={jx['mean_response']:8.4f}s  "
+              + ("OK" if ok else "MISMATCH"))
+
+    # streaming-vs-exact equivalence gate: identical fold path => means
+    # must agree bitwise; histogram p99 within one log bin of exact
+    bin_ratio = hist_edges()[1] / hist_edges()[0]
+    exact = sweep(tr, policies=POLICIES, capacities=(capacity,),
+                  queue_cap=256, stream=False)
+    strm = sweep(tr, policies=POLICIES, capacities=(capacity,),
+                 queue_cap=256, stream=True)
+    ok = (np.array_equal(strm["mean_response"],
+                         exact["mean_response"])
+          and np.array_equal(strm["mean_slowdown"],
+                             exact["mean_slowdown"])
+          and bool(np.all(strm["p99_response"]
+                          <= exact["p99_response"] * bin_ratio + 1e-12))
+          and bool(np.all(strm["p99_response"]
+                          >= exact["p99_response"] / bin_ratio - 1e-12)))
+    failures += 0 if ok else 1
+    print("stream-vs-exact: means "
+          + ("bitwise-equal, p99 within one bin  OK" if ok
+             else "MISMATCH"))
     print(f"# smoke: {len(POLICIES)} policies, "
-          f"{len(VEC_POLICIES)} engine-equivalence checks, "
-          f"{failures} failures")
+          f"{len(POLICIES)} engine-equivalence checks + streaming "
+          f"gate, {failures} failures")
     return failures
 
 
@@ -61,7 +85,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace, all policies, both engines; "
                          "exits non-zero on mismatch (<60s)")
+    ap.add_argument("--json", default="",
+                    help="path of the BENCH json report "
+                         "(default BENCH_<stamp>.json)")
     args = ap.parse_args()
+    from benchmarks.common import enable_compilation_cache
+    enable_compilation_cache()
     if args.smoke:
         t0 = time.perf_counter()
         failures = smoke()
@@ -70,20 +99,35 @@ def main() -> None:
         sys.exit(1 if failures else 0)
     only = set(args.only.split(",")) if args.only else set(SECTIONS)
 
-    from benchmarks import (ablation_esffh, fig5_capacity, fig6_intensity,
-                            fig7_cdf, fig8_timeline, kernels_bench,
-                            sim_throughput)
-    mods = dict(fig5=fig5_capacity, fig6=fig6_intensity, fig7=fig7_cdf,
-                fig8=fig8_timeline, ablation=ablation_esffh,
-                kernels=kernels_bench, simthroughput=sim_throughput)
+    from benchmarks import (ablation_esffh, engine_scale, fig5_capacity,
+                            fig6_intensity, fig7_cdf, fig8_timeline,
+                            kernels_bench, sim_throughput)
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+    mods = dict(fig5=fig5_capacity.main, fig6=fig6_intensity.main,
+                fig7=fig7_cdf.main, fig8=fig8_timeline.main,
+                ablation=ablation_esffh.main,
+                kernels=kernels_bench.main,
+                simthroughput=sim_throughput.main,
+                # scaled-down aggregate runs skip the 10^6 tier
+                enginescale=lambda: engine_scale.main(
+                    ["--quick"] if scale < 1.0 else []))
+    report = dict(stamp=time.strftime("%Y%m%d_%H%M%S"), scale=scale,
+                  sections={})
     for name in SECTIONS:
         if name not in only:
             continue
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
-        mods[name].main()
-        print(f"# section {name}: {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr)
+        rows = mods[name]()
+        wall = time.perf_counter() - t0
+        print(f"# section {name}: {wall:.1f}s", file=sys.stderr)
+        report["sections"][name] = dict(
+            wall_s=round(wall, 3),
+            rows=rows if isinstance(rows, list) else [])
+    path = args.json or f"BENCH_{report['stamp']}.json"
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, default=str)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == '__main__':

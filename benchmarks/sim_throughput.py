@@ -1,8 +1,8 @@
 """Scheduler-simulation throughput: Python event engine vs the
 vectorised JAX engine — single runs, a hysteresis vmap sweep, and the
 headline batched policy x capacity grid (one device call per policy via
-`repro.core.jax_engine.sweep`) against looping the Python engine over
-the same grid."""
+`repro.core.jax_engine.sweep`, streaming-metrics mode) against looping
+the Python engine over the same grid."""
 from __future__ import annotations
 
 import time
@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, enable_compilation_cache
 from repro.core import simulate
 from repro.core.jax_engine import sweep
 from repro.core.jax_sim import simulate_esff_jax
@@ -31,6 +31,7 @@ def run():
     t_py = time.perf_counter() - t0
     rows.append(dict(name="python_event_engine_5k",
                      us_per_call=t_py * 1e6,
+                     req_s=len(tr) / t_py,
                      derived=f"{len(tr) / t_py:.0f} req/s"))
 
     a = tr.to_arrays()
@@ -43,6 +44,7 @@ def run():
     jax.block_until_ready(simulate_esff_jax(*args, **kw)["completion"])
     t_jx = time.perf_counter() - t0
     rows.append(dict(name="jax_sim_5k", us_per_call=t_jx * 1e6,
+                     req_s=len(tr) / t_jx,
                      derived=f"{len(tr) / t_jx:.0f} req/s"))
 
     # vmap sweep: 8 hysteresis betas in one device call
@@ -58,48 +60,59 @@ def run():
     t_sw = time.perf_counter() - t0
     rows.append(dict(
         name="jax_sim_vmap8_sweep", us_per_call=t_sw * 1e6,
+        req_s=8 * len(tr) / t_sw,
         derived=f"{8 * len(tr) / t_sw:.0f} req/s aggregate"))
 
     # batched policy x capacity x seed grid: the fleet-sizing workload.
     # The Python engine loops the grid; the JAX engine packs each
-    # policy's capacity x trace plane into engine lanes.
+    # policy's capacity x trace plane into engine lanes (streaming
+    # metrics — carried state independent of trace length).
     grid_traces = [synth_azure_trace(n_functions=50, n_requests=5_000,
                                      utilization=0.2, seed=s)
                    for s in GRID_SEEDS]
     n_cfg = len(GRID_POLICIES) * len(GRID_CAPS) * len(grid_traces)
     n_req = n_cfg * len(tr)
-    t0 = time.perf_counter()
-    for p in GRID_POLICIES:
-        for c in GRID_CAPS:
-            for g in grid_traces:
-                simulate(g, p, capacity=c)
-    t_py_grid = time.perf_counter() - t0
+    t_py_grid = float("inf")
+    for _ in range(2):          # best-of: single passes are ±10% noisy
+        t0 = time.perf_counter()
+        for p in GRID_POLICIES:
+            for c in GRID_CAPS:
+                for g in grid_traces:
+                    simulate(g, p, capacity=c)
+        t_py_grid = min(t_py_grid, time.perf_counter() - t0)
     agg_py = n_req / t_py_grid
     rows.append(dict(
         name=f"python_grid_{n_cfg}cfg", us_per_call=t_py_grid * 1e6,
+        req_s=agg_py,
         derived=f"{agg_py:.0f} req/s aggregate"))
 
     sweep(grid_traces, policies=GRID_POLICIES, capacities=GRID_CAPS,
           queue_cap=1024)   # warm the compile cache
-    t0 = time.perf_counter()
-    out = sweep(grid_traces, policies=GRID_POLICIES,
-                capacities=GRID_CAPS, queue_cap=1024)
-    t_jx_grid = time.perf_counter() - t0
+    t_jx_grid = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out = sweep(grid_traces, policies=GRID_POLICIES,
+                    capacities=GRID_CAPS, queue_cap=1024)
+        t_jx_grid = min(t_jx_grid, time.perf_counter() - t0)
     assert int(out["overflow"].sum()) == 0
     assert int(out["stalled"].sum()) == 0
     agg_jx = n_req / t_jx_grid
     rows.append(dict(
         name=f"jax_sweep_grid_{n_cfg}cfg", us_per_call=t_jx_grid * 1e6,
+        req_s=agg_jx,
         derived=f"{agg_jx:.0f} req/s aggregate"))
     rows.append(dict(
         name="grid_speedup_jax_vs_python", us_per_call=0.0,
+        req_s=0.0,
         derived=f"{agg_jx / agg_py:.1f}x aggregate throughput"))
     return rows
 
 
 def main():
+    enable_compilation_cache()
     rows = run()
-    emit(rows, ("name", "us_per_call", "derived"))
+    emit(rows, ("name", "us_per_call", "req_s", "derived"))
+    return rows
 
 
 if __name__ == "__main__":

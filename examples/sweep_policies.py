@@ -12,7 +12,8 @@ import numpy as np
 from repro.core.jax_engine import sweep
 from repro.traces import synth_azure_trace
 
-POLICIES = ("esff", "esff_h", "sff", "openwhisk", "openwhisk_v2")
+POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
+            "openwhisk_v2")
 CAPS = (8, 16, 24, 32)
 
 

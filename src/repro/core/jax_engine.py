@@ -26,24 +26,53 @@ arrays carry the leading L):
                                monotonically increasing ``inst_id`` so
                                iteration-order tie-breaks (LRU, victim
                                scans) reproduce exactly
-  queues: per-function FIFOs as a successor linked list over requests —
-          q_next (N,) i32 (next queued request of the same function),
-          q_head_rid/q_tail_rid (F,) i32, q_len (F,) i32. A request is
-          queued at most once, so each link is written at most once.
-          ``queue_cap`` bounds the backlog: a push onto a function with
-          queue_cap waiting requests is dropped and counted in
-          ``overflow`` (must stay 0 for a valid run).
-  est:    est_sum/est_n (F,) + g_sum/g_n () — running means of observed
-          execution times with global-mean, then `prior`, fallback
-  timers: original timers ride the queue push order (they are armed
-          exactly at q_push, at the request's arrival time, so the fire
-          time is arrival + threshold and the successor is q_next) —
-          tmr_head_rid/tmr_len (F,) i32 + tmr_next (F,) f64 head fire
-          time; re-arms (only ever the current queue head) get a
-          one-slot cache rearm_t (F,) f64 / rearm_rid (F,) i32.
-          Allocated only when the kernel sets ``has_timers``.
-  out:    start/completion (N,) f64, cold_starts/evictions/overflow i32,
-          cold_time/evict_time f64, stalled i32
+  queues: per-function FIFOs as *position cursors* into the trace's
+          per-function arrival order. The requests of f_j, sorted by
+          id, are a loop-invariant shared operand (``pos_rids`` +
+          ``pos_off`` built from a stable argsort of fn_id), and
+          because every arrival of f_j consumes exactly one position —
+          q_push for a queued arrival, q_consume_direct for a directly
+          dispatched one — and pops are FIFO, the queue of f_j is
+          always the contiguous position range
+          [q_head_pos, q_head_pos + q_len). Head/successor lookups are
+          gathers into the shared operand; the carried queue state is
+          just q_head_pos/q_len (F,) i32 plus a q_head_rid (F,) i32
+          cache (refreshed with the successor at pop time, so head
+          reads — including the central-queue head scan — touch no
+          large operand) — O(F) no matter how long a backlog gets (SFF
+          starvation can hold a request queued for the whole trace).
+          ``queue_cap`` bounds the per-function
+          backlog: a push onto a function with queue_cap waiting
+          requests is dropped and counted in ``overflow`` (must stay 0
+          for a valid run; a dropped request breaks the position
+          invariant, which is fine — the run is already invalid).
+  est:    est_sum (F,) f64 / est_n (F,) i32 — running means of observed
+          execution times with global-mean, then `prior`, fallback (the
+          global accumulators live in the packed counters)
+  timers: original timers fire at arrival + threshold in arrival
+          order, so the rail rides the same per-function positions:
+          tmr_pos (F,) i32 is the next position whose timer fires,
+          arr_cnt (F,) i32 counts arrived positions, tmr_next (F,) f64
+          is the head fire time. Every arrival arms its position;
+          arrivals that dispatch directly while the rail is idle are
+          consumed silently, and one that slips into a busy rail fires
+          later as a no-op (the is-head gate drops it, exactly like the
+          Python policy drops timers of already-served requests).
+          Re-arms (only ever the current queue head) keep the one-slot
+          cache rearm_t (F,) f64 / rearm_rid (F,) i32. Allocated only
+          when the kernel sets ``has_timers``.
+  ctrs:   ci (NCI,) i32 / cf (NCF,) f64 — every per-lane scalar counter
+          (arrival cursor, done/iteration counts, stall flag, instance
+          sequence, estimator globals, cold/eviction/overflow tallies
+          and the streaming response accumulators) packed into two
+          arrays so the while_loop carries 2 small buffers instead of
+          a dozen scalars.
+  out:    always: streaming metric accumulators — response sum,
+          slowdown sum, response max (in cf) and ``hist`` (HIST_BINS,)
+          i32, a fixed log-spaced response-time histogram (8 bins per
+          decade over 1e-4..1e4 s) that serves p99 and CDFs to within
+          one bin width. In *exact* mode (``stream=False``) additionally
+          start/completion (N,) f64 per-request records.
 
 Event arbitration mirrors `repro.core.events`: at equal times
 EXEC_DONE < COLD_DONE < TIMER < ARRIVAL, so capacity freed at time t is
@@ -52,7 +81,7 @@ capacity is sweepable across lanes without retracing; ``stalled`` flags
 lanes that ran out of events or iteration budget before every request
 completed (overflowed requests can never finish).
 
-Performance shape — the three rules the layout follows, measured on the
+Performance shape — the five rules the layout follows, measured on the
 XLA CPU backend:
 
 1. *No control flow inside the body.* Every handler runs every
@@ -67,12 +96,30 @@ XLA CPU backend:
    mask finished lanes with per-event dense selects over all state.
 3. *No large carried array is both gathered and scattered in one loop
    body.* XLA's copy-insertion materialises a full copy of such a
-   buffer every iteration (~200 KB per event for a ring layout — the
-   dominant cost of a naive spelling). Hence the linked-list queue: the
-   only per-event read of a large carried array is the successor lookup
-   at pop time, and those reads go through a small per-segment overlay
-   (w_idx/w_val) while the writes are batch-applied to ``q_next`` once
-   per SEG-event segment, amortising the one unavoidable copy.
+   buffer every iteration — the dominant cost of a naive spelling.
+   Queues therefore never carry their contents at all: successor
+   lookups are gathers into loop-invariant shared operands (which XLA
+   neither copies nor scatters), and the only per-event writes touch
+   O(F)/O(C) cursor arrays. Result records go through the small
+   per-segment overlay (d_rid/d_start/d_comp), batch-applied once per
+   SEG-event segment.
+4. *Carried state is independent of trace length.* The dispatch
+   overlay is *folded* at flush time into O(1) streaming accumulators
+   (sums, max, histogram) instead of scattered into (L, N) arrays; the
+   (L, N) per-request records exist only in exact mode
+   (``stream=False``). A streaming lane carries
+   O(F + C + SEG + HIST_BINS) state no matter how long the trace,
+   which is what lets one machine sweep 10^6-request traces
+   (benchmarks/engine_scale.py). Both modes run the identical fold, so
+   streamed means are bit-identical to exact-mode means.
+5. *One packed reduction picks the next event.* The candidate times of
+   every event source — BUSY slots, COLD slots, original timers,
+   re-arms, the arrival cursor — are concatenated in priority order and
+   a single first-index ``argmin`` resolves both the time and the
+   tie-break (position encodes EXEC < COLD < TIMER < ARRIVAL and the
+   within-class index order), replacing three separate min-reductions
+   plus lexicographic scans; small scalar counters ride the two packed
+   ci/cf arrays so XLA:CPU dispatches fewer ops per event.
 """
 from __future__ import annotations
 
@@ -101,8 +148,22 @@ from repro.core.request import Trace  # noqa: E402
 BIG = 1e30
 COLD, IDLE, BUSY = 0, 1, 2
 I32_MAX = np.iinfo(np.int32).max
-SEG = 32          # events per segment (deferred q_next write window)
+SEG = 32          # events per segment (deferred result-write window)
 LANE_CHUNK = 16   # lanes per device call (XLA:CPU regresses beyond)
+
+# Packed per-lane counters: ci (NCI,) i32 and cf (NCF,) f64.
+(CI_NEXT, CI_DONE, CI_ITERS, CI_STALL, CI_SEQ, CI_GN, CI_COLD,
+ CI_EVICT, CI_OVF) = range(9)
+NCI = 9
+CF_GSUM, CF_COLDT, CF_EVICTT, CF_RSUM, CF_SSUM, CF_RMAX = range(6)
+NCF = 6
+
+# Streaming response histogram: log-spaced, 8 bins/decade over
+# [1e-4, 1e4) seconds. Quantile reads are exact to one bin width
+# (a factor of 10^(1/8) ~ 1.33x).
+HIST_BINS = 64
+HIST_LO = -4.0
+HIST_PER_DECADE = 8
 
 
 def ensure_x64() -> None:
@@ -132,21 +193,22 @@ class EngineCtx:
     ``tix``: under vmap a gather whose operand is unbatched lowers to a
     single efficient gather, whereas a batched operand takes a generic
     path that is orders of magnitude slower on the CPU backend. The
-    per-request reads (`fn_at` / `arrival_at` / `exec_at`, and `next_of`
-    over the lane-flattened ``q_next``) all go through that fast path.
+    per-request reads (`fn_at` / `arrival_at` / `exec_at`, and the
+    positional queue reads `rid_at_pos` / `heads`) all go through that
+    fast path.
     """
 
-    def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2, tix,
-                 lane, q_next_flat, cap_mask, beta, prior, threshold,
-                 k, n, f, c, q):
+    def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2,
+                 pos_rids2, pos_off2, tix, cap_mask, beta, prior,
+                 threshold, k, n, f, c, q):
         self._fn = fn_id2          # (T, N) shared
         self._arr = arrival2       # (T, N) shared
         self._ex = exec2           # (T, N) shared
+        self._pos = pos_rids2      # (T, N) shared: rids by (fn, id)
+        self._off = pos_off2       # (T, F+1) shared: per-fn offsets
         self.tix = tix             # this lane's trace index
         self.t_cold = cold2[tix]   # (F,) row of the shared (T, F)
         self.t_evict = evict2[tix]
-        self._q_next = q_next_flat  # (L*N,) shared view of the links
-        self._off = lane * n
         self.cap_mask = cap_mask
         self.beta = beta
         self.prior = prior
@@ -163,8 +225,12 @@ class EngineCtx:
     def exec_at(self, rid):
         return self._ex[self.tix, jnp.clip(rid, 0, self.N - 1)]
 
-    def next_of(self, rid):
-        return self._q_next[self._off + jnp.clip(rid, 0, self.N - 1)]
+    def rid_at_pos(self, fn, pos):
+        """Request id at arrival position ``pos`` of function ``fn``
+        (garbage on out-of-range positions — callers gate)."""
+        base = self._off[self.tix, jnp.clip(fn, 0, self.F - 1)]
+        return self._pos[self.tix,
+                         jnp.clip(base + pos, 0, self.N - 1)]
 
 
 class PolicyKernel:
@@ -177,11 +243,22 @@ class PolicyKernel:
     estimator update + slot release for exec-done, slot release for
     cold-done, timer consumption for timers — exactly mirroring
     `repro.core.simulator.simulate`.
+
+    Queue contract: every enabled ``on_arrival`` must consume exactly
+    one queue position of the request's function — `q_push` when it
+    queues, `q_consume_direct` when it dispatches the arrival straight
+    to a slot — so the positional queues stay contiguous.
     """
 
     name = "base"
     has_timers = False
     default_beta = 1.0
+
+    def extra_state(self, L, C, F) -> Dict[str, jnp.ndarray]:
+        """Kernel-private carried arrays (leading L), e.g. FaasCache's
+        per-slot GREEDY-DUAL bookkeeping. Keys must not collide with
+        the engine's."""
+        return {}
 
     def on_arrival(self, ctx, s, rid, t, on):
         raise NotImplementedError
@@ -222,8 +299,9 @@ def argmin_i32(vals, valid):
 def est_means(ctx, s):
     """Per-function running means with global-mean / prior fallback."""
     counts = s["est_n"].astype(jnp.float64)
-    gcount = s["g_n"].astype(jnp.float64)
-    g = jnp.where(s["g_n"] > 0, s["g_sum"] / jnp.maximum(gcount, 1),
+    g_n = s["ci"][CI_GN]
+    gcount = g_n.astype(jnp.float64)
+    g = jnp.where(g_n > 0, s["cf"][CF_GSUM] / jnp.maximum(gcount, 1),
                   ctx.prior)
     return jnp.where(s["est_n"] > 0,
                      s["est_sum"] / jnp.maximum(counts, 1), g)
@@ -258,74 +336,77 @@ def pick_idle_own(ctx, s, fn):
     return mask.any(), argmin_i32(s["slot_seq"], mask)
 
 
-def q_read_next(ctx, s, rid):
-    """Successor of ``rid`` in its function's queue: the per-segment
-    overlay first (links written since the last q_next flush), else the
-    q_next snapshot. Each link is written at most once, so at most one
-    overlay slot can match."""
-    snap = ctx.next_of(rid)
-    hit = s["w_idx"] == rid
-    return jnp.where(hit.any(), s["w_val"][jnp.argmax(hit)], snap)
-
-
 def q_head(ctx, s, fn):
     """Request id at the head of ``fn``'s queue (garbage when empty —
-    callers gate on ``q_len``)."""
+    callers gate on ``q_len``). Served from the carried q_head_rid
+    cache so head reads — including the central-queue (F,) head scan —
+    cost no gathers into the big positional operand."""
     return s["q_head_rid"][jnp.clip(fn, 0, ctx.F - 1)]
 
 
 def q_push(ctx, s, fn, rid, on):
-    """Append ``rid``; returns (state, pushed). A push onto a full
-    backlog (q_len == queue_cap) is dropped and counted in overflow."""
+    """Append ``rid``; returns (state, pushed). The pushed request is
+    by construction the next arrival position of ``fn``, so only the
+    length moves (plus the head cache when the queue was empty). A push
+    onto a full backlog (q_len == queue_cap) is dropped and counted in
+    overflow."""
     fc = jnp.clip(fn, 0, ctx.F - 1)
     was_empty = s["q_len"][fc] == 0
     full = s["q_len"][fc] >= ctx.Q
     do = on & ~full
-    fi = _gidx(do, fn, ctx.F)
-    link = do & ~was_empty
     s = dict(s)
-    # successor link from the old tail — deferred to the segment flush
-    s["w_idx"] = s["w_idx"].at[ctx.k].set(
-        jnp.where(link, s["q_tail_rid"][fc], jnp.int32(ctx.N)))
-    s["w_val"] = s["w_val"].at[ctx.k].set(jnp.asarray(rid, jnp.int32))
     s["q_head_rid"] = s["q_head_rid"].at[
         _gidx(do & was_empty, fn, ctx.F)].set(
         jnp.asarray(rid, jnp.int32), mode="drop")
-    s["q_tail_rid"] = s["q_tail_rid"].at[fi].set(
-        jnp.asarray(rid, jnp.int32), mode="drop")
-    s["q_len"] = s["q_len"].at[fi].add(1, mode="drop")
-    s["overflow"] = s["overflow"] + (on & full).astype(jnp.int32)
+    s["q_len"] = s["q_len"].at[_gidx(do, fn, ctx.F)].add(
+        1, mode="drop")
+    s["ci"] = s["ci"].at[CI_OVF].add((on & full).astype(jnp.int32))
     return s, do
 
 
+def q_consume_direct(ctx, s, fn, on):
+    """Account a directly dispatched arrival: its (empty-queue) head
+    position is consumed without ever being enqueued. The head cache
+    stays stale-but-gated (q_len == 0) until the next push rewrites
+    it."""
+    s = dict(s)
+    s["q_head_pos"] = s["q_head_pos"].at[_gidx(on, fn, ctx.F)].add(
+        1, mode="drop")
+    return s
+
+
 def q_pop(ctx, s, fn, on):
-    """Consume the head of ``fn``'s queue; returns (state, rid)."""
-    rid = q_head(ctx, s, fn)
-    succ = q_read_next(ctx, s, rid)
+    """Consume the head of ``fn``'s queue; returns (state, rid). The
+    one positional gather refreshes the head cache with the successor
+    (garbage when the queue empties — reads gate on q_len)."""
+    fc = jnp.clip(fn, 0, ctx.F - 1)
+    rid = s["q_head_rid"][fc]
+    succ = ctx.rid_at_pos(fc, s["q_head_pos"][fc] + 1)
     fi = _gidx(on, fn, ctx.F)
     s = dict(s)
-    # when the queue empties the head is garbage until the next push
-    # (which sees q_len == 0 and rewrites it) — reads gate on q_len
     s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
+    s["q_head_pos"] = s["q_head_pos"].at[fi].add(1, mode="drop")
     s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
     return s, rid
 
 
-def arm_timer(ctx, s, fn, rid, on):
-    """Register the original timer of a just-pushed request.
+def arm_timer(ctx, s, fn, t, pushed, on):
+    """Account the original timer of an arrival (position cnt-1).
 
-    Original timers fire at arrival + threshold in push order, so they
-    share the queue's successor links; only the head bookkeeping is
-    materialised."""
+    The rail covers every arrival position in order. If the rail is
+    idle (this arrival is its head) a *pushed* arrival arms the head
+    fire time, while a directly dispatched one is consumed silently;
+    a direct dispatch behind a busy rail stays armed and later fires
+    as a no-op (its is-head gate fails), mirroring how the Python
+    policy drops timers of already-served requests."""
     fc = jnp.clip(fn, 0, ctx.F - 1)
-    was_empty = s["tmr_len"][fc] == 0
-    hi = _gidx(on & was_empty, fn, ctx.F)
+    rail_head = s["tmr_pos"][fc] == s["arr_cnt"][fc] - 1
     s = dict(s)
-    s["tmr_head_rid"] = s["tmr_head_rid"].at[hi].set(
-        jnp.asarray(rid, jnp.int32), mode="drop")
-    s["tmr_next"] = s["tmr_next"].at[hi].set(
-        ctx.arrival_at(rid) + ctx.threshold, mode="drop")
-    s["tmr_len"] = s["tmr_len"].at[_gidx(on, fn, ctx.F)].add(
+    s["tmr_next"] = s["tmr_next"].at[
+        _gidx(on & rail_head & pushed, fn, ctx.F)].set(
+        t + ctx.threshold, mode="drop")
+    s["tmr_pos"] = s["tmr_pos"].at[
+        _gidx(on & rail_head & ~pushed, fn, ctx.F)].add(
         1, mode="drop")
     return s
 
@@ -344,11 +425,12 @@ def dispatch(ctx, s, slot, rid, t, on):
     """Run ``rid`` on an idle ``slot`` of its function.
 
     The per-request start/completion record goes into the segment
-    overlay (d_*), not the (N,) result arrays — those are flushed once
-    per segment so no large carried array is touched per event. At most
-    one dispatch happens per event (call sites are mutually exclusive),
-    so the overlay slot is indexed by the segment step and disabled
-    sites drop instead of clobbering it."""
+    overlay (d_*), not large result arrays — the overlay is folded (and
+    in exact mode also scattered) once per segment so no large carried
+    array is touched per event. At most one dispatch happens per event
+    (call sites are mutually exclusive), so the overlay slot is indexed
+    by the segment step and disabled sites drop instead of clobbering
+    it."""
     s = dict(s)
     comp = t + ctx.exec_at(rid)
     si = _gidx(on, slot, ctx.C)
@@ -383,28 +465,78 @@ def start_cold(ctx, s, slot, fn, t, evict_fn, on):
         t + ctx.t_cold[fc] + ev_cost, mode="drop")
     s["slot_req"] = s["slot_req"].at[si].set(-1, mode="drop")
     s["slot_used"] = s["slot_used"].at[si].set(0.0, mode="drop")
-    s["slot_seq"] = s["slot_seq"].at[si].set(s["seq_ctr"], mode="drop")
+    s["slot_seq"] = s["slot_seq"].at[si].set(s["ci"][CI_SEQ],
+                                             mode="drop")
     on_i = on.astype(jnp.int32)
-    s["seq_ctr"] = s["seq_ctr"] + on_i
-    s["cold_starts"] = s["cold_starts"] + on_i
-    s["cold_time"] = s["cold_time"] + jnp.where(on, ctx.t_cold[fc], 0.0)
-    s["evictions"] = s["evictions"] + evicting.astype(jnp.int32)
-    s["evict_time"] = s["evict_time"] + ev_cost
+    s["ci"] = s["ci"].at[jnp.array([CI_SEQ, CI_COLD, CI_EVICT])].add(
+        jnp.stack([on_i, on_i, evicting.astype(jnp.int32)]))
+    s["cf"] = s["cf"].at[jnp.array([CF_COLDT, CF_EVICTT])].add(
+        jnp.stack([jnp.where(on, ctx.t_cold[fc], 0.0), ev_cost]))
     return s
+
+
+# ----------------------------------------------------- streaming metrics
+def hist_edges() -> np.ndarray:
+    """Bin edges (HIST_BINS + 1,) of the streaming response histogram."""
+    return 10.0 ** (HIST_LO
+                    + np.arange(HIST_BINS + 1) / HIST_PER_DECADE)
+
+
+def hist_bin(resp):
+    """Log-spaced bin index of a (batch of) response time(s)."""
+    b = jnp.floor((jnp.log10(jnp.maximum(resp, 1e-30)) - HIST_LO)
+                  * HIST_PER_DECADE)
+    return jnp.clip(b, 0, HIST_BINS - 1).astype(jnp.int32)
+
+
+def hist_quantile(hist, q, n, resp_max=None):
+    """Upper edge of the bin containing the q-quantile of ``n`` folded
+    responses — exact to one bin width (~1.33x).
+
+    The edge bins also hold everything clipped past the histogram
+    range, so their edges would silently misstate out-of-range tails;
+    with ``resp_max`` (the exact carried maximum) the result is never
+    range-capped: a quantile in the top bin reports the maximum itself,
+    and any bin's edge is clamped to it (which makes all-fast traces —
+    every response under the 1e-4 s floor — report the true tail
+    instead of the floor edge). The reported value always upper-bounds
+    the true quantile; only a distribution almost entirely below the
+    floor with large outliers can push it past one bin of the truth."""
+    cum = jnp.cumsum(hist, axis=-1)
+    need = jnp.ceil(q * n).astype(cum.dtype)
+    b = jnp.argmax(cum >= need, axis=-1)
+    edge = jnp.asarray(hist_edges())[b + 1]
+    if resp_max is None:
+        return edge
+    return jnp.where(b >= HIST_BINS - 1, resp_max,
+                     jnp.minimum(edge, resp_max))
+
+
+def hist_cdf(hist):
+    """(edges, cdf) arrays for plotting a CDF from the streamed
+    histogram (exact to one bin width)."""
+    h = np.asarray(hist, np.float64)
+    cum = h.cumsum(axis=-1)
+    total = np.maximum(cum[..., -1:], 1.0)
+    return hist_edges()[1:], cum / total
 
 
 # ------------------------------------------------------------ event loop
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
-                                    "queue_cap"))
+                                    "queue_cap", "stream"))
 def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
               cap_mask, beta, prior, threshold, *, kernel, n_fns,
-              capacity, queue_cap):
+              capacity, queue_cap, stream=False):
     """Lane-batched engine. Trace arrays are shared (T, ...) operands;
     ``trace_ix``, ``cap_mask`` and ``beta`` carry the leading lane
     dimension L (one lane per sweep point). One ``while_loop`` runs all
     lanes in segments of SEG events; the branchless per-event body is
-    vmapped per lane and finished lanes no-op via their guards."""
+    vmapped per lane and finished lanes no-op via their guards.
+
+    ``stream=True`` drops the (L, N) per-request result arrays: the
+    dispatch overlay is folded into per-lane metric accumulators at
+    each segment flush, so carried state is independent of N."""
     L = trace_ix.shape[0]
     N = fn_id.shape[1]
     F, C, Q = n_fns, capacity, queue_cap
@@ -418,6 +550,17 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
     prior = jnp.float64(prior)
     threshold = jnp.float64(threshold)
 
+    # positional queue layout (loop-invariant): request ids sorted by
+    # (fn, id) + per-function offsets — fn j's k-th arrival is
+    # pos_rids[pos_off[j] + k]
+    pos_rids = jnp.argsort(fn_id, axis=1, stable=True).astype(jnp.int32)
+    counts = jax.vmap(
+        lambda row: jnp.zeros((F,), jnp.int32).at[
+            jnp.clip(row, 0, F - 1)].add(1))(fn_id)
+    pos_off = jnp.concatenate(
+        [jnp.zeros((counts.shape[0], 1), jnp.int32),
+         jnp.cumsum(counts, axis=1)], axis=1)
+
     s = dict(
         slot_fn=jnp.full((L, C), -1, jnp.int32),
         slot_state=jnp.full((L, C), IDLE, jnp.int32),
@@ -425,72 +568,64 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         slot_req=jnp.full((L, C), -1, jnp.int32),
         slot_used=jnp.zeros((L, C), jnp.float64),
         slot_seq=jnp.full((L, C), I32_MAX, jnp.int32),
-        q_next=jnp.full((L * N,), -1, jnp.int32),
+        q_head_pos=jnp.zeros((L, F), jnp.int32),
         q_head_rid=jnp.full((L, F), -1, jnp.int32),
-        q_tail_rid=jnp.full((L, F), -1, jnp.int32),
         q_len=jnp.zeros((L, F), jnp.int32),
-        w_idx=jnp.full((L, SEG), N, jnp.int32),
-        w_val=jnp.full((L, SEG), -1, jnp.int32),
         d_rid=jnp.full((L, SEG), N, jnp.int32),
         d_start=jnp.zeros((L, SEG), jnp.float64),
         d_comp=jnp.zeros((L, SEG), jnp.float64),
         est_sum=jnp.zeros((L, F), jnp.float64),
         est_n=jnp.zeros((L, F), jnp.int32),
-        g_sum=jnp.zeros((L,), jnp.float64),
-        g_n=jnp.zeros((L,), jnp.int32),
-        seq_ctr=jnp.zeros((L,), jnp.int32),
-        start=jnp.full((L, N), -1.0, jnp.float64),
-        completion=jnp.full((L, N), -1.0, jnp.float64),
-        next_arrival=jnp.zeros((L,), jnp.int32),
-        done=jnp.zeros((L,), jnp.int32),
-        iters=jnp.zeros((L,), jnp.int32),
-        stalled=jnp.zeros((L,), jnp.int32),
-        cold_starts=jnp.zeros((L,), jnp.int32),
-        cold_time=jnp.zeros((L,), jnp.float64),
-        evictions=jnp.zeros((L,), jnp.int32),
-        evict_time=jnp.zeros((L,), jnp.float64),
-        overflow=jnp.zeros((L,), jnp.int32),
+        ci=jnp.zeros((L, NCI), jnp.int32),
+        cf=jnp.zeros((L, NCF), jnp.float64),
+        hist=jnp.zeros((L, HIST_BINS), jnp.int32),
     )
+    if not stream:
+        s["start"] = jnp.full((L, N), -1.0, jnp.float64)
+        s["completion"] = jnp.full((L, N), -1.0, jnp.float64)
     if kernel.has_timers:
-        s["tmr_head_rid"] = jnp.full((L, F), -1, jnp.int32)
-        s["tmr_len"] = jnp.zeros((L, F), jnp.int32)
+        s["arr_cnt"] = jnp.zeros((L, F), jnp.int32)
+        s["tmr_pos"] = jnp.zeros((L, F), jnp.int32)
         s["tmr_next"] = jnp.full((L, F), BIG, jnp.float64)
         s["rearm_t"] = jnp.full((L, F), BIG, jnp.float64)
         s["rearm_rid"] = jnp.full((L, F), -1, jnp.int32)
+    s.update(kernel.extra_state(L, C, F))
 
     max_iters = 256 * N + 4096
+    n_slot = 2 * C   # candidate positions: busy slots then cold slots
 
-    def lane_step(k, q_next_flat, s, lane, tix, cap_mask, beta):
+    def lane_step(k, s, tix, cap_mask, beta):
         ctx = EngineCtx(fn_id2=fn_id, arrival2=arrival, exec2=exec_time,
-                        cold2=t_cold, evict2=t_evict, tix=tix,
-                        lane=lane, q_next_flat=q_next_flat,
+                        cold2=t_cold, evict2=t_evict,
+                        pos_rids2=pos_rids, pos_off2=pos_off, tix=tix,
                         cap_mask=cap_mask, beta=beta, prior=prior,
                         threshold=threshold, k=k, n=N, f=F, c=C, q=Q)
-        active = (s["done"] < N) & (s["stalled"] == 0)
-        na = s["next_arrival"]
+        ci = s["ci"]
+        active = (ci[CI_DONE] < N) & (ci[CI_STALL] == 0)
+        na = ci[CI_NEXT]
         t_arr = jnp.where(na < N, ctx.arrival_at(na), BIG)
+        # fused next-event pick: one first-index argmin over candidate
+        # times laid out in priority order — position encodes both the
+        # same-time class order EXEC < COLD < TIMER(orig < rearm) <
+        # ARRIVAL and the within-class index tie-break (Python engine
+        # heap order)
         ready = jnp.where(cap_mask, s["slot_ready"], BIG)
-        t_slot = jnp.min(ready)
+        busy_key = jnp.where(s["slot_state"] == BUSY, ready, BIG)
+        cold_key = jnp.where(s["slot_state"] == COLD, ready, BIG)
         if kernel.has_timers:
-            t_orig = jnp.min(s["tmr_next"])
-            t_re = jnp.min(s["rearm_t"])
-            t_timer = jnp.minimum(t_orig, t_re)
+            cand = jnp.concatenate([busy_key, cold_key, s["tmr_next"],
+                                    s["rearm_t"], t_arr[None]])
         else:
-            t_timer = jnp.float64(BIG)
-        t_next = jnp.minimum(jnp.minimum(t_slot, t_timer), t_arr)
-        live = active & (t_next < BIG)
-        # same-time priority: EXEC/COLD (slot) < TIMER < ARRIVAL
-        ev_slot = live & (t_slot <= jnp.minimum(t_timer, t_arr))
-        ev_timer = live & ~ev_slot & (t_timer <= t_arr)
-        ev_arr = live & ~ev_slot & ~ev_timer
+            cand = jnp.concatenate([busy_key, cold_key, t_arr[None]])
+        ei = jnp.argmin(cand)
+        t_ev = cand[ei]
+        live = active & (t_ev < BIG)
+        ev_slot = live & (ei < n_slot)
+        is_cold = ei >= C
+        slot = jnp.clip(jnp.where(is_cold, ei - C, ei), 0, C - 1)
+        ev_arr = live & (ei == cand.shape[0] - 1)
 
         # ------------------------------------------------- slot event
-        # EXEC_DONE outranks COLD_DONE at equal times (events.py order)
-        slot = lex_argmin(
-            jnp.where(s["slot_state"] == BUSY, 0.0, 1.0),
-            jnp.arange(C, dtype=jnp.int32), ready <= t_slot)
-        t_s = s["slot_ready"][slot]
-        is_cold = s["slot_state"][slot] == COLD
         cold_on = ev_slot & is_cold
         exec_on = ev_slot & ~is_cold
         rid_done = s["slot_req"][slot]
@@ -498,6 +633,7 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         e_done = ctx.exec_at(rid_done)
         si = _gidx(ev_slot, slot, C)
         ji = _gidx(exec_on, j_done, F)
+        exec_i = exec_on.astype(jnp.int32)
         s = dict(s)
         s["slot_state"] = s["slot_state"].at[si].set(IDLE, mode="drop")
         s["slot_ready"] = s["slot_ready"].at[si].set(BIG, mode="drop")
@@ -505,98 +641,115 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         # estimator sees the completion before the policy reacts
         s["est_sum"] = s["est_sum"].at[ji].add(e_done, mode="drop")
         s["est_n"] = s["est_n"].at[ji].add(1, mode="drop")
-        s["g_sum"] = s["g_sum"] + jnp.where(exec_on, e_done, 0.0)
-        s["g_n"] = s["g_n"] + exec_on.astype(jnp.int32)
-        s["done"] = s["done"] + exec_on.astype(jnp.int32)
-        s = kernel.on_cold_done(ctx, s, slot, t_s, cold_on)
-        s = kernel.on_exec_done(ctx, s, slot, rid_done, t_s, exec_on)
+        s["cf"] = s["cf"].at[CF_GSUM].add(
+            jnp.where(exec_on, e_done, 0.0))
+        s["ci"] = s["ci"].at[jnp.array([CI_GN, CI_DONE])].add(
+            jnp.stack([exec_i, exec_i]))
+        s = kernel.on_cold_done(ctx, s, slot, t_ev, cold_on)
+        s = kernel.on_exec_done(ctx, s, slot, rid_done, t_ev, exec_on)
 
         # ------------------------------------------------ timer event
         if kernel.has_timers:
-            # originals (arrival + threshold, queue push order) vs the
+            # originals (arrival + threshold, arrival order) vs the
             # unique re-armed head; originals win exact ties (FIFO seq)
-            fire_orig = ev_timer & (t_orig <= t_re)
-            fire_re = ev_timer & ~fire_orig
-            f_o = jnp.argmin(s["tmr_next"])
-            rid_o = s["tmr_head_rid"][f_o]
-            succ = q_read_next(ctx, s, rid_o)
-            more = s["tmr_len"][f_o] > 1
+            fire_orig = live & (ei >= n_slot) & (ei < n_slot + F)
+            fire_re = live & (ei >= n_slot + F) & (ei < n_slot + 2 * F)
+            ev_timer = fire_orig | fire_re
+            f_o = jnp.clip(ei - n_slot, 0, F - 1)
+            f_r = jnp.clip(ei - n_slot - F, 0, F - 1)
+            p_o = s["tmr_pos"][f_o]
+            rid_o = ctx.rid_at_pos(f_o, p_o)
+            succ = ctx.rid_at_pos(f_o, p_o + 1)
+            more = p_o + 1 < s["arr_cnt"][f_o]
             oi = _gidx(fire_orig, f_o, F)
-            f_r = jnp.argmin(s["rearm_t"])
             rid_r = s["rearm_rid"][f_r]
             s = dict(s)
-            s["tmr_head_rid"] = s["tmr_head_rid"].at[oi].set(
-                succ, mode="drop")
+            s["tmr_pos"] = s["tmr_pos"].at[oi].add(1, mode="drop")
             s["tmr_next"] = s["tmr_next"].at[oi].set(
                 jnp.where(more, ctx.arrival_at(succ) + threshold, BIG),
                 mode="drop")
-            s["tmr_len"] = s["tmr_len"].at[oi].add(-1, mode="drop")
             s["rearm_t"] = s["rearm_t"].at[
                 _gidx(fire_re, f_r, F)].set(BIG, mode="drop")
             rid_t = jnp.where(fire_orig, rid_o, rid_r)
-            s = kernel.on_timer(ctx, s, rid_t, t_timer, ev_timer)
+            s = kernel.on_timer(ctx, s, rid_t, t_ev, ev_timer)
 
         # ---------------------------------------------------- arrival
         rid_a = jnp.minimum(na, N - 1)
         s = dict(s)
-        s["next_arrival"] = na + ev_arr.astype(jnp.int32)
+        if kernel.has_timers:
+            s["arr_cnt"] = s["arr_cnt"].at[
+                _gidx(ev_arr, ctx.fn_at(rid_a), F)].add(
+                1, mode="drop")
+        s["ci"] = s["ci"].at[jnp.array([CI_NEXT, CI_ITERS])].add(
+            jnp.stack([ev_arr.astype(jnp.int32),
+                       active.astype(jnp.int32)]))
         s = kernel.on_arrival(ctx, s, rid_a, t_arr, ev_arr)
 
         s = dict(s)
-        s["iters"] = s["iters"] + active.astype(jnp.int32)
-        s["stalled"] = jnp.where(
+        stall = jnp.where(
             active & ~live, 1,
-            jnp.where(active & (s["iters"] >= max_iters), 2,
-                      s["stalled"]))
+            jnp.where(active & (s["ci"][CI_ITERS] >= max_iters), 2,
+                      s["ci"][CI_STALL]))
+        s["ci"] = s["ci"].at[CI_STALL].set(stall)
         return s
 
-    step_lanes = jax.vmap(lane_step, in_axes=(None, None, 0, 0, 0, 0,
-                                              0))
+    step_lanes = jax.vmap(lane_step, in_axes=(None, 0, 0, 0, 0))
     lanes = jnp.arange(L, dtype=jnp.int32)
     lane_iota = lanes[:, None]
 
     def cond(s):
-        return jnp.any((s["done"] < N) & (s["stalled"] == 0))
+        return jnp.any((s["ci"][:, CI_DONE] < N)
+                       & (s["ci"][:, CI_STALL] == 0))
 
     def segment(s):
         s = dict(s)
-        s["w_idx"] = jnp.full((L, SEG), N, jnp.int32)
-        s["w_val"] = jnp.full((L, SEG), -1, jnp.int32)
         s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
 
         def step(k, s):
-            q_next_flat = s["q_next"]   # read-only within the segment
-            rest = {k2: v for k2, v in s.items() if k2 != "q_next"}
-            rest = step_lanes(k, q_next_flat, rest, lanes, trace_ix,
-                              cap_mask, beta)
-            rest["q_next"] = q_next_flat
-            return rest
+            return step_lanes(k, s, trace_ix, cap_mask, beta)
 
         s = lax.fori_loop(0, SEG, step, s)
-        # flush the segment's successor links and dispatch records in
-        # one batched scatter each — the only writes to the large (N,)
-        # carried arrays, so their per-iteration copies are paid once
-        # per SEG events, not per event
+        # flush the segment: *fold* the dispatch records into the
+        # streaming accumulators (and, in exact mode, scatter them into
+        # the per-request arrays) — the only writes to large carried
+        # arrays, paid once per SEG events, not per event
         s = dict(s)
-        flat_w = jnp.where(s["w_idx"] < N,
-                           lane_iota * N + s["w_idx"],
-                           jnp.int32(L * N))
-        s["q_next"] = s["q_next"].at[flat_w].set(s["w_val"],
-                                                 mode="drop")
-        s["start"] = s["start"].at[lane_iota, s["d_rid"]].set(
-            s["d_start"], mode="drop")
-        s["completion"] = s["completion"].at[lane_iota, s["d_rid"]].set(
-            s["d_comp"], mode="drop")
+        valid = s["d_rid"] < N
+        ridc = jnp.minimum(s["d_rid"], N - 1)
+        t_ix = trace_ix[:, None]
+        resp = jnp.where(valid, s["d_comp"] - arrival[t_ix, ridc], 0.0)
+        slow = jnp.where(
+            valid,
+            resp / jnp.maximum(exec_time[t_ix, ridc], 1e-9), 0.0)
+        cf = s["cf"]
+        cf = cf.at[:, CF_RSUM].add(resp.sum(axis=1))
+        cf = cf.at[:, CF_SSUM].add(slow.sum(axis=1))
+        cf = cf.at[:, CF_RMAX].max(resp.max(axis=1))
+        s["cf"] = cf
+        s["hist"] = s["hist"].at[
+            lane_iota, jnp.where(valid, hist_bin(resp),
+                                 jnp.int32(HIST_BINS))
+        ].add(1, mode="drop")
+        if not stream:
+            s["start"] = s["start"].at[lane_iota, s["d_rid"]].set(
+                s["d_start"], mode="drop")
+            s["completion"] = s["completion"].at[
+                lane_iota, s["d_rid"]].set(s["d_comp"], mode="drop")
         return s
 
     final = lax.while_loop(cond, segment, s)
-    return dict(start=final["start"], completion=final["completion"],
-                cold_starts=final["cold_starts"],
-                cold_time=final["cold_time"],
-                evictions=final["evictions"],
-                evict_time=final["evict_time"],
-                overflow=final["overflow"], stalled=final["stalled"],
-                n_events=final["iters"])
+    ci, cf = final["ci"], final["cf"]
+    out = dict(cold_starts=ci[:, CI_COLD], cold_time=cf[:, CF_COLDT],
+               evictions=ci[:, CI_EVICT], evict_time=cf[:, CF_EVICTT],
+               overflow=ci[:, CI_OVF],
+               stalled=ci[:, CI_STALL], n_events=ci[:, CI_ITERS],
+               done=ci[:, CI_DONE],
+               resp_sum=cf[:, CF_RSUM], slow_sum=cf[:, CF_SSUM],
+               max_response=cf[:, CF_RMAX], resp_hist=final["hist"])
+    if not stream:
+        out["start"] = final["start"]
+        out["completion"] = final["completion"]
+    return out
 
 
 # ------------------------------------------------------------ public API
@@ -604,14 +757,17 @@ def simulate_policy_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
                         policy: str = "esff", n_fns: int, capacity: int,
                         queue_cap: int = 512, beta=None,
                         prior: float = 0.1, threshold: float = 0.1,
-                        cap_mask=None) -> Dict[str, jnp.ndarray]:
+                        cap_mask=None, stream: bool = False
+                        ) -> Dict[str, jnp.ndarray]:
     """Run ``policy`` over a (sorted-by-arrival) request stream.
 
     ``policy`` selects a kernel from `repro.core.jax_policies.KERNELS`
     statically, so each policy gets its own jit specialisation. ``beta``
     defaults to the kernel's own default (2.0 for ESFF-H, else 1.0).
-    Returns per-request start/completion plus the counter block (cold
-    starts, evictions, overflow, stalled).
+    Returns the counter block (cold starts, evictions, overflow,
+    stalled) plus the streaming metric accumulators (resp_sum /
+    slow_sum / max_response / resp_hist); with the default
+    ``stream=False`` also per-request start/completion.
     """
     from repro.core.jax_policies import KERNELS  # deferred: cycle-free
     kernel = KERNELS[policy]
@@ -627,7 +783,7 @@ def simulate_policy_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
                     jnp.asarray(beta, jnp.float64).reshape((1,)),
                     jnp.float64(prior), jnp.float64(threshold),
                     kernel=kernel, n_fns=n_fns, capacity=capacity,
-                    queue_cap=queue_cap)
+                    queue_cap=queue_cap, stream=stream)
     return {k: jnp.squeeze(v, axis=0) for k, v in out.items()}
 
 
@@ -636,7 +792,8 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
                                prior: float = 0.1,
                                threshold: float = 0.1
                                ) -> Dict[str, np.ndarray]:
-    """Trace-object convenience wrapper mirroring ``simulate()``."""
+    """Trace-object convenience wrapper mirroring ``simulate()``
+    (exact per-request mode)."""
     a = trace.to_arrays()
     out = simulate_policy_jax(
         jnp.asarray(a["fn_id"]), jnp.asarray(a["arrival"]),
@@ -652,31 +809,45 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
-                                    "queue_cap"))
+                                    "queue_cap", "stream"))
 def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                   threshold, *, kernel, n_fns, capacity, queue_cap):
-    """Lane-batched run + on-device metric reduction (per-request
-    arrays stay on device; only (L,) metric vectors come back)."""
+                   threshold, *, kernel, n_fns, capacity, queue_cap,
+                   stream=True):
+    """Lane-batched run + on-device metric reduction. Means and
+    slowdowns come from the streaming accumulators in *both* modes (so
+    streamed and exact sweeps agree bitwise); p99 is exact in exact
+    mode and one-bin-accurate from the histogram in streaming mode."""
     out = _simulate(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                     threshold, kernel=kernel, n_fns=n_fns,
-                    capacity=capacity, queue_cap=queue_cap)
-    resp = out["completion"] - arr[tix]
-    slow = resp / jnp.maximum(ex[tix], 1e-9)
-    return dict(mean_response=resp.mean(axis=1),
-                mean_slowdown=slow.mean(axis=1),
-                p99_response=jnp.percentile(resp, 99.0, axis=1),
+                    capacity=capacity, queue_cap=queue_cap,
+                    stream=stream)
+    N = fn.shape[1]
+    if stream:
+        p99 = hist_quantile(out["resp_hist"], 0.99, N,
+                            out["max_response"])
+    else:
+        resp = out["completion"] - arr[tix]
+        p99 = jnp.percentile(resp, 99.0, axis=1)
+    return dict(mean_response=out["resp_sum"] / N,
+                mean_slowdown=out["slow_sum"] / N,
+                p99_response=p99,
+                max_response=out["max_response"],
+                resp_hist=out["resp_hist"],
                 cold_starts=out["cold_starts"],
                 cold_time=out["cold_time"],
                 evictions=out["evictions"],
-                overflow=out["overflow"], stalled=out["stalled"])
+                overflow=out["overflow"],
+                stalled=out["stalled"])
 
 
-def sweep(traces: Union[Trace, Sequence[Trace]],
+def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
           policies: Sequence[str] = ("esff", "esff_h", "sff",
-                                     "openwhisk", "openwhisk_v2"),
+                                     "openwhisk", "faascache",
+                                     "openwhisk_v2"),
           capacities: Sequence[int] = (8, 16, 32),
           betas=None, *, queue_cap: int = 2048, prior: float = 0.1,
-          threshold: float = 0.1) -> Dict[str, np.ndarray]:
+          threshold: float = 0.1, stream: bool = True
+          ) -> Dict[str, np.ndarray]:
     """Batched policy x trace x capacity x beta sweep in one device call
     per policy.
 
@@ -685,21 +856,28 @@ def sweep(traces: Union[Trace, Sequence[Trace]],
     (capacities as slot masks over a static ``capacity=max(capacities)``,
     so one jit specialisation per policy covers the whole grid).
 
-    ``betas=None`` uses each kernel's default (so ESFF-H keeps its
-    hysteresis). Returns metric arrays of shape (P, T, K, B) keyed by
-    metric name, plus the axis values under ``"axes"``.
+    Traces may be `Trace` objects or plain array dicts (the
+    ``to_arrays()`` layout — the fast path for 10^6-request synthetic
+    streams that never materialise Request objects). ``stream=True``
+    (default) keeps carried state independent of trace length: means
+    are exact, p99 is histogram-derived (one ~1.33x bin). ``betas=None``
+    uses each kernel's default (so ESFF-H keeps its hysteresis).
+    Returns metric arrays of shape (P, T, K, B) keyed by metric name
+    ((P, T, K, B, HIST_BINS) for ``resp_hist``), plus the axis values
+    under ``"axes"``.
     """
     from repro.core.jax_policies import KERNELS
-    if isinstance(traces, Trace):
+    if isinstance(traces, (Trace, dict)):
         traces = [traces]
     traces = list(traces)
-    F = traces[0].n_functions
-    N = len(traces[0])
-    for tr in traces:
-        if tr.n_functions != F or len(tr) != N:
+    arrs = [tr.to_arrays() if isinstance(tr, Trace) else tr
+            for tr in traces]
+    F = len(arrs[0]["cold_start"])
+    N = len(arrs[0]["fn_id"])
+    for a in arrs:
+        if len(a["cold_start"]) != F or len(a["fn_id"]) != N:
             raise ValueError("sweep traces must share shape "
                              "(n_functions, n_requests)")
-    arrs = [tr.to_arrays() for tr in traces]
     stacked = {k: np.stack([np.asarray(a[k]) for a in arrs])
                for k in ("fn_id", "arrival", "exec_time", "cold_start",
                          "evict")}
@@ -716,7 +894,7 @@ def sweep(traces: Union[Trace, Sequence[Trace]],
             jnp.asarray(mask_l), jnp.asarray(beta_l),
             jnp.float64(prior), jnp.float64(threshold),
             kernel=KERNELS[p], n_fns=F, capacity=C,
-            queue_cap=queue_cap)
+            queue_cap=queue_cap, stream=stream)
         return jax.device_get(out)
 
     chunks = []
@@ -746,7 +924,7 @@ def sweep(traces: Union[Trace, Sequence[Trace]],
         mine = [o for c, o in zip(chunks, outs) if c[0] == p]
         cat = {k: np.concatenate([np.asarray(o[k]) for o in mine])
                for k in mine[0]}
-        per_policy.append({k: v.reshape((T, K, B))
+        per_policy.append({k: v.reshape((T, K, B) + v.shape[1:])
                            for k, v in cat.items()})
 
     out = {k: np.stack([r[k] for r in per_policy])

@@ -15,6 +15,11 @@ its event-driven counterpart (tests/test_jax_engine.py):
   own queue, otherwise retarget to the central-queue head (at most one
   warming replica). SFF orders the central queue by running-mean
   execution time, OpenWhisk by arrival.
+* **faascache** — OpenWhisk scheduling with GREEDY-DUAL keep-alive
+  [Fuerst & Sharma, ASPLOS'21]: per-slot ``slot_freq``/``slot_prio``
+  state plus a global clock; eviction victim = lowest
+  ``clock + freq * cold_start`` priority, clock bumped to the evicted
+  priority.
 * **openwhisk_v2** — per-function queues; a queue head must wait
   ``threshold`` (100 ms) before scale-up, enforced with engine timers.
 
@@ -33,11 +38,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.jax_engine import (BIG, COLD, IDLE, EngineCtx,
-                                   PolicyKernel, arm_timer, cold_counts,
-                                   dispatch, est_means, k_counts,
-                                   lex_argmin, pick_idle_own, q_head,
-                                   q_pop, q_push, rearm_timer,
-                                   start_cold)
+                                   PolicyKernel, _gidx, arm_timer,
+                                   cold_counts, dispatch, est_means,
+                                   k_counts, lex_argmin, pick_idle_own,
+                                   q_consume_direct, q_head, q_pop,
+                                   q_push, rearm_timer, start_cold)
 
 
 class ESFFKernel(PolicyKernel):
@@ -65,6 +70,7 @@ class ESFFKernel(PolicyKernel):
         has_own, own_slot = pick_idle_own(ctx, s, j)
         direct = on & has_own & (s["q_len"][j] == 0)
         s = dispatch(ctx, s, own_slot, rid, t, direct)
+        s = q_consume_direct(ctx, s, j, direct)
         queued = on & ~direct
 
         empty = (s["slot_fn"] < 0) & ctx.cap_mask
@@ -131,12 +137,30 @@ class ESFFKernel(PolicyKernel):
 
 class CentralQueueKernel(PolicyKernel):
     """OpenWhisk / SFF: central queue + immediate scale-up + LRU keep-
-    alive, with warm reuse of a freed slot's own waiting requests."""
+    alive, with warm reuse of a freed slot's own waiting requests.
+
+    The eviction-victim key, the dispatch bookkeeping and the new-
+    instance reset are overridable hooks so FaasCache can swap LRU for
+    GREEDY-DUAL priorities without touching the queue discipline."""
 
     def __init__(self, name: str, *, order: str = "fifo"):
         assert order in ("fifo", "sff")
         self.name = name
         self.order = order
+
+    # -- keep-alive hooks (FaasCache overrides) --------------------------
+    def _dispatch(self, ctx, s, slot, rid, t, on):
+        return dispatch(ctx, s, slot, rid, t, on)
+
+    def _victim_key(self, ctx, s):
+        """Primary eviction key among idle slots (ties: slot_seq)."""
+        return s["slot_used"]    # LRU
+
+    def _note_evict(self, ctx, s, victim, on):
+        return s
+
+    def _start_cold(self, ctx, s, slot, fn, t, evict_fn, on):
+        return start_cold(ctx, s, slot, fn, t, evict_fn, on)
 
     def _head_fn(self, ctx, s):
         """Central-queue head: (exists, fn). Requests are globally
@@ -152,21 +176,32 @@ class CentralQueueKernel(PolicyKernel):
 
     def _scale_up(self, ctx, s, j, t, on):
         """No idle instance for an arrival of ``j``: claim a free slot,
-        else evict the LRU idle instance (ties: earliest-created)."""
+        else evict the keep-alive victim (LRU here; GREEDY-DUAL in
+        FaasCache — ties: earliest-created)."""
         empty = (s["slot_fn"] < 0) & ctx.cap_mask
-        s = start_cold(ctx, s, jnp.argmax(empty), j, t, -1,
-                       on & empty.any())
+        s = self._start_cold(ctx, s, jnp.argmax(empty), j, t, -1,
+                             on & empty.any())
         idle = (s["slot_state"] == IDLE) & (s["slot_fn"] >= 0) \
             & ctx.cap_mask
-        victim = lex_argmin(s["slot_used"], s["slot_seq"], idle)
-        return start_cold(ctx, s, victim, j, t, s["slot_fn"][victim],
-                          on & ~empty.any() & idle.any())
+        victim = lex_argmin(self._victim_key(ctx, s), s["slot_seq"],
+                            idle)
+        evicting = on & ~empty.any() & idle.any()
+        s = self._note_evict(ctx, s, victim, evicting)
+        return self._start_cold(ctx, s, victim, j, t,
+                                s["slot_fn"][victim], evicting)
 
     def on_arrival(self, ctx, s, rid, t, on):
         j = ctx.fn_at(rid)
         has_own, own_slot = pick_idle_own(ctx, s, j)
-        s = dispatch(ctx, s, own_slot, rid, t, on & has_own)
-        queued = on & ~has_own
+        # an idle own instance never coexists with a non-empty own
+        # queue (every serve/replace path drains or converts first), so
+        # the q_len gate is a no-op semantically — it guarantees the
+        # positional-queue contract holds even for a buggy kernel state
+        direct = on & has_own & (s["q_len"][jnp.clip(j, 0, ctx.F - 1)]
+                                 == 0)
+        s = self._dispatch(ctx, s, own_slot, rid, t, direct)
+        s = q_consume_direct(ctx, s, j, direct)
+        queued = on & ~direct
         s, _ = q_push(ctx, s, j, rid, queued)
         return self._scale_up(ctx, s, j, t, queued)
 
@@ -177,19 +212,73 @@ class CentralQueueKernel(PolicyKernel):
         j = s["slot_fn"][slot]
         own = on & (s["q_len"][jnp.clip(j, 0, ctx.F - 1)] > 0)
         s, rid = q_pop(ctx, s, j, own)
-        s = dispatch(ctx, s, slot, rid, t, own)
+        s = self._dispatch(ctx, s, slot, rid, t, own)
 
         exists, f = self._head_fn(ctx, s)
         warming = ((s["slot_fn"] == f) & (s["slot_state"] == COLD)
                    & ctx.cap_mask).any()
-        return start_cold(ctx, s, slot, f, t, j,
-                          on & ~own & exists & ~warming)
+        retarget = on & ~own & exists & ~warming
+        s = self._note_evict(ctx, s, slot, retarget)
+        return self._start_cold(ctx, s, slot, f, t, j, retarget)
 
     def on_cold_done(self, ctx, s, slot, t, on):
         return self._serve_or_replace(ctx, s, slot, t, on)
 
     def on_exec_done(self, ctx, s, slot, rid, t, on):
         return self._serve_or_replace(ctx, s, slot, t, on)
+
+
+class FaasCacheKernel(CentralQueueKernel):
+    """FaasCache [Fuerst & Sharma, ASPLOS'21]: OpenWhisk scheduling
+    with GREEDY-DUAL keep-alive, request-for-request equivalent to
+    `repro.core.baselines.FaasCache`.
+
+    Per-slot state: ``slot_freq`` (use count of the resident instance)
+    and ``slot_prio`` (= clock + freq * cold_start, recomputed at every
+    dispatch with the pre-increment freq + 1, exactly the Python
+    ``_note_use``/``dispatch`` order); ``gd_clock`` is the global clock,
+    bumped to the victim's priority on every eviction. A fresh instance
+    keeps priority 0.0 until its first dispatch (the Python
+    ``Instance`` default), which is what ages never-used instances out
+    first."""
+
+    name = "faascache"
+
+    def __init__(self):
+        super().__init__("faascache", order="fifo")
+
+    def extra_state(self, L, C, F):
+        return dict(slot_freq=jnp.zeros((L, C), jnp.int32),
+                    slot_prio=jnp.zeros((L, C), jnp.float64),
+                    gd_clock=jnp.zeros((L,), jnp.float64))
+
+    def _dispatch(self, ctx, s, slot, rid, t, on):
+        sc = jnp.clip(slot, 0, ctx.C - 1)
+        fn = jnp.clip(s["slot_fn"][sc], 0, ctx.F - 1)
+        prio = (s["gd_clock"]
+                + (s["slot_freq"][sc] + 1.0) * ctx.t_cold[fn])
+        si = _gidx(on, slot, ctx.C)
+        s = dict(s)
+        s["slot_freq"] = s["slot_freq"].at[si].add(1, mode="drop")
+        s["slot_prio"] = s["slot_prio"].at[si].set(prio, mode="drop")
+        return dispatch(ctx, s, slot, rid, t, on)
+
+    def _victim_key(self, ctx, s):
+        return s["slot_prio"]    # GREEDY-DUAL
+
+    def _note_evict(self, ctx, s, victim, on):
+        prio = s["slot_prio"][jnp.clip(victim, 0, ctx.C - 1)]
+        s = dict(s)
+        s["gd_clock"] = jnp.maximum(
+            s["gd_clock"], jnp.where(on, prio, -BIG))
+        return s
+
+    def _start_cold(self, ctx, s, slot, fn, t, evict_fn, on):
+        s = start_cold(ctx, s, slot, fn, t, evict_fn, on)
+        si = _gidx(on, slot, ctx.C)
+        s["slot_freq"] = s["slot_freq"].at[si].set(0, mode="drop")
+        s["slot_prio"] = s["slot_prio"].at[si].set(0.0, mode="drop")
+        return s
 
 
 class OpenWhiskV2Kernel(PolicyKernel):
@@ -212,9 +301,10 @@ class OpenWhiskV2Kernel(PolicyKernel):
         has_own, own_slot = pick_idle_own(ctx, s, j)
         direct = on & has_own & (s["q_len"][j] == 0)
         s = dispatch(ctx, s, own_slot, rid, t, direct)
+        s = q_consume_direct(ctx, s, j, direct)
         queued = on & ~direct
         s, pushed = q_push(ctx, s, j, rid, queued)
-        return arm_timer(ctx, s, j, rid, pushed)
+        return arm_timer(ctx, s, j, t, pushed, on)
 
     def on_timer(self, ctx, s, rid, t, on):
         j = ctx.fn_at(rid)
@@ -257,5 +347,6 @@ KERNELS = {
                          default_beta=2.0),
     "sff": CentralQueueKernel("sff", order="sff"),
     "openwhisk": CentralQueueKernel("openwhisk", order="fifo"),
+    "faascache": FaasCacheKernel(),
     "openwhisk_v2": OpenWhiskV2Kernel(),
 }

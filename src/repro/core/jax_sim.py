@@ -28,7 +28,8 @@ def simulate_esff_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
     """Run ESFF over a (sorted-by-arrival) request stream.
 
     Returns dict with start/completion (N,), cold_starts, overflow count
-    (requests that found a full ring buffer — must be 0 for valid runs).
+    (requests that found a full per-function backlog — must be 0 for
+    valid runs).
     """
     return simulate_policy_jax(
         fn_id, arrival, exec_time, t_cold, t_evict, policy="esff",

@@ -1,3 +1,5 @@
-from repro.traces.generator import synth_azure_trace, trace_from_lists
+from repro.traces.generator import (synth_azure_arrays,
+                                    synth_azure_trace, trace_from_lists)
 
-__all__ = ["synth_azure_trace", "trace_from_lists"]
+__all__ = ["synth_azure_arrays", "synth_azure_trace",
+           "trace_from_lists"]

@@ -14,7 +14,11 @@ generates a stream with the same published coarse statistics:
   ServerlessBench characterisation).
 
 Everything is seeded and parameterised; benchmarks state their exact
-parameters so results are reproducible.
+parameters so results are reproducible. ``synth_azure_arrays`` is the
+columnar fast path: the same sampler, but the result stays in (sorted)
+numpy arrays — at 10^6 requests the ``Request``-object representation
+costs hundreds of MB and seconds of pure-Python loops that the
+vectorised engine never needs (benchmarks/engine_scale.py).
 """
 from __future__ import annotations
 
@@ -46,27 +50,23 @@ def trace_from_lists(fn_ids: Sequence[int], arrivals: Sequence[float],
     return Trace(functions, reqs)
 
 
-def synth_azure_trace(
-    n_functions: int = 200,
-    n_requests: int = 60_000,
+def _sample_azure(
+    n_functions: int,
+    n_requests: int,
     *,
-    utilization: float = 0.8,
-    capacity_ref: int = 16,
-    zipf_a: float = 1.3,
-    exec_median: float = 0.15,
-    exec_sigma: float = 1.4,
-    jitter_sigma: float = 0.25,
-    cold_range: tuple = (0.5, 1.5),
-    burst_frac: float = 0.3,
-    n_bursts_per_fn: int = 3,
-    diurnal_amp: float = 0.6,
-    seed: int = 0,
-) -> Trace:
-    """Generate an Azure-2021-like synthetic request trace.
-
-    ``utilization`` sets mean offered load relative to a ``capacity_ref``-
-    slot server: total execution time / (duration * capacity_ref).
-    """
+    utilization: float,
+    capacity_ref: int,
+    zipf_a: float,
+    exec_median: float,
+    exec_sigma: float,
+    jitter_sigma: float,
+    cold_range: tuple,
+    burst_frac: float,
+    diurnal_amp: float,
+    seed: int,
+    n_bursts_per_fn: int = 3,   # legacy knob, accepted and unused
+):
+    """Shared sampler: unsorted request columns + function catalogue."""
     rng = np.random.default_rng(seed)
 
     # --- function catalogue ------------------------------------------------
@@ -117,6 +117,30 @@ def synth_azure_trace(
     fn_ids = np.concatenate(fn_col)
     arrivals = np.concatenate(arr_col)
     execs = np.concatenate(exe_col)
+    return fn_ids, arrivals, execs, cold, evict, base_exec, duration
+
+
+_AZURE_DEFAULTS = dict(
+    utilization=0.8, capacity_ref=16, zipf_a=1.3, exec_median=0.15,
+    exec_sigma=1.4, jitter_sigma=0.25, cold_range=(0.5, 1.5),
+    burst_frac=0.3, diurnal_amp=0.6, seed=0,
+)
+
+
+def synth_azure_trace(n_functions: int = 200, n_requests: int = 60_000,
+                      **kw) -> Trace:
+    """Generate an Azure-2021-like synthetic request trace.
+
+    ``utilization`` sets mean offered load relative to a
+    ``capacity_ref``-slot server: total execution time /
+    (duration * capacity_ref).
+    """
+    params = dict(_AZURE_DEFAULTS)
+    params.update(kw)
+    seed = params["seed"]
+    utilization = params["utilization"]
+    fn_ids, arrivals, execs, cold, evict, base_exec, duration = \
+        _sample_azure(n_functions, n_requests, **params)
 
     functions = [FunctionProfile(j, float(cold[j]), float(evict[j]),
                                  true_mean_exec=float(base_exec[j]))
@@ -127,3 +151,23 @@ def synth_azure_trace(
                 n_requests=len(reqs), utilization=utilization,
                 duration=duration, seed=seed)
     return Trace(functions, reqs, meta)
+
+
+def synth_azure_arrays(n_functions: int = 200,
+                       n_requests: int = 60_000, **kw) -> dict:
+    """Columnar ``synth_azure_trace``: the ``Trace.to_arrays()`` layout
+    (arrival-sorted, ids by position) without materialising Request
+    objects — identical arrays to
+    ``synth_azure_trace(...).to_arrays()`` for the same parameters."""
+    params = dict(_AZURE_DEFAULTS)
+    params.update(kw)
+    fn_ids, arrivals, execs, cold, evict, _, _ = \
+        _sample_azure(n_functions, n_requests, **params)
+    # Trace sorts by (arrival, req_id) with req_id assigned in
+    # generation order — a stable arrival sort is the same permutation
+    order = np.argsort(arrivals, kind="stable")
+    return dict(fn_id=fn_ids[order].astype(np.int32),
+                arrival=arrivals[order].astype(np.float64),
+                exec_time=execs[order].astype(np.float64),
+                cold_start=np.asarray(cold, np.float64),
+                evict=np.asarray(evict, np.float64))

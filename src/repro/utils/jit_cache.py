@@ -1,0 +1,59 @@
+"""JAX persistent compilation cache switch.
+
+Lives here — not in `repro.core.jax_engine`, whose import flips the
+global x64 flag — so f32 callers (kernel microbenches, model tests) can
+enable caching without inheriting the engine's dtype world.
+
+Scope it deliberately: this JAX build miscompiles *deserialized*
+executables for donated-buffer training steps (resuming training from
+a cache hit yields garbage parameters — see tests/conftest.py), so
+only enable it for workloads whose executables are known to round-trip
+(the scheduling engine's are re-verified against the Python engine by
+``benchmarks/run.py --smoke`` on every cached run).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def enable_compilation_cache(path: Optional[str] = None) -> None:
+    """Turn on JAX's persistent compilation cache.
+
+    The scheduling engine jit-specialises per (kernel, capacity,
+    queue_cap, ...) tuple and each specialisation costs seconds of XLA
+    compile time; tests and benchmarks re-pay it every process start.
+    Caching compiled executables on disk makes repeat runs start hot.
+    Safe to call more than once; a no-op if this JAX build lacks the
+    knobs.
+    """
+    if path is None:
+        path = os.environ.get(
+            "JAX_COMPILATION_CACHE_DIR",
+            os.path.join(os.path.expanduser("~"), ".cache",
+                         "repro_jax_cache"))
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          -1)
+    except Exception:   # pragma: no cover - older JAX without the knobs
+        pass
+
+
+def disable_compilation_cache() -> None:
+    """Turn the persistent cache back off (see module docstring).
+
+    Clearing the config alone is not enough once the cache object has
+    been lazily initialized — later compiles keep hitting it — so the
+    initialized cache is reset too."""
+    try:
+        jax.config.update("jax_compilation_cache_dir", None)
+        from jax.experimental.compilation_cache import (
+            compilation_cache as cc)
+        cc.reset_cache()
+    except Exception:   # pragma: no cover
+        pass

@@ -1,0 +1,41 @@
+"""Shared test session setup.
+
+Enables JAX's persistent compilation cache for the scheduling-engine
+test modules: the engine jit-specialises per (kernel, capacity, ...)
+tuple and those compiles dominate the engine tests' wall time — with
+the disk cache a repeat run loads compiled executables instead of
+re-invoking XLA.
+
+The cache is scoped to the engine modules instead of the whole session
+because this JAX build miscompiles *deserialized* executables for the
+donated-buffer training step (test_checkpoint's crash-restart test
+resumes training from garbage parameters when the second compile of
+the same step function becomes a cache hit). The engine's executables
+round-trip correctly — `benchmarks/run.py --smoke` re-verifies
+request-for-request equivalence against the Python engine on every
+cached run. The model/arch tests gain nothing from the cache anyway
+(their time is tracing + execution, measured, not XLA compiles).
+
+`repro.utils.jit_cache` holds the knob-flipping (importing
+repro.core.jax_engine here would flip the global x64 flag, and the
+kernel/model tests expect JAX's default f32 world until they opt in
+themselves).
+"""
+import pytest
+
+from repro.utils.jit_cache import (disable_compilation_cache,
+                                   enable_compilation_cache)
+
+# modules whose compiles are safe to persist (scheduling engine only)
+_CACHED_MODULES = ("test_jax_engine", "test_jax_sim", "test_streaming")
+
+
+@pytest.fixture(autouse=True)
+def _persistent_cache_for_engine_tests(request):
+    name = getattr(request.module, "__name__", "")
+    if any(m in name for m in _CACHED_MODULES):
+        enable_compilation_cache()
+        yield
+        disable_compilation_cache()
+    else:
+        yield

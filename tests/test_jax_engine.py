@@ -9,7 +9,8 @@ from repro.core.jax_engine import (simulate_policy_from_trace,
                                    simulate_policy_jax, sweep)
 from repro.traces import synth_azure_trace, trace_from_lists
 
-VEC_POLICIES = ("esff", "esff_h", "sff", "openwhisk", "openwhisk_v2")
+VEC_POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
+                "openwhisk_v2")
 
 
 @pytest.mark.parametrize("policy", VEC_POLICIES)

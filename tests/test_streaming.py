@@ -1,0 +1,151 @@
+"""Streaming-metrics mode (`repro.core.jax_engine`): equivalence with
+the exact per-request mode, positional-queue behaviour under deep
+backlogs, and the columnar trace fast path."""
+import numpy as np
+import pytest
+
+from repro.core import simulate
+from repro.core.jax_engine import (HIST_PER_DECADE, hist_edges,
+                                   simulate_policy_from_trace,
+                                   simulate_policy_jax, sweep)
+from repro.traces import (synth_azure_arrays, synth_azure_trace,
+                          trace_from_lists)
+
+POLICIES = ("esff", "sff", "openwhisk", "faascache")
+BIN_RATIO = 10.0 ** (1.0 / HIST_PER_DECADE)
+
+
+def test_stream_vs_exact_equivalence():
+    """Means bitwise-equal (identical fold path), p99 within one
+    histogram bin, across >= 3 policies and two capacities."""
+    tr = synth_azure_trace(n_functions=20, n_requests=600,
+                           utilization=0.25, seed=21)
+    exact = sweep(tr, policies=POLICIES, capacities=(4, 8),
+                  queue_cap=256, stream=False)
+    strm = sweep(tr, policies=POLICIES, capacities=(4, 8),
+                 queue_cap=256, stream=True)
+    assert int(strm["overflow"].sum()) == 0
+    assert int(strm["stalled"].sum()) == 0
+    assert np.array_equal(strm["mean_response"],
+                          exact["mean_response"])
+    assert np.array_equal(strm["mean_slowdown"],
+                          exact["mean_slowdown"])
+    assert np.all(strm["p99_response"]
+                  <= exact["p99_response"] * BIN_RATIO + 1e-12)
+    assert np.all(strm["p99_response"]
+                  >= exact["p99_response"] / BIN_RATIO - 1e-12)
+
+
+def test_stream_accumulators_match_per_request_records():
+    """The folded accumulators agree with recomputing the metrics from
+    the exact mode's per-request arrays; the histogram counts every
+    completed request exactly once."""
+    tr = synth_azure_trace(n_functions=15, n_requests=500,
+                           utilization=0.3, seed=8)
+    a = tr.to_arrays()
+    import jax.numpy as jnp
+    args = (jnp.asarray(a["fn_id"]), jnp.asarray(a["arrival"]),
+            jnp.asarray(a["exec_time"]), jnp.asarray(a["cold_start"]),
+            jnp.asarray(a["evict"]))
+    kw = dict(policy="sff", n_fns=tr.n_functions, capacity=8,
+              queue_cap=256)
+    ex = simulate_policy_jax(*args, stream=False, **kw)
+    st = simulate_policy_jax(*args, stream=True, **kw)
+    assert "completion" not in st          # O(N) outputs really gone
+    n = len(tr)
+    assert int(np.asarray(st["resp_hist"]).sum()) == n
+    resp = np.asarray(ex["completion"]) - a["arrival"]
+    np.testing.assert_allclose(float(st["resp_sum"]) / n, resp.mean(),
+                               rtol=1e-12)
+    assert float(st["max_response"]) == pytest.approx(resp.max(),
+                                                      rel=1e-12)
+    # both modes fold identically -> bitwise-equal accumulators
+    assert float(st["resp_sum"]) == float(ex["resp_sum"])
+    assert float(st["slow_sum"]) == float(ex["slow_sum"])
+
+
+def test_positional_queues_survive_starvation():
+    """SFF starves long functions, so a request can stay queued for
+    most of the trace — the positional queues (cursors into the
+    loop-invariant arrival order) must reproduce the Python engine
+    exactly even then."""
+    tr = synth_azure_trace(n_functions=20, n_requests=2000,
+                           utilization=0.25, seed=4)
+    py = simulate(tr, "sff", capacity=8)
+    jx = simulate_policy_from_trace(tr, "sff", 8, queue_cap=2048)
+    assert int(jx["overflow"]) == 0
+    assert int(jx["stalled"]) == 0
+    assert int(jx["cold_starts"]) == py.server.cold_starts
+    resp_py = np.array([r.response for r in tr.requests])
+    np.testing.assert_allclose(jx["response"], resp_py, rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_hist_edges_shape():
+    edges = hist_edges()
+    assert len(edges) == 65
+    assert edges[HIST_PER_DECADE] / edges[0] == pytest.approx(10.0)
+
+
+def test_saturated_histogram_reports_true_tail():
+    """Responses past the histogram's top edge (1e4 s) land in the
+    last bin; the streamed p99 must fall back to the exact carried
+    maximum instead of silently capping at the bin edge."""
+    n = 8
+    tr = trace_from_lists(
+        fn_ids=[0] * n,
+        arrivals=[float(i) for i in range(n)],
+        exec_times=[20_000.0] * n,     # every response > 1e4 s
+        cold=[0.5], evict=[0.2])
+    out = sweep(tr, policies=("openwhisk",), capacities=(1,),
+                queue_cap=64, stream=True)
+    assert int(out["overflow"].sum()) == 0
+    assert int(out["stalled"].sum()) == 0
+    p99 = float(out["p99_response"][0, 0, 0, 0])
+    assert p99 > 2e4                   # not capped at hist_edges()[-1]
+    assert p99 == float(out["max_response"][0, 0, 0, 0])
+
+
+def test_under_range_histogram_reports_true_tail():
+    """All-fast traces (every response below the 1e-4 s floor) must
+    not report the floor edge as p99 — the carried max clamps it."""
+    n = 8
+    tr = trace_from_lists(
+        fn_ids=[0] * n,
+        arrivals=[float(i) for i in range(n)],
+        exec_times=[1e-5] * n,
+        cold=[0.0], evict=[0.0])
+    out = sweep(tr, policies=("openwhisk",), capacities=(1,),
+                queue_cap=64, stream=True)
+    assert int(out["stalled"].sum()) == 0
+    p99 = float(out["p99_response"][0, 0, 0, 0])
+    assert p99 == float(out["max_response"][0, 0, 0, 0])
+    assert p99 < 2e-5                  # not the 1.33e-4 floor edge
+
+
+def test_synth_azure_arrays_matches_trace_path():
+    tr = synth_azure_trace(n_functions=10, n_requests=300, seed=5)
+    a = tr.to_arrays()
+    b = synth_azure_arrays(n_functions=10, n_requests=300, seed=5)
+    for k in ("fn_id", "arrival", "exec_time", "cold_start", "evict"):
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+@pytest.mark.slow
+def test_large_trace_parity_with_python_engine():
+    """10^5-request spot check: the streaming engine (bounded carried
+    state) agrees with the Python event engine end to end."""
+    tr = synth_azure_trace(n_functions=100, n_requests=100_000,
+                           utilization=0.2, seed=7)
+    py = simulate(tr, "esff", capacity=16)
+    jx = simulate_policy_from_trace(tr, "esff", 16, queue_cap=4096)
+    assert int(jx["overflow"]) == 0
+    assert int(jx["stalled"]) == 0
+    assert int(jx["cold_starts"]) == py.server.cold_starts
+    resp_py = np.array([r.response for r in tr.requests])
+    np.testing.assert_allclose(jx["response"], resp_py, rtol=1e-9,
+                               atol=1e-9)
+    st = sweep(tr, policies=("esff",), capacities=(16,),
+               queue_cap=4096, stream=True)
+    np.testing.assert_allclose(st["mean_response"][0, 0, 0, 0],
+                               py.mean_response, rtol=1e-9)

@@ -8,7 +8,6 @@ import sys
 import time
 from typing import Dict, Iterable, List
 
-from repro.core import simulate
 from repro.traces import synth_azure_arrays, synth_azure_trace
 # re-exported for benchmark entry points: call it from main(), not at
 # import — the persistent cache must stay scoped to engine workloads
@@ -29,7 +28,38 @@ TRACE_KW = dict(utilization=0.2, exec_median=0.1, exec_sigma=1.4,
                 burst_frac=0.3)
 
 
+def azure_npz_path():
+    """Path of a preprocessed real Azure-2021 npz slice, if configured
+    (``REPRO_AZURE_NPZ``; produced by scripts/prepare_azure_trace.py —
+    see docs/azure_trace.md)."""
+    return os.environ.get("REPRO_AZURE_NPZ", "")
+
+
+def load_trace_npz_arrays(path):
+    """Columnar arrays of a ``Trace.load_npz``-format npz (the engine's
+    fast path — no Request objects)."""
+    import numpy as np
+    with np.load(path) as z:
+        return {k: z[k] for k in ("fn_id", "arrival", "exec_time",
+                                  "cold_start", "evict")}
+
+
+_NPZ_TRACE_CACHE: dict = {}
+
+
 def default_trace(seed: int = 0, **kw):
+    """The shared benchmark trace. With ``REPRO_AZURE_NPZ`` set, the
+    real Azure 2021 slice is loaded instead (``seed``/generator knobs
+    are then ignored; per-figure ``head``/scale knobs still apply).
+    The npz Trace is cached per path — figure scripts call this inside
+    their sweep loops, and rebuilding 6e5 Request objects per call
+    costs seconds each time."""
+    npz = azure_npz_path()
+    if npz:
+        if npz not in _NPZ_TRACE_CACHE:
+            from repro.core.request import Trace
+            _NPZ_TRACE_CACHE[npz] = Trace.load_npz(npz)
+        return _NPZ_TRACE_CACHE[npz]
     params = dict(TRACE_KW)
     params.update(kw)
     return synth_azure_trace(n_functions=N_FUNCTIONS,
@@ -38,18 +68,18 @@ def default_trace(seed: int = 0, **kw):
 
 def default_trace_arrays(seed: int = 0, n_requests: int = None, **kw):
     """Columnar default trace (no Request objects) — the fast path for
-    large-N engine benchmarks."""
+    large-N engine benchmarks. ``REPRO_AZURE_NPZ`` substitutes the real
+    slice only when ``n_requests`` is None (explicit sizes — the
+    engine-scale N-curve tiers — stay synthetic)."""
+    npz = azure_npz_path()
+    if npz and n_requests is None:
+        return load_trace_npz_arrays(npz)
     params = dict(TRACE_KW)
     params.update(kw)
     return synth_azure_arrays(
         n_functions=N_FUNCTIONS,
         n_requests=N_REQUESTS if n_requests is None else n_requests,
         seed=seed, **params)
-
-
-def run_policy(trace, policy: str, capacity: int = CAPACITY):
-    # simulate() resets per-request state, so traces are reusable as-is
-    return simulate(trace, policy, capacity)
 
 
 def emit(rows: List[Dict], header: Iterable[str], out=None) -> None:

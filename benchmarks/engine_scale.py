@@ -1,16 +1,22 @@
-"""Engine scaling with trace length: req/s at N in {3e4, 3e5, 1e6}.
+"""Engine scaling with trace length: the req/s N-curve from 1e4 to 1e6.
 
-The streaming engine carries O(F + C + SEG + HIST_BINS) state per
-lane regardless of N (jax_engine perf-contract rule 4), so a
-10^6-request synthetic Azure stream — the scale of the paper's §VI
-Azure evaluation and beyond — runs through the batched grid on one CPU.
-Traces come from the columnar generator (`synth_azure_arrays`); Request
-objects are never materialised.
+The streaming engine carries O(F + C + HIST_BINS) state per
+lane regardless of N (jax_engine perf-contract rule 4) and reads the
+trace through cache-windowed slabs (rule 6), so a 10^6-request
+synthetic Azure stream — the scale of the paper's §VI Azure evaluation
+and beyond — runs through the batched grid on one CPU at a roughly
+flat per-request cost. Traces come from the columnar generator
+(`synth_azure_arrays`); Request objects are never materialised.
 
     PYTHONPATH=src python -m benchmarks.engine_scale [--quick]
+        [--window W] [--trace azure.npz]
 
 ``--quick`` stops at 3e5 requests (CI-friendly); the default sweeps the
-full 10^6. REPRO_SCALE_POLICIES overrides the policy set.
+full 10^6-tier curve. ``--window`` overrides the engine's cache-window
+size (results are bitwise window-invariant; only throughput moves).
+``--trace`` additionally runs the policies over a preprocessed real
+Azure-2021 npz slice (scripts/prepare_azure_trace.py — see
+docs/azure_trace.md). REPRO_SCALE_POLICIES overrides the policy set.
 """
 from __future__ import annotations
 
@@ -19,10 +25,12 @@ import os
 import time
 
 from benchmarks.common import (default_trace_arrays, emit,
-                               enable_compilation_cache)
-from repro.core.jax_engine import sweep
+                               enable_compilation_cache,
+                               load_trace_npz_arrays)
+from repro.core.jax_engine import (DEFAULT_WINDOW, resolve_lane_chunk,
+                                   sweep)
 
-NS = (30_000, 300_000, 1_000_000)
+NS = (10_000, 30_000, 100_000, 300_000, 1_000_000)
 POLICIES = tuple(os.environ.get(
     "REPRO_SCALE_POLICIES", "esff,sff,openwhisk").split(","))
 CAPACITY = 16
@@ -32,33 +40,44 @@ CAPACITY = 16
 QUEUE_CAP = 1 << 17
 
 
-def run(ns=NS, policies=POLICIES):
+def _run_one(arrs, policy, *, name, n, window, t_gen=0.0):
+    """One warm pass per jit specialisation, then the timed pass."""
+    kw = dict(policies=(policy,), capacities=(CAPACITY,),
+              queue_cap=QUEUE_CAP, stream=True, window=window)
+    sweep(arrs, **kw)
+    t0 = time.perf_counter()
+    out = sweep(arrs, **kw)
+    dt = time.perf_counter() - t0
+    if int(out["overflow"].sum()) or int(out["stalled"].sum()):
+        raise RuntimeError(
+            f"engine_scale {policy} {name} overflowed/stalled "
+            "— raise queue_cap")
+    return dict(
+        name=f"{policy}_{name}", n_requests=n, policy=policy,
+        # record the *effective* window so BENCH provenance does not
+        # depend on whether the default was spelled out
+        window=(window or DEFAULT_WINDOW),
+        us_per_call=dt * 1e6, req_s=n / dt,
+        mean_response=float(out["mean_response"][0, 0, 0, 0]),
+        p99_response=float(out["p99_response"][0, 0, 0, 0]),
+        derived=f"{n / dt:.0f} req/s (gen {t_gen:.1f}s)")
+
+
+def run(ns=NS, policies=POLICIES, window=0, trace_npz=""):
     rows = []
     for n in ns:
         t0 = time.perf_counter()
         arrs = default_trace_arrays(seed=0, n_requests=n)
         t_gen = time.perf_counter() - t0
         for policy in policies:
-            # one warm pass per (policy, N) jit specialisation, then
-            # the timed pass
-            kw = dict(policies=(policy,), capacities=(CAPACITY,),
-                      queue_cap=QUEUE_CAP, stream=True)
-            sweep(arrs, **kw)
-            t0 = time.perf_counter()
-            out = sweep(arrs, **kw)
-            dt = time.perf_counter() - t0
-            bad = (int(out["overflow"].sum())
-                   or int(out["stalled"].sum()))
-            if bad:
-                raise RuntimeError(
-                    f"engine_scale {policy} N={n} overflowed/stalled "
-                    "— raise queue_cap")
-            rows.append(dict(
-                name=f"{policy}_N{n}", n_requests=n, policy=policy,
-                us_per_call=dt * 1e6, req_s=n / dt,
-                mean_response=float(out["mean_response"][0, 0, 0, 0]),
-                p99_response=float(out["p99_response"][0, 0, 0, 0]),
-                derived=f"{n / dt:.0f} req/s (gen {t_gen:.1f}s)"))
+            rows.append(_run_one(arrs, policy, name=f"N{n}", n=n,
+                                 window=window, t_gen=t_gen))
+    if trace_npz:
+        arrs = load_trace_npz_arrays(trace_npz)
+        n = len(arrs["fn_id"])
+        for policy in policies:
+            rows.append(_run_one(arrs, policy, name=f"azure{n}", n=n,
+                                 window=window))
     return rows
 
 
@@ -67,11 +86,17 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="stop at 3e5 requests")
+    ap.add_argument("--window", type=int, default=0,
+                    help="engine cache-window override (0 = default)")
+    ap.add_argument("--trace", default="",
+                    help="also run a real Azure-2021 npz slice")
     args = ap.parse_args(argv)
     ns = tuple(n for n in NS if n <= 300_000) if args.quick else NS
-    rows = run(ns=ns)
-    emit(rows, ("name", "n_requests", "policy", "us_per_call", "req_s",
-                "mean_response", "p99_response", "derived"))
+    print(f"# lane_chunk={resolve_lane_chunk()} "
+          f"window={args.window or 'default'}")
+    rows = run(ns=ns, window=args.window, trace_npz=args.trace)
+    emit(rows, ("name", "n_requests", "policy", "window", "us_per_call",
+                "req_s", "mean_response", "p99_response", "derived"))
     return rows
 
 

@@ -7,11 +7,19 @@ engine-scale sections) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5,kernels]
     PYTHONPATH=src python -m benchmarks.run --smoke   # <60s CI gate
+    PYTHONPATH=src python -m benchmarks.run --baseline BENCH_x.json
 
 ``--smoke`` runs every scheduling policy on a tiny trace through both
 engines and exits non-zero on any Python/JAX mismatch — including the
 streaming-vs-exact gate (bitwise-equal means, p99 within one histogram
 bin) — cheap enough to sit next to tier-1 in CI.
+
+``--baseline`` compares this run's per-row ``req_s`` against a
+previous BENCH json and exits non-zero if any matching row dropped
+more than 20% (``--regress-tol``) — the perf counterpart of the smoke
+gate: run ``--smoke`` for correctness, then
+``--only enginescale,simthroughput --baseline <last BENCH json>`` to
+catch throughput regressions before merging.
 """
 from __future__ import annotations
 
@@ -79,6 +87,49 @@ def smoke() -> int:
     return failures
 
 
+def check_regression(baseline_path: str, report: dict,
+                     tol: float = 0.20) -> int:
+    """Compare ``req_s`` rows against a baseline BENCH json.
+
+    Rows are matched by section + ``name``; a row is a regression when
+    its req/s falls below ``(1 - tol)`` of the baseline's. Returns the
+    number of regressed rows (and prints each)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    regressions = checked = 0
+    for sec, sdata in report.get("sections", {}).items():
+        brows = {r["name"]: r
+                 for r in base.get("sections", {})
+                           .get(sec, {}).get("rows", [])
+                 if isinstance(r, dict) and "name" in r
+                 and "req_s" in r}
+        for r in sdata.get("rows", []):
+            if not (isinstance(r, dict) and "req_s" in r
+                    and r.get("name") in brows):
+                continue
+            checked += 1
+            now = float(r["req_s"])
+            was = float(brows[r["name"]]["req_s"])
+            if now < (1.0 - tol) * was:
+                regressions += 1
+                print(f"REGRESSION {sec}/{r['name']}: "
+                      f"{now:.0f} req/s vs baseline {was:.0f} "
+                      f"(-{100 * (1 - now / was):.0f}%)",
+                      file=sys.stderr)
+    if checked == 0:
+        # a gate that compared nothing must not pass silently (row
+        # renames / --only selections without req_s rows would turn it
+        # vacuous and let real regressions ship)
+        print(f"REGRESSION GATE VACUOUS: no req_s rows of this run "
+              f"matched {baseline_path} — treating as failure",
+              file=sys.stderr)
+        return 1
+    print(f"# baseline check vs {baseline_path}: {checked} rows, "
+          f"{regressions} regression(s) beyond {tol:.0%}",
+          file=sys.stderr)
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -88,6 +139,11 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="path of the BENCH json report "
                          "(default BENCH_<stamp>.json)")
+    ap.add_argument("--baseline", default="",
+                    help="previous BENCH json; exit non-zero if any "
+                         "section row's req_s drops > --regress-tol")
+    ap.add_argument("--regress-tol", type=float, default=0.20,
+                    help="allowed fractional req/s drop (default 0.20)")
     args = ap.parse_args()
     from benchmarks.common import enable_compilation_cache
     enable_compilation_cache()
@@ -128,6 +184,9 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(report, f, indent=1, default=str)
     print(f"# wrote {path}", file=sys.stderr)
+    if args.baseline:
+        sys.exit(1 if check_regression(args.baseline, report,
+                                       args.regress_tol) else 0)
 
 
 if __name__ == '__main__':

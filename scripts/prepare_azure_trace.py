@@ -1,0 +1,136 @@
+"""Preprocess the Azure Functions 2021 invocation trace into the
+engine's ``Trace.load_npz`` format.
+
+The paper (§VI) evaluates on the first 6e5 requests of
+*AzureFunctionsInvocationTraceForTwoWeeksJan2021* [Zhang et al.,
+SOSP'21] — a CSV of per-invocation records ``(app, func,
+end_timestamp, duration)``. That dataset is not redistributable inside
+this repository; download it per ``docs/azure_trace.md`` and run::
+
+    PYTHONPATH=src python scripts/prepare_azure_trace.py \
+        --csv AzureFunctionsInvocationTraceForTwoWeeksJan2021.txt \
+        --out data/azure_2021_600k.npz --head 600000
+
+The output npz holds the five columnar arrays the engine consumes
+(``fn_id`` / ``arrival`` / ``exec_time`` / ``cold_start`` / ``evict``)
+and loads through ``repro.core.request.Trace.load_npz`` or directly
+into ``sweep`` / ``benchmarks.engine_scale --trace`` (set
+``REPRO_AZURE_NPZ`` to point fig5/fig6/fig7/fig8 at it — see
+``benchmarks/common.py``).
+
+Preprocessing semantics (documented in docs/azure_trace.md):
+
+* arrival  = end_timestamp - duration (the trace records completion
+  times), shifted so the earliest arrival is t = 0;
+* requests are sorted by (arrival, input order) and truncated to the
+  first ``--head`` (paper: 6e5);
+* exec_time = duration floored at 1 ms (the paper's "0 ms -> 1 ms"
+  quantisation floor);
+* functions are the distinct ``func`` hashes of the *kept* slice,
+  numbered densely in order of first appearance;
+* cold_start / evict latencies are not in the dataset — they are
+  sampled once per function from U[0.5, 1.5] s (paper §VI-A, from the
+  ServerlessBench characterisation), seeded for reproducibility.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+import numpy as np
+
+
+def convert_invocations(funcs, end_ts, durations, *, head=None,
+                        seed=0, cold_range=(0.5, 1.5),
+                        min_exec=1e-3) -> dict:
+    """Pure conversion: invocation columns -> ``Trace.load_npz`` arrays.
+
+    ``funcs`` are opaque function identifiers (hash strings); ``end_ts``
+    and ``durations`` are float seconds. Returns the five-array dict
+    (arrival-sorted, fn ids dense in order of first appearance within
+    the kept slice).
+    """
+    end_ts = np.asarray(end_ts, np.float64)
+    durations = np.asarray(durations, np.float64)
+    arrival = end_ts - durations
+    order = np.argsort(arrival, kind="stable")
+    if head is not None:
+        order = order[:int(head)]
+    arrival = arrival[order]
+    arrival -= arrival[0] if len(arrival) else 0.0
+    exec_time = np.maximum(durations[order], min_exec)
+
+    ids: dict = {}
+    fn_id = np.empty(len(order), np.int32)
+    for i, src in enumerate(np.asarray(funcs, object)[order]):
+        fn_id[i] = ids.setdefault(src, len(ids))
+
+    rng = np.random.default_rng(seed)
+    cold = rng.uniform(*cold_range, len(ids))
+    evict = rng.uniform(*cold_range, len(ids))
+    return dict(fn_id=fn_id, arrival=arrival,
+                exec_time=exec_time.astype(np.float64),
+                cold_start=cold.astype(np.float64),
+                evict=evict.astype(np.float64))
+
+
+def read_invocation_csv(path):
+    """Stream the Azure CSV -> (funcs, end_ts, durations) lists.
+
+    Accepts the published schema ``app,func,end_timestamp,duration``
+    (header optional, extra columns ignored)."""
+    funcs, end_ts, durations = [], [], []
+    with open(path, newline="") as f:
+        reader = csv.reader(f)
+        for row in reader:
+            if not row or len(row) < 4:
+                continue
+            try:
+                t, d = float(row[2]), float(row[3])
+            except ValueError:
+                continue          # header line
+            funcs.append(row[1])
+            end_ts.append(t)
+            durations.append(d)
+    return funcs, end_ts, durations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--csv", required=True,
+                    help="AzureFunctionsInvocationTrace...Jan2021 CSV")
+    ap.add_argument("--out", required=True, help="output .npz path")
+    ap.add_argument("--head", type=int, default=600_000,
+                    help="keep the first N arrivals (paper: 6e5)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the U[cold-range] latency draws")
+    ap.add_argument("--cold-range", type=float, nargs=2,
+                    default=(0.5, 1.5), metavar=("LO", "HI"),
+                    help="cold-start/evict latency range in seconds")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.csv):
+        print(f"error: {args.csv} not found — see docs/azure_trace.md "
+              "for how to obtain the dataset", file=sys.stderr)
+        return 2
+    funcs, end_ts, durations = read_invocation_csv(args.csv)
+    if not funcs:
+        print(f"error: no invocation rows parsed from {args.csv}",
+              file=sys.stderr)
+        return 2
+    a = convert_invocations(funcs, end_ts, durations, head=args.head,
+                            seed=args.seed,
+                            cold_range=tuple(args.cold_range))
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    np.savez_compressed(args.out, **a)
+    dur = a["arrival"][-1] if len(a["arrival"]) else 0.0
+    print(f"wrote {args.out}: {len(a['fn_id'])} requests, "
+          f"{len(a['cold_start'])} functions, span {dur / 3600:.1f} h")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

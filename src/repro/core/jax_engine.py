@@ -62,7 +62,7 @@ arrays carry the leading L):
           cache rearm_t (F,) f64 / rearm_rid (F,) i32. Allocated only
           when the kernel sets ``has_timers``.
   ctrs:   ci (NCI,) i32 / cf (NCF,) f64 — every per-lane scalar counter
-          (arrival cursor, done/iteration counts, stall flag, instance
+          (arrival cursor, done/event counts, stall flag, instance
           sequence, estimator globals, cold/eviction/overflow tallies
           and the streaming response accumulators) packed into two
           arrays so the while_loop carries 2 small buffers instead of
@@ -71,8 +71,11 @@ arrays carry the leading L):
           slowdown sum, response max (in cf) and ``hist`` (HIST_BINS,)
           i32, a fixed log-spaced response-time histogram (8 bins per
           decade over 1e-4..1e4 s) that serves p99 and CDFs to within
-          one bin width. In *exact* mode (``stream=False``) additionally
-          start/completion (N,) f64 per-request records.
+          one bin width; optionally (``tl_bins > 0``) a minute-binned
+          timeline (request count / response sum / exec sum per
+          arrival-time bucket, the Fig. 8 fold). In *exact* mode
+          (``stream=False``) additionally start/completion (N,) f64
+          per-request records.
 
 Event arbitration mirrors `repro.core.events`: at equal times
 EXEC_DONE < COLD_DONE < TIMER < ARRIVAL, so capacity freed at time t is
@@ -81,7 +84,56 @@ capacity is sweepable across lanes without retracing; ``stalled`` flags
 lanes that ran out of events or iteration budget before every request
 completed (overflowed requests can never finish).
 
-Performance shape — the five rules the layout follows, measured on the
+Engine internals — window/slab layout
+-------------------------------------
+
+The event loop runs over the trace in *time-ordered windows* of ``W =
+window`` requests (``DEFAULT_WINDOW`` unless overridden; traces are
+arrival-sorted, so a contiguous id range *is* a time window). The loop
+nest is::
+
+    fori_loop over windows            # shared slab refresh per window
+      while_loop over segments        # until every lane leaves the window
+        fori_loop over SEG events     # lane-stacked pick + vmapped body
+          segment flush               # exact mode: overlay scatter
+
+Per window, the four gather-heavy shared operands — ``arrival`` /
+``exec_time`` / ``fn_id`` (rid-indexed) and the positional queue layout
+(position-indexed) — are ``dynamic_slice``'d into (T, W) *slabs* sized
+to stay L2-resident (24 bytes/request: f64 times + two i32 ids), so
+the random gathers of the inner loop stop thrashing the cache once N
+outgrows it. Slabs are f64/i32 *copies*, so results are bitwise
+independent of the window size; every read goes through a dual-source
+bounds check (`EngineCtx._dual`): in-window indices hit the slab,
+out-of-window indices (a queue entry or running request whose links
+span a window boundary — the positional-cursor design makes this a
+bounds check, not a re-link) fall back to the full operand, and the
+disabled side of each pair reads a fixed cached location.
+
+Windows are *global*: all lanes share one slab set (a per-lane window
+would batch the slab operand and knock every gather off vmap's
+unbatched-operand fast path). A lane whose next event is an arrival
+beyond the current window **parks** — its arrival candidate keeps its
+exact time (read from the full operand at the boundary element) so the
+packed argmin still resolves event order exactly, but the consume is
+gated off and the lane no-ops until the slowest lane finishes the
+window. Parking preserves each lane's event order exactly: a lane only
+parks when its true earliest pending event is the out-of-window
+arrival. The per-lane window cursor is implicit in the arrival cursor
+(``ci[CI_NEXT] // W``); ``n_events`` counts *processed events*, so it
+is window-size invariant. The queue-successor gathers use a second,
+window-major positional layout (stable argsort of (rid // W, fn)) with
+per-window per-function offsets (``off_w`` / ``cum_cnt``) so in-window
+position reads are slab-local.
+
+f32 slab copies for the time reads were evaluated and rejected for the
+default path: every consumer feeds either the event-time arbitration
+or the f64 metric accumulators, and a float32 round (~1e-7 relative)
+breaks the engine's bitwise gates (stream-vs-exact equality and
+request-for-request parity with the Python engine). The indices
+(``fn_id`` + positional layout, half the slab bytes) are i32 already.
+
+Performance shape — the six rules the layout follows, measured on the
 XLA CPU backend:
 
 1. *No control flow inside the body.* Every handler runs every
@@ -100,32 +152,50 @@ XLA CPU backend:
    Queues therefore never carry their contents at all: successor
    lookups are gathers into loop-invariant shared operands (which XLA
    neither copies nor scatters), and the only per-event writes touch
-   O(F)/O(C) cursor arrays. Result records go through the small
-   per-segment overlay (d_rid/d_start/d_comp), batch-applied once per
-   SEG-event segment.
-4. *Carried state is independent of trace length.* The dispatch
-   overlay is *folded* at flush time into O(1) streaming accumulators
-   (sums, max, histogram) instead of scattered into (L, N) arrays; the
-   (L, N) per-request records exist only in exact mode
-   (``stream=False``). A streaming lane carries
-   O(F + C + SEG + HIST_BINS) state no matter how long the trace,
-   which is what lets one machine sweep 10^6-request traces
-   (benchmarks/engine_scale.py). Both modes run the identical fold, so
-   streamed means are bit-identical to exact-mode means.
+   O(F)/O(C) cursor arrays. Exact-mode per-request records go through
+   the small per-segment overlay (d_rid/d_start/d_comp),
+   batch-scattered into the (L, N) arrays once per SEG-event segment.
+4. *Carried state is independent of trace length, and metrics fold per
+   event.* Each dispatch leaves its (rid, completion, exec) triple in
+   three per-event registers (``ev_*`` — plain selects, no scatters)
+   and `_fold_event` folds them into the O(1) streaming accumulators
+   (sums, max, histogram, optional timeline bins) at the end of every
+   event — in event order, which is what makes the streamed sums
+   bitwise *window-size invariant* (any deferred batch fold regroups
+   its reduction tree wherever a window boundary cuts a segment; PR 2's
+   per-segment flush fold was also, measurably, the large-N
+   bottleneck: its (L, SEG) gathers/scatters scaled with N and cost
+   ~3x at N = 3e5). The (L, N) per-request records exist only in exact
+   mode (``stream=False``). A streaming lane carries
+   O(F + C + HIST_BINS) state no matter how long the trace, which is
+   what lets one machine sweep 10^6-request traces at a flat
+   ~190k req/s per lane (benchmarks/engine_scale.py). Both modes run
+   the identical fold, so streamed means are bit-identical to
+   exact-mode means.
 5. *One packed reduction picks the next event.* The candidate times of
    every event source — BUSY slots, COLD slots, original timers,
-   re-arms, the arrival cursor — are concatenated in priority order and
-   a single first-index ``argmin`` resolves both the time and the
-   tie-break (position encodes EXEC < COLD < TIMER < ARRIVAL and the
-   within-class index order), replacing three separate min-reductions
-   plus lexicographic scans; small scalar counters ride the two packed
-   ci/cf arrays so XLA:CPU dispatches fewer ops per event.
+   re-arms, the arrival cursor — are concatenated in priority order
+   into one lane-stacked (L, 2C+2F+1) matrix and a single segmented
+   first-index ``argmin`` over the candidate axis resolves, for every
+   lane at once, both the time and the tie-break (position encodes
+   EXEC < COLD < TIMER < ARRIVAL and the within-class index order).
+   The pick lives *outside* the per-lane vmap so wide lane batches on
+   GPU/TPU lower to one reduction kernel instead of L small ones;
+   small scalar counters ride the two packed ci/cf arrays so XLA:CPU
+   dispatches fewer ops per event.
+6. *The hot loop reads cache-sized slabs.* Shared trace operands are
+   re-sliced per window (see above) so gather working sets stay
+   L2-resident at any N; lane batching is backend-adaptive
+   (`LANE_CHUNKS` / ``REPRO_LANE_CHUNK`` / `resolve_lane_chunk`)
+   because the XLA:CPU sweet spot (~16 lanes) underfills an
+   accelerator by orders of magnitude.
 """
 from __future__ import annotations
 
 import functools
 import os
-from typing import Dict, Sequence, Union
+import time
+from typing import Dict, Optional, Sequence, Union
 
 # The engine's event loop is hundreds of tiny fused ops per simulated
 # event; XLA:CPU's thunk runtime pays a dispatch overhead per op that
@@ -149,7 +219,27 @@ BIG = 1e30
 COLD, IDLE, BUSY = 0, 1, 2
 I32_MAX = np.iinfo(np.int32).max
 SEG = 32          # events per segment (deferred result-write window)
-LANE_CHUNK = 16   # lanes per device call (XLA:CPU regresses beyond)
+
+# Requests per trace window: the four slabs cost 24 bytes/request
+# (2 x f64 + 2 x i32), so 524288 bounds the gather working set to
+# ~12 MB — last-level-cache scale — however long the trace grows,
+# while traces at or below it run the single-window fast path (no
+# dual-source reads at all). ``window=`` overrides per call; results
+# are bitwise identical at every setting, only locality changes.
+DEFAULT_WINDOW = 524288
+
+# Lanes per device call, by backend. XLA:CPU's per-lane efficiency is
+# flat over ~8-48 lanes since the lane-stacked event pick landed, so
+# the CPU entry is sized for *scheduling*: smaller chunks pack evenly
+# onto the sweep's overlapping host threads (a 48-lane grid in chunks
+# of 16 leaves one thread a straggler chunk; chunks of 8 balance).
+# Accelerators amortise kernel launches over wide batches and the
+# O(F+C) streaming carry fits thousands of lanes in HBM — table
+# entries there are educated defaults pending real-hardware runs
+# (ROADMAP). ``REPRO_LANE_CHUNK`` overrides with an integer or
+# ``auto`` (two-point probe, see `resolve_lane_chunk`).
+LANE_CHUNKS = {"cpu": 8, "gpu": 256, "tpu": 512}
+_AUTO_CHUNK: Dict[str, int] = {}
 
 # Packed per-lane counters: ci (NCI,) i32 and cf (NCF,) f64.
 (CI_NEXT, CI_DONE, CI_ITERS, CI_STALL, CI_SEQ, CI_GN, CI_COLD,
@@ -182,55 +272,173 @@ def ensure_x64() -> None:
 ensure_x64()
 
 
+# ---------------------------------------------------------- lane batching
+def default_lane_chunk(backend: Optional[str] = None) -> int:
+    """Table entry for the active (or given) JAX backend."""
+    return LANE_CHUNKS.get(backend or jax.default_backend(),
+                           LANE_CHUNKS["cpu"])
+
+
+def resolve_lane_chunk(setting: Union[int, str, None] = None) -> int:
+    """Resolve the lanes-per-device-call batch size.
+
+    ``setting`` (or the ``REPRO_LANE_CHUNK`` environment variable when
+    ``setting`` is None) may be an integer, ``"table"``/empty (use the
+    per-backend `LANE_CHUNKS` entry) or ``"auto"`` — time a two-point
+    probe (the table entry vs 4x it) on a small synthetic workload at
+    the first sweep and keep whichever sustains more req/s. The probe
+    result is cached per backend for the process lifetime.
+    """
+    if setting is None:
+        setting = os.environ.get("REPRO_LANE_CHUNK", "")
+    if isinstance(setting, str):
+        setting = setting.strip().lower()
+    if setting in ("", "table", None):
+        return default_lane_chunk()
+    if setting == "auto":
+        return _probe_lane_chunk()
+    return max(1, int(setting))
+
+
+def _probe_lane_chunk(n_requests: int = 2048, n_functions: int = 24,
+                      capacity: int = 8) -> int:
+    """Two-point lane-batch probe: per-backend table entry vs 4x it.
+
+    Runs the streaming engine (``sff`` — the cheapest kernel) over a
+    small synthetic trace once per candidate (after a warm-up call per
+    jit specialisation) and returns the candidate with the higher
+    aggregate req/s. Cached per backend in ``_AUTO_CHUNK``.
+    """
+    backend = jax.default_backend()
+    if backend in _AUTO_CHUNK:
+        return _AUTO_CHUNK[backend]
+    from repro.core.jax_policies import KERNELS
+    from repro.traces.generator import synth_azure_arrays
+    base = default_lane_chunk(backend)
+    cands = (base, max(1, base * 4))
+    a = synth_azure_arrays(n_functions=n_functions,
+                           n_requests=n_requests, seed=0,
+                           utilization=0.3)
+    shared = tuple(jnp.asarray(a[k])[None]
+                   for k in ("fn_id", "arrival", "exec_time",
+                             "cold_start", "evict"))
+    best, best_rate = base, -1.0
+    for c in cands:
+        args = shared + (jnp.zeros((c,), jnp.int32),
+                         jnp.ones((c, capacity), bool),
+                         jnp.ones((c,), jnp.float64),
+                         jnp.float64(0.1), jnp.float64(0.1))
+        kw = dict(kernel=KERNELS["sff"], n_fns=n_functions,
+                  capacity=capacity, queue_cap=n_requests, stream=True)
+        jax.block_until_ready(_sweep_metrics(*args, **kw))
+        t0 = time.perf_counter()
+        jax.block_until_ready(_sweep_metrics(*args, **kw))
+        rate = c * n_requests / (time.perf_counter() - t0)
+        if rate > best_rate:
+            best, best_rate = c, rate
+    _AUTO_CHUNK[backend] = best
+    return best
+
+
 class EngineCtx:
     """Per-lane view of the run handed to policy kernels.
 
-    Bundles the (traced) trace arrays, the (static) shape constants, the
-    scalar knobs and the current segment step ``k``. Built inside the
-    jitted entry point — it never crosses a jit boundary itself.
+    Bundles the (traced) trace arrays and window slabs, the (static)
+    shape constants, the scalar knobs and the current segment step
+    ``k``. Built inside the jitted entry point — it never crosses a jit
+    boundary itself.
 
     Trace arrays are *shared* (T, ...) operands indexed by the lane's
     ``tix``: under vmap a gather whose operand is unbatched lowers to a
     single efficient gather, whereas a batched operand takes a generic
     path that is orders of magnitude slower on the CPU backend. The
     per-request reads (`fn_at` / `arrival_at` / `exec_at`, and the
-    positional queue reads `rid_at_pos` / `heads`) all go through that
-    fast path.
+    positional queue reads `rid_at_pos`) are *dual-source*: indices
+    inside the current window read the (T, W) L2-resident slab, the
+    rest (queue links spanning a window boundary, long-running
+    requests) fall back to the full operand — a bounds check plus two
+    guarded gathers whose disabled side reads a fixed cached location,
+    never a branch. Slabs hold exact f64/i32 copies, so which source
+    serves a read can never change a result bit.
     """
 
     def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2,
-                 pos_rids2, pos_off2, tix, cap_mask, beta, prior,
-                 threshold, k, n, f, c, q):
+                 pos_rids2, pos_off2, slabs, win_base, win_w, tix,
+                 cap_mask, beta, prior, threshold, k, n, f, c, q,
+                 stream=False, tl_bins=0, tl_bucket=60.0):
         self._fn = fn_id2          # (T, N) shared
         self._arr = arrival2       # (T, N) shared
         self._ex = exec2           # (T, N) shared
         self._pos = pos_rids2      # (T, N) shared: rids by (fn, id)
         self._off = pos_off2       # (T, F+1) shared: per-fn offsets
+        # current-window slabs: rid-indexed (T, W) copies + the
+        # window-major positional slab and its per-fn (T, F) rows
+        (self._fn_s, self._arr_s, self._ex_s, self._pos_s,
+         self._offw, self._cc_lo, self._cc_hi) = slabs
+        self.win_base = win_base   # first request id of the window
+        self.W = win_w             # static window length
+        self.single_win = win_w >= n   # static: slab == whole trace
         self.tix = tix             # this lane's trace index
-        self.t_cold = cold2[tix]   # (F,) row of the shared (T, F)
-        self.t_evict = evict2[tix]
+        self.t_cold = cold2        # (F,) — this lane's row, pre-gathered
+        self.t_evict = evict2      # once outside the loops
         self.cap_mask = cap_mask
         self.beta = beta
         self.prior = prior
         self.threshold = threshold
         self.k = k                  # segment step (overlay slot)
         self.N, self.F, self.C, self.Q = n, f, c, q
+        self.stream = stream        # static: drop per-request records
+        self.tl_bins = tl_bins      # static: timeline fold bins (0=off)
+        self.tl_bucket = tl_bucket
+
+    def _dual(self, full, slab, rid):
+        """Windowed read of ``full[tix, rid]``: slab when ``rid`` is in
+        the current window, full-operand fallback otherwise. The
+        disabled source reads a fixed, hot location (slab 0 / the
+        window base) so it costs no extra cache traffic. Single-window
+        runs (W >= N — every trace at or under `DEFAULT_WINDOW`) skip
+        the bounds check statically: the one window covers every id."""
+        r = jnp.clip(jnp.asarray(rid, jnp.int32), 0, self.N - 1)
+        if self.single_win:
+            return full[self.tix, r]
+        off = r - self.win_base
+        inw = (off >= 0) & (off < self.W)
+        sv = slab[self.tix, jnp.where(inw, off, 0)]
+        fv = full[self.tix, jnp.where(inw, self.win_base, r)]
+        return jnp.where(inw, sv, fv)
 
     def fn_at(self, rid):
-        return self._fn[self.tix, jnp.clip(rid, 0, self.N - 1)]
+        return self._dual(self._fn, self._fn_s, rid)
 
     def arrival_at(self, rid):
-        return self._arr[self.tix, jnp.clip(rid, 0, self.N - 1)]
+        return self._dual(self._arr, self._arr_s, rid)
 
     def exec_at(self, rid):
-        return self._ex[self.tix, jnp.clip(rid, 0, self.N - 1)]
+        return self._dual(self._ex, self._ex_s, rid)
 
     def rid_at_pos(self, fn, pos):
         """Request id at arrival position ``pos`` of function ``fn``
-        (garbage on out-of-range positions — callers gate)."""
-        base = self._off[self.tix, jnp.clip(fn, 0, self.F - 1)]
-        return self._pos[self.tix,
-                         jnp.clip(base + pos, 0, self.N - 1)]
+        (garbage on out-of-range positions — callers gate).
+
+        Positions are absolute (per-function arrival order over the
+        whole trace); the bounds check against the window's per-fn
+        position range [cc_lo, cc_hi) routes in-window positions to
+        the window-major slab and cross-window links to the full
+        (fn, id)-sorted layout. Single-window runs read the full
+        layout directly (it is the slab)."""
+        fc = jnp.clip(fn, 0, self.F - 1)
+        if self.single_win:
+            gi = self._off[self.tix, fc] + pos
+            return self._pos[self.tix, jnp.clip(gi, 0, self.N - 1)]
+        lo = self._cc_lo[self.tix, fc]
+        inw = (pos >= lo) & (pos < self._cc_hi[self.tix, fc])
+        si = self._offw[self.tix, fc] + (pos - lo)
+        sv = self._pos_s[self.tix,
+                         jnp.where(inw, jnp.clip(si, 0, self.W - 1), 0)]
+        gi = self._off[self.tix, fc] + pos
+        fv = self._pos[self.tix,
+                       jnp.where(inw, 0, jnp.clip(gi, 0, self.N - 1))]
+        return jnp.where(inw, sv, fv)
 
 
 class PolicyKernel:
@@ -424,26 +632,76 @@ def rearm_timer(ctx, s, fn, rid, t_fire, on):
 def dispatch(ctx, s, slot, rid, t, on):
     """Run ``rid`` on an idle ``slot`` of its function.
 
-    The per-request start/completion record goes into the segment
-    overlay (d_*), not large result arrays — the overlay is folded (and
-    in exact mode also scattered) once per segment so no large carried
-    array is touched per event. At most one dispatch happens per event
-    (call sites are mutually exclusive), so the overlay slot is indexed
-    by the segment step and disabled sites drop instead of clobbering
-    it."""
+    The streaming metrics (response/slowdown sums, max, histogram and
+    the optional timeline bins) are folded *per event*: each dispatch
+    site only records the (rid, completion, exec) triple in the
+    per-event ``ev_*`` registers — three cheap selects, no scatters —
+    and the engine applies the fold once at the end of the event
+    (`_fold_event`). The accumulation order is then exactly the event
+    order, which makes the streamed sums bitwise invariant to the
+    window size (a deferred batch fold would regroup the reduction
+    tree wherever a window boundary cuts a segment), and both modes
+    share the fold so streamed means stay bit-identical to exact-mode
+    means. At most one dispatch happens per event (call sites are
+    mutually exclusive), so the registers cannot clobber a live
+    record.
+
+    In exact mode the per-request start/completion record additionally
+    goes into the segment overlay (d_*), batch-scattered into the
+    (L, N) result arrays once per SEG-event segment; the overlay slot
+    is indexed by the segment step and disabled sites drop instead of
+    clobbering it."""
     s = dict(s)
-    comp = t + ctx.exec_at(rid)
+    e = ctx.exec_at(rid)
+    comp = t + e
     si = _gidx(on, slot, ctx.C)
-    ki = jnp.where(on, ctx.k, SEG)
     s["slot_state"] = s["slot_state"].at[si].set(BUSY, mode="drop")
     s["slot_ready"] = s["slot_ready"].at[si].set(comp, mode="drop")
     s["slot_req"] = s["slot_req"].at[si].set(
         jnp.asarray(rid, jnp.int32), mode="drop")
     s["slot_used"] = s["slot_used"].at[si].set(t, mode="drop")
-    s["d_rid"] = s["d_rid"].at[ki].set(
-        jnp.asarray(rid, jnp.int32), mode="drop")
-    s["d_start"] = s["d_start"].at[ki].set(t, mode="drop")
-    s["d_comp"] = s["d_comp"].at[ki].set(comp, mode="drop")
+    s["ev_rid"] = jnp.where(on, jnp.asarray(rid, jnp.int32),
+                            s["ev_rid"])
+    s["ev_comp"] = jnp.where(on, comp, s["ev_comp"])
+    s["ev_exec"] = jnp.where(on, e, s["ev_exec"])
+    if not ctx.stream:
+        ki = jnp.where(on, ctx.k, SEG)
+        s["d_rid"] = s["d_rid"].at[ki].set(
+            jnp.asarray(rid, jnp.int32), mode="drop")
+        s["d_start"] = s["d_start"].at[ki].set(t, mode="drop")
+        s["d_comp"] = s["d_comp"].at[ki].set(comp, mode="drop")
+    return s
+
+
+def _fold_event(ctx, s):
+    """End-of-event metric fold of the ``ev_*`` dispatch registers
+    (see `dispatch`): one arrival gather + one histogram bin per
+    event, applied in event order so the streamed accumulators are
+    bitwise window-size invariant. Consumes (pops) the registers."""
+    s = dict(s)
+    rid = s.pop("ev_rid")
+    comp = s.pop("ev_comp")
+    e = s.pop("ev_exec")
+    on = rid >= 0
+    arr = ctx.arrival_at(rid)
+    resp = comp - arr
+    slow = resp / jnp.maximum(e, 1e-9)
+    cf = s["cf"]
+    cf = cf.at[jnp.array([CF_RSUM, CF_SSUM])].add(
+        jnp.stack([jnp.where(on, resp, 0.0),
+                   jnp.where(on, slow, 0.0)]))
+    cf = cf.at[CF_RMAX].max(jnp.where(on, resp, 0.0))
+    s["cf"] = cf
+    s["hist"] = s["hist"].at[
+        jnp.where(on, hist_bin(resp), jnp.int32(HIST_BINS))
+    ].add(1, mode="drop")
+    if ctx.tl_bins:
+        tb = jnp.clip((arr / ctx.tl_bucket).astype(jnp.int32),
+                      0, ctx.tl_bins - 1)
+        ti = jnp.where(on, tb, jnp.int32(ctx.tl_bins))
+        s["tl_cnt"] = s["tl_cnt"].at[ti].add(1, mode="drop")
+        s["tl_resp"] = s["tl_resp"].at[ti].add(resp, mode="drop")
+        s["tl_exec"] = s["tl_exec"].at[ti].add(e, mode="drop")
     return s
 
 
@@ -524,22 +782,37 @@ def hist_cdf(hist):
 # ------------------------------------------------------------ event loop
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
-                                    "queue_cap", "stream"))
+                                    "queue_cap", "stream", "window",
+                                    "tl_bins"))
 def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
               cap_mask, beta, prior, threshold, *, kernel, n_fns,
-              capacity, queue_cap, stream=False):
+              capacity, queue_cap, stream=False, window=0, tl_bins=0,
+              tl_bucket=60.0):
     """Lane-batched engine. Trace arrays are shared (T, ...) operands;
     ``trace_ix``, ``cap_mask`` and ``beta`` carry the leading lane
-    dimension L (one lane per sweep point). One ``while_loop`` runs all
-    lanes in segments of SEG events; the branchless per-event body is
-    vmapped per lane and finished lanes no-op via their guards.
+    dimension L (one lane per sweep point). The loop nest is windows ->
+    segments -> events (see the module docstring): per window the
+    shared operands are re-sliced into L2-resident slabs, and within a
+    window one ``while_loop`` runs all lanes in segments of SEG events
+    with the branchless per-event body vmapped per lane (finished and
+    parked lanes no-op via their guards).
 
-    ``stream=True`` drops the (L, N) per-request result arrays: the
-    dispatch overlay is folded into per-lane metric accumulators at
-    each segment flush, so carried state is independent of N."""
+    ``stream=True`` drops the (L, N) per-request result arrays: each
+    event folds its dispatch record into the per-lane metric
+    accumulators (`_fold_event`), so carried state is independent of N.
+    ``window`` (static; 0 -> `DEFAULT_WINDOW`) sets the slab size and
+    never changes results, only locality. ``tl_bins > 0`` adds the
+    minute-binned timeline fold (bucket width ``tl_bucket`` seconds).
+    """
     L = trace_ix.shape[0]
+    T_ = fn_id.shape[0]
     N = fn_id.shape[1]
     F, C, Q = n_fns, capacity, queue_cap
+
+    W = int(window) if window else DEFAULT_WINDOW
+    W = max(1, min(W, N))
+    n_win = -(-N // W)
+    NP = n_win * W
 
     fn_id = fn_id.astype(jnp.int32)
     arrival = arrival.astype(jnp.float64)
@@ -549,6 +822,7 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
     trace_ix = trace_ix.astype(jnp.int32)
     prior = jnp.float64(prior)
     threshold = jnp.float64(threshold)
+    tl_bucket = jnp.float64(tl_bucket)
 
     # positional queue layout (loop-invariant): request ids sorted by
     # (fn, id) + per-function offsets — fn j's k-th arrival is
@@ -561,6 +835,35 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         [jnp.zeros((counts.shape[0], 1), jnp.int32),
          jnp.cumsum(counts, axis=1)], axis=1)
 
+    # window-major operands: the trace padded to n_win * W (so slab
+    # slices never clamp) plus a second positional layout sorted by
+    # (window, fn, id) — window w's block is rows [w*W, (w+1)*W), with
+    # per-window per-fn offsets off_w and exclusive prefix counts
+    # cum_cnt (fn j's positions in window w are [cum_cnt[w], cum_cnt[w+1])).
+    # Single-window runs (W >= N) skip all of it statically — the full
+    # operands are the slab and every windowed read takes its fast path.
+    single_win = n_win == 1
+    if not single_win:
+        pad = NP - N
+        fn_pad = jnp.pad(fn_id, ((0, 0), (0, pad)))
+        arr_pad = jnp.pad(arrival, ((0, 0), (0, pad)),
+                          constant_values=BIG)
+        ex_pad = jnp.pad(exec_time, ((0, 0), (0, pad)))
+        win_key = ((jnp.arange(N, dtype=jnp.int32) // W)[None] * F
+                   + fn_id)
+        pos_w = jnp.pad(
+            jnp.argsort(win_key, axis=1, stable=True).astype(jnp.int32),
+            ((0, 0), (0, pad)))
+        wcnt = jax.vmap(
+            lambda kr: jnp.zeros((n_win * F,), jnp.int32).at[kr].add(1)
+        )(win_key).reshape(T_, n_win, F)
+        off_w = jnp.concatenate(
+            [jnp.zeros((T_, n_win, 1), jnp.int32),
+             jnp.cumsum(wcnt, axis=2)[:, :, :-1]], axis=2)
+        cum_cnt = jnp.concatenate(
+            [jnp.zeros((T_, 1, F), jnp.int32),
+             jnp.cumsum(wcnt, axis=1)], axis=1)
+
     s = dict(
         slot_fn=jnp.full((L, C), -1, jnp.int32),
         slot_state=jnp.full((L, C), IDLE, jnp.int32),
@@ -571,9 +874,6 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         q_head_pos=jnp.zeros((L, F), jnp.int32),
         q_head_rid=jnp.full((L, F), -1, jnp.int32),
         q_len=jnp.zeros((L, F), jnp.int32),
-        d_rid=jnp.full((L, SEG), N, jnp.int32),
-        d_start=jnp.zeros((L, SEG), jnp.float64),
-        d_comp=jnp.zeros((L, SEG), jnp.float64),
         est_sum=jnp.zeros((L, F), jnp.float64),
         est_n=jnp.zeros((L, F), jnp.int32),
         ci=jnp.zeros((L, NCI), jnp.int32),
@@ -581,8 +881,15 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         hist=jnp.zeros((L, HIST_BINS), jnp.int32),
     )
     if not stream:
+        s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+        s["d_start"] = jnp.zeros((L, SEG), jnp.float64)
+        s["d_comp"] = jnp.zeros((L, SEG), jnp.float64)
         s["start"] = jnp.full((L, N), -1.0, jnp.float64)
         s["completion"] = jnp.full((L, N), -1.0, jnp.float64)
+    if tl_bins:
+        s["tl_cnt"] = jnp.zeros((L, tl_bins), jnp.int32)
+        s["tl_resp"] = jnp.zeros((L, tl_bins), jnp.float64)
+        s["tl_exec"] = jnp.zeros((L, tl_bins), jnp.float64)
     if kernel.has_timers:
         s["arr_cnt"] = jnp.zeros((L, F), jnp.int32)
         s["tmr_pos"] = jnp.zeros((L, F), jnp.int32)
@@ -593,151 +900,207 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
 
     max_iters = 256 * N + 4096
     n_slot = 2 * C   # candidate positions: busy slots then cold slots
-
-    def lane_step(k, s, tix, cap_mask, beta):
-        ctx = EngineCtx(fn_id2=fn_id, arrival2=arrival, exec2=exec_time,
-                        cold2=t_cold, evict2=t_evict,
-                        pos_rids2=pos_rids, pos_off2=pos_off, tix=tix,
-                        cap_mask=cap_mask, beta=beta, prior=prior,
-                        threshold=threshold, k=k, n=N, f=F, c=C, q=Q)
-        ci = s["ci"]
-        active = (ci[CI_DONE] < N) & (ci[CI_STALL] == 0)
-        na = ci[CI_NEXT]
-        t_arr = jnp.where(na < N, ctx.arrival_at(na), BIG)
-        # fused next-event pick: one first-index argmin over candidate
-        # times laid out in priority order — position encodes both the
-        # same-time class order EXEC < COLD < TIMER(orig < rearm) <
-        # ARRIVAL and the within-class index tie-break (Python engine
-        # heap order)
-        ready = jnp.where(cap_mask, s["slot_ready"], BIG)
-        busy_key = jnp.where(s["slot_state"] == BUSY, ready, BIG)
-        cold_key = jnp.where(s["slot_state"] == COLD, ready, BIG)
-        if kernel.has_timers:
-            cand = jnp.concatenate([busy_key, cold_key, s["tmr_next"],
-                                    s["rearm_t"], t_arr[None]])
-        else:
-            cand = jnp.concatenate([busy_key, cold_key, t_arr[None]])
-        ei = jnp.argmin(cand)
-        t_ev = cand[ei]
-        live = active & (t_ev < BIG)
-        ev_slot = live & (ei < n_slot)
-        is_cold = ei >= C
-        slot = jnp.clip(jnp.where(is_cold, ei - C, ei), 0, C - 1)
-        ev_arr = live & (ei == cand.shape[0] - 1)
-
-        # ------------------------------------------------- slot event
-        cold_on = ev_slot & is_cold
-        exec_on = ev_slot & ~is_cold
-        rid_done = s["slot_req"][slot]
-        j_done = s["slot_fn"][slot]
-        e_done = ctx.exec_at(rid_done)
-        si = _gidx(ev_slot, slot, C)
-        ji = _gidx(exec_on, j_done, F)
-        exec_i = exec_on.astype(jnp.int32)
-        s = dict(s)
-        s["slot_state"] = s["slot_state"].at[si].set(IDLE, mode="drop")
-        s["slot_ready"] = s["slot_ready"].at[si].set(BIG, mode="drop")
-        s["slot_req"] = s["slot_req"].at[si].set(-1, mode="drop")
-        # estimator sees the completion before the policy reacts
-        s["est_sum"] = s["est_sum"].at[ji].add(e_done, mode="drop")
-        s["est_n"] = s["est_n"].at[ji].add(1, mode="drop")
-        s["cf"] = s["cf"].at[CF_GSUM].add(
-            jnp.where(exec_on, e_done, 0.0))
-        s["ci"] = s["ci"].at[jnp.array([CI_GN, CI_DONE])].add(
-            jnp.stack([exec_i, exec_i]))
-        s = kernel.on_cold_done(ctx, s, slot, t_ev, cold_on)
-        s = kernel.on_exec_done(ctx, s, slot, rid_done, t_ev, exec_on)
-
-        # ------------------------------------------------ timer event
-        if kernel.has_timers:
-            # originals (arrival + threshold, arrival order) vs the
-            # unique re-armed head; originals win exact ties (FIFO seq)
-            fire_orig = live & (ei >= n_slot) & (ei < n_slot + F)
-            fire_re = live & (ei >= n_slot + F) & (ei < n_slot + 2 * F)
-            ev_timer = fire_orig | fire_re
-            f_o = jnp.clip(ei - n_slot, 0, F - 1)
-            f_r = jnp.clip(ei - n_slot - F, 0, F - 1)
-            p_o = s["tmr_pos"][f_o]
-            rid_o = ctx.rid_at_pos(f_o, p_o)
-            succ = ctx.rid_at_pos(f_o, p_o + 1)
-            more = p_o + 1 < s["arr_cnt"][f_o]
-            oi = _gidx(fire_orig, f_o, F)
-            rid_r = s["rearm_rid"][f_r]
-            s = dict(s)
-            s["tmr_pos"] = s["tmr_pos"].at[oi].add(1, mode="drop")
-            s["tmr_next"] = s["tmr_next"].at[oi].set(
-                jnp.where(more, ctx.arrival_at(succ) + threshold, BIG),
-                mode="drop")
-            s["rearm_t"] = s["rearm_t"].at[
-                _gidx(fire_re, f_r, F)].set(BIG, mode="drop")
-            rid_t = jnp.where(fire_orig, rid_o, rid_r)
-            s = kernel.on_timer(ctx, s, rid_t, t_ev, ev_timer)
-
-        # ---------------------------------------------------- arrival
-        rid_a = jnp.minimum(na, N - 1)
-        s = dict(s)
-        if kernel.has_timers:
-            s["arr_cnt"] = s["arr_cnt"].at[
-                _gidx(ev_arr, ctx.fn_at(rid_a), F)].add(
-                1, mode="drop")
-        s["ci"] = s["ci"].at[jnp.array([CI_NEXT, CI_ITERS])].add(
-            jnp.stack([ev_arr.astype(jnp.int32),
-                       active.astype(jnp.int32)]))
-        s = kernel.on_arrival(ctx, s, rid_a, t_arr, ev_arr)
-
-        s = dict(s)
-        stall = jnp.where(
-            active & ~live, 1,
-            jnp.where(active & (s["ci"][CI_ITERS] >= max_iters), 2,
-                      s["ci"][CI_STALL]))
-        s["ci"] = s["ci"].at[CI_STALL].set(stall)
-        return s
-
-    step_lanes = jax.vmap(lane_step, in_axes=(None, 0, 0, 0, 0))
+    n_cand = n_slot + (2 * F if kernel.has_timers else 0) + 1
     lanes = jnp.arange(L, dtype=jnp.int32)
     lane_iota = lanes[:, None]
+    # per-lane (F,) cold/evict rows, gathered once (the (T, F) row
+    # gather would otherwise sit inside the per-event body)
+    t_cold_l = t_cold[trace_ix]
+    t_evict_l = t_evict[trace_ix]
 
-    def cond(s):
-        return jnp.any((s["ci"][:, CI_DONE] < N)
-                       & (s["ci"][:, CI_STALL] == 0))
+    def window_body(w, s):
+        base = w * W
+        if single_win:
+            slabs = (None,) * 7
+            win_end = N
+            is_last = True
+        else:
+            # shared (T, W) slabs for this window — contiguous copies,
+            # so the inner loop's gathers stay inside ~24*W bytes per
+            # trace
+            fn_s = lax.dynamic_slice_in_dim(fn_pad, base, W, 1)
+            arr_s = lax.dynamic_slice_in_dim(arr_pad, base, W, 1)
+            ex_s = lax.dynamic_slice_in_dim(ex_pad, base, W, 1)
+            pos_s = lax.dynamic_slice_in_dim(pos_w, base, W, 1)
+            offw = lax.dynamic_slice_in_dim(off_w, w, 1, 1)[:, 0]
+            cc_lo = lax.dynamic_slice_in_dim(cum_cnt, w, 1, 1)[:, 0]
+            cc_hi = lax.dynamic_slice_in_dim(cum_cnt, w + 1, 1, 1)[:, 0]
+            slabs = (fn_s, arr_s, ex_s, pos_s, offw, cc_lo, cc_hi)
+            win_end = jnp.minimum(base + W, N)
+            is_last = w >= n_win - 1
 
-    def segment(s):
-        s = dict(s)
-        s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+        def pick_events(s):
+            """Lane-stacked next-event pick: one segmented first-index
+            argmin over the (L, 2C[+2F]+1) candidate matrix resolves
+            time and tie-break for every lane at once — position
+            encodes the same-time class order EXEC < COLD <
+            TIMER(orig < rearm) < ARRIVAL and the within-class index
+            tie-break (Python engine heap order)."""
+            na = s["ci"][:, CI_NEXT]
+            r = jnp.minimum(na, N - 1)
+            if single_win:
+                t_arr = jnp.where(na < N, arrival[trace_ix, r], BIG)
+            else:
+                off = r - base
+                inw = (off >= 0) & (off < W)
+                sv = arr_s[trace_ix, jnp.where(inw, off, 0)]
+                fv = arrival[trace_ix, jnp.where(inw, base, r)]
+                t_arr = jnp.where(na < N, jnp.where(inw, sv, fv), BIG)
+            ready = jnp.where(cap_mask, s["slot_ready"], BIG)
+            st = s["slot_state"]
+            blocks = [jnp.where(st == BUSY, ready, BIG),
+                      jnp.where(st == COLD, ready, BIG)]
+            if kernel.has_timers:
+                blocks += [s["tmr_next"], s["rearm_t"]]
+            blocks.append(t_arr[:, None])
+            cand = jnp.concatenate(blocks, axis=1)
+            ei = jnp.argmin(cand, axis=1).astype(jnp.int32)
+            t_ev = jnp.take_along_axis(cand, ei[:, None], axis=1)[:, 0]
+            return ei, t_ev, t_arr
 
-        def step(k, s):
-            return step_lanes(k, s, trace_ix, cap_mask, beta)
+        def lane_step(k, s, tix, cold_l, evict_l, cap_mask, beta, ei,
+                      t_ev, t_arr):
+            ctx = EngineCtx(fn_id2=fn_id, arrival2=arrival,
+                            exec2=exec_time, cold2=cold_l,
+                            evict2=evict_l, pos_rids2=pos_rids,
+                            pos_off2=pos_off, slabs=slabs,
+                            win_base=base, win_w=W, tix=tix,
+                            cap_mask=cap_mask, beta=beta, prior=prior,
+                            threshold=threshold, k=k, n=N, f=F, c=C,
+                            q=Q, stream=stream, tl_bins=tl_bins,
+                            tl_bucket=tl_bucket)
+            ci = s["ci"]
+            active = (ci[CI_DONE] < N) & (ci[CI_STALL] == 0)
+            na = ci[CI_NEXT]
+            live = active & (t_ev < BIG)
+            # per-event dispatch registers (consumed by _fold_event)
+            s = dict(s)
+            s["ev_rid"] = jnp.int32(-1)
+            s["ev_comp"] = jnp.float64(0.0)
+            s["ev_exec"] = jnp.float64(0.0)
+            ev_slot = live & (ei < n_slot)
+            is_cold = ei >= C
+            slot = jnp.clip(jnp.where(is_cold, ei - C, ei), 0, C - 1)
+            # an arrival beyond the current window parks the lane (its
+            # time still won the pick, so every earlier event has been
+            # processed); the consume waits for the next window
+            ev_arr = live & (ei == n_cand - 1) & (na < win_end)
 
-        s = lax.fori_loop(0, SEG, step, s)
-        # flush the segment: *fold* the dispatch records into the
-        # streaming accumulators (and, in exact mode, scatter them into
-        # the per-request arrays) — the only writes to large carried
-        # arrays, paid once per SEG events, not per event
-        s = dict(s)
-        valid = s["d_rid"] < N
-        ridc = jnp.minimum(s["d_rid"], N - 1)
-        t_ix = trace_ix[:, None]
-        resp = jnp.where(valid, s["d_comp"] - arrival[t_ix, ridc], 0.0)
-        slow = jnp.where(
-            valid,
-            resp / jnp.maximum(exec_time[t_ix, ridc], 1e-9), 0.0)
-        cf = s["cf"]
-        cf = cf.at[:, CF_RSUM].add(resp.sum(axis=1))
-        cf = cf.at[:, CF_SSUM].add(slow.sum(axis=1))
-        cf = cf.at[:, CF_RMAX].max(resp.max(axis=1))
-        s["cf"] = cf
-        s["hist"] = s["hist"].at[
-            lane_iota, jnp.where(valid, hist_bin(resp),
-                                 jnp.int32(HIST_BINS))
-        ].add(1, mode="drop")
-        if not stream:
-            s["start"] = s["start"].at[lane_iota, s["d_rid"]].set(
-                s["d_start"], mode="drop")
-            s["completion"] = s["completion"].at[
-                lane_iota, s["d_rid"]].set(s["d_comp"], mode="drop")
-        return s
+            # ------------------------------------------------- slot event
+            cold_on = ev_slot & is_cold
+            exec_on = ev_slot & ~is_cold
+            rid_done = s["slot_req"][slot]
+            j_done = s["slot_fn"][slot]
+            e_done = ctx.exec_at(rid_done)
+            si = _gidx(ev_slot, slot, C)
+            ji = _gidx(exec_on, j_done, F)
+            exec_i = exec_on.astype(jnp.int32)
+            s = dict(s)
+            s["slot_state"] = s["slot_state"].at[si].set(IDLE,
+                                                         mode="drop")
+            s["slot_ready"] = s["slot_ready"].at[si].set(BIG,
+                                                         mode="drop")
+            s["slot_req"] = s["slot_req"].at[si].set(-1, mode="drop")
+            # estimator sees the completion before the policy reacts
+            s["est_sum"] = s["est_sum"].at[ji].add(e_done, mode="drop")
+            s["est_n"] = s["est_n"].at[ji].add(1, mode="drop")
+            s["cf"] = s["cf"].at[CF_GSUM].add(
+                jnp.where(exec_on, e_done, 0.0))
+            s["ci"] = s["ci"].at[jnp.array([CI_GN, CI_DONE])].add(
+                jnp.stack([exec_i, exec_i]))
+            s = kernel.on_cold_done(ctx, s, slot, t_ev, cold_on)
+            s = kernel.on_exec_done(ctx, s, slot, rid_done, t_ev,
+                                    exec_on)
 
-    final = lax.while_loop(cond, segment, s)
+            # ------------------------------------------------ timer event
+            ev_timer = jnp.bool_(False)
+            if kernel.has_timers:
+                # originals (arrival + threshold, arrival order) vs the
+                # unique re-armed head; originals win exact ties (FIFO
+                # seq)
+                fire_orig = live & (ei >= n_slot) & (ei < n_slot + F)
+                fire_re = (live & (ei >= n_slot + F)
+                           & (ei < n_slot + 2 * F))
+                ev_timer = fire_orig | fire_re
+                f_o = jnp.clip(ei - n_slot, 0, F - 1)
+                f_r = jnp.clip(ei - n_slot - F, 0, F - 1)
+                p_o = s["tmr_pos"][f_o]
+                rid_o = ctx.rid_at_pos(f_o, p_o)
+                succ = ctx.rid_at_pos(f_o, p_o + 1)
+                more = p_o + 1 < s["arr_cnt"][f_o]
+                oi = _gidx(fire_orig, f_o, F)
+                rid_r = s["rearm_rid"][f_r]
+                s = dict(s)
+                s["tmr_pos"] = s["tmr_pos"].at[oi].add(1, mode="drop")
+                s["tmr_next"] = s["tmr_next"].at[oi].set(
+                    jnp.where(more, ctx.arrival_at(succ) + threshold,
+                              BIG),
+                    mode="drop")
+                s["rearm_t"] = s["rearm_t"].at[
+                    _gidx(fire_re, f_r, F)].set(BIG, mode="drop")
+                rid_t = jnp.where(fire_orig, rid_o, rid_r)
+                s = kernel.on_timer(ctx, s, rid_t, t_ev, ev_timer)
+
+            # ---------------------------------------------------- arrival
+            rid_a = jnp.minimum(na, N - 1)
+            s = dict(s)
+            if kernel.has_timers:
+                s["arr_cnt"] = s["arr_cnt"].at[
+                    _gidx(ev_arr, ctx.fn_at(rid_a), F)].add(
+                    1, mode="drop")
+            # n_events counts processed events (parked no-op spins are
+            # excluded, so the count is window-size invariant)
+            progress = ev_slot | ev_timer | ev_arr
+            s["ci"] = s["ci"].at[jnp.array([CI_NEXT, CI_ITERS])].add(
+                jnp.stack([ev_arr.astype(jnp.int32),
+                           progress.astype(jnp.int32)]))
+            s = kernel.on_arrival(ctx, s, rid_a, t_arr, ev_arr)
+
+            s = _fold_event(ctx, s)
+            s = dict(s)
+            stall = jnp.where(
+                active & ~live, 1,
+                jnp.where(active & (s["ci"][CI_ITERS] >= max_iters), 2,
+                          s["ci"][CI_STALL]))
+            s["ci"] = s["ci"].at[CI_STALL].set(stall)
+            return s
+
+        step_lanes = jax.vmap(
+            lane_step, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+
+        def cond(s):
+            ci = s["ci"]
+            act = (ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0)
+            return jnp.any(act & (is_last | (ci[:, CI_NEXT] < win_end)))
+
+        def segment(s):
+            # streaming metrics fold per event (`dispatch` registers +
+            # `_fold_event`) — a segment is pure event-stepping
+            # plus, in exact mode, the batched overlay scatter into the
+            # (L, N) per-request arrays (the only large-array write,
+            # paid once per SEG events, not per event)
+            if not stream:
+                s = dict(s)
+                s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+
+            def step(k, s):
+                ei, t_ev, t_arr = pick_events(s)
+                return step_lanes(k, s, trace_ix, t_cold_l, t_evict_l,
+                                  cap_mask, beta, ei, t_ev, t_arr)
+
+            s = lax.fori_loop(0, SEG, step, s)
+            if not stream:
+                s = dict(s)
+                s["start"] = s["start"].at[lane_iota, s["d_rid"]].set(
+                    s["d_start"], mode="drop")
+                s["completion"] = s["completion"].at[
+                    lane_iota, s["d_rid"]].set(s["d_comp"], mode="drop")
+            return s
+
+        return lax.while_loop(cond, segment, s)
+
+    final = (window_body(0, s) if single_win
+             else lax.fori_loop(0, n_win, window_body, s))
     ci, cf = final["ci"], final["cf"]
     out = dict(cold_starts=ci[:, CI_COLD], cold_time=cf[:, CF_COLDT],
                evictions=ci[:, CI_EVICT], evict_time=cf[:, CF_EVICTT],
@@ -746,6 +1109,10 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
                done=ci[:, CI_DONE],
                resp_sum=cf[:, CF_RSUM], slow_sum=cf[:, CF_SSUM],
                max_response=cf[:, CF_RMAX], resp_hist=final["hist"])
+    if tl_bins:
+        out["tl_count"] = final["tl_cnt"]
+        out["tl_resp_sum"] = final["tl_resp"]
+        out["tl_exec_sum"] = final["tl_exec"]
     if not stream:
         out["start"] = final["start"]
         out["completion"] = final["completion"]
@@ -757,17 +1124,23 @@ def simulate_policy_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
                         policy: str = "esff", n_fns: int, capacity: int,
                         queue_cap: int = 512, beta=None,
                         prior: float = 0.1, threshold: float = 0.1,
-                        cap_mask=None, stream: bool = False
+                        cap_mask=None, stream: bool = False,
+                        window: int = 0, tl_bins: int = 0,
+                        tl_bucket: float = 60.0
                         ) -> Dict[str, jnp.ndarray]:
     """Run ``policy`` over a (sorted-by-arrival) request stream.
 
     ``policy`` selects a kernel from `repro.core.jax_policies.KERNELS`
     statically, so each policy gets its own jit specialisation. ``beta``
     defaults to the kernel's own default (2.0 for ESFF-H, else 1.0).
-    Returns the counter block (cold starts, evictions, overflow,
-    stalled) plus the streaming metric accumulators (resp_sum /
-    slow_sum / max_response / resp_hist); with the default
-    ``stream=False`` also per-request start/completion.
+    ``window`` sets the cache-window slab size (0 -> `DEFAULT_WINDOW`;
+    results are bitwise independent of it). ``tl_bins > 0`` adds the
+    minute-binned timeline accumulators (``tl_count`` / ``tl_resp_sum``
+    / ``tl_exec_sum``). Returns the counter block (cold starts,
+    evictions, overflow, stalled) plus the streaming metric
+    accumulators (resp_sum / slow_sum / max_response / resp_hist);
+    with the default ``stream=False`` also per-request
+    start/completion.
     """
     from repro.core.jax_policies import KERNELS  # deferred: cycle-free
     kernel = KERNELS[policy]
@@ -783,14 +1156,16 @@ def simulate_policy_jax(fn_id, arrival, exec_time, t_cold, t_evict, *,
                     jnp.asarray(beta, jnp.float64).reshape((1,)),
                     jnp.float64(prior), jnp.float64(threshold),
                     kernel=kernel, n_fns=n_fns, capacity=capacity,
-                    queue_cap=queue_cap, stream=stream)
+                    queue_cap=queue_cap, stream=stream, window=window,
+                    tl_bins=tl_bins, tl_bucket=tl_bucket)
     return {k: jnp.squeeze(v, axis=0) for k, v in out.items()}
 
 
 def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
                                *, beta=None, queue_cap: int = 1024,
                                prior: float = 0.1,
-                               threshold: float = 0.1
+                               threshold: float = 0.1,
+                               window: int = 0
                                ) -> Dict[str, np.ndarray]:
     """Trace-object convenience wrapper mirroring ``simulate()``
     (exact per-request mode)."""
@@ -800,7 +1175,7 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
         jnp.asarray(a["exec_time"]), jnp.asarray(a["cold_start"]),
         jnp.asarray(a["evict"]), policy=policy,
         n_fns=trace.n_functions, capacity=capacity, queue_cap=queue_cap,
-        beta=beta, prior=prior, threshold=threshold)
+        beta=beta, prior=prior, threshold=threshold, window=window)
     out = {k: np.asarray(v) for k, v in out.items()}
     out["response"] = out["completion"] - a["arrival"]
     out["mean_response"] = float(out["response"].mean())
@@ -809,10 +1184,11 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
-                                    "queue_cap", "stream"))
+                                    "queue_cap", "stream", "window",
+                                    "tl_bins"))
 def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                    threshold, *, kernel, n_fns, capacity, queue_cap,
-                   stream=True):
+                   stream=True, window=0, tl_bins=0, tl_bucket=60.0):
     """Lane-batched run + on-device metric reduction. Means and
     slowdowns come from the streaming accumulators in *both* modes (so
     streamed and exact sweeps agree bitwise); p99 is exact in exact
@@ -820,7 +1196,8 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
     out = _simulate(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                     threshold, kernel=kernel, n_fns=n_fns,
                     capacity=capacity, queue_cap=queue_cap,
-                    stream=stream)
+                    stream=stream, window=window, tl_bins=tl_bins,
+                    tl_bucket=tl_bucket)
     N = fn.shape[1]
     if stream:
         p99 = hist_quantile(out["resp_hist"], 0.99, N,
@@ -828,16 +1205,21 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
     else:
         resp = out["completion"] - arr[tix]
         p99 = jnp.percentile(resp, 99.0, axis=1)
-    return dict(mean_response=out["resp_sum"] / N,
-                mean_slowdown=out["slow_sum"] / N,
-                p99_response=p99,
-                max_response=out["max_response"],
-                resp_hist=out["resp_hist"],
-                cold_starts=out["cold_starts"],
-                cold_time=out["cold_time"],
-                evictions=out["evictions"],
-                overflow=out["overflow"],
-                stalled=out["stalled"])
+    res = dict(mean_response=out["resp_sum"] / N,
+               mean_slowdown=out["slow_sum"] / N,
+               p99_response=p99,
+               max_response=out["max_response"],
+               resp_hist=out["resp_hist"],
+               cold_starts=out["cold_starts"],
+               cold_time=out["cold_time"],
+               evictions=out["evictions"],
+               overflow=out["overflow"],
+               stalled=out["stalled"])
+    if tl_bins:
+        res["tl_count"] = out["tl_count"]
+        res["tl_resp_sum"] = out["tl_resp_sum"]
+        res["tl_exec_sum"] = out["tl_exec_sum"]
+    return res
 
 
 def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
@@ -846,7 +1228,9 @@ def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
                                      "openwhisk_v2"),
           capacities: Sequence[int] = (8, 16, 32),
           betas=None, *, queue_cap: int = 2048, prior: float = 0.1,
-          threshold: float = 0.1, stream: bool = True
+          threshold: float = 0.1, stream: bool = True,
+          window: int = 0, tl_bins: int = 0, tl_bucket: float = 60.0,
+          lane_chunk: Union[int, str, None] = None
           ) -> Dict[str, np.ndarray]:
     """Batched policy x trace x capacity x beta sweep in one device call
     per policy.
@@ -862,9 +1246,14 @@ def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
     (default) keeps carried state independent of trace length: means
     are exact, p99 is histogram-derived (one ~1.33x bin). ``betas=None``
     uses each kernel's default (so ESFF-H keeps its hysteresis).
-    Returns metric arrays of shape (P, T, K, B) keyed by metric name
-    ((P, T, K, B, HIST_BINS) for ``resp_hist``), plus the axis values
-    under ``"axes"``.
+    ``window`` sets the engine's cache-window size (0 -> default;
+    results are bitwise window-invariant). ``lane_chunk`` sets lanes
+    per device call (None -> ``REPRO_LANE_CHUNK`` env or the
+    per-backend `LANE_CHUNKS` table; ``"auto"`` probes — see
+    `resolve_lane_chunk`). Returns metric arrays of shape (P, T, K, B)
+    keyed by metric name ((P, T, K, B, HIST_BINS) for ``resp_hist``,
+    (P, T, K, B, tl_bins) for the timeline accumulators when
+    ``tl_bins > 0``), plus the axis values under ``"axes"``.
     """
     from repro.core.jax_policies import KERNELS
     if isinstance(traces, (Trace, dict)):
@@ -884,6 +1273,7 @@ def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
     T, K = len(traces), len(capacities)
     C = max(capacities)
     masks = np.stack([np.arange(C) < c for c in capacities])
+    chunk = resolve_lane_chunk(lane_chunk)
 
     shared = {k: jnp.asarray(v) for k, v in stacked.items()}
 
@@ -894,7 +1284,8 @@ def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
             jnp.asarray(mask_l), jnp.asarray(beta_l),
             jnp.float64(prior), jnp.float64(threshold),
             kernel=KERNELS[p], n_fns=F, capacity=C,
-            queue_cap=queue_cap, stream=stream)
+            queue_cap=queue_cap, stream=stream, window=window,
+            tl_bins=tl_bins, tl_bucket=tl_bucket)
         return jax.device_get(out)
 
     chunks = []
@@ -906,14 +1297,14 @@ def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
         tix_l = np.repeat(np.arange(T, dtype=np.int32), K * B)
         mask_l = np.tile(np.repeat(masks, B, axis=0), (T, 1))
         beta_l = np.tile(bs, T * K)
-        for lo in range(0, T * K * B, LANE_CHUNK):
-            hi = lo + LANE_CHUNK
+        for lo in range(0, T * K * B, chunk):
+            hi = lo + chunk
             chunks.append((p, tix_l[lo:hi], mask_l[lo:hi],
                            beta_l[lo:hi]))
 
     # device calls overlap on the host thread pool (XLA releases the
-    # GIL while a computation runs); lanes are chunked to LANE_CHUNK
-    # per call to stay in XLA:CPU's fast regime
+    # GIL while a computation runs); lanes are chunked to the resolved
+    # lane_chunk per call to stay in the backend's fast regime
     from concurrent.futures import ThreadPoolExecutor
     with ThreadPoolExecutor(max_workers=2) as tp:
         outs = list(tp.map(lambda c: run_chunk(*c), chunks))

@@ -32,6 +32,17 @@ order via the per-slot creation sequence numbers (``slot_seq``) the
 engine maintains: victim scans break ties toward the earliest-created
 instance, exactly like scanning ``instances`` in ``inst_id`` order with
 strict inequalities.
+
+Kernels address the trace exclusively through the `EngineCtx` read
+API (``fn_at`` / ``arrival_at`` / ``exec_at`` / ``rid_at_pos``) with
+*absolute* request ids and per-function positions; the engine's
+cache-window machinery translates those to window-relative slab
+indices underneath (and to full-operand fallbacks for ids whose queue
+links span a window boundary), so a kernel is automatically correct —
+and bitwise identical — at every window size. Dispatch accounting
+likewise rides the engine's ``dispatch`` helper, whose per-event
+metric registers keep the streamed accumulators window-invariant; a
+kernel must never write result state directly.
 """
 from __future__ import annotations
 

@@ -70,6 +70,10 @@ class Trace:
     functions: List[FunctionProfile]
     requests: List[Request]
     meta: dict = field(default_factory=dict)
+    # memoized to_arrays() view (not part of the value: excluded from
+    # comparison/repr)
+    _arrays: Optional[dict] = field(default=None, repr=False,
+                                    compare=False)
 
     def __post_init__(self) -> None:
         self.requests.sort(key=lambda r: (r.arrival, r.req_id))
@@ -101,17 +105,30 @@ class Trace:
 
     # ------------------------------------------------------------------ io
     def to_arrays(self):
-        """Columnar view (used by the vectorized JAX simulator and npz io)."""
-        n = len(self.requests)
-        fn = np.empty(n, np.int32)
-        arr = np.empty(n, np.float64)
-        ex = np.empty(n, np.float64)
-        for i, r in enumerate(self.requests):
-            fn[i], arr[i], ex[i] = r.fn_id, r.arrival, r.exec_time
-        cold = np.array([f.cold_start for f in self.functions], np.float64)
-        evict = np.array([f.evict for f in self.functions], np.float64)
-        return dict(fn_id=fn, arrival=arr, exec_time=ex,
-                    cold_start=cold, evict=evict)
+        """Columnar view (used by the vectorized JAX simulator and npz io).
+
+        Memoized: the exported columns (ids, arrivals, exec/cold/evict
+        times) are immutable for a Trace's lifetime — the simulator
+        only ever mutates per-request ``start``/``completion``, which
+        are not part of the view — and re-walking 10^4+ Request objects
+        per ``sweep`` call is pure-Python overhead the vectorised
+        engine would otherwise pay on every repeat sweep."""
+        if self._arrays is None:
+            n = len(self.requests)
+            fn = np.empty(n, np.int32)
+            arr = np.empty(n, np.float64)
+            ex = np.empty(n, np.float64)
+            for i, r in enumerate(self.requests):
+                fn[i], arr[i], ex[i] = r.fn_id, r.arrival, r.exec_time
+            cold = np.array([f.cold_start for f in self.functions],
+                            np.float64)
+            evict = np.array([f.evict for f in self.functions],
+                             np.float64)
+            self._arrays = dict(fn_id=fn, arrival=arr, exec_time=ex,
+                                cold_start=cold, evict=evict)
+            for v in self._arrays.values():
+                v.setflags(write=False)   # shared across calls
+        return dict(self._arrays)
 
     @staticmethod
     def from_arrays(a: dict, meta: Optional[dict] = None) -> "Trace":

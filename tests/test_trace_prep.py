@@ -1,0 +1,102 @@
+"""Azure-2021 trace preprocessing (`scripts/prepare_azure_trace.py`)
+and the generator's windowed columnar emission — pure-numpy paths, no
+engine involved."""
+import importlib.util
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.request import Trace
+from repro.traces import synth_azure_arrays, synth_azure_windows
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), os.pardir,
+                       "scripts", "prepare_azure_trace.py")
+
+
+def _load_script():
+    spec = importlib.util.spec_from_file_location(
+        "prepare_azure_trace", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def prep():
+    return _load_script()
+
+
+def _fake_invocations():
+    # completion-stamped, deliberately out of arrival order; one
+    # sub-millisecond duration to exercise the 1 ms floor
+    funcs = ["f-b", "f-a", "f-b", "f-c", "f-a", "f-b"]
+    end_ts = [105.0, 101.0, 103.5, 110.0, 104.0, 102.0]
+    durs = [2.0, 0.5, 1.5, 0.0004, 1.0, 0.25]
+    return funcs, end_ts, durs
+
+
+def test_convert_invocations_semantics(prep):
+    funcs, end_ts, durs = _fake_invocations()
+    a = prep.convert_invocations(funcs, end_ts, durs, seed=1)
+    arr = a["arrival"]
+    assert arr[0] == 0.0                       # shifted to t = 0
+    assert np.all(np.diff(arr) >= 0)           # arrival-sorted
+    assert np.all(a["exec_time"] >= 1e-3)      # 1 ms floor
+    # arrivals: end - dur = [103.0, 100.5, 102.0, 109.9996, 103.0, 101.75]
+    # sorted order: f-a(100.5), f-b(101.75), f-b(102.0), f-b(103.0),
+    #               f-a(103.0), f-c(109.9996) — ids dense by first seen
+    np.testing.assert_array_equal(a["fn_id"], [0, 1, 1, 1, 0, 2])
+    assert len(a["cold_start"]) == 3 == len(a["evict"])
+    assert np.all((a["cold_start"] >= 0.5) & (a["cold_start"] <= 1.5))
+    # seeded draws are reproducible
+    b = prep.convert_invocations(funcs, end_ts, durs, seed=1)
+    np.testing.assert_array_equal(a["cold_start"], b["cold_start"])
+
+
+def test_convert_head_truncates_earliest_arrivals(prep):
+    funcs, end_ts, durs = _fake_invocations()
+    a = prep.convert_invocations(funcs, end_ts, durs, head=3)
+    assert len(a["fn_id"]) == 3
+    full = prep.convert_invocations(funcs, end_ts, durs)
+    np.testing.assert_allclose(a["arrival"], full["arrival"][:3])
+    # function catalogue covers only the kept slice
+    assert len(a["cold_start"]) == len(np.unique(a["fn_id"]))
+
+
+def test_cli_roundtrips_through_trace_load_npz(prep, tmp_path):
+    funcs, end_ts, durs = _fake_invocations()
+    csv_path = tmp_path / "azure.csv"
+    with open(csv_path, "w") as f:
+        f.write("app,func,end_timestamp,duration\n")   # header skipped
+        for fn, t, d in zip(funcs, end_ts, durs):
+            f.write(f"app-x,{fn},{t},{d}\n")
+    out = tmp_path / "azure.npz"
+    assert prep.main(["--csv", str(csv_path), "--out", str(out),
+                      "--head", "6"]) == 0
+    tr = Trace.load_npz(str(out))
+    assert len(tr) == 6
+    assert tr.n_functions == 3
+    ref = prep.convert_invocations(funcs, end_ts, durs, head=6)
+    np.testing.assert_allclose(
+        [r.arrival for r in tr.requests], ref["arrival"])
+
+
+def test_cli_missing_csv_exits_nonzero(prep, tmp_path):
+    assert prep.main(["--csv", str(tmp_path / "nope.csv"),
+                      "--out", str(tmp_path / "o.npz")]) == 2
+
+
+def test_synth_azure_windows_partition_the_columns():
+    full = synth_azure_arrays(n_functions=10, n_requests=500, seed=5)
+    wins = list(synth_azure_windows(n_functions=10, n_requests=500,
+                                    seed=5, window=128))
+    assert [w["base"] for w in wins] == [0, 128, 256, 384]
+    for key in ("fn_id", "arrival", "exec_time"):
+        np.testing.assert_array_equal(
+            np.concatenate([w[key] for w in wins]), full[key])
+    for w in wins:
+        np.testing.assert_array_equal(w["cold_start"],
+                                      full["cold_start"])
+        assert len(w["fn_id"]) <= 128

@@ -1,14 +1,23 @@
-"""Shared benchmark machinery: the paper's default evaluation setup and
-CSV emission."""
+"""Shared benchmark machinery: the paper's default evaluation setup.
+
+Trace provenance goes through `repro.api.TraceSource` —
+`default_trace_source` declares the shared benchmark stream (synthetic
+Azure-like by default, a real Azure-2021 npz slice when configured)
+and every figure script lowers it through `repro.api.ExperimentSpec`.
+The old ``REPRO_AZURE_NPZ`` environment variable still works as a
+*deprecated* fallback that constructs an `NpzTrace`; pass
+``--azure-npz``/a source explicitly in new code.
+"""
 from __future__ import annotations
 
 import csv
 import os
 import sys
 import time
-from typing import Dict, Iterable, List
+import warnings
+from typing import Dict, Iterable, List, Optional
 
-from repro.traces import synth_azure_arrays, synth_azure_trace
+from repro.api import NpzTrace, SyntheticTrace, TraceSource
 # re-exported for benchmark entry points: call it from main(), not at
 # import — the persistent cache must stay scoped to engine workloads
 # (see repro/utils/jit_cache.py on deserialized donated-buffer steps)
@@ -27,59 +36,59 @@ POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
 TRACE_KW = dict(utilization=0.2, exec_median=0.1, exec_sigma=1.4,
                 burst_frac=0.3)
 
-
-def azure_npz_path():
-    """Path of a preprocessed real Azure-2021 npz slice, if configured
-    (``REPRO_AZURE_NPZ``; produced by scripts/prepare_azure_trace.py —
-    see docs/azure_trace.md)."""
-    return os.environ.get("REPRO_AZURE_NPZ", "")
+_WARNED_ENV = False
 
 
-def load_trace_npz_arrays(path):
-    """Columnar arrays of a ``Trace.load_npz``-format npz (the engine's
-    fast path — no Request objects)."""
-    import numpy as np
-    with np.load(path) as z:
-        return {k: z[k] for k in ("fn_id", "arrival", "exec_time",
-                                  "cold_start", "evict")}
+def _deprecated_env_npz() -> Optional[str]:
+    """The ``REPRO_AZURE_NPZ`` fallback (deprecated: declare an
+    `NpzTrace` instead)."""
+    global _WARNED_ENV
+    path = os.environ.get("REPRO_AZURE_NPZ", "")
+    if path and not _WARNED_ENV:
+        _WARNED_ENV = True
+        warnings.warn(
+            "REPRO_AZURE_NPZ is deprecated; construct "
+            "repro.api.NpzTrace(path) (or pass --trace/--azure-npz "
+            "where a benchmark offers it) instead",
+            DeprecationWarning, stacklevel=3)
+    return path or None
 
 
-_NPZ_TRACE_CACHE: dict = {}
+def default_trace_source(seed: int = 0, n_requests: Optional[int] = None,
+                         **kw) -> TraceSource:
+    """The shared benchmark trace, as a declarative `TraceSource`.
 
-
-def default_trace(seed: int = 0, **kw):
-    """The shared benchmark trace. With ``REPRO_AZURE_NPZ`` set, the
-    real Azure 2021 slice is loaded instead (``seed``/generator knobs
-    are then ignored; per-figure ``head``/scale knobs still apply).
-    The npz Trace is cached per path — figure scripts call this inside
-    their sweep loops, and rebuilding 6e5 Request objects per call
-    costs seconds each time."""
-    npz = azure_npz_path()
-    if npz:
-        if npz not in _NPZ_TRACE_CACHE:
-            from repro.core.request import Trace
-            _NPZ_TRACE_CACHE[npz] = Trace.load_npz(npz)
-        return _NPZ_TRACE_CACHE[npz]
-    params = dict(TRACE_KW)
-    params.update(kw)
-    return synth_azure_trace(n_functions=N_FUNCTIONS,
-                             n_requests=N_REQUESTS, seed=seed, **params)
-
-
-def default_trace_arrays(seed: int = 0, n_requests: int = None, **kw):
-    """Columnar default trace (no Request objects) — the fast path for
-    large-N engine benchmarks. ``REPRO_AZURE_NPZ`` substitutes the real
-    slice only when ``n_requests`` is None (explicit sizes — the
-    engine-scale N-curve tiers — stay synthetic)."""
-    npz = azure_npz_path()
+    Synthetic Azure-like by default (`SyntheticTrace` over `TRACE_KW`
+    with the paper's §VI-A scale). The deprecated ``REPRO_AZURE_NPZ``
+    env var substitutes the real Azure-2021 slice when ``n_requests``
+    is None (explicit sizes — the engine-scale N-curve tiers — stay
+    synthetic); generator knobs are then ignored. Sources cache their
+    materialised arrays, so figures sharing one source pay the
+    generation/load cost once.
+    """
+    npz = _deprecated_env_npz()
     if npz and n_requests is None:
-        return load_trace_npz_arrays(npz)
+        return NpzTrace(path=npz)
     params = dict(TRACE_KW)
     params.update(kw)
-    return synth_azure_arrays(
+    return SyntheticTrace.make(
         n_functions=N_FUNCTIONS,
         n_requests=N_REQUESTS if n_requests is None else n_requests,
         seed=seed, **params)
+
+
+_TRACE_CACHE: dict = {}
+
+
+def default_trace(seed: int = 0, **kw):
+    """`repro.core.request.Trace` view of `default_trace_source` (the
+    Python event engine's representation; cached per source — the
+    ablation loops call this repeatedly and rebuilding 10^4+ Request
+    objects per call costs seconds)."""
+    src = default_trace_source(seed, **kw)
+    if src not in _TRACE_CACHE:
+        _TRACE_CACHE[src] = src.to_trace()
+    return _TRACE_CACHE[src]
 
 
 def emit(rows: List[Dict], header: Iterable[str], out=None) -> None:

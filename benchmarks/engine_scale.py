@@ -5,18 +5,21 @@ lane regardless of N (jax_engine perf-contract rule 4) and reads the
 trace through cache-windowed slabs (rule 6), so a 10^6-request
 synthetic Azure stream — the scale of the paper's §VI Azure evaluation
 and beyond — runs through the batched grid on one CPU at a roughly
-flat per-request cost. Traces come from the columnar generator
-(`synth_azure_arrays`); Request objects are never materialised.
+flat per-request cost. Traces are declared as `repro.api` sources
+(synthetic generator specs; Request objects are never materialised)
+and lowered through `ExperimentSpec`.
 
     PYTHONPATH=src python -m benchmarks.engine_scale [--quick]
-        [--window W] [--trace azure.npz]
+        [--window W] [--trace azure.npz] [--devices D]
 
 ``--quick`` stops at 3e5 requests (CI-friendly); the default sweeps the
 full 10^6-tier curve. ``--window`` overrides the engine's cache-window
 size (results are bitwise window-invariant; only throughput moves).
 ``--trace`` additionally runs the policies over a preprocessed real
 Azure-2021 npz slice (scripts/prepare_azure_trace.py — see
-docs/azure_trace.md). REPRO_SCALE_POLICIES overrides the policy set.
+docs/azure_trace.md). ``--devices`` caps the runner's local-device
+sharding (default: all). REPRO_SCALE_POLICIES overrides the policy
+set.
 """
 from __future__ import annotations
 
@@ -24,11 +27,10 @@ import argparse
 import os
 import time
 
-from benchmarks.common import (default_trace_arrays, emit,
-                               enable_compilation_cache,
-                               load_trace_npz_arrays)
-from repro.core.jax_engine import (DEFAULT_WINDOW, resolve_lane_chunk,
-                                   sweep)
+from benchmarks.common import (default_trace_source, emit,
+                               enable_compilation_cache)
+from repro.api import ExperimentSpec, NpzTrace, run_experiment
+from repro.core.jax_engine import DEFAULT_WINDOW, resolve_lane_chunk
 
 NS = (10_000, 30_000, 100_000, 300_000, 1_000_000)
 POLICIES = tuple(os.environ.get(
@@ -40,44 +42,46 @@ CAPACITY = 16
 QUEUE_CAP = 1 << 17
 
 
-def _run_one(arrs, policy, *, name, n, window, t_gen=0.0):
+def _run_one(src, policy, *, name, window, devices, t_gen=0.0):
     """One warm pass per jit specialisation, then the timed pass."""
-    kw = dict(policies=(policy,), capacities=(CAPACITY,),
-              queue_cap=QUEUE_CAP, stream=True, window=window)
-    sweep(arrs, **kw)
+    spec = ExperimentSpec(traces=[src], policies=(policy,),
+                          capacities=(CAPACITY,), queue_cap=QUEUE_CAP,
+                          stream=True, window=window, devices=devices)
+    run_experiment(spec)
     t0 = time.perf_counter()
-    out = sweep(arrs, **kw)
+    rs = run_experiment(spec)
     dt = time.perf_counter() - t0
-    if int(out["overflow"].sum()) or int(out["stalled"].sum()):
-        raise RuntimeError(
-            f"engine_scale {policy} {name} overflowed/stalled "
-            "— raise queue_cap")
+    n = rs.meta["n_requests"]
+    rs.check()
     return dict(
         name=f"{policy}_{name}", n_requests=n, policy=policy,
         # record the *effective* window so BENCH provenance does not
         # depend on whether the default was spelled out
         window=(window or DEFAULT_WINDOW),
         us_per_call=dt * 1e6, req_s=n / dt,
-        mean_response=float(out["mean_response"][0, 0, 0, 0]),
-        p99_response=float(out["p99_response"][0, 0, 0, 0]),
+        mean_response=rs.value("mean_response", policy=policy),
+        p99_response=rs.value("p99_response", policy=policy),
         derived=f"{n / dt:.0f} req/s (gen {t_gen:.1f}s)")
 
 
-def run(ns=NS, policies=POLICIES, window=0, trace_npz=""):
+def run(ns=NS, policies=POLICIES, window=0, trace_npz="",
+        devices=None):
     rows = []
     for n in ns:
+        src = default_trace_source(seed=0, n_requests=n)
         t0 = time.perf_counter()
-        arrs = default_trace_arrays(seed=0, n_requests=n)
+        src.arrays()            # materialise outside the timed region
         t_gen = time.perf_counter() - t0
         for policy in policies:
-            rows.append(_run_one(arrs, policy, name=f"N{n}", n=n,
-                                 window=window, t_gen=t_gen))
+            rows.append(_run_one(src, policy, name=f"N{n}",
+                                 window=window, devices=devices,
+                                 t_gen=t_gen))
     if trace_npz:
-        arrs = load_trace_npz_arrays(trace_npz)
-        n = len(arrs["fn_id"])
+        src = NpzTrace(path=trace_npz)
+        n = src.n_requests
         for policy in policies:
-            rows.append(_run_one(arrs, policy, name=f"azure{n}", n=n,
-                                 window=window))
+            rows.append(_run_one(src, policy, name=f"azure{n}",
+                                 window=window, devices=devices))
     return rows
 
 
@@ -90,11 +94,14 @@ def main(argv=None):
                     help="engine cache-window override (0 = default)")
     ap.add_argument("--trace", default="",
                     help="also run a real Azure-2021 npz slice")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="cap local-device sharding (default: all)")
     args = ap.parse_args(argv)
     ns = tuple(n for n in NS if n <= 300_000) if args.quick else NS
     print(f"# lane_chunk={resolve_lane_chunk()} "
           f"window={args.window or 'default'}")
-    rows = run(ns=ns, window=args.window, trace_npz=args.trace)
+    rows = run(ns=ns, window=args.window, trace_npz=args.trace,
+               devices=args.devices)
     emit(rows, ("name", "n_requests", "policy", "window", "us_per_call",
                 "req_s", "mean_response", "p99_response", "derived"))
     return rows

@@ -2,42 +2,36 @@
 server capacity (8..32) for ESFF and the baselines.
 
 All six policies (FaasCache included, via its GREEDY-DUAL kernel) sweep
-every capacity in batched device calls (`repro.core.jax_engine.sweep`,
-capacities as vmapped slot masks) in streaming-metrics mode — no
-Python-engine fallback. p99 is histogram-derived (exact to one
-~1.33x log bin).
+every capacity through one `repro.api.ExperimentSpec` (capacities as
+vmapped slot masks, streaming-metrics mode). p99 is histogram-derived
+(exact to one ~1.33x log bin).
 """
 from __future__ import annotations
 
-from benchmarks.common import (POLICIES, default_trace, emit,
+from benchmarks.common import (POLICIES, default_trace_source, emit,
                                enable_compilation_cache)
-from repro.core.jax_engine import sweep
+from repro.api import ExperimentSpec, run_experiment
 
 CAPACITIES = (8, 12, 16, 20, 24, 28, 32)
 
 
 def run(seed: int = 0):
-    tr = default_trace(seed)
-    n = len(tr)
-    vec = sweep(tr, policies=POLICIES, capacities=CAPACITIES,
-                queue_cap=4096)
-    if int(vec["overflow"].sum()) or int(vec["stalled"].sum()):
-        raise RuntimeError("fig5 sweep overflowed/stalled — raise "
-                           "queue_cap")
+    src = default_trace_source(seed)
+    spec = ExperimentSpec(traces=[src], policies=POLICIES,
+                          capacities=CAPACITIES, queue_cap=4096)
+    rs = run_experiment(spec).check()
+    n = rs.meta["n_requests"]
     rows = []
-    for ci, cap in enumerate(CAPACITIES):
-        for pi, policy in enumerate(POLICIES):
-            cell = {k: vec[k][pi, 0, ci, 0]
-                    for k in ("mean_response", "mean_slowdown",
-                              "cold_time", "cold_starts",
-                              "p99_response")}
+    for cap in CAPACITIES:
+        for policy in POLICIES:
+            cell = rs.sel(policy=policy, capacity=cap)
             rows.append(dict(
                 capacity=cap, policy=policy,
-                mean_response=float(cell["mean_response"]),
-                mean_slowdown=float(cell["mean_slowdown"]),
-                cold_time_per_request=float(cell["cold_time"]) / n,
-                cold_starts=int(cell["cold_starts"]),
-                p99=float(cell["p99_response"]),
+                mean_response=cell.value("mean_response"),
+                mean_slowdown=cell.value("mean_slowdown"),
+                cold_time_per_request=cell.value("cold_time") / n,
+                cold_starts=int(cell.value("cold_starts")),
+                p99=cell.value("p99_response"),
             ))
     return rows
 

@@ -1,40 +1,36 @@
 """Paper Fig. 6: metrics vs workload-intensity ratio (0.6..1.4 interval
 scaling; >1 = lighter load).
 
-All intensity scalings share one request-array shape, so all six
-policies (FaasCache included) evaluate the whole ratio axis as a
-vmapped trace batch in one streaming sweep
-(`repro.core.jax_engine.sweep`) — no Python-engine fallback.
+The ratio axis is declared as `TraceSource.scaled` views of one shared
+source, so all six policies evaluate the whole axis as a vmapped trace
+batch in one `repro.api.ExperimentSpec` run.
 """
 from __future__ import annotations
 
-from benchmarks.common import (CAPACITY, POLICIES, default_trace,
-                               emit, enable_compilation_cache)
-from repro.core.jax_engine import sweep
+from benchmarks.common import (CAPACITY, POLICIES,
+                               default_trace_source, emit,
+                               enable_compilation_cache)
+from repro.api import ExperimentSpec, run_experiment
 
 RATIOS = (0.6, 0.8, 1.0, 1.2, 1.4)
 
 
 def run(seed: int = 0):
-    base = default_trace(seed)
+    base = default_trace_source(seed)
     traces = [base.scaled(r) for r in RATIOS]
-    n = len(base)
-    vec = sweep(traces, policies=POLICIES, capacities=(CAPACITY,),
-                queue_cap=4096)
-    if int(vec["overflow"].sum()) or int(vec["stalled"].sum()):
-        raise RuntimeError("fig6 sweep overflowed/stalled — raise "
-                           "queue_cap")
+    spec = ExperimentSpec(traces=traces, policies=POLICIES,
+                          capacities=(CAPACITY,), queue_cap=4096)
+    rs = run_experiment(spec).check()
+    n = rs.meta["n_requests"]
     rows = []
-    for ti, ratio in enumerate(RATIOS):
-        for pi, policy in enumerate(POLICIES):
+    for ratio, label in zip(RATIOS, rs.coords["trace"]):
+        for policy in POLICIES:
+            cell = rs.sel(policy=policy, trace=label)
             rows.append(dict(
                 intensity=ratio, policy=policy,
-                mean_response=float(
-                    vec["mean_response"][pi, ti, 0, 0]),
-                mean_slowdown=float(
-                    vec["mean_slowdown"][pi, ti, 0, 0]),
-                cold_time_per_request=float(
-                    vec["cold_time"][pi, ti, 0, 0]) / n,
+                mean_response=cell.value("mean_response"),
+                mean_slowdown=cell.value("mean_slowdown"),
+                cold_time_per_request=cell.value("cold_time") / n,
             ))
     return rows
 

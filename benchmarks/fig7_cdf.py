@@ -1,17 +1,18 @@
 """Paper Fig. 7: response-time and slowdown CDFs (+P95/P99 table).
 
-Runs every policy through the vectorised engine's *exact* per-request
-mode (`simulate_policy_from_trace`) — the distribution tail needs
-per-request records, which is precisely what the exact mode keeps and
-the streaming mode folds into its histogram.
+Runs every policy through the engine's *exact* per-request mode via
+`ExperimentSpec(stream=False, keep_per_request=True)` — the
+distribution tail needs per-request records, which is precisely what
+exact mode keeps and the streaming mode folds into its histogram.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (CAPACITY, POLICIES, default_trace,
-                               emit, enable_compilation_cache)
-from repro.core.jax_engine import simulate_policy_from_trace
+from benchmarks.common import (CAPACITY, POLICIES,
+                               default_trace_source, emit,
+                               enable_compilation_cache)
+from repro.api import ExperimentSpec, run_experiment
 
 
 def _cdf(values: np.ndarray, points: int):
@@ -21,15 +22,15 @@ def _cdf(values: np.ndarray, points: int):
 
 
 def run(seed: int = 0, points: int = 20):
-    tr = default_trace(seed)
-    exec_time = tr.to_arrays()["exec_time"]
+    src = default_trace_source(seed)
+    exec_time = src.arrays()["exec_time"]
+    spec = ExperimentSpec(traces=[src], policies=POLICIES,
+                          capacities=(CAPACITY,), queue_cap=4096,
+                          stream=False, keep_per_request=True)
+    rs = run_experiment(spec).check()
     rows, pct = [], []
     for policy in POLICIES:
-        r = simulate_policy_from_trace(tr, policy, CAPACITY,
-                                       queue_cap=4096)
-        if int(r["overflow"]) or int(r["stalled"]):
-            raise RuntimeError(f"fig7 {policy} overflowed/stalled")
-        resp = r["response"]
+        resp = rs.value("response", policy=policy)
         slow = resp / np.maximum(exec_time, 1e-9)
         xs, ys = _cdf(resp, points)
         for x, y in zip(xs, ys):

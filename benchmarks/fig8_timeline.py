@@ -1,33 +1,32 @@
 """Paper Fig. 8: per-minute detail of ESFF over a 20k-request window —
 request count, mean exec and mean response per arrival minute.
 
-Runs on the vectorised engine's streaming minute-binned accumulator
-(``tl_bins``: the same per-event fold as the response histogram, so the
-carried state stays O(bins) and the Python event engine is no longer
-needed here). Bin means agree with `repro.core.metrics.timeline` to
-float rounding — the engine is request-for-request equivalent and both
-divide per-bin sums by per-bin counts.
+Declares the window as a `TraceSource.head` view and rides the
+engine's streaming minute-binned accumulator
+(`ExperimentSpec(tl_bins=...)`: the same per-event fold as the
+response histogram, so the carried state stays O(bins)). Bin means
+agree with `repro.core.metrics.timeline` to float rounding — the
+engine is request-for-request equivalent and both divide per-bin sums
+by per-bin counts.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import CAPACITY, default_trace, emit
-from repro.core.jax_engine import sweep
+from benchmarks.common import CAPACITY, default_trace_source, emit
+from repro.api import ExperimentSpec, run_experiment
 
 
 def run(seed: int = 0, window: int = 20_000, bucket: float = 60.0):
-    tr = default_trace(seed).head(window)
-    a = tr.to_arrays()
-    n_bins = int(a["arrival"].max() // bucket) + 1
-    out = sweep(tr, policies=("esff",), capacities=(CAPACITY,),
-                queue_cap=4096, stream=True, tl_bins=n_bins,
-                tl_bucket=bucket)
-    if int(out["overflow"].sum()) or int(out["stalled"].sum()):
-        raise RuntimeError("fig8 engine run overflowed/stalled")
-    cnt = np.asarray(out["tl_count"][0, 0, 0, 0], np.int64)
-    rsum = np.asarray(out["tl_resp_sum"][0, 0, 0, 0])
-    esum = np.asarray(out["tl_exec_sum"][0, 0, 0, 0])
+    src = default_trace_source(seed).head(window)
+    n_bins = int(src.arrays()["arrival"].max() // bucket) + 1
+    spec = ExperimentSpec(traces=[src], policies=("esff",),
+                          capacities=(CAPACITY,), queue_cap=4096,
+                          tl_bins=n_bins, tl_bucket=bucket)
+    rs = run_experiment(spec).check()
+    cnt = np.asarray(rs.value("tl_count", policy="esff"), np.int64)
+    rsum = rs.value("tl_resp_sum", policy="esff")
+    esum = rs.value("tl_exec_sum", policy="esff")
     nz = cnt > 0
     return [dict(minute=int(m), n_requests=int(n),
                  mean_exec=float(e / n), mean_response=float(r / n))

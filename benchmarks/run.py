@@ -12,7 +12,13 @@ engine-scale sections) so the perf trajectory is tracked across PRs.
 ``--smoke`` runs every scheduling policy on a tiny trace through both
 engines and exits non-zero on any Python/JAX mismatch — including the
 streaming-vs-exact gate (bitwise-equal means, p99 within one histogram
-bin) — cheap enough to sit next to tier-1 in CI.
+bin), the ``sweep()``-shim bitwise-parity gate against the
+`repro.api.ExperimentSpec` path, a forced 2-device CPU subprocess
+(``--xla_force_host_platform_device_count=2``) asserting the sharded
+runner is bitwise-identical to single-device, and a static scan that
+fails on DeprecationWarning-free use of the old entry points
+(``sweep`` imports / ``REPRO_AZURE_NPZ``) creeping back into
+benchmarks/examples/src — cheap enough to sit next to tier-1 in CI.
 
 ``--baseline`` compares this run's per-row ``req_s`` against a
 previous BENCH json and exits non-zero if any matching row dropped
@@ -34,17 +40,20 @@ SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "kernels",
 
 
 def smoke() -> int:
+    import warnings
+
     import numpy as np
 
     from benchmarks.common import POLICIES
+    from repro.api import ExperimentSpec, SyntheticTrace, run_experiment
     from repro.core import simulate
     from repro.core.jax_engine import (hist_edges,
                                        simulate_policy_from_trace,
                                        sweep)
-    from repro.traces import synth_azure_trace
 
-    tr = synth_azure_trace(n_functions=12, n_requests=400,
-                           utilization=0.25, seed=3)
+    src = SyntheticTrace.make(n_functions=12, n_requests=400,
+                              utilization=0.25, seed=3)
+    tr = src.to_trace()
     capacity = 6
     failures = 0
     for policy in POLICIES:
@@ -62,13 +71,14 @@ def smoke() -> int:
               f"jax={jx['mean_response']:8.4f}s  "
               + ("OK" if ok else "MISMATCH"))
 
-    # streaming-vs-exact equivalence gate: identical fold path => means
-    # must agree bitwise; histogram p99 within one log bin of exact
+    # streaming-vs-exact equivalence gate on the ExperimentSpec grid:
+    # identical fold path => means must agree bitwise; histogram p99
+    # within one log bin of exact
     bin_ratio = hist_edges()[1] / hist_edges()[0]
-    exact = sweep(tr, policies=POLICIES, capacities=(capacity,),
-                  queue_cap=256, stream=False)
-    strm = sweep(tr, policies=POLICIES, capacities=(capacity,),
-                 queue_cap=256, stream=True)
+    grid = dict(traces=[src], policies=POLICIES,
+                capacities=(capacity,), queue_cap=256)
+    exact = run_experiment(ExperimentSpec(stream=False, **grid))
+    strm = run_experiment(ExperimentSpec(stream=True, **grid))
     ok = (np.array_equal(strm["mean_response"],
                          exact["mean_response"])
           and np.array_equal(strm["mean_slowdown"],
@@ -81,10 +91,131 @@ def smoke() -> int:
     print("stream-vs-exact: means "
           + ("bitwise-equal, p99 within one bin  OK" if ok
              else "MISMATCH"))
+
+    # sweep() deprecation shim: must warn, and must be bitwise-equal
+    # to the ExperimentSpec path it now wraps
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = sweep(tr, policies=POLICIES, capacities=(capacity,),
+                       queue_cap=256, stream=True)
+    warned = any(issubclass(w.category, DeprecationWarning)
+                 for w in caught)
+    parity = all(np.array_equal(legacy[k], strm[k])
+                 for k in strm.data)
+    failures += 0 if (warned and parity) else 1
+    print("sweep() shim: "
+          + ("DeprecationWarning + bitwise parity  OK"
+             if warned and parity else
+             f"MISMATCH (warned={warned}, parity={parity})"))
+
+    failures += _sharded_parity_check()
+    failures += deprecation_scan()
     print(f"# smoke: {len(POLICIES)} policies, "
-          f"{len(POLICIES)} engine-equivalence checks + streaming "
-          f"gate, {failures} failures")
+          f"{len(POLICIES)} engine-equivalence checks + streaming, "
+          f"shim-parity, 2-device and deprecation gates, "
+          f"{failures} failures")
     return failures
+
+
+_SHARDED_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2")
+import numpy as np
+import jax
+from repro.api import ExperimentSpec, SyntheticTrace, run_experiment
+assert len(jax.local_devices()) >= 2, jax.local_devices()
+src = SyntheticTrace.make(n_functions=12, n_requests=400, seed=3,
+                          utilization=0.25)
+kw = dict(traces=[src], policies=("esff", "sff"), capacities=(4, 6),
+          queue_cap=256, lane_chunk=2)
+one = run_experiment(ExperimentSpec(devices=1, **kw))
+two = run_experiment(ExperimentSpec(devices=2, **kw))
+assert two.meta["n_devices"] == 2
+for k in one.data:
+    assert np.array_equal(one.data[k], two.data[k]), k
+print("SHARDED_OK")
+"""
+
+
+def _sharded_parity_check() -> int:
+    """Forced 2-CPU-device subprocess: the sharded runner must produce
+    bitwise-identical ResultSet metrics to the single-device run."""
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                       env=env, cwd=root, capture_output=True,
+                       text=True, timeout=600)
+    ok = r.returncode == 0 and "SHARDED_OK" in r.stdout
+    print("2-device sharded parity: " + ("OK" if ok else "MISMATCH"))
+    if not ok:
+        print(r.stdout[-2000:] + r.stderr[-2000:], file=sys.stderr)
+    return 0 if ok else 1
+
+
+# files allowed to reference the deprecated entry points: the shim
+# itself, this gate, and the env-var fallback that now wraps NpzTrace
+_DEPRECATION_ALLOW = {
+    os.path.join("src", "repro", "core", "jax_engine.py"),
+    os.path.join("benchmarks", "run.py"),
+    os.path.join("benchmarks", "common.py"),
+}
+
+
+def deprecation_scan() -> int:
+    """Fail on DeprecationWarning-free use of the old driving surface
+    (importing ``sweep`` from the engine, or the ``REPRO_AZURE_NPZ``
+    env var) anywhere in benchmarks/, examples/, scripts/ or src/ —
+    tests are exempt (they exercise the shim deliberately)."""
+    import re
+
+    # import statements only (parenthesized or single-line), so prose
+    # mentioning "sweep" near an unrelated engine import cannot
+    # false-positive the gate
+    imp_pats = (
+        re.compile(r"from\s+repro\.core\.jax_engine\s+import"
+                   r"\s*\(([^)]*)\)", re.S),
+        re.compile(r"from\s+repro\.core\.jax_engine\s+import"
+                   r"\s+([^(\n]+)"),
+    )
+    name_sweep = re.compile(r"\bsweep\b")
+    pats = (
+        re.compile(r"REPRO_AZURE_NPZ"),
+        re.compile(r"\bjax_engine\.sweep\s*\("),
+    )
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bad = 0
+
+    def flag(rel, what):
+        nonlocal bad
+        bad += 1
+        print(f"DEPRECATED ENTRY POINT: {rel} {what}",
+              file=sys.stderr)
+
+    for sub in ("src", "benchmarks", "examples", "scripts"):
+        for dirpath, _, files in os.walk(os.path.join(root, sub)):
+            for f in sorted(files):
+                if not f.endswith(".py"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, f), root)
+                if rel in _DEPRECATION_ALLOW:
+                    continue
+                with open(os.path.join(dirpath, f)) as fh:
+                    text = fh.read()
+                for p in imp_pats:
+                    for m in p.finditer(text):
+                        if name_sweep.search(m.group(1)):
+                            flag(rel, "imports sweep from jax_engine")
+                for p in pats:
+                    if p.search(text):
+                        flag(rel, f"matches /{p.pattern}/")
+    print("deprecation scan: " + ("OK" if not bad
+                                  else f"{bad} hit(s)"))
+    return bad
 
 
 def check_regression(baseline_path: str, report: dict,

@@ -1,8 +1,8 @@
 """Scheduler-simulation throughput: Python event engine vs the
 vectorised JAX engine — single runs, a hysteresis vmap sweep, and the
-headline batched policy x capacity grid (one device call per policy via
-`repro.core.jax_engine.sweep`, streaming-metrics mode) against looping
-the Python engine over the same grid."""
+headline batched policy x capacity grid (one `repro.api.ExperimentSpec`
+run, streaming-metrics mode) against looping the Python engine over
+the same grid."""
 from __future__ import annotations
 
 import time
@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, enable_compilation_cache
+from repro.api import ExperimentSpec, run_experiment
 from repro.core import simulate
-from repro.core.jax_engine import sweep
 from repro.core.jax_sim import simulate_esff_jax
 from repro.traces import synth_azure_trace
 
@@ -86,16 +86,16 @@ def run():
         req_s=agg_py,
         derived=f"{agg_py:.0f} req/s aggregate"))
 
-    sweep(grid_traces, policies=GRID_POLICIES, capacities=GRID_CAPS,
-          queue_cap=1024)   # warm the compile cache
+    grid_spec = ExperimentSpec(traces=grid_traces,
+                               policies=GRID_POLICIES,
+                               capacities=GRID_CAPS, queue_cap=1024)
+    run_experiment(grid_spec)   # warm the compile cache
     t_jx_grid = float("inf")
     for _ in range(3):
         t0 = time.perf_counter()
-        out = sweep(grid_traces, policies=GRID_POLICIES,
-                    capacities=GRID_CAPS, queue_cap=1024)
+        out = run_experiment(grid_spec)
         t_jx_grid = min(t_jx_grid, time.perf_counter() - t0)
-    assert int(out["overflow"].sum()) == 0
-    assert int(out["stalled"].sum()) == 0
+    out.check()
     agg_jx = n_req / t_jx_grid
     rows.append(dict(
         name=f"jax_sweep_grid_{n_cfg}cfg", us_per_call=t_jx_grid * 1e6,

@@ -1,34 +1,41 @@
 """Quickstart: the paper in 60 seconds.
 
-Generates an Azure-like trace, runs ESFF against the paper's baselines
-on a 16-slot edge server, and prints the comparison table (paper Fig. 5
-at the default capacity).
+Declares an Azure-like trace source, runs ESFF against the paper's
+baselines on a 16-slot edge server through the experiment API
+(exact per-request mode, so the P99 column is exact), and prints the
+comparison table (paper Fig. 5 at the default capacity).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import POLICIES, simulate
-from repro.traces import synth_azure_trace
+from repro.api import ExperimentSpec, SyntheticTrace, run_experiment
+
+POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
+            "openwhisk_v2")
 
 
 def main():
-    trace = synth_azure_trace(n_functions=200, n_requests=20_000,
-                              utilization=0.2, exec_median=0.1,
-                              exec_sigma=1.4, burst_frac=0.3, seed=0)
-    print(f"trace: {len(trace)} requests, {trace.n_functions} functions, "
-          f"{trace.meta['duration']:.0f}s span\n")
+    src = SyntheticTrace.make(n_functions=200, n_requests=20_000,
+                              seed=0, utilization=0.2, exec_median=0.1,
+                              exec_sigma=1.4, burst_frac=0.3)
+    print(f"trace: {src.n_requests} requests, "
+          f"{src.n_functions} functions, "
+          f"{src.arrays()['arrival'].max():.0f}s span\n")
+    spec = ExperimentSpec(traces=[src], policies=POLICIES,
+                          capacities=(16,), queue_cap=4096,
+                          stream=False)
+    rs = run_experiment(spec).check()
     print(f"{'policy':14s} {'mean resp':>10s} {'slowdown':>10s} "
           f"{'P99':>9s} {'cold starts':>12s}")
-    results = {}
-    for policy in ("esff", "esff_h", "sff", "openwhisk", "faascache",
-                   "openwhisk_v2"):
-        r = simulate(trace.head(len(trace)), policy, capacity=16)
-        results[policy] = r
-        print(f"{policy:14s} {r.mean_response:10.3f} "
-              f"{r.mean_slowdown:10.1f} {r.percentile(99):9.2f} "
-              f"{r.server.cold_starts:12d}")
-    best_base = min(v.mean_response for k, v in results.items()
-                    if k not in ("esff", "esff_h"))
-    gain = 100 * (1 - results["esff"].mean_response / best_base)
+    for policy in POLICIES:
+        cell = rs.sel(policy=policy)
+        print(f"{policy:14s} {cell.value('mean_response'):10.3f} "
+              f"{cell.value('mean_slowdown'):10.1f} "
+              f"{cell.value('p99_response'):9.2f} "
+              f"{int(cell.value('cold_starts')):12d}")
+    best_base = min(rs.value("mean_response", policy=p)
+                    for p in POLICIES if p not in ("esff", "esff_h"))
+    gain = 100 * (1 - rs.value("mean_response", policy="esff")
+                  / best_base)
     print(f"\nESFF improves mean response by {gain:.1f}% over the best "
           f"baseline (paper reports 18-40% vs SFF).")
 

@@ -1,6 +1,6 @@
-"""Fleet-scale scheduling sweep on the vectorised engine: evaluate a
-policy x capacity grid plus an ESFF hysteresis scan in a handful of
-device calls and print the best configuration — the kind of
+"""Fleet-scale scheduling sweep on the declarative experiment API:
+evaluate a policy x capacity grid plus an ESFF hysteresis scan in a
+handful of device calls and print the best configuration — the kind of
 fleet-sizing study the Python event engine is too slow for (compare
 LaSS, arXiv:2104.14087, which sizes capacity per latency target from
 exactly this surface).
@@ -9,8 +9,7 @@ exactly this surface).
 """
 import numpy as np
 
-from repro.core.jax_engine import sweep
-from repro.traces import synth_azure_trace
+from repro.api import ExperimentSpec, SyntheticTrace, run_experiment
 
 POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
             "openwhisk_v2")
@@ -18,12 +17,13 @@ CAPS = (8, 16, 24, 32)
 
 
 def main():
-    tr = synth_azure_trace(n_functions=60, n_requests=8_000,
-                           utilization=0.3, seed=4)
+    src = SyntheticTrace.make(n_functions=60, n_requests=8_000,
+                              seed=4, utilization=0.3)
 
     # policy x capacity plane (per-policy default betas)
-    grid = sweep(tr, policies=POLICIES, capacities=CAPS,
-                 queue_cap=2048)
+    grid = run_experiment(ExperimentSpec(
+        traces=[src], policies=POLICIES, capacities=CAPS,
+        queue_cap=2048)).check()
     mr = grid["mean_response"][:, 0, :, 0]          # (P, K)
     print(f"{'policy':>13s} " + " ".join(f"C={c:<5d}" for c in CAPS))
     for pi, p in enumerate(POLICIES):
@@ -34,8 +34,9 @@ def main():
 
     # ESFF hysteresis scan on top of the winning capacity axis
     betas = np.linspace(1.0, 3.0, 6)
-    hyst = sweep(tr, policies=("esff",), capacities=CAPS, betas=betas,
-                 queue_cap=2048)
+    hyst = run_experiment(ExperimentSpec(
+        traces=[src], policies=("esff",), capacities=CAPS,
+        betas=betas, queue_cap=2048)).check()
     hr = hyst["mean_response"][0, 0]                 # (K, B)
     print(f"\nESFF beta scan ({'x'.join(str(c) for c in CAPS)} caps x "
           f"{len(betas)} betas, one batched call):")

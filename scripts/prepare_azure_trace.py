@@ -13,10 +13,9 @@ this repository; download it per ``docs/azure_trace.md`` and run::
 
 The output npz holds the five columnar arrays the engine consumes
 (``fn_id`` / ``arrival`` / ``exec_time`` / ``cold_start`` / ``evict``)
-and loads through ``repro.core.request.Trace.load_npz`` or directly
-into ``sweep`` / ``benchmarks.engine_scale --trace`` (set
-``REPRO_AZURE_NPZ`` to point fig5/fig6/fig7/fig8 at it — see
-``benchmarks/common.py``).
+and is declared to experiments as ``repro.api.NpzTrace(path)`` — the
+trace source fig5-fig8 and ``benchmarks.engine_scale --trace`` run
+when pointed at it (see docs/api.md and docs/azure_trace.md).
 
 Preprocessing semantics (documented in docs/azure_trace.md):
 

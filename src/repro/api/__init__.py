@@ -1,0 +1,32 @@
+"""Declarative experiment API for the scheduling engine.
+
+The spec -> run -> results triple (plus the policy registry) is the
+supported way to drive the vectorised engine::
+
+    from repro.api import ExperimentSpec, SyntheticTrace, run
+
+    spec = ExperimentSpec(
+        traces=[SyntheticTrace.make(n_functions=60, n_requests=8_000,
+                                    seed=4, utilization=0.3)],
+        policies=("esff", "sff"), capacities=(8, 16, 32))
+    rs = run(spec).check()
+    print(rs.value("mean_response", policy="esff", capacity=16))
+    rs.to_csv("grid.csv"); rs.save_npz("grid.npz")
+
+See docs/api.md for the full tour (trace sources, device/host
+sharding, custom-policy registration).
+"""
+from repro.api.registry import (available_policies, get_kernel,
+                                register_policy, unregister_policy)
+from repro.api.results import ResultSet
+from repro.api.runner import run, run_experiment
+from repro.api.spec import (ArrayTrace, ExperimentSpec, NpzTrace,
+                            SyntheticTrace, TraceSource,
+                            as_trace_source)
+
+__all__ = [
+    "ExperimentSpec", "TraceSource", "SyntheticTrace", "NpzTrace",
+    "ArrayTrace", "as_trace_source", "ResultSet", "run",
+    "run_experiment", "register_policy", "unregister_policy",
+    "get_kernel", "available_policies",
+]

@@ -1,0 +1,74 @@
+"""Pluggable policy registry over the engine's kernel table.
+
+The engine selects its jit-specialised loop body by kernel identity
+(`repro.core.jax_policies.KERNELS`). `register_policy` lets external
+`PolicyKernel` subclasses — a LaSS-style latency-target variant, a
+different keep-alive heuristic — join that table under a name and then
+participate in `ExperimentSpec.policies` (and every benchmark CLI)
+exactly like the built-ins. The registry wraps the *same* dict the
+engine reads, so registration is visible everywhere at once.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def _kernels() -> dict:
+    from repro.core.jax_policies import KERNELS
+    return KERNELS
+
+
+def available_policies() -> List[str]:
+    """Registered policy names (built-ins + `register_policy` adds)."""
+    return sorted(_kernels())
+
+
+def get_kernel(name: str):
+    """Kernel registered under ``name`` (KeyError lists what exists)."""
+    kernels = _kernels()
+    try:
+        return kernels[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; registered policies: "
+            f"{sorted(kernels)} (add your own with "
+            "repro.api.register_policy)") from None
+
+
+def register_policy(name: str, kernel, *, replace: bool = False):
+    """Register a `repro.core.jax_engine.PolicyKernel` instance under
+    ``name``.
+
+    The instance must be a singleton the caller keeps stable: the
+    engine jit-caches per kernel *identity*, so re-creating instances
+    per call would retrace. ``replace=True`` allows overwriting an
+    existing name (kept off by default so two plug-ins cannot silently
+    shadow each other or a built-in). Returns ``kernel`` so it can be
+    used as a decorator-style one-liner.
+    """
+    from repro.core.jax_engine import PolicyKernel
+    if not isinstance(kernel, PolicyKernel):
+        raise TypeError(
+            f"register_policy({name!r}): expected a PolicyKernel "
+            f"*instance* (got {type(kernel).__name__}); subclass "
+            "repro.core.jax_engine.PolicyKernel and pass an instance")
+    if not name or not isinstance(name, str):
+        raise ValueError("register_policy: name must be a non-empty "
+                         "string")
+    kernels = _kernels()
+    if name in kernels and not replace:
+        raise ValueError(
+            f"register_policy: policy {name!r} is already registered "
+            f"(to {type(kernels[name]).__name__}); pass replace=True "
+            "to overwrite deliberately")
+    kernels[name] = kernel
+    return kernel
+
+
+def unregister_policy(name: str) -> None:
+    """Remove a registered policy (built-ins included — callers own the
+    consequences; primarily for test cleanup)."""
+    kernels = _kernels()
+    if name not in kernels:
+        raise KeyError(f"unregister_policy: {name!r} is not registered")
+    del kernels[name]

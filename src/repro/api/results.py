@@ -1,0 +1,271 @@
+"""Labeled experiment results: the `ResultSet`.
+
+Every metric array carries the four grid axes ``(policy, trace,
+capacity, beta)`` in that order (trailing metric-specific dims —
+histogram bins, timeline bins, per-request N — follow), with the axis
+values in ``coords``. Selection (`sel` / `value`), tidy-row iteration
+(`rows`), CSV emission (`to_csv`) and an npz round-trip
+(`save_npz`/`load_npz`) replace the per-benchmark CSV/dict plumbing;
+`merge` reassembles ``host_shard`` partials computed on different
+machines. A ``computed`` mask tracks which grid cells this ResultSet
+actually holds (all of them unless the producing run was host-sharded).
+"""
+from __future__ import annotations
+
+import csv
+import io
+import json
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+DIMS = ("policy", "trace", "capacity", "beta")
+
+# metrics that must be zero on every computed cell for a run to be
+# valid (mirrors the overflow/stalled checks the figure scripts used
+# to hand-roll)
+HEALTH_METRICS = ("overflow", "stalled")
+
+
+@dataclass
+class ResultSet:
+    """Metric arrays over the labeled experiment grid."""
+
+    data: Dict[str, np.ndarray]
+    coords: Dict[str, list]
+    computed: Optional[np.ndarray] = None    # (P, T, K, B) bool
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        shape = self.grid_shape
+        if self.computed is None:
+            self.computed = np.ones(shape, bool)
+        for k, v in self.data.items():
+            if tuple(v.shape[:4]) != shape:
+                raise ValueError(
+                    f"ResultSet: metric {k!r} shape {v.shape} does not "
+                    f"lead with the grid shape {shape}")
+
+    # ----------------------------------------------------------- basics
+    @property
+    def grid_shape(self):
+        return tuple(len(self.coords[d]) for d in DIMS)
+
+    @property
+    def metrics(self) -> List[str]:
+        return sorted(self.data)
+
+    def __getitem__(self, metric: str) -> np.ndarray:
+        try:
+            return self.data[metric]
+        except KeyError:
+            raise KeyError(f"ResultSet: no metric {metric!r}; have "
+                           f"{self.metrics}") from None
+
+    def __contains__(self, metric: str) -> bool:
+        return metric in self.data
+
+    # -------------------------------------------------------- selection
+    def _axis_indices(self, dim: str, want) -> List[int]:
+        values = self.coords[dim]
+        singular = not isinstance(want, (list, tuple, np.ndarray))
+        wants = [want] if singular else list(want)
+        idx = []
+        for w in wants:
+            matches = [i for i, v in enumerate(values)
+                       if v == w or (isinstance(v, float)
+                                     and isinstance(w, (int, float))
+                                     and float(v) == float(w))]
+            if not matches:
+                raise KeyError(
+                    f"ResultSet.sel: {dim}={w!r} not on the {dim} axis "
+                    f"{values}")
+            if singular and len(matches) > 1:
+                raise KeyError(
+                    f"ResultSet.sel: {dim}={w!r} is ambiguous "
+                    f"({len(matches)} axis entries match) — pass a "
+                    f"list to select all of them")
+            idx.extend(matches)
+        return idx
+
+    def sel(self, **which) -> "ResultSet":
+        """Subset by coordinate *value* (scalar or list per dim), e.g.
+        ``rs.sel(policy="esff", capacity=[8, 16])``. Axes are retained
+        (scalar selections become size-1) so any selection round-trips
+        through ``save_npz``/``merge``; use `value` for one cell."""
+        unknown = set(which) - set(DIMS)
+        if unknown:
+            raise KeyError(f"ResultSet.sel: unknown dim(s) "
+                           f"{sorted(unknown)}; dims are {DIMS}")
+        index = [slice(None)] * 4
+        coords = dict(self.coords)
+        for d, want in which.items():
+            ax = DIMS.index(d)
+            ids = self._axis_indices(d, want)
+            index[ax] = ids
+            coords[d] = [self.coords[d][i] for i in ids]
+        data = {}
+        for k, v in self.data.items():
+            out = v
+            for ax, ids in enumerate(index):
+                if not isinstance(ids, slice):
+                    out = np.take(out, ids, axis=ax)
+            data[k] = out
+        comp = self.computed
+        for ax, ids in enumerate(index):
+            if not isinstance(ids, slice):
+                comp = np.take(comp, ids, axis=ax)
+        return ResultSet(data=data, coords=coords, computed=comp,
+                         meta=dict(self.meta))
+
+    def value(self, metric: str, **which):
+        """The one cell of ``metric`` selected by ``which`` (every grid
+        axis must resolve to a single entry). Returns a python scalar
+        for scalar metrics, an ndarray for metrics with trailing dims
+        (``resp_hist``, ``tl_*``, ``response``)."""
+        sub = self.sel(**which) if which else self
+        if sub.grid_shape != (1, 1, 1, 1):
+            raise KeyError(
+                f"ResultSet.value({metric!r}): selection leaves grid "
+                f"{dict(zip(DIMS, sub.grid_shape))}, need exactly one "
+                "cell — add coords")
+        if not sub.computed.reshape(-1)[0]:
+            raise ValueError(
+                f"ResultSet.value({metric!r}): cell not computed (this "
+                "is a host shard — merge() the other shards first)")
+        cell = sub[metric][0, 0, 0, 0]
+        return cell.item() if np.ndim(cell) == 0 else np.asarray(cell)
+
+    # ------------------------------------------------------- tidy rows
+    def rows(self, metrics: Optional[Sequence[str]] = None
+             ) -> Iterator[dict]:
+        """Tidy iteration: one dict per computed grid cell carrying the
+        four coordinates plus every scalar metric (vector metrics are
+        skipped unless named explicitly in ``metrics``)."""
+        names = list(metrics) if metrics is not None else [
+            m for m in self.metrics if self.data[m].ndim == 4]
+        P, T, K, B = self.grid_shape
+        for pi in range(P):
+            for ti in range(T):
+                for ki in range(K):
+                    for bi in range(B):
+                        if not self.computed[pi, ti, ki, bi]:
+                            continue
+                        row = dict(policy=self.coords["policy"][pi],
+                                   trace=self.coords["trace"][ti],
+                                   capacity=self.coords["capacity"][ki],
+                                   beta=self.coords["beta"][bi])
+                        for m in names:
+                            cell = self.data[m][pi, ti, ki, bi]
+                            row[m] = (cell.item() if np.ndim(cell) == 0
+                                      else np.asarray(cell))
+                        yield row
+
+    def to_csv(self, out=None,
+               metrics: Optional[Sequence[str]] = None) -> str:
+        """Write the tidy rows as CSV to ``out`` (path, file object, or
+        None for stdout); returns the header line for convenience."""
+        rows = list(self.rows(metrics))
+        if not rows:
+            raise ValueError("ResultSet.to_csv: no computed cells")
+        header = list(rows[0].keys())
+
+        def _write(fh):
+            w = csv.DictWriter(fh, fieldnames=header)
+            w.writeheader()
+            for r in rows:
+                w.writerow({k: (f"{v:.6g}" if isinstance(v, float)
+                                else v) for k, v in r.items()})
+        if out is None:
+            _write(sys.stdout)
+        elif isinstance(out, (str, bytes)) or hasattr(out, "__fspath__"):
+            with open(out, "w", newline="") as fh:
+                _write(fh)
+        else:
+            _write(out)
+        return ",".join(header)
+
+    # ----------------------------------------------------------- health
+    def check(self) -> "ResultSet":
+        """Raise if any computed cell overflowed its queue or stalled
+        (the engine's invalid-run flags); returns self for chaining."""
+        for m in HEALTH_METRICS:
+            if m not in self.data:
+                continue
+            bad = (self.data[m] != 0) & self.computed
+            if bad.any():
+                cells = np.argwhere(bad)[:5]
+                named = [
+                    {d: self.coords[d][i] for d, i in zip(DIMS, c)}
+                    for c in cells]
+                raise RuntimeError(
+                    f"ResultSet.check: {int(bad.sum())} cell(s) with "
+                    f"nonzero {m!r} (raise queue_cap?): first {named}")
+        return self
+
+    # -------------------------------------------------------- npz io
+    def save_npz(self, path) -> None:
+        payload = {f"m_{k}": v for k, v in self.data.items()}
+        payload["computed"] = self.computed
+        payload["coords_json"] = np.frombuffer(
+            json.dumps(self.coords).encode(), np.uint8)
+        payload["meta_json"] = np.frombuffer(
+            json.dumps(self.meta, default=str).encode(), np.uint8)
+        np.savez_compressed(path, **payload)
+
+    @staticmethod
+    def load_npz(path) -> "ResultSet":
+        with np.load(path) as z:
+            data = {k[2:]: z[k] for k in z.files if k.startswith("m_")}
+            coords = json.loads(bytes(z["coords_json"]).decode())
+            meta = json.loads(bytes(z["meta_json"]).decode())
+            computed = np.asarray(z["computed"], bool)
+        return ResultSet(data=data, coords=coords, computed=computed,
+                         meta=meta)
+
+    # ----------------------------------------------------------- merge
+    def merge(self, *others: "ResultSet") -> "ResultSet":
+        """Combine host-sharded partial ResultSets over the same grid.
+
+        Shards must share coords and metric sets; each grid cell must
+        be computed by at most one shard (the runner's ``host_shard``
+        partitioning guarantees it). Returns a new ResultSet whose
+        computed mask is the union."""
+        merged = ResultSet(
+            data={k: v.copy() for k, v in self.data.items()},
+            coords={k: list(v) for k, v in self.coords.items()},
+            computed=self.computed.copy(), meta=dict(self.meta))
+        for o in others:
+            if o.coords != merged.coords:
+                raise ValueError("ResultSet.merge: coords differ — "
+                                 "shards must come from the same spec")
+            if set(o.data) != set(merged.data):
+                raise ValueError(
+                    f"ResultSet.merge: metric sets differ "
+                    f"({sorted(set(o.data) ^ set(merged.data))})")
+            overlap = merged.computed & o.computed
+            if overlap.any():
+                raise ValueError(
+                    f"ResultSet.merge: {int(overlap.sum())} cell(s) "
+                    "computed by more than one shard")
+            take = o.computed
+            for k in merged.data:
+                merged.data[k][take] = o.data[k][take]
+            merged.computed |= take
+        return merged
+
+    # ------------------------------------------------------------ repr
+    def __repr__(self):
+        P, T, K, B = self.grid_shape
+        done = int(self.computed.sum())
+        return (f"ResultSet(policies={P}, traces={T}, capacities={K}, "
+                f"betas={B}; {done}/{P * T * K * B} cells, "
+                f"metrics={self.metrics})")
+
+    def summary(self) -> str:
+        """Small human-readable table of mean_response per cell."""
+        buf = io.StringIO()
+        self.to_csv(buf, metrics=["mean_response"])
+        return buf.getvalue()

@@ -1,0 +1,227 @@
+"""Lower an `ExperimentSpec` onto the vectorised engine, sharded.
+
+The grid is flattened exactly the way the legacy ``sweep`` flattened
+it — per policy, lanes ordered trace-major, then capacity, then beta,
+split into `resolve_lane_chunk`-sized chunks — so the deprecation shim
+is bitwise-identical by construction and the jit cache stays warm
+across both surfaces. On top of that lowering this runner adds the
+scale-out halves the ROADMAP called for:
+
+* **device sharding** — lane chunks round-robin over
+  ``jax.local_devices()`` (capped by ``spec.devices``); each device
+  gets its own copy of the shared trace operands once, and chunk
+  inputs are committed to their device so XLA runs the per-device
+  calls concurrently. Lanes are embarrassingly parallel and the engine
+  is deterministic per lane, so a multi-device run is bitwise
+  identical to the single-device run — gated by the 2-device CPU
+  parity checks in ``benchmarks/run.py --smoke`` and
+  ``tests/test_api.py``.
+* **host sharding** — ``spec.host_shard=(i, n)`` keeps only chunks
+  ``i, i+n, i+2n, ...`` of the global chunk list; the resulting
+  partial `ResultSet` marks the rest uncomputed and
+  `ResultSet.merge` reassembles the full grid from all hosts' shards.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.api.registry import get_kernel
+from repro.api.results import DIMS, ResultSet
+from repro.api.spec import ExperimentSpec
+
+_BETA_DEFAULT = "default"
+
+
+def _unique_labels(labels):
+    """Disambiguate repeated source labels positionally (``#k`` suffix)
+    so ResultSet coordinate selection stays unambiguous — e.g. four
+    same-shape inline traces all labeled ``trace[n5000]`` become
+    ``trace[n5000]``, ``trace[n5000]#1``, ..."""
+    seen: Dict[str, int] = {}
+    out = []
+    for lab in labels:
+        k = seen.get(lab, 0)
+        seen[lab] = k + 1
+        out.append(lab if k == 0 else f"{lab}#{k}")
+    return out
+
+
+def _lower_grid(spec: ExperimentSpec):
+    """Materialise sources and build the per-policy lane layout."""
+    sources = spec.expanded_traces()
+    arrs = [src.arrays() for src in sources]
+    F = len(arrs[0]["cold_start"])
+    N = len(arrs[0]["fn_id"])
+    for src, a in zip(sources, arrs):
+        if len(a["cold_start"]) != F or len(a["fn_id"]) != N:
+            raise ValueError(
+                f"ExperimentSpec traces must share shape "
+                f"(n_functions, n_requests): {src.label} has "
+                f"({len(a['cold_start'])}, {len(a['fn_id'])}), "
+                f"{sources[0].label} has ({F}, {N})")
+    stacked = {k: np.stack([np.asarray(a[k]) for a in arrs])
+               for k in ("fn_id", "arrival", "exec_time", "cold_start",
+                         "evict")}
+    return sources, stacked, F, N
+
+
+def _chunk_plan(spec: ExperimentSpec, T: int, chunk: int):
+    """The global chunk list [(policy_index, lane_lo, lane_hi)] in the
+    legacy sweep order (policy-major; lanes trace-major, then capacity,
+    then beta)."""
+    K = len(spec.capacities)
+    B = 1 if spec.betas is None else len(spec.betas)
+    plan = []
+    for pi in range(len(spec.policies)):
+        for lo in range(0, T * K * B, chunk):
+            plan.append((pi, lo, min(lo + chunk, T * K * B)))
+    return plan, K, B
+
+
+def run_experiment(spec: ExperimentSpec) -> ResultSet:
+    """Execute ``spec`` and return its labeled `ResultSet`."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.jax_engine import _sweep_metrics, resolve_lane_chunk
+
+    spec.validate()
+    sources, stacked, F, N = _lower_grid(spec)
+    T = len(sources)
+    C = max(spec.capacities)
+    masks = np.stack([np.arange(C) < c for c in spec.capacities])
+    chunk = resolve_lane_chunk(spec.lane_chunk)
+    plan, K, B = _chunk_plan(spec, T, chunk)
+
+    host_i, host_n = spec.host_shard
+    mine = [ci for ci in range(len(plan)) if ci % host_n == host_i]
+    if not mine:
+        raise ValueError(
+            f"ExperimentSpec: host_shard={spec.host_shard} gets no "
+            f"chunks (the grid lowers to {len(plan)} chunk(s) of "
+            f"{chunk} lanes — lower host count or lane_chunk)")
+
+    devs = jax.local_devices()
+    if spec.devices is not None:
+        if spec.devices > len(devs):
+            raise ValueError(
+                f"ExperimentSpec: devices={spec.devices} but only "
+                f"{len(devs)} local device(s) present")
+        devs = devs[: spec.devices]
+    multi_dev = len(devs) > 1
+
+    # shared (T, ...) trace operands — one committed copy per device
+    # (a single uncommitted copy when not sharding, matching the legacy
+    # single-device path exactly)
+    shared0 = {k: jnp.asarray(v) for k, v in stacked.items()}
+    if multi_dev:
+        shared_per_dev = [
+            {k: jax.device_put(v, d) for k, v in shared0.items()}
+            for d in devs]
+    else:
+        shared_per_dev = [shared0]
+
+    kernels = {p: get_kernel(p) for p in spec.policies}
+
+    # per-policy lane coordinate columns (identical for every policy:
+    # betas=None resolves per kernel at chunk build time)
+    tix_col = np.repeat(np.arange(T, dtype=np.int32), K * B)
+    mask_col = np.tile(np.repeat(masks, B, axis=0), (T, 1))
+
+    def beta_col(policy: str) -> np.ndarray:
+        bs = np.asarray(
+            [kernels[policy].default_beta] if spec.betas is None
+            else list(spec.betas), np.float64)
+        return np.tile(bs, T * K)
+
+    beta_cols = {p: beta_col(p) for p in spec.policies}
+
+    def run_chunk(ci: int):
+        pi, lo, hi = plan[ci]
+        policy = spec.policies[pi]
+        di = mine.index(ci) % len(devs)
+        sh = shared_per_dev[di]
+        tix_l = jnp.asarray(tix_col[lo:hi])
+        mask_l = jnp.asarray(mask_col[lo:hi])
+        beta_l = jnp.asarray(beta_cols[policy][lo:hi])
+        if multi_dev:
+            dev = devs[di]
+            tix_l = jax.device_put(tix_l, dev)
+            mask_l = jax.device_put(mask_l, dev)
+            beta_l = jax.device_put(beta_l, dev)
+        out = _sweep_metrics(
+            sh["fn_id"], sh["arrival"], sh["exec_time"],
+            sh["cold_start"], sh["evict"], tix_l, mask_l, beta_l,
+            jnp.float64(spec.prior), jnp.float64(spec.threshold),
+            kernel=kernels[policy], n_fns=F, capacity=C,
+            queue_cap=spec.queue_cap, stream=spec.stream,
+            window=spec.window, tl_bins=spec.tl_bins,
+            tl_bucket=spec.tl_bucket,
+            keep_responses=spec.keep_per_request)
+        return ci, jax.device_get(out)
+
+    # device calls overlap on the host thread pool (XLA releases the
+    # GIL while a computation runs); at least 2 workers even on one
+    # device so transfer/compile of chunk k+1 hides behind chunk k
+    workers = max(2, len(devs))
+    with ThreadPoolExecutor(max_workers=workers) as tp:
+        outs = dict(tp.map(run_chunk, mine))
+
+    # ------------------------------------------------------- assembly
+    P = len(spec.policies)
+    lanes_per_policy = T * K * B
+    flat: Dict[str, np.ndarray] = {}
+    computed = np.zeros((P, lanes_per_policy), bool)
+    for ci in mine:
+        pi, lo, hi = plan[ci]
+        out = outs[ci]
+        for k, v in out.items():
+            v = np.asarray(v)
+            if k not in flat:
+                flat[k] = np.zeros((P, lanes_per_policy) + v.shape[1:],
+                                   v.dtype)
+            flat[k][pi, lo:hi] = v
+        computed[pi, lo:hi] = True
+
+    grid = lambda a: a.reshape((P, T, K, B) + a.shape[2:])  # noqa: E731
+    data = {k: grid(v) for k, v in flat.items()}
+    beta_coord = (list(spec.betas) if spec.betas is not None
+                  else [_BETA_DEFAULT])
+    coords = dict(policy=list(spec.policies),
+                  trace=_unique_labels([s.label for s in sources]),
+                  capacity=list(spec.capacities),
+                  beta=beta_coord)
+    meta = dict(spec.meta,
+                n_requests=N, n_functions=F, queue_cap=spec.queue_cap,
+                stream=spec.stream, window=spec.window,
+                tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
+                prior=spec.prior, threshold=spec.threshold,
+                lane_chunk=chunk, host_shard=list(spec.host_shard),
+                n_devices=len(devs), backend=jax.default_backend(),
+                seeds=(list(spec.seeds) if spec.seeds is not None
+                       else None),
+                default_betas={p: kernels[p].default_beta
+                               for p in spec.policies})
+    return ResultSet(data=data, coords=coords,
+                     computed=grid(computed), meta=meta)
+
+
+# short alias — `from repro.api import run`
+run = run_experiment
+
+
+def legacy_sweep_dict(rs: ResultSet, n_traces: int) -> dict:
+    """Convert a ResultSet into the legacy ``sweep()`` return layout
+    (metric arrays keyed by name + the ad-hoc ``"axes"`` dict) for the
+    deprecation shim."""
+    out = {k: v for k, v in rs.data.items() if k != "response"}
+    betas = rs.coords["beta"]
+    out["axes"] = dict(policy=list(rs.coords["policy"]),
+                       trace=n_traces,
+                       capacity=list(rs.coords["capacity"]),
+                       beta=(None if betas == [_BETA_DEFAULT]
+                             else list(betas)))
+    return out

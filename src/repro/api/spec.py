@@ -1,0 +1,386 @@
+"""Declarative experiment surface: `TraceSource` + `ExperimentSpec`.
+
+A *trace source* declares where a request stream comes from — a seeded
+synthetic generator, a preprocessed npz slice of the real Azure-2021
+trace, or inline columnar arrays — instead of threading env vars and
+raw dicts through every benchmark. Sources compose declaratively:
+``src.head(20_000)`` and ``src.scaled(1.2)`` wrap a source the way the
+paper's figures slice and re-intensify the shared evaluation trace,
+and every source materialises to the engine's columnar layout
+(``arrays()``) exactly once (cached), however many figures share it.
+
+An `ExperimentSpec` declares a whole study — sources x policies x
+capacities x betas plus the engine knobs — as one validated value.
+`repro.api.run` lowers it onto the vectorised engine's lanes
+(`repro.core.jax_engine._sweep_metrics`), shards the lane chunks over
+local devices and hosts, and returns a labeled `repro.api.ResultSet`.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+TRACE_COLUMNS = ("fn_id", "arrival", "exec_time", "cold_start", "evict")
+
+# engine defaults mirrored here so a spec is self-describing
+DEFAULT_POLICIES = ("esff", "esff_h", "sff", "openwhisk", "faascache",
+                    "openwhisk_v2")
+
+
+class TraceSource:
+    """Declarative origin of one request stream.
+
+    Subclasses implement ``_materialise() -> dict`` returning the
+    engine's columnar layout (`TRACE_COLUMNS`: arrival-sorted request
+    columns + the per-function catalogue) and a ``label``. ``arrays()``
+    caches the materialised columns for the source's lifetime — figure
+    scripts share one source across sweeps, and reloading/regenerating
+    a 6e5-request trace per figure costs seconds each time (this
+    replaces the old ``_NPZ_TRACE_CACHE`` in ``benchmarks.common``).
+    """
+
+    label: str = "trace"
+
+    def _materialise(self) -> Dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Columnar view (cached; arrays are marked read-only)."""
+        cached = getattr(self, "_cache", None)
+        if cached is None:
+            cached = validate_trace_arrays(self._materialise(),
+                                           where=self.label)
+            for v in cached.values():
+                v.setflags(write=False)
+            object.__setattr__(self, "_cache", cached)
+        return dict(cached)
+
+    # ------------------------------------------------------ conveniences
+    @property
+    def n_requests(self) -> int:
+        return len(self.arrays()["fn_id"])
+
+    @property
+    def n_functions(self) -> int:
+        return len(self.arrays()["cold_start"])
+
+    def to_trace(self):
+        """Materialise `repro.core.request.Trace` objects (the Python
+        event engine's representation; avoid for large N)."""
+        from repro.core.request import Trace
+        return Trace.from_arrays(self.arrays(),
+                                 {"source": self.label})
+
+    def head(self, n: int) -> "TraceSource":
+        """First ``n`` requests (arrival order), same catalogue."""
+        return HeadTrace(base=self, n=int(n))
+
+    def scaled(self, ratio: float) -> "TraceSource":
+        """Inter-arrival intensity scaling (paper Fig. 6): arrivals are
+        multiplied by ``ratio`` (> 1 = lighter load), execution times
+        untouched."""
+        return ScaledTrace(base=self, ratio=float(ratio))
+
+    def with_seed(self, seed: int) -> "TraceSource":
+        """Re-seeded copy (only generator-backed sources support it —
+        the hook `ExperimentSpec.seeds` expansion uses)."""
+        raise TypeError(
+            f"trace source {self.label!r} ({type(self).__name__}) is "
+            "not reseedable; ExperimentSpec(seeds=...) needs "
+            "generator-backed sources (SyntheticTrace)")
+
+
+def validate_trace_arrays(a: dict, where: str = "trace"
+                          ) -> Dict[str, np.ndarray]:
+    """Check/normalise a columnar trace dict (`TRACE_COLUMNS` layout)."""
+    missing = [k for k in TRACE_COLUMNS if k not in a]
+    if missing:
+        raise ValueError(f"{where}: missing trace column(s) {missing}; "
+                         f"need {list(TRACE_COLUMNS)}")
+    out = dict(
+        fn_id=np.ascontiguousarray(a["fn_id"], np.int32),
+        arrival=np.ascontiguousarray(a["arrival"], np.float64),
+        exec_time=np.ascontiguousarray(a["exec_time"], np.float64),
+        cold_start=np.ascontiguousarray(a["cold_start"], np.float64),
+        evict=np.ascontiguousarray(a["evict"], np.float64),
+    )
+    n = len(out["fn_id"])
+    if not (len(out["arrival"]) == len(out["exec_time"]) == n):
+        raise ValueError(f"{where}: request columns disagree on length")
+    if len(out["cold_start"]) != len(out["evict"]):
+        raise ValueError(f"{where}: function columns disagree on length")
+    if n and out["fn_id"].max(initial=0) >= len(out["cold_start"]):
+        raise ValueError(f"{where}: fn_id exceeds catalogue size "
+                         f"{len(out['cold_start'])}")
+    return out
+
+
+@dataclass(frozen=True)
+class SyntheticTrace(TraceSource):
+    """Seeded Azure-like generator spec
+    (`repro.traces.synth_azure_arrays`)."""
+
+    n_functions: int = 200
+    n_requests: int = 30_000
+    seed: int = 0
+    params: Tuple[Tuple[str, float], ...] = ()
+
+    @staticmethod
+    def make(n_functions: int = 200, n_requests: int = 30_000,
+             seed: int = 0, **params) -> "SyntheticTrace":
+        """Keyword-friendly constructor (generator knobs as kwargs)."""
+        return SyntheticTrace(n_functions=n_functions,
+                              n_requests=n_requests, seed=seed,
+                              params=tuple(sorted(params.items())))
+
+    @property
+    def label(self) -> str:
+        return (f"synth[f{self.n_functions},n{self.n_requests},"
+                f"seed{self.seed}]")
+
+    def _materialise(self):
+        from repro.traces import synth_azure_arrays
+        return synth_azure_arrays(n_functions=self.n_functions,
+                                  n_requests=self.n_requests,
+                                  seed=self.seed, **dict(self.params))
+
+    def with_seed(self, seed: int) -> "SyntheticTrace":
+        return replace(self, seed=int(seed))
+
+
+@dataclass(frozen=True)
+class NpzTrace(TraceSource):
+    """A ``Trace.save_npz``-format file, e.g. the real Azure-2021 slice
+    produced by ``scripts/prepare_azure_trace.py``."""
+
+    path: str = ""
+
+    @property
+    def label(self) -> str:
+        return f"npz[{os.path.basename(self.path) or self.path}]"
+
+    def _materialise(self):
+        if not self.path or not os.path.exists(self.path):
+            raise FileNotFoundError(
+                f"NpzTrace: no npz at {self.path!r} (see "
+                "docs/azure_trace.md for producing one)")
+        with np.load(self.path) as z:
+            return {k: z[k] for k in TRACE_COLUMNS}
+
+
+@dataclass(frozen=True)
+class ArrayTrace(TraceSource):
+    """Inline columnar arrays (already in the engine layout)."""
+
+    arrays_in: Tuple[Tuple[str, np.ndarray], ...] = ()
+    name: str = "arrays"
+
+    @staticmethod
+    def make(arrays: dict, name: str = "arrays") -> "ArrayTrace":
+        return ArrayTrace(arrays_in=tuple(sorted(arrays.items())),
+                          name=name)
+
+    @staticmethod
+    def from_trace(trace, name: str = "") -> "ArrayTrace":
+        """Wrap a `repro.core.request.Trace` object."""
+        return ArrayTrace.make(trace.to_arrays(),
+                               name or f"trace[n{len(trace)}]")
+
+    @property
+    def label(self) -> str:
+        return self.name
+
+    def _materialise(self):
+        return dict(self.arrays_in)
+
+    # inline arrays are identity-hashed via the tuple of (key, array)
+    # pairs; ndarray is unhashable, so hash/eq fall back to object id
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+
+@dataclass(frozen=True)
+class HeadTrace(TraceSource):
+    """First-``n``-requests view of another source."""
+
+    base: TraceSource = None
+    n: int = 0
+
+    @property
+    def label(self) -> str:
+        return f"head{self.n}({self.base.label})"
+
+    def _materialise(self):
+        a = self.base.arrays()
+        out = {k: a[k][: self.n] for k in ("fn_id", "arrival",
+                                           "exec_time")}
+        out["cold_start"] = a["cold_start"]
+        out["evict"] = a["evict"]
+        return out
+
+    def with_seed(self, seed: int) -> "HeadTrace":
+        return replace(self, base=self.base.with_seed(seed))
+
+
+@dataclass(frozen=True)
+class ScaledTrace(TraceSource):
+    """Intensity-scaled view (arrivals x ``ratio``) of another source."""
+
+    base: TraceSource = None
+    ratio: float = 1.0
+
+    @property
+    def label(self) -> str:
+        return f"scale{self.ratio:g}({self.base.label})"
+
+    def _materialise(self):
+        a = self.base.arrays()
+        out = dict(a)
+        out["arrival"] = a["arrival"] * self.ratio
+        return out
+
+    def with_seed(self, seed: int) -> "ScaledTrace":
+        return replace(self, base=self.base.with_seed(seed))
+
+
+def as_trace_source(obj, name: str = "") -> TraceSource:
+    """Coerce ``obj`` into a `TraceSource`.
+
+    Accepts a source (returned as-is), a `repro.core.request.Trace`,
+    a columnar array dict (``to_arrays()`` layout), or an npz path
+    string.
+    """
+    from repro.core.request import Trace
+    if isinstance(obj, TraceSource):
+        return obj
+    if isinstance(obj, Trace):
+        return ArrayTrace.from_trace(obj, name)
+    if isinstance(obj, dict):
+        return ArrayTrace.make(obj, name or "arrays")
+    if isinstance(obj, (str, os.PathLike)):
+        return NpzTrace(path=os.fspath(obj))
+    raise TypeError(
+        f"cannot interpret {type(obj).__name__!r} as a trace source; "
+        "pass a TraceSource, Trace, columnar array dict, or npz path")
+
+
+@dataclass
+class ExperimentSpec:
+    """One declared experiment: the full grid plus engine options.
+
+    The grid is ``traces x policies x capacities x betas`` (exactly the
+    engine's lane axes); ``seeds`` optionally expands each reseedable
+    source into one trace per seed, widening the trace axis. Metric
+    semantics and defaults mirror the engine (`jax_engine._simulate`):
+    streaming mode keeps carried state independent of trace length,
+    ``tl_bins > 0`` adds the minute-binned Fig.-8 timeline,
+    ``keep_per_request=True`` (requires ``stream=False``) additionally
+    returns the (N,)-per-lane response vector for CDF/percentile
+    studies.
+
+    Scale-out: ``devices`` caps how many local JAX devices the runner
+    shards lane chunks over (None = all of ``jax.local_devices()``);
+    ``host_shard=(i, n)`` keeps only every n-th chunk (offset i) for
+    multi-host slicing — each host computes a disjoint chunk subset and
+    the shards reassemble with `ResultSet.merge`.
+    """
+
+    traces: Sequence = ()
+    policies: Sequence[str] = DEFAULT_POLICIES
+    capacities: Sequence[int] = (8, 16, 32)
+    betas: Optional[Sequence[float]] = None
+    seeds: Optional[Sequence[int]] = None
+    queue_cap: int = 2048
+    prior: float = 0.1
+    threshold: float = 0.1
+    stream: bool = True
+    window: int = 0
+    tl_bins: int = 0
+    tl_bucket: float = 60.0
+    keep_per_request: bool = False
+    lane_chunk: Union[int, str, None] = None
+    devices: Optional[int] = None
+    host_shard: Tuple[int, int] = (0, 1)
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if isinstance(self.traces, (TraceSource, dict, str)) or (
+                type(self.traces).__name__ == "Trace"):
+            self.traces = [self.traces]
+        self.traces = tuple(as_trace_source(t) for t in self.traces)
+        self.policies = tuple(self.policies)
+        self.capacities = tuple(int(c) for c in self.capacities)
+        if self.betas is not None:
+            self.betas = tuple(float(b) for b in self.betas)
+        if self.seeds is not None:
+            self.seeds = tuple(int(s) for s in self.seeds)
+        self.host_shard = tuple(int(x) for x in self.host_shard)
+
+    # ------------------------------------------------------- validation
+    def validate(self) -> "ExperimentSpec":
+        """Raise ``ValueError``/``TypeError``/``KeyError`` with a
+        precise message on the first invalid field; returns self so
+        callers can chain."""
+        from repro.api.registry import get_kernel
+        if not self.traces:
+            raise ValueError("ExperimentSpec: no trace sources")
+        if not self.policies:
+            raise ValueError("ExperimentSpec: no policies")
+        for p in self.policies:
+            get_kernel(p)     # KeyError lists registered policies
+        if len(set(self.policies)) != len(self.policies):
+            raise ValueError(
+                f"ExperimentSpec: duplicate policies {self.policies}")
+        if not self.capacities:
+            raise ValueError("ExperimentSpec: no capacities")
+        if any(c <= 0 for c in self.capacities):
+            raise ValueError(
+                f"ExperimentSpec: capacities must be positive, got "
+                f"{self.capacities}")
+        if self.betas is not None and not self.betas:
+            raise ValueError("ExperimentSpec: betas=() — use None for "
+                             "per-policy defaults")
+        if self.seeds is not None:
+            if not self.seeds:
+                raise ValueError("ExperimentSpec: seeds=() — use None "
+                                 "to keep sources as declared")
+            for t in self.traces:
+                t.with_seed(self.seeds[0])   # raises on non-reseedable
+        if self.queue_cap <= 0:
+            raise ValueError("ExperimentSpec: queue_cap must be > 0")
+        if self.window < 0 or self.tl_bins < 0:
+            raise ValueError("ExperimentSpec: window/tl_bins must be "
+                             ">= 0")
+        if self.keep_per_request and self.stream:
+            raise ValueError(
+                "ExperimentSpec: keep_per_request needs stream=False "
+                "(streaming folds per-request records away)")
+        i, n = self.host_shard
+        if n < 1 or not (0 <= i < n):
+            raise ValueError(
+                f"ExperimentSpec: host_shard must be (i, n) with "
+                f"0 <= i < n, got {self.host_shard}")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError("ExperimentSpec: devices must be >= 1 "
+                             "(None = all local devices)")
+        return self
+
+    # -------------------------------------------------------- expansion
+    def expanded_traces(self) -> Tuple[TraceSource, ...]:
+        """The trace axis after seed expansion (seed-major per source:
+        ``[src.with_seed(s) for src in traces for s in seeds]``)."""
+        if self.seeds is None:
+            return self.traces
+        return tuple(src.with_seed(s)
+                     for src in self.traces for s in self.seeds)
+
+    def grid_size(self) -> int:
+        b = 1 if self.betas is None else len(self.betas)
+        return (len(self.policies) * len(self.expanded_traces())
+                * len(self.capacities) * b)

@@ -1185,14 +1185,20 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
                                     "queue_cap", "stream", "window",
-                                    "tl_bins"))
+                                    "tl_bins", "keep_responses"))
 def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                    threshold, *, kernel, n_fns, capacity, queue_cap,
-                   stream=True, window=0, tl_bins=0, tl_bucket=60.0):
+                   stream=True, window=0, tl_bins=0, tl_bucket=60.0,
+                   keep_responses=False):
     """Lane-batched run + on-device metric reduction. Means and
     slowdowns come from the streaming accumulators in *both* modes (so
     streamed and exact sweeps agree bitwise); p99 is exact in exact
-    mode and one-bin-accurate from the histogram in streaming mode."""
+    mode and one-bin-accurate from the histogram in streaming mode.
+    ``keep_responses`` (exact mode only) additionally returns the
+    (L, N) per-request response vector — the CDF/percentile surface
+    `repro.api.ExperimentSpec(keep_per_request=True)` exposes."""
+    if keep_responses and stream:
+        raise ValueError("keep_responses requires stream=False")
     out = _simulate(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                     threshold, kernel=kernel, n_fns=n_fns,
                     capacity=capacity, queue_cap=queue_cap,
@@ -1219,6 +1225,8 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
         res["tl_count"] = out["tl_count"]
         res["tl_resp_sum"] = out["tl_resp_sum"]
         res["tl_exec_sum"] = out["tl_exec_sum"]
+    if keep_responses:
+        res["response"] = resp
     return res
 
 
@@ -1232,95 +1240,39 @@ def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
           window: int = 0, tl_bins: int = 0, tl_bucket: float = 60.0,
           lane_chunk: Union[int, str, None] = None
           ) -> Dict[str, np.ndarray]:
-    """Batched policy x trace x capacity x beta sweep in one device call
-    per policy.
+    """Deprecated batched-sweep entry point (use `repro.api`).
 
-    The grid is flattened to engine lanes: every (trace, capacity, beta)
-    combination becomes one lane of a single lane-batched ``while_loop``
-    (capacities as slot masks over a static ``capacity=max(capacities)``,
-    so one jit specialisation per policy covers the whole grid).
+    This is now a thin shim over the declarative experiment API: the
+    arguments are packed into a `repro.api.ExperimentSpec`, executed by
+    `repro.api.run_experiment` (the same `_sweep_metrics` lanes, same
+    chunk order, so outputs are bitwise identical — gated by
+    ``benchmarks/run.py --smoke`` and ``tests/test_api.py``), and the
+    `ResultSet` is flattened back into the legacy dict of
+    (P, T, K, B)-shaped metric arrays plus the ``"axes"`` dict.
 
-    Traces may be `Trace` objects or plain array dicts (the
-    ``to_arrays()`` layout — the fast path for 10^6-request synthetic
-    streams that never materialise Request objects). ``stream=True``
-    (default) keeps carried state independent of trace length: means
-    are exact, p99 is histogram-derived (one ~1.33x bin). ``betas=None``
-    uses each kernel's default (so ESFF-H keeps its hysteresis).
-    ``window`` sets the engine's cache-window size (0 -> default;
-    results are bitwise window-invariant). ``lane_chunk`` sets lanes
-    per device call (None -> ``REPRO_LANE_CHUNK`` env or the
-    per-backend `LANE_CHUNKS` table; ``"auto"`` probes — see
-    `resolve_lane_chunk`). Returns metric arrays of shape (P, T, K, B)
-    keyed by metric name ((P, T, K, B, HIST_BINS) for ``resp_hist``,
-    (P, T, K, B, tl_bins) for the timeline accumulators when
-    ``tl_bins > 0``), plus the axis values under ``"axes"``.
+    Prefer::
+
+        from repro.api import ExperimentSpec, run
+        rs = run(ExperimentSpec(traces=[...], policies=...,
+                                capacities=...))
+
+    which adds labeled selection, CSV/npz round-trips, multi-device
+    and multi-host sharding, and registry-backed custom policies.
     """
-    from repro.core.jax_policies import KERNELS
+    import warnings
+    warnings.warn(
+        "repro.core.jax_engine.sweep() is deprecated; build a "
+        "repro.api.ExperimentSpec and call repro.api.run() instead "
+        "(see docs/api.md)", DeprecationWarning, stacklevel=2)
+    from repro.api import ExperimentSpec
+    from repro.api.runner import legacy_sweep_dict, run_experiment
     if isinstance(traces, (Trace, dict)):
         traces = [traces]
     traces = list(traces)
-    arrs = [tr.to_arrays() if isinstance(tr, Trace) else tr
-            for tr in traces]
-    F = len(arrs[0]["cold_start"])
-    N = len(arrs[0]["fn_id"])
-    for a in arrs:
-        if len(a["cold_start"]) != F or len(a["fn_id"]) != N:
-            raise ValueError("sweep traces must share shape "
-                             "(n_functions, n_requests)")
-    stacked = {k: np.stack([np.asarray(a[k]) for a in arrs])
-               for k in ("fn_id", "arrival", "exec_time", "cold_start",
-                         "evict")}
-    T, K = len(traces), len(capacities)
-    C = max(capacities)
-    masks = np.stack([np.arange(C) < c for c in capacities])
-    chunk = resolve_lane_chunk(lane_chunk)
-
-    shared = {k: jnp.asarray(v) for k, v in stacked.items()}
-
-    def run_chunk(p, tix_l, mask_l, beta_l):
-        out = _sweep_metrics(
-            shared["fn_id"], shared["arrival"], shared["exec_time"],
-            shared["cold_start"], shared["evict"], jnp.asarray(tix_l),
-            jnp.asarray(mask_l), jnp.asarray(beta_l),
-            jnp.float64(prior), jnp.float64(threshold),
-            kernel=KERNELS[p], n_fns=F, capacity=C,
-            queue_cap=queue_cap, stream=stream, window=window,
-            tl_bins=tl_bins, tl_bucket=tl_bucket)
-        return jax.device_get(out)
-
-    chunks = []
-    for p in policies:
-        bs = np.asarray([KERNELS[p].default_beta] if betas is None
-                        else list(betas), np.float64)
-        B = len(bs)
-        # lane order: trace-major, then capacity, then beta
-        tix_l = np.repeat(np.arange(T, dtype=np.int32), K * B)
-        mask_l = np.tile(np.repeat(masks, B, axis=0), (T, 1))
-        beta_l = np.tile(bs, T * K)
-        for lo in range(0, T * K * B, chunk):
-            hi = lo + chunk
-            chunks.append((p, tix_l[lo:hi], mask_l[lo:hi],
-                           beta_l[lo:hi]))
-
-    # device calls overlap on the host thread pool (XLA releases the
-    # GIL while a computation runs); lanes are chunked to the resolved
-    # lane_chunk per call to stay in the backend's fast regime
-    from concurrent.futures import ThreadPoolExecutor
-    with ThreadPoolExecutor(max_workers=2) as tp:
-        outs = list(tp.map(lambda c: run_chunk(*c), chunks))
-
-    per_policy = []
-    for pi, p in enumerate(policies):
-        B = 1 if betas is None else len(betas)
-        mine = [o for c, o in zip(chunks, outs) if c[0] == p]
-        cat = {k: np.concatenate([np.asarray(o[k]) for o in mine])
-               for k in mine[0]}
-        per_policy.append({k: v.reshape((T, K, B) + v.shape[1:])
-                           for k, v in cat.items()})
-
-    out = {k: np.stack([r[k] for r in per_policy])
-           for k in per_policy[0]}
-    out["axes"] = dict(policy=list(policies), trace=len(traces),
-                       capacity=list(capacities),
-                       beta=(None if betas is None else list(betas)))
-    return out
+    spec = ExperimentSpec(
+        traces=traces, policies=policies, capacities=capacities,
+        betas=betas, queue_cap=queue_cap, prior=prior,
+        threshold=threshold, stream=stream, window=window,
+        tl_bins=tl_bins, tl_bucket=tl_bucket, lane_chunk=lane_chunk,
+        devices=1)
+    return legacy_sweep_dict(run_experiment(spec), len(traces))

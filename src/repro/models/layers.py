@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.utils.compat import shard_map
+
 Params = Dict[str, Any]
 Specs = Dict[str, Any]
 
@@ -133,7 +135,7 @@ def tp_einsum(eq: str, x, w, sharder, *, w_model_dim=None,
             y = lax.psum(y.astype(xl.dtype), tp)
         return y
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(spec(x.ndim, x_model_dim, batched=True),
                   spec(w.ndim, w_model_dim)),
@@ -194,7 +196,7 @@ def seq_parallel_attention(q, k, v, sharder, *, chunk: int,
                               q_offset_dyn=off)
         return y
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, None, None, None),) * 3,
         out_specs=P(dp, tp, None, None),
@@ -593,7 +595,7 @@ def moe_apply_ep_shardmap(params: Params, cfg, x, sharder, capacity: int):
             aux = lax.pmean(aux, dp)          # P() out_spec needs global
         return y, aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         block, mesh=mesh,
         in_specs=(P(dp, None, None), P(), P(tp, None, None),
                   P(tp, None, None), P(tp, None, None)),

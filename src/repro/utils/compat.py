@@ -1,0 +1,43 @@
+"""Version-drift shims for the pinned JAX build.
+
+This container pins jax 0.4.37, which sits on the wrong side of two
+API moves the model/distributed subsystems were written against:
+
+* ``jax.shard_map`` — promoted to the top-level namespace (with the
+  ``check_rep`` kwarg renamed ``check_vma``) only in later releases;
+  0.4.37 still exposes it as ``jax.experimental.shard_map.shard_map``.
+* ``Compiled.cost_analysis()`` — returns a single properties dict in
+  later releases; 0.4.x returns a one-element list of dicts.
+
+Import the shims from here instead of sprinkling try/except at call
+sites; each forwards to the native API when it exists so nothing
+changes on newer JAX.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the 0.4.x experimental fallback.
+
+    ``check_vma`` maps onto the old spelling ``check_rep`` when the
+    fallback is taken (same semantics: disable the replication/varying
+    -axes output check).
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
+def compiled_cost_analysis(compiled) -> dict:
+    """Properties dict of ``jax.stages.Compiled.cost_analysis()`` on
+    both sides of the list-of-dicts -> dict return-type change."""
+    props = compiled.cost_analysis()
+    if isinstance(props, (list, tuple)):
+        props = props[0] if props else {}
+    return props

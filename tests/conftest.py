@@ -27,7 +27,8 @@ from repro.utils.jit_cache import (disable_compilation_cache,
                                    enable_compilation_cache)
 
 # modules whose compiles are safe to persist (scheduling engine only)
-_CACHED_MODULES = ("test_jax_engine", "test_jax_sim", "test_streaming")
+_CACHED_MODULES = ("test_jax_engine", "test_jax_sim", "test_streaming",
+                   "test_api")
 
 
 @pytest.fixture(autouse=True)

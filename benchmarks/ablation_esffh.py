@@ -1,44 +1,72 @@
 """ESFF-H component ablation: which of the three fixes buys what, per
-capacity regime (EXPERIMENTS.md §Repro)."""
+capacity regime (EXPERIMENTS.md §Repro).
+
+Runs entirely on the vectorised engine through one
+`repro.api.ExperimentSpec`: the four variants are (policy, beta) cells
+of a registered-kernel x beta grid — ``esff`` at beta 1/2 isolates the
+hysteresis, an ``esff_cc`` kernel (ESFF + cold-aware drain estimates,
+registered here via `repro.api.register_policy`) adds the cold-count
+fix, and ``esff_h`` completes the trio with the LRU victim rule. Each
+kernel is request-for-request equivalent to the Python policy variants
+this benchmark used to loop (`repro.core.esff_h`), so the ablation
+table is unchanged — it just runs on engine lanes now.
+"""
 from __future__ import annotations
 
-from benchmarks.common import default_trace, emit
-from repro.core import simulate
-from repro.core.esff_h import ESFFH
+from benchmarks.common import (default_trace_source, emit,
+                               enable_compilation_cache)
+from repro.api import (ExperimentSpec, available_policies,
+                       register_policy, run_experiment)
+
+CAPACITIES = (8, 16, 32)
+
+# (variant label, policy cell, beta cell) in fix-accumulation order
+CONFIGS = (
+    ("esff (paper)", "esff", 1.0),
+    ("+hysteresis", "esff", 2.0),
+    ("+coldcount", "esff_cc", 2.0),
+    ("+lru (esff_h)", "esff_h", 2.0),
+)
 
 
-def variant(beta=2.0, lru=True, coldcount=True):
-    class V(ESFFH):
-        pass
-    V.beta = beta
-    V.lru_victim = lru
-    if not coldcount:
-        V._drain_estimate = lambda self, fn_id, window: \
-            super(ESFFH, self)._drain_estimate(fn_id, window)
-    return V()
-
-
-CONFIGS = [
-    ("esff (paper)", dict(beta=1.0, lru=False, coldcount=False)),
-    ("+hysteresis", dict(beta=2.0, lru=False, coldcount=False)),
-    ("+coldcount", dict(beta=2.0, lru=False, coldcount=True)),
-    ("+lru (esff_h)", dict(beta=2.0, lru=True, coldcount=True)),
-]
+def _ensure_variant_kernels():
+    """Register the ablation-only ESFF variant (idempotent; the
+    singleton keeps the engine's jit cache warm across runs)."""
+    if "esff_cc" not in available_policies():
+        from repro.core.jax_policies import ESFFKernel
+        register_policy("esff_cc",
+                        ESFFKernel("esff_cc", cold_aware=True))
 
 
 def run(seed: int = 0):
+    _ensure_variant_kernels()
+    src = default_trace_source(seed)
+    # two specs so only the consumed (policy, beta) cells simulate:
+    # esff at both betas isolates the hysteresis; the cc/lru variants
+    # only matter at beta=2 (one cross-product spec would waste a
+    # third of the lanes on cells the table never reads)
+    grid = dict(traces=[src], capacities=CAPACITIES, queue_cap=4096)
+    by_policy = {
+        ("esff",): run_experiment(ExperimentSpec(
+            policies=("esff",), betas=(1.0, 2.0), **grid)).check(),
+        ("esff_cc", "esff_h"): run_experiment(ExperimentSpec(
+            policies=("esff_cc", "esff_h"), betas=(2.0,),
+            **grid)).check(),
+    }
     rows = []
-    for cap in (8, 16, 32):
-        for name, kw in CONFIGS:
-            tr = default_trace(seed)
-            r = simulate(tr, variant(**kw), cap)
-            rows.append(dict(capacity=cap, variant=name,
-                             mean_response=r.mean_response,
-                             cold_starts=r.server.cold_starts))
+    for cap in CAPACITIES:
+        for name, policy, beta in CONFIGS:
+            rs = next(v for k, v in by_policy.items() if policy in k)
+            cell = rs.sel(policy=policy, capacity=cap, beta=beta)
+            rows.append(dict(
+                capacity=cap, variant=name,
+                mean_response=cell.value("mean_response"),
+                cold_starts=int(cell.value("cold_starts"))))
     return rows
 
 
 def main():
+    enable_compilation_cache()
     rows = run()
     emit(rows, rows[0].keys())
     return rows

@@ -1,0 +1,118 @@
+"""Cluster scale-out: K = 1..16 edge nodes at fixed aggregate capacity.
+
+The LaSS-style question the single-server paper cannot ask: given a
+fixed slot budget, is it better served as one big edge server or as K
+small nodes behind a router — and how much does the *router* matter
+once cold starts dominate? One `repro.api.ExperimentSpec` declares the
+whole surface: the ``cluster`` axis carries every (router, K) topology
+with ``node_capacity = AGG // K`` per node, policies x routers x K in
+a single declarative grid.
+
+Emitted per (router, K, policy): mean/p99 response, cold-start
+fraction, and the node-load imbalance (max/mean of per-node completed
+requests). A second, timed pass records req/s rows per (router, K) —
+the BENCH_<stamp>.json throughput trajectory of the cluster subsystem
+(gated by ``benchmarks/run.py --baseline``).
+
+    PYTHONPATH=src python -m benchmarks.fig_cluster [--quick]
+        [--agg 32] [--policies esff,sff]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (default_trace_source, emit,
+                               enable_compilation_cache, timed)
+from repro.api import ClusterSpec, ExperimentSpec, run_experiment
+
+AGG = 32                      # fixed aggregate slot budget
+KS = (1, 2, 4, 8, 16)
+ROUTERS = ("hash", "round_robin", "jsq2", "cold_aware")
+POLICIES = ("esff", "sff")
+QUEUE_CAP = 1 << 15
+
+
+def _entries(routers, ks, agg):
+    return [ClusterSpec(n_nodes=k, router=r,
+                        node_capacity=(agg // k,) * k)
+            for r in routers for k in ks if agg % k == 0]
+
+
+def run(seed: int = 0, routers=ROUTERS, ks=KS, agg=AGG,
+        policies=POLICIES, head=None):
+    src = default_trace_source(seed)
+    if head:
+        src = src.head(head)
+    entries = _entries(routers, ks, agg)
+    spec = ExperimentSpec(traces=[src], policies=policies,
+                          capacities=(agg,), queue_cap=QUEUE_CAP,
+                          cluster=entries)
+    rs = run_experiment(spec).check()
+    n = rs.meta["n_requests"]
+    rows = []
+    for e in entries:
+        for policy in policies:
+            cell = rs.sel(policy=policy, cluster=e.label)
+            nd = cell.value("node_done")[: e.n_nodes]
+            rows.append(dict(
+                router=e.router, n_nodes=e.n_nodes,
+                node_capacity=agg // e.n_nodes, policy=policy,
+                mean_response=cell.value("mean_response"),
+                p99_response=cell.value("p99_response"),
+                cold_frac=cell.value("cold_starts") / n,
+                imbalance=float(nd.max() / max(nd.mean(), 1e-9)),
+            ))
+    return rows, src, entries
+
+
+def throughput_rows(src, entries, agg, queue_cap=QUEUE_CAP):
+    """Timed per-(router, K) re-runs (jit warm from the figure pass,
+    best-of-3 — sub-second walls flap under shared CPUs): the
+    ``req_s`` rows `benchmarks/run.py --baseline` regression-gates
+    alongside the single-node N-curve."""
+    rows = []
+    for e in entries:
+        spec = ExperimentSpec(traces=[src], policies=("esff",),
+                              capacities=(agg,), queue_cap=queue_cap,
+                              cluster=[e])
+        run_experiment(spec)                 # warm this topology
+        rs, dt = timed(run_experiment, spec, repeats=3)
+        n = rs.meta["n_requests"]
+        rows.append(dict(
+            name=f"cluster_{e.router}_K{e.n_nodes}", router=e.router,
+            n_nodes=e.n_nodes, n_requests=n, us_per_call=dt * 1e6,
+            req_s=n / dt, derived=f"{n / dt:.0f} req/s"))
+    return rows
+
+
+def main(argv=None):
+    enable_compilation_cache()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 routers, K in (1, 4), 4k-request head")
+    ap.add_argument("--agg", type=int, default=AGG)
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    args = ap.parse_args(argv)
+    routers = ("hash", "jsq2") if args.quick else ROUTERS
+    ks = (1, 4) if args.quick else KS
+    head = 4000 if args.quick else None
+    policies = tuple(args.policies.split(","))
+
+    rows, src, entries = run(routers=routers, ks=ks, agg=args.agg,
+                             policies=policies, head=head)
+    emit(rows, rows[0].keys())
+    print()
+    for r in routers:
+        curve = {x["n_nodes"]: x["mean_response"] for x in rows
+                 if x["router"] == r and x["policy"] == policies[0]}
+        pts = "  ".join(f"K={k}:{v:.3f}s"
+                        for k, v in sorted(curve.items()))
+        print(f"# {policies[0]} scale-out under {r}: {pts}")
+    tp = throughput_rows(src, entries, args.agg)
+    print()
+    emit(tp, tp[0].keys())
+    return rows + tp
+
+
+if __name__ == "__main__":
+    main()

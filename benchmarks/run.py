@@ -35,8 +35,8 @@ import os
 import sys
 import time
 
-SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "kernels",
-            "simthroughput", "enginescale")
+SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "cluster",
+            "kernels", "simthroughput", "enginescale")
 
 
 def smoke() -> int:
@@ -108,12 +108,54 @@ def smoke() -> int:
              if warned and parity else
              f"MISMATCH (warned={warned}, parity={parity})"))
 
+    # K=1 cluster gate: a 1-node cluster with zero network delay must
+    # be bitwise the single-node engine — through the static
+    # sub-stream fast path AND the dynamic routers' K-node event loop
+    from repro.api import ClusterSpec
+    cl = run_experiment(ExperimentSpec(
+        traces=[src], policies=("esff", "sff"), capacities=(capacity,),
+        queue_cap=256,
+        cluster=[ClusterSpec(n_nodes=1, router="hash"),
+                 ClusterSpec(n_nodes=1, router="jsq2"),
+                 ClusterSpec(n_nodes=1, router="cold_aware")]))
+    ref = run_experiment(ExperimentSpec(
+        traces=[src], policies=("esff", "sff"),
+        capacities=(capacity,), queue_cap=256))
+    ok = all(
+        np.array_equal(ref.data[m], np.take(cl.data[m], u, axis=4))
+        for u in range(len(cl.coords["cluster"])) for m in ref.data)
+    failures += 0 if ok else 1
+    print("cluster K=1 (static + dynamic): "
+          + ("bitwise-identical to single node  OK" if ok
+             else "MISMATCH"))
+
+    # NpzTrace round-trip: save_npz -> NpzTrace -> run must match the
+    # in-memory source bitwise (keeps the real-Azure path covered in
+    # containers without the dataset)
+    import tempfile
+
+    from repro.api import NpzTrace
+    with tempfile.TemporaryDirectory() as td:
+        npz_path = os.path.join(td, "smoke_trace.npz")
+        tr.save_npz(npz_path)
+        kw = dict(policies=("esff",), capacities=(capacity,),
+                  queue_cap=256)
+        via_npz = run_experiment(ExperimentSpec(
+            traces=[NpzTrace(path=npz_path)], **kw))
+        direct = run_experiment(ExperimentSpec(traces=[src], **kw))
+    ok = all(np.array_equal(via_npz.data[m], direct.data[m])
+             for m in direct.data)
+    failures += 0 if ok else 1
+    print("npz trace round-trip: "
+          + ("save_npz -> NpzTrace bitwise  OK" if ok
+             else "MISMATCH"))
+
     failures += _sharded_parity_check()
     failures += deprecation_scan()
     print(f"# smoke: {len(POLICIES)} policies, "
           f"{len(POLICIES)} engine-equivalence checks + streaming, "
-          f"shim-parity, 2-device and deprecation gates, "
-          f"{failures} failures")
+          f"shim-parity, cluster-K=1, npz round-trip, 2-device and "
+          f"deprecation gates, {failures} failures")
     return failures
 
 
@@ -165,12 +207,24 @@ _DEPRECATION_ALLOW = {
     os.path.join("benchmarks", "common.py"),
 }
 
+# benchmarks allowed to *deliberately* drive the Python event engine:
+# the engines-head-to-head microbench (its whole point is the
+# comparison) — everything else must go through repro.api
+_PY_ENGINE_ALLOW = {
+    os.path.join("benchmarks", "run.py"),
+    os.path.join("benchmarks", "sim_throughput.py"),
+}
+
 
 def deprecation_scan() -> int:
     """Fail on DeprecationWarning-free use of the old driving surface
     (importing ``sweep`` from the engine, or the ``REPRO_AZURE_NPZ``
     env var) anywhere in benchmarks/, examples/, scripts/ or src/ —
-    tests are exempt (they exercise the shim deliberately)."""
+    tests are exempt (they exercise the shim deliberately). Benchmarks
+    additionally must not drive the slow Python event engine
+    (``repro.core.simulate``) — every figure/ablation runs through
+    `repro.api.ExperimentSpec` since PR 4/5; only this file's smoke
+    parity gate may import it."""
     import re
 
     # import statements only (parenthesized or single-line), so prose
@@ -186,6 +240,13 @@ def deprecation_scan() -> int:
     pats = (
         re.compile(r"REPRO_AZURE_NPZ"),
         re.compile(r"\bjax_engine\.sweep\s*\("),
+    )
+    # benchmarks-only: the Python event engine (simulate / simulator)
+    py_engine_pats = (
+        re.compile(r"from\s+repro\.core\s+import\s*\(?[^)\n]*"
+                   r"\bsimulate\b"),
+        re.compile(r"from\s+repro\.core\.simulator\s+import"),
+        re.compile(r"\brepro\.core\.simulator\b"),
     )
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     bad = 0
@@ -213,6 +274,12 @@ def deprecation_scan() -> int:
                 for p in pats:
                     if p.search(text):
                         flag(rel, f"matches /{p.pattern}/")
+                if sub == "benchmarks" and rel not in _PY_ENGINE_ALLOW:
+                    for p in py_engine_pats:
+                        if p.search(text):
+                            flag(rel, "drives the Python event engine"
+                                      " (use repro.api)")
+                            break
     print("deprecation scan: " + ("OK" if not bad
                                   else f"{bad} hit(s)"))
     return bad
@@ -288,11 +355,13 @@ def main() -> None:
 
     from benchmarks import (ablation_esffh, engine_scale, fig5_capacity,
                             fig6_intensity, fig7_cdf, fig8_timeline,
-                            kernels_bench, sim_throughput)
+                            fig_cluster, kernels_bench, sim_throughput)
     scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
     mods = dict(fig5=fig5_capacity.main, fig6=fig6_intensity.main,
                 fig7=fig7_cdf.main, fig8=fig8_timeline.main,
                 ablation=ablation_esffh.main,
+                cluster=lambda: fig_cluster.main(
+                    ["--quick"] if scale < 1.0 else []),
                 kernels=kernels_bench.main,
                 simthroughput=sim_throughput.main,
                 # scaled-down aggregate runs skip the 10^6 tier

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, enable_compilation_cache
+from benchmarks.common import emit, enable_compilation_cache, timed
 from repro.api import ExperimentSpec, run_experiment
 from repro.core import simulate
 from repro.core.jax_sim import simulate_esff_jax
@@ -40,9 +40,11 @@ def run():
             jnp.asarray(a["evict"]))
     kw = dict(n_fns=tr.n_functions, capacity=16, queue_cap=1024)
     jax.block_until_ready(simulate_esff_jax(*args, **kw)["completion"])
-    t0 = time.perf_counter()
-    jax.block_until_ready(simulate_esff_jax(*args, **kw)["completion"])
-    t_jx = time.perf_counter() - t0
+    # best-of-3: at ~16 ms per pass single runs are far too noisy for
+    # the regression gate (±30% observed under shared CPUs)
+    _, t_jx = timed(
+        lambda: jax.block_until_ready(
+            simulate_esff_jax(*args, **kw)["completion"]))
     rows.append(dict(name="jax_sim_5k", us_per_call=t_jx * 1e6,
                      req_s=len(tr) / t_jx,
                      derived=f"{len(tr) / t_jx:.0f} req/s"))
@@ -55,9 +57,8 @@ def run():
 
     sweep_b = jax.jit(jax.vmap(run_beta))
     jax.block_until_ready(sweep_b(jnp.asarray(betas)))
-    t0 = time.perf_counter()
-    jax.block_until_ready(sweep_b(jnp.asarray(betas)))
-    t_sw = time.perf_counter() - t0
+    _, t_sw = timed(                 # best-of, same noise rationale
+        lambda: jax.block_until_ready(sweep_b(jnp.asarray(betas))))
     rows.append(dict(
         name="jax_sim_vmap8_sweep", us_per_call=t_sw * 1e6,
         req_s=8 * len(tr) / t_sw,

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 test suite + the engine smoke gate.
+#
+#   bash scripts/ci.sh            # everything (what CI runs on push)
+#   bash scripts/ci.sh tests      # tier-1 only
+#   bash scripts/ci.sh smoke      # smoke gate only
+#
+# Tier-1 is the repo's correctness bar (ROADMAP.md); the smoke gate
+# re-verifies request-for-request Python/JAX engine equivalence, the
+# streaming/exact + sweep-shim + cluster-K=1 + npz-round-trip bitwise
+# gates, 2-device sharded parity and the deprecated-entry-point scan
+# in <60s.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+stage="${1:-all}"
+
+if [[ "$stage" == "all" || "$stage" == "tests" ]]; then
+    echo "== tier-1: pytest =="
+    python -m pytest -x -q
+fi
+
+if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
+    echo "== smoke gate: benchmarks/run.py --smoke =="
+    python -m benchmarks.run --smoke
+fi
+
+echo "== ci.sh: OK =="

@@ -23,10 +23,14 @@ from repro.api.runner import run, run_experiment
 from repro.api.spec import (ArrayTrace, ExperimentSpec, NpzTrace,
                             SyntheticTrace, TraceSource,
                             as_trace_source)
+from repro.cluster import (ClusterSpec, available_routers, get_router,
+                           register_router, unregister_router)
 
 __all__ = [
     "ExperimentSpec", "TraceSource", "SyntheticTrace", "NpzTrace",
     "ArrayTrace", "as_trace_source", "ResultSet", "run",
     "run_experiment", "register_policy", "unregister_policy",
-    "get_kernel", "available_policies",
+    "get_kernel", "available_policies", "ClusterSpec",
+    "register_router", "unregister_router", "get_router",
+    "available_routers",
 ]

@@ -1,14 +1,17 @@
 """Labeled experiment results: the `ResultSet`.
 
-Every metric array carries the four grid axes ``(policy, trace,
-capacity, beta)`` in that order (trailing metric-specific dims —
-histogram bins, timeline bins, per-request N — follow), with the axis
-values in ``coords``. Selection (`sel` / `value`), tidy-row iteration
-(`rows`), CSV emission (`to_csv`) and an npz round-trip
-(`save_npz`/`load_npz`) replace the per-benchmark CSV/dict plumbing;
-`merge` reassembles ``host_shard`` partials computed on different
-machines. A ``computed`` mask tracks which grid cells this ResultSet
-actually holds (all of them unless the producing run was host-sharded).
+Every metric array carries the grid axes ``(policy, trace, capacity,
+beta)`` in that order — plus a trailing ``cluster`` axis when the
+producing `ExperimentSpec` declared one (`repro.cluster.ClusterSpec`
+entries; its coords are the entries' router-first labels). Trailing
+metric-specific dims — histogram bins, timeline bins, per-node counts,
+per-request N — follow the grid axes, with the axis values in
+``coords``. Selection (`sel` / `value`), tidy-row iteration (`rows`),
+CSV emission (`to_csv`) and an npz round-trip (`save_npz`/`load_npz`)
+replace the per-benchmark CSV/dict plumbing; `merge` reassembles
+``host_shard`` partials computed on different machines. A ``computed``
+mask tracks which grid cells this ResultSet actually holds (all of
+them unless the producing run was host-sharded).
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ from typing import Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 DIMS = ("policy", "trace", "capacity", "beta")
+CLUSTER_DIM = "cluster"     # optional trailing axis of cluster runs
 
 # metrics that must be zero on every computed cell for a run to be
 # valid (mirrors the overflow/stalled checks the figure scripts used
@@ -40,18 +44,26 @@ class ResultSet:
 
     def __post_init__(self):
         shape = self.grid_shape
+        nd = len(shape)
         if self.computed is None:
             self.computed = np.ones(shape, bool)
         for k, v in self.data.items():
-            if tuple(v.shape[:4]) != shape:
+            if tuple(v.shape[:nd]) != shape:
                 raise ValueError(
                     f"ResultSet: metric {k!r} shape {v.shape} does not "
                     f"lead with the grid shape {shape}")
 
     # ----------------------------------------------------------- basics
     @property
+    def dims(self):
+        """Grid axis names: the four core dims, plus ``cluster`` when
+        the producing spec declared a cluster axis."""
+        return (DIMS + (CLUSTER_DIM,) if CLUSTER_DIM in self.coords
+                else DIMS)
+
+    @property
     def grid_shape(self):
-        return tuple(len(self.coords[d]) for d in DIMS)
+        return tuple(len(self.coords[d]) for d in self.dims)
 
     @property
     def metrics(self) -> List[str]:
@@ -95,14 +107,15 @@ class ResultSet:
         ``rs.sel(policy="esff", capacity=[8, 16])``. Axes are retained
         (scalar selections become size-1) so any selection round-trips
         through ``save_npz``/``merge``; use `value` for one cell."""
-        unknown = set(which) - set(DIMS)
+        dims = self.dims
+        unknown = set(which) - set(dims)
         if unknown:
             raise KeyError(f"ResultSet.sel: unknown dim(s) "
-                           f"{sorted(unknown)}; dims are {DIMS}")
-        index = [slice(None)] * 4
+                           f"{sorted(unknown)}; dims are {dims}")
+        index = [slice(None)] * len(dims)
         coords = dict(self.coords)
         for d, want in which.items():
-            ax = DIMS.index(d)
+            ax = dims.index(d)
             ids = self._axis_indices(d, want)
             index[ax] = ids
             coords[d] = [self.coords[d][i] for i in ids]
@@ -126,42 +139,40 @@ class ResultSet:
         for scalar metrics, an ndarray for metrics with trailing dims
         (``resp_hist``, ``tl_*``, ``response``)."""
         sub = self.sel(**which) if which else self
-        if sub.grid_shape != (1, 1, 1, 1):
+        nd = len(sub.dims)
+        if sub.grid_shape != (1,) * nd:
             raise KeyError(
                 f"ResultSet.value({metric!r}): selection leaves grid "
-                f"{dict(zip(DIMS, sub.grid_shape))}, need exactly one "
-                "cell — add coords")
+                f"{dict(zip(sub.dims, sub.grid_shape))}, need exactly "
+                "one cell — add coords")
         if not sub.computed.reshape(-1)[0]:
             raise ValueError(
                 f"ResultSet.value({metric!r}): cell not computed (this "
                 "is a host shard — merge() the other shards first)")
-        cell = sub[metric][0, 0, 0, 0]
+        cell = sub[metric][(0,) * nd]
         return cell.item() if np.ndim(cell) == 0 else np.asarray(cell)
 
     # ------------------------------------------------------- tidy rows
     def rows(self, metrics: Optional[Sequence[str]] = None
              ) -> Iterator[dict]:
-        """Tidy iteration: one dict per computed grid cell carrying the
-        four coordinates plus every scalar metric (vector metrics are
-        skipped unless named explicitly in ``metrics``)."""
+        """Tidy iteration: one dict per computed grid cell carrying
+        every grid coordinate (the four core dims, plus ``cluster``
+        when the producing spec declared one) and every scalar metric
+        (vector metrics are skipped unless named explicitly in
+        ``metrics``)."""
+        dims = self.dims
         names = list(metrics) if metrics is not None else [
-            m for m in self.metrics if self.data[m].ndim == 4]
-        P, T, K, B = self.grid_shape
-        for pi in range(P):
-            for ti in range(T):
-                for ki in range(K):
-                    for bi in range(B):
-                        if not self.computed[pi, ti, ki, bi]:
-                            continue
-                        row = dict(policy=self.coords["policy"][pi],
-                                   trace=self.coords["trace"][ti],
-                                   capacity=self.coords["capacity"][ki],
-                                   beta=self.coords["beta"][bi])
-                        for m in names:
-                            cell = self.data[m][pi, ti, ki, bi]
-                            row[m] = (cell.item() if np.ndim(cell) == 0
-                                      else np.asarray(cell))
-                        yield row
+            m for m in self.metrics if self.data[m].ndim == len(dims)]
+        for cell_ix in np.ndindex(*self.grid_shape):
+            if not self.computed[cell_ix]:
+                continue
+            row = {d: self.coords[d][i]
+                   for d, i in zip(dims, cell_ix)}
+            for m in names:
+                cell = self.data[m][cell_ix]
+                row[m] = (cell.item() if np.ndim(cell) == 0
+                          else np.asarray(cell))
+            yield row
 
     def to_csv(self, out=None,
                metrics: Optional[Sequence[str]] = None) -> str:
@@ -198,7 +209,8 @@ class ResultSet:
             if bad.any():
                 cells = np.argwhere(bad)[:5]
                 named = [
-                    {d: self.coords[d][i] for d, i in zip(DIMS, c)}
+                    {d: self.coords[d][i]
+                     for d, i in zip(self.dims, c)}
                     for c in cells]
                 raise RuntimeError(
                     f"ResultSet.check: {int(bad.sum())} cell(s) with "
@@ -258,11 +270,12 @@ class ResultSet:
 
     # ------------------------------------------------------------ repr
     def __repr__(self):
-        P, T, K, B = self.grid_shape
+        shape = self.grid_shape
         done = int(self.computed.sum())
-        return (f"ResultSet(policies={P}, traces={T}, capacities={K}, "
-                f"betas={B}; {done}/{P * T * K * B} cells, "
-                f"metrics={self.metrics})")
+        axes = ", ".join(f"{d}={n}"
+                         for d, n in zip(self.dims, shape))
+        return (f"ResultSet({axes}; {done}/{int(np.prod(shape))} "
+                f"cells, metrics={self.metrics})")
 
     def summary(self) -> str:
         """Small human-readable table of mean_response per cell."""

@@ -82,11 +82,20 @@ def _chunk_plan(spec: ExperimentSpec, T: int, chunk: int):
 
 
 def run_experiment(spec: ExperimentSpec) -> ResultSet:
-    """Execute ``spec`` and return its labeled `ResultSet`."""
+    """Execute ``spec`` and return its labeled `ResultSet`.
+
+    A spec with a ``cluster`` axis is delegated to
+    `repro.cluster.runner.run_cluster_experiment`, which stacks one
+    (policy, trace, capacity, beta) grid per cluster topology into the
+    ResultSet's trailing ``cluster`` dim."""
     import jax
     import jax.numpy as jnp
 
     from repro.core.jax_engine import _sweep_metrics, resolve_lane_chunk
+
+    if spec.cluster is not None:
+        from repro.cluster.runner import run_cluster_experiment
+        return run_cluster_experiment(spec)
 
     spec.validate()
     sources, stacked, F, N = _lower_grid(spec)

@@ -289,6 +289,16 @@ class ExperimentSpec:
     ``host_shard=(i, n)`` keeps only every n-th chunk (offset i) for
     multi-host slicing — each host computes a disjoint chunk subset and
     the shards reassemble with `ResultSet.merge`.
+
+    Multi-node: ``cluster`` declares a fifth grid axis of
+    `repro.cluster.ClusterSpec` topologies (``None`` entries are the
+    plain single-node engine) — each cell simulates K edge nodes
+    behind the entry's router, via the static sub-stream fast path or
+    the dynamic in-loop router (docs/cluster.md). A single ClusterSpec
+    is promoted to a one-entry axis. When any entry fixes
+    ``node_capacity``, the capacity axis must have exactly one entry
+    (it labels the aggregate). Cluster runs execute on the default
+    device (``host_shard`` must stay (0, 1)).
     """
 
     traces: Sequence = ()
@@ -307,6 +317,7 @@ class ExperimentSpec:
     lane_chunk: Union[int, str, None] = None
     devices: Optional[int] = None
     host_shard: Tuple[int, int] = (0, 1)
+    cluster: Optional[Sequence] = None
     meta: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -321,6 +332,11 @@ class ExperimentSpec:
         if self.seeds is not None:
             self.seeds = tuple(int(s) for s in self.seeds)
         self.host_shard = tuple(int(x) for x in self.host_shard)
+        if self.cluster is not None:
+            from repro.cluster.spec import ClusterSpec
+            if isinstance(self.cluster, ClusterSpec):
+                self.cluster = (self.cluster,)
+            self.cluster = tuple(self.cluster)
 
     # ------------------------------------------------------- validation
     def validate(self) -> "ExperimentSpec":
@@ -369,6 +385,38 @@ class ExperimentSpec:
         if self.devices is not None and self.devices < 1:
             raise ValueError("ExperimentSpec: devices must be >= 1 "
                              "(None = all local devices)")
+        if self.cluster is not None:
+            from repro.cluster.spec import ClusterSpec
+            if not self.cluster:
+                raise ValueError(
+                    "ExperimentSpec: cluster=() — use None for plain "
+                    "single-node runs")
+            for entry in self.cluster:
+                if entry is None:
+                    continue
+                if not isinstance(entry, ClusterSpec):
+                    raise TypeError(
+                        f"ExperimentSpec: cluster entries must be "
+                        f"ClusterSpec or None, got "
+                        f"{type(entry).__name__}")
+                entry.validate()
+                if (entry.node_capacity is not None
+                        and len(self.capacities) != 1):
+                    raise ValueError(
+                        "ExperimentSpec: a ClusterSpec with "
+                        "node_capacity fixes per-node slots, so the "
+                        "capacity axis must have exactly one entry "
+                        f"(the aggregate label); got "
+                        f"{self.capacities}")
+            if self.host_shard != (0, 1):
+                raise ValueError(
+                    "ExperimentSpec: cluster runs do not support "
+                    "host_shard yet")
+            if self.devices not in (None, 1):
+                raise ValueError(
+                    "ExperimentSpec: cluster runs execute on the "
+                    "default device; devices must be None or 1, got "
+                    f"{self.devices}")
         return self
 
     # -------------------------------------------------------- expansion
@@ -382,5 +430,6 @@ class ExperimentSpec:
 
     def grid_size(self) -> int:
         b = 1 if self.betas is None else len(self.betas)
+        u = 1 if self.cluster is None else len(self.cluster)
         return (len(self.policies) * len(self.expanded_traces())
-                * len(self.capacities) * b)
+                * len(self.capacities) * b * u)

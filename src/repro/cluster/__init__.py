@@ -1,0 +1,31 @@
+"""Multi-node edge cluster simulation over the vectorised engine.
+
+The paper's scheduler runs on one resource-limited edge server; this
+package simulates K heterogeneous edge nodes behind a request router —
+the LaSS-style deployment shape — on top of the same policy kernels:
+
+* `ClusterSpec` declares a topology (node count, per-node capacities,
+  router, network delays) and rides `repro.api.ExperimentSpec`'s
+  ``cluster`` axis;
+* `repro.cluster.routers` holds the router registry (static: ``hash``,
+  ``round_robin``, ``weighted_random``; dynamic: ``jsq2``,
+  ``cold_aware``) with `register_router` for plug-ins;
+* `repro.cluster.static` is the static-routing fast path (sub-stream
+  partition → unmodified single-node engine → exact merge);
+* `repro.cluster.engine` is the dynamic-routing K-node event loop;
+* `repro.cluster.reference` is the straightforward Python cluster
+  simulator the JAX paths are parity-tested against.
+
+See docs/cluster.md for the full tour.
+"""
+from repro.cluster.routers import (ROUTERS, ClusterView, DynamicRouter,
+                                   Router, StaticRouter,
+                                   available_routers, get_router,
+                                   register_router, unregister_router)
+from repro.cluster.spec import ClusterSpec
+
+__all__ = [
+    "ClusterSpec", "Router", "StaticRouter", "DynamicRouter",
+    "ClusterView", "ROUTERS", "available_routers", "get_router",
+    "register_router", "unregister_router",
+]

@@ -1,0 +1,433 @@
+"""Dynamic-routing cluster engine: K nodes, one vectorised event loop.
+
+Static routers can pre-partition the arrival stream and reuse the
+single-node engine per node (`repro.cluster.static`); a *dynamic*
+router (JSQ(d), cold-aware) reads live cluster state at every arrival,
+so the routing decision has to live inside the event loop. This module
+generalises `repro.core.jax_engine._simulate` to K co-simulated nodes
+per lane:
+
+* **slots** become a (L, K, C) node-major rail — the packed next-event
+  argmin runs over the flattened (L, 2·K·C + 1) candidate matrix, so
+  the same-time class order (EXEC < COLD < ARRIVAL) and the
+  within-class index tie-break extend the single-node engine's exactly
+  (node-major slot order);
+* **queues** become per-(node, function) FIFOs. The single-node
+  engine's positional cursors assume a function's queue is a contiguous
+  range of its precomputed arrival order — runtime routing breaks that
+  invariant (which arrivals of f_j reach node k is state-dependent) —
+  so the cluster carries an (L, N) linked-list rail ``nxt`` plus
+  (L, K, F) head/tail/length cursors. ``nxt`` is both gathered and
+  scattered per event, the pattern the single-node engine's rule 3
+  avoids; the resulting per-event copy is O(N) and is the documented
+  cost of the dynamic tier (fine at the 10^4–10^5-request traces
+  cluster studies run; the static tier keeps the O(F+C) carry).
+* **estimators** become node-local ((L, K, F) running sums plus
+  (L, K) node-global fallbacks): each node's scheduler learns only
+  from its own completions, exactly as K independent servers would.
+
+Policy kernels run *unmodified*: per event the lane state is sliced
+into a single-node **view** of the event's node (slot/queue/estimator
+rows; lane-global ci/cf/metric keys pass through) and the kernel's
+hooks operate on that view through a `ClusterNodeCtx`, which overrides
+the ctx-dispatched queue ops (`EngineCtx.q_push`/`q_pop`/…) with the
+linked-list discipline and `est_means` with the node-local fallback
+chain. Timer-rail policies (``openwhisk_v2``) ride arrival-order
+positions that routing also breaks — they are rejected here and
+supported on the static path only.
+
+With ``n_nodes=1`` the loop degenerates to the single-node engine —
+same candidate order, same helper arithmetic, same fold — and is
+bitwise identical to it (gated in ``benchmarks/run.py --smoke`` and
+tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.jax_engine import (BIG, BUSY, CI_DONE, CI_ITERS,
+                                   CI_NEXT, CI_OVF, CI_STALL, COLD,
+                                   HIST_BINS, I32_MAX, IDLE, NCF, NCI,
+                                   SEG, EngineCtx, _fold_event, _gidx,
+                                   ensure_x64, hist_quantile)
+from repro.cluster.routers import ClusterView
+
+ensure_x64()
+
+# state keys sliced to the event's node before kernel hooks run (the
+# kernel's extra_state keys are appended per call)
+_NODAL = ("slot_fn", "slot_state", "slot_ready", "slot_req",
+          "slot_used", "slot_seq", "q_len", "q_head_rid", "q_tail_rid",
+          "est_sum", "est_n", "node_gn", "node_gsum")
+
+
+class ClusterNodeCtx(EngineCtx):
+    """Single-node view ctx over one node of a cluster lane.
+
+    Reads go straight to the full trace operands (the cluster loop is
+    single-window); the ctx-dispatched queue ops are the linked-list
+    discipline over the ``nxt`` rail, and the estimator fallback chain
+    uses the node-local globals instead of the lane counters.
+    """
+
+    def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2, tix,
+                 cap_mask, beta, prior, threshold, k, n, f, c, q,
+                 stream, tl_bins, tl_bucket):
+        super().__init__(
+            fn_id2=fn_id2, arrival2=arrival2, exec2=exec2, cold2=cold2,
+            evict2=evict2, pos_rids2=None, pos_off2=None,
+            slabs=(None,) * 7, win_base=0, win_w=n, tix=tix,
+            cap_mask=cap_mask, beta=beta, prior=prior,
+            threshold=threshold, k=k, n=n, f=f, c=c, q=q, stream=stream,
+            tl_bins=tl_bins, tl_bucket=tl_bucket)
+
+    # ------------------------------------------------ estimator override
+    def est_means(self, s):
+        counts = s["est_n"].astype(jnp.float64)
+        gn = s["node_gn"]
+        g = jnp.where(gn > 0,
+                      s["node_gsum"]
+                      / jnp.maximum(gn.astype(jnp.float64), 1),
+                      self.prior)
+        return jnp.where(s["est_n"] > 0,
+                         s["est_sum"] / jnp.maximum(counts, 1), g)
+
+    # ------------------------------------------- linked-list queue ops
+    # (q_head is inherited: the head cache works the same way)
+    def q_push(self, s, fn, rid, on):
+        fc = jnp.clip(fn, 0, self.F - 1)
+        was_empty = s["q_len"][fc] == 0
+        full = s["q_len"][fc] >= self.Q
+        do = on & ~full
+        rid32 = jnp.asarray(rid, jnp.int32)
+        tail = s["q_tail_rid"][fc]
+        s = dict(s)
+        s["q_head_rid"] = s["q_head_rid"].at[
+            _gidx(do & was_empty, fn, self.F)].set(rid32, mode="drop")
+        s["nxt"] = s["nxt"].at[
+            _gidx(do & ~was_empty, tail, self.N)].set(rid32,
+                                                      mode="drop")
+        s["q_tail_rid"] = s["q_tail_rid"].at[
+            _gidx(do, fn, self.F)].set(rid32, mode="drop")
+        s["q_len"] = s["q_len"].at[_gidx(do, fn, self.F)].add(
+            1, mode="drop")
+        s["ci"] = s["ci"].at[CI_OVF].add((on & full).astype(jnp.int32))
+        return s, do
+
+    def q_consume_direct(self, s, fn, on):
+        # no positional cursor to advance: a directly dispatched
+        # arrival simply never enters the linked list
+        return s
+
+    def q_pop(self, s, fn, on):
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rid = s["q_head_rid"][fc]
+        succ = s["nxt"][jnp.clip(rid, 0, self.N - 1)]
+        fi = _gidx(on, fn, self.F)
+        s = dict(s)
+        s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
+        s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+        return s, rid
+
+
+# ------------------------------------------------------------ event loop
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "router", "n_nodes",
+                                    "n_fns", "capacity", "queue_cap",
+                                    "seed", "stream", "tl_bins"))
+def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
+                      trace_ix, cap_mask, beta, prior, threshold, *,
+                      kernel, router, n_nodes, n_fns, capacity,
+                      queue_cap, seed=0, stream=False, tl_bins=0,
+                      tl_bucket=60.0):
+    """K-node lane-batched cluster loop (see the module docstring).
+
+    ``cap_mask`` is (L, K, C) — heterogeneous node capacities are
+    per-node slot masks over the common C = max slots. Returns the
+    single-node engine's output dict plus ``node_done`` (L, K), the
+    per-node completion counts (the router balance diagnostic, and the
+    conservation check: rows sum to N).
+    """
+    if kernel.has_timers:
+        raise ValueError(
+            f"dynamic cluster routing does not support timer-rail "
+            f"policies ({kernel.name!r}); use a static router for "
+            "them (docs/cluster.md)")
+    L = trace_ix.shape[0]
+    N = fn_id.shape[1]
+    F, C, K, Q = n_fns, capacity, n_nodes, queue_cap
+    KC = K * C
+
+    fn_id = fn_id.astype(jnp.int32)
+    arrival = arrival.astype(jnp.float64)
+    exec_time = exec_time.astype(jnp.float64)
+    t_cold = t_cold.astype(jnp.float64)
+    t_evict = t_evict.astype(jnp.float64)
+    trace_ix = trace_ix.astype(jnp.int32)
+    prior = jnp.float64(prior)
+    threshold = jnp.float64(threshold)
+    tl_bucket = jnp.float64(tl_bucket)
+
+    s = dict(
+        slot_fn=jnp.full((L, K, C), -1, jnp.int32),
+        slot_state=jnp.full((L, K, C), IDLE, jnp.int32),
+        slot_ready=jnp.full((L, K, C), BIG, jnp.float64),
+        slot_req=jnp.full((L, K, C), -1, jnp.int32),
+        slot_used=jnp.zeros((L, K, C), jnp.float64),
+        slot_seq=jnp.full((L, K, C), I32_MAX, jnp.int32),
+        q_len=jnp.zeros((L, K, F), jnp.int32),
+        q_head_rid=jnp.full((L, K, F), -1, jnp.int32),
+        q_tail_rid=jnp.full((L, K, F), -1, jnp.int32),
+        nxt=jnp.full((L, N), -1, jnp.int32),
+        est_sum=jnp.zeros((L, K, F), jnp.float64),
+        est_n=jnp.zeros((L, K, F), jnp.int32),
+        node_gn=jnp.zeros((L, K), jnp.int32),
+        node_gsum=jnp.zeros((L, K), jnp.float64),
+        node_done=jnp.zeros((L, K), jnp.int32),
+        ci=jnp.zeros((L, NCI), jnp.int32),
+        cf=jnp.zeros((L, NCF), jnp.float64),
+        hist=jnp.zeros((L, HIST_BINS), jnp.int32),
+    )
+    if not stream:
+        s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+        s["d_start"] = jnp.zeros((L, SEG), jnp.float64)
+        s["d_comp"] = jnp.zeros((L, SEG), jnp.float64)
+        s["start"] = jnp.full((L, N), -1.0, jnp.float64)
+        s["completion"] = jnp.full((L, N), -1.0, jnp.float64)
+    if tl_bins:
+        s["tl_cnt"] = jnp.zeros((L, tl_bins), jnp.int32)
+        s["tl_resp"] = jnp.zeros((L, tl_bins), jnp.float64)
+        s["tl_exec"] = jnp.zeros((L, tl_bins), jnp.float64)
+    extra = kernel.extra_state(L, C, F)
+    nodal = _NODAL + tuple(extra)
+    for kk, v in extra.items():
+        # one copy of the kernel's per-server state per node
+        s[kk] = jnp.repeat(v[:, None, ...], K, axis=1)
+
+    max_iters = 256 * N + 4096
+    n_cand = 2 * KC + 1
+    lanes = jnp.arange(L, dtype=jnp.int32)
+    lane_iota = lanes[:, None]
+    t_cold_l = t_cold[trace_ix]
+    t_evict_l = t_evict[trace_ix]
+    # flattened-view reads with per-lane bases: (T, N) two-dim gathers
+    # only hit the fast XLA:CPU path at T == 1 (see EngineCtx)
+    arr_flat = arrival.reshape(-1)
+    fn_flat = fn_id.reshape(-1)
+    base_n = trace_ix * N
+
+    def node_view(s, k):
+        v = dict(s)
+        for key in nodal:
+            v[key] = lax.dynamic_index_in_dim(s[key], k, 0, False)
+        return v
+
+    def node_commit(s, v, k):
+        out = dict(v)
+        for key in nodal:
+            out[key] = s[key].at[k].set(v[key])
+        return out
+
+    def make_ctx(tix, cold_l, evict_l, capm_node, beta, k_step):
+        return ClusterNodeCtx(
+            fn_id2=fn_id, arrival2=arrival, exec2=exec_time,
+            cold2=cold_l, evict2=evict_l, tix=tix, cap_mask=capm_node,
+            beta=beta, prior=prior, threshold=threshold, k=k_step,
+            n=N, f=F, c=C, q=Q, stream=stream, tl_bins=tl_bins,
+            tl_bucket=tl_bucket)
+
+    def pick_events(s):
+        na = s["ci"][:, CI_NEXT]
+        r = jnp.minimum(na, N - 1)
+        t_arr = jnp.where(na < N, arr_flat[base_n + r], BIG)
+        ready = jnp.where(cap_mask, s["slot_ready"], BIG
+                          ).reshape(L, KC)
+        st = s["slot_state"].reshape(L, KC)
+        cand = jnp.concatenate(
+            [jnp.where(st == BUSY, ready, BIG),
+             jnp.where(st == COLD, ready, BIG),
+             t_arr[:, None]], axis=1)
+        ei = jnp.argmin(cand, axis=1).astype(jnp.int32)
+        t_ev = jnp.take_along_axis(cand, ei[:, None], axis=1)[:, 0]
+        return ei, t_ev, t_arr
+
+    def lane_step(k_step, s, tix, cold_l, evict_l, capm, beta, ei,
+                  t_ev, t_arr):
+        ci = s["ci"]
+        active = (ci[CI_DONE] < N) & (ci[CI_STALL] == 0)
+        na = ci[CI_NEXT]
+        live = active & (t_ev < BIG)
+        s = dict(s)
+        s["ev_rid"] = jnp.int32(-1)
+        s["ev_comp"] = jnp.float64(0.0)
+        s["ev_exec"] = jnp.float64(0.0)
+        ev_slot = live & (ei < 2 * KC)
+        is_cold = ei >= KC
+        sflat = jnp.clip(jnp.where(is_cold, ei - KC, ei), 0, KC - 1)
+        node_s = sflat // C
+        slot = sflat % C
+        ev_arr = live & (ei == n_cand - 1)
+
+        # ------------------------------------------------- slot event
+        cold_on = ev_slot & is_cold
+        exec_on = ev_slot & ~is_cold
+        v = node_view(s, node_s)
+        ctx_s = make_ctx(tix, cold_l, evict_l, capm[node_s], beta,
+                         k_step)
+        rid_done = v["slot_req"][slot]
+        j_done = v["slot_fn"][slot]
+        e_done = ctx_s.exec_at(rid_done)
+        si = _gidx(ev_slot, slot, C)
+        ji = _gidx(exec_on, j_done, F)
+        exec_i = exec_on.astype(jnp.int32)
+        v = dict(v)
+        v["slot_state"] = v["slot_state"].at[si].set(IDLE, mode="drop")
+        v["slot_ready"] = v["slot_ready"].at[si].set(BIG, mode="drop")
+        v["slot_req"] = v["slot_req"].at[si].set(-1, mode="drop")
+        # the node's estimator sees the completion before its policy
+        # reacts, exactly like the single-node engine
+        v["est_sum"] = v["est_sum"].at[ji].add(e_done, mode="drop")
+        v["est_n"] = v["est_n"].at[ji].add(1, mode="drop")
+        v["node_gsum"] = v["node_gsum"] + jnp.where(exec_on, e_done,
+                                                    0.0)
+        v["node_gn"] = v["node_gn"] + exec_i
+        v["ci"] = v["ci"].at[CI_DONE].add(exec_i)
+        v = kernel.on_cold_done(ctx_s, v, slot, t_ev, cold_on)
+        v = kernel.on_exec_done(ctx_s, v, slot, rid_done, t_ev,
+                                exec_on)
+        s = node_commit(s, v, node_s)
+        s["node_done"] = s["node_done"].at[
+            _gidx(exec_on, node_s, K)].add(1, mode="drop")
+
+        # ---------------------------------------------------- arrival
+        rid_a = jnp.minimum(na, N - 1)
+        j_a = fn_flat[tix * N + rid_a]
+        g = ClusterView(q_len=s["q_len"], slot_fn=s["slot_fn"],
+                        slot_state=s["slot_state"], cap_mask=capm,
+                        est_sum=s["est_sum"], est_n=s["est_n"],
+                        node_gn=s["node_gn"], node_gsum=s["node_gsum"],
+                        t_cold=cold_l, prior=prior, n_nodes=K,
+                        seed=seed)
+        k_route = jnp.clip(router.pick(g, j_a, rid_a, t_arr), 0, K - 1)
+        v = node_view(s, k_route)
+        ctx_a = make_ctx(tix, cold_l, evict_l, capm[k_route], beta,
+                         k_step)
+        progress = ev_slot | ev_arr
+        v = dict(v)
+        v["ci"] = v["ci"].at[jnp.array([CI_NEXT, CI_ITERS])].add(
+            jnp.stack([ev_arr.astype(jnp.int32),
+                       progress.astype(jnp.int32)]))
+        v = kernel.on_arrival(ctx_a, v, rid_a, t_arr, ev_arr)
+        s = node_commit(s, v, k_route)
+
+        s = _fold_event(ctx_a, s)
+        s = dict(s)
+        stall = jnp.where(
+            active & ~live, 1,
+            jnp.where(active & (s["ci"][CI_ITERS] >= max_iters), 2,
+                      s["ci"][CI_STALL]))
+        s["ci"] = s["ci"].at[CI_STALL].set(stall)
+        return s
+
+    step_lanes = jax.vmap(
+        lane_step, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+
+    def cond(s):
+        ci = s["ci"]
+        return jnp.any((ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0))
+
+    def segment(s):
+        if not stream:
+            s = dict(s)
+            s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+
+        def step(k_step, s):
+            ei, t_ev, t_arr = pick_events(s)
+            return step_lanes(k_step, s, trace_ix, t_cold_l,
+                              t_evict_l, cap_mask, beta, ei, t_ev,
+                              t_arr)
+
+        s = lax.fori_loop(0, SEG, step, s)
+        if not stream:
+            s = dict(s)
+            s["start"] = s["start"].at[lane_iota, s["d_rid"]].set(
+                s["d_start"], mode="drop")
+            s["completion"] = s["completion"].at[
+                lane_iota, s["d_rid"]].set(s["d_comp"], mode="drop")
+        return s
+
+    final = lax.while_loop(cond, segment, s)
+    ci, cf = final["ci"], final["cf"]
+    from repro.core.jax_engine import (CF_COLDT, CF_EVICTT, CF_RMAX,
+                                       CF_RSUM, CF_SSUM, CI_COLD,
+                                       CI_EVICT)
+    out = dict(cold_starts=ci[:, CI_COLD], cold_time=cf[:, CF_COLDT],
+               evictions=ci[:, CI_EVICT], evict_time=cf[:, CF_EVICTT],
+               overflow=ci[:, CI_OVF],
+               stalled=ci[:, CI_STALL], n_events=ci[:, CI_ITERS],
+               done=ci[:, CI_DONE], node_done=final["node_done"],
+               resp_sum=cf[:, CF_RSUM], slow_sum=cf[:, CF_SSUM],
+               max_response=cf[:, CF_RMAX], resp_hist=final["hist"])
+    if tl_bins:
+        out["tl_count"] = final["tl_cnt"]
+        out["tl_resp_sum"] = final["tl_resp"]
+        out["tl_exec_sum"] = final["tl_exec"]
+    if not stream:
+        out["start"] = final["start"]
+        out["completion"] = final["completion"]
+    return out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "router", "n_nodes",
+                                    "n_fns", "capacity", "queue_cap",
+                                    "seed", "stream", "tl_bins",
+                                    "keep_responses"))
+def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
+                     threshold, *, kernel, router, n_nodes, n_fns,
+                     capacity, queue_cap, seed=0, stream=True,
+                     tl_bins=0, tl_bucket=60.0, keep_responses=False):
+    """Cluster counterpart of `jax_engine._sweep_metrics`: lane-batched
+    dynamic-router run + on-device metric reduction (same metric
+    names, plus ``node_done``)."""
+    if keep_responses and stream:
+        raise ValueError("keep_responses requires stream=False")
+    out = _simulate_cluster(fn, arr, ex, cold, ev, tix, masks, betas,
+                            prior, threshold, kernel=kernel,
+                            router=router, n_nodes=n_nodes,
+                            n_fns=n_fns, capacity=capacity,
+                            queue_cap=queue_cap, seed=seed,
+                            stream=stream, tl_bins=tl_bins,
+                            tl_bucket=tl_bucket)
+    N = fn.shape[1]
+    if stream:
+        p99 = hist_quantile(out["resp_hist"], 0.99, N,
+                            out["max_response"])
+    else:
+        resp = out["completion"] - arr[tix]
+        p99 = jnp.percentile(resp, 99.0, axis=1)
+    res = dict(mean_response=out["resp_sum"] / N,
+               mean_slowdown=out["slow_sum"] / N,
+               resp_sum=out["resp_sum"],
+               slow_sum=out["slow_sum"],
+               done=out["done"],
+               node_done=out["node_done"],
+               p99_response=p99,
+               max_response=out["max_response"],
+               resp_hist=out["resp_hist"],
+               cold_starts=out["cold_starts"],
+               cold_time=out["cold_time"],
+               evictions=out["evictions"],
+               overflow=out["overflow"],
+               stalled=out["stalled"])
+    if tl_bins:
+        res["tl_count"] = out["tl_count"]
+        res["tl_resp_sum"] = out["tl_resp_sum"]
+        res["tl_exec_sum"] = out["tl_exec_sum"]
+    if keep_responses:
+        res["response"] = resp
+    return res

@@ -1,0 +1,197 @@
+"""Straightforward Python reference cluster: router + K event engines.
+
+The trustworthy-but-slow baseline the vectorised cluster paths are
+parity-tested against (tests/test_cluster.py): K completely ordinary
+single-node simulations — each node is its own
+`repro.core.server.EdgeServer` + `ExecTimeEstimator` + event-driven
+policy instance, untouched — sharing **one** global `EventQueue`, so
+simultaneous events interleave across nodes exactly like the paper's
+single-server engine orders them (EXEC_DONE < COLD_DONE < TIMER <
+ARRIVAL, FIFO within a kind). At each ARRIVAL the router picks the
+node from live global state using the *same arithmetic* (same `mix32`
+draws, same score formula, same first-argmin tie-break) as the traced
+routers in `repro.cluster.routers`, then hands the request to that
+node's policy.
+
+Nodes only interact through the router, so any cross-node ordering of
+same-time non-arrival events is immaterial — which is what makes this
+composition a faithful reference for the JAX loop's node-major
+tie-breaking.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.cluster.routers import DynamicRouter, JSQRouter
+from repro.cluster.spec import ClusterSpec
+from repro.core.events import EventKind, EventQueue
+from repro.core.policy import POLICIES
+from repro.core.request import Trace
+from repro.core.server import (EdgeServer, ExecTimeEstimator,
+                               InstanceState)
+
+
+def _queues(policy) -> dict:
+    """The per-function waiting deques, whatever the policy calls
+    them (`queues` for per-function-queue policies, `fifo` for the
+    central-queue family)."""
+    if hasattr(policy, "queues"):
+        return policy.queues
+    if hasattr(policy, "fifo"):
+        return policy.fifo
+    raise TypeError(
+        f"policy {policy.name!r} exposes no queue structure the "
+        "reference router can read")
+
+
+def _busy(server: EdgeServer) -> int:
+    return sum(1 for i in server.instances.values()
+               if i.state == InstanceState.BUSY)
+
+
+def _pick_dynamic(router: DynamicRouter, servers, policies, ests,
+                  functions, rid: int, fn: int, seed: int,
+                  prior: float) -> int:
+    """Python mirror of the traced `DynamicRouter.pick` arithmetic."""
+    K = len(servers)
+    if K == 1:
+        return 0
+    if isinstance(router, JSQRouter):
+        load = [sum(len(q) for q in _queues(p).values()) + _busy(s)
+                for p, s in zip(policies, servers)]
+        nodes = list(range(K))
+        for i, jd in JSQRouter.sample(rid, seed, K, router.d):
+            nodes[i], nodes[jd] = nodes[jd], nodes[i]
+        best = nodes[0]
+        for i in range(1, min(router.d, K)):
+            if load[nodes[i]] < load[best]:
+                best = nodes[i]
+        return best
+    # cold_aware: estimated time-to-start per node, first argmin
+    best_k, best_score = 0, None
+    for k, (srv, pol, est) in enumerate(zip(servers, policies, ests)):
+        gmean = est.gsum / max(est.gn, 1) if est.gn > 0 else prior
+        n_j = est.n[fn]
+        mean_j = est.sum[fn] / max(n_j, 1) if n_j > 0 else gmean
+        has_idle = srv.idle_of(fn) is not None
+        qtot = sum(len(q) for q in _queues(pol).values())
+        score = ((0.0 if has_idle else functions[fn].cold_start)
+                 + mean_j * len(_queues(pol)[fn])
+                 + gmean * (qtot + _busy(srv)))
+        if best_score is None or score < best_score:
+            best_k, best_score = k, score
+    return best_k
+
+
+def simulate_cluster_reference(trace: Trace, policy_name: str,
+                               cspec: ClusterSpec, *,
+                               capacity: Optional[int] = None,
+                               exec_prior: float = 0.1,
+                               max_events: Optional[int] = None
+                               ) -> Dict[str, np.ndarray]:
+    """Run ``policy_name`` on a K-node cluster over ``trace``.
+
+    ``capacity`` is the per-node slot count when the spec leaves
+    ``node_capacity`` unset. Returns per-request ``start`` /
+    ``completion`` / ``response`` (original request order), the (N,)
+    node ``assign``ment, per-node ``node_done`` / ``node_cold`` counts
+    and the cluster totals.
+    """
+    cspec.validate()
+    K = cspec.n_nodes
+    caps = cspec.node_caps(capacity if capacity is not None else 0)
+    if any(c < 1 for c in caps):
+        raise ValueError("simulate_cluster_reference: pass capacity= "
+                         "or set ClusterSpec.node_capacity")
+    router = cspec.get_router()
+    delays = cspec.delays()
+
+    events = EventQueue()
+    servers = [EdgeServer(trace.functions, caps[k], events)
+               for k in range(K)]
+    ests = [ExecTimeEstimator(trace.n_functions, prior=exec_prior)
+            for _ in range(K)]
+    policies = []
+    for k in range(K):
+        pol = POLICIES[policy_name]()
+        pol.bind(servers[k], ests[k])
+        policies.append(pol)
+
+    N = len(trace.requests)
+    assign = np.full((N,), -1, np.int32)
+    static_assign = None
+    if not router.dynamic:
+        a = trace.to_arrays()
+        static_assign = np.asarray(
+            router.assign(a["fn_id"], a["arrival"], cspec))
+
+    for r in trace.requests:
+        r.start = -1.0
+        r.completion = -1.0
+        if static_assign is not None:
+            # the node is known upfront; the request reaches it after
+            # its network delay
+            k = int(static_assign[r.req_id])
+            events.push(r.arrival + delays[k], EventKind.ARRIVAL, r)
+        else:
+            events.push(r.arrival, EventKind.ARRIVAL, r)
+
+    def owner(inst) -> int:
+        for k, srv in enumerate(servers):
+            if srv.instances.get(inst.inst_id) is inst:
+                return k
+        raise RuntimeError(f"instance {inst.inst_id} owned by no node")
+
+    node_done = np.zeros((K,), np.int64)
+    n_events = 0
+    while True:
+        ev = events.pop()
+        if ev is None:
+            break
+        n_events += 1
+        if max_events is not None and n_events > max_events:
+            raise RuntimeError(f"event budget exceeded ({max_events})")
+        if ev.kind == EventKind.ARRIVAL:
+            req = ev.payload
+            if static_assign is not None:
+                k = int(static_assign[req.req_id])
+            else:
+                k = _pick_dynamic(router, servers, policies, ests,
+                                  trace.functions, req.req_id,
+                                  req.fn_id, cspec.seed, exec_prior)
+            assign[req.req_id] = k
+            policies[k].on_arrival(req, ev.time)
+        elif ev.kind == EventKind.EXEC_DONE:
+            inst = ev.payload
+            k = owner(inst)
+            req = inst.current
+            ests[k].observe(req.fn_id, req.exec_time)
+            node_done[k] += 1
+            policies[k].on_exec_done(inst, req, ev.time)
+        elif ev.kind == EventKind.COLD_DONE:
+            inst = ev.payload
+            policies[owner(inst)].on_cold_done(inst, ev.time)
+        elif ev.kind == EventKind.TIMER:
+            # timer payloads are requests; route to the node that owns
+            # the request (openwhisk_v2 on the static path)
+            req = ev.payload
+            k = int(assign[req.req_id])
+            if k >= 0:
+                policies[k].on_timer(req, ev.time)
+
+    start = np.array([r.start for r in trace.requests])
+    completion = np.array([r.completion for r in trace.requests])
+    # response measured from the node-local (delayed) arrival, the
+    # engine's convention (docs/cluster.md)
+    arr = np.array([r.arrival for r in trace.requests])
+    if static_assign is not None:
+        arr = arr + np.asarray(delays)[static_assign]
+    return dict(
+        start=start, completion=completion, response=completion - arr,
+        assign=assign, node_done=node_done,
+        node_cold=np.array([s.stats.cold_starts for s in servers]),
+        cold_starts=int(sum(s.stats.cold_starts for s in servers)),
+        evictions=int(sum(s.stats.evictions for s in servers)),
+        n_events=n_events)

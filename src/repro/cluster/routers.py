@@ -1,0 +1,301 @@
+"""Request routers + the pluggable router registry.
+
+A router decides *which node* of a `repro.cluster.spec.ClusterSpec`
+serves each request; the node's own scheduling policy then decides
+everything else. Two tiers, mirroring how much state a decision needs:
+
+* `StaticRouter` — the node is a pure function of the trace
+  (``assign`` maps the whole arrival stream to node ids in one
+  vectorised pre-pass). These run on the **static fast path**
+  (`repro.cluster.static`): per-node sub-streams through the
+  unmodified single-node engine, streamed metrics merged exactly.
+* `DynamicRouter` — the node depends on live cluster state (queue
+  depths, warm instances), so ``pick`` is traced into the K-node event
+  loop (`repro.cluster.engine`) and runs once per arrival.
+
+`register_router` mirrors `repro.api.register_policy`: external Router
+instances join the table under a name and then participate in
+`ClusterSpec.router` (and the benchmark CLIs) exactly like the
+built-ins.
+
+Randomised routers (``weighted_random`` draws, ``jsq2`` candidate
+sampling) use the counter-based `mix32` hash of the request id instead
+of a stateful RNG, so a decision depends only on ``(rid, seed)`` — the
+JAX engine, the numpy pre-pass and the pure-Python reference simulator
+(`repro.cluster.reference`) reproduce each other bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+_M32 = 0xFFFFFFFF
+_GOLD = 0x9E3779B9          # seed spreader (golden-ratio constant)
+_MIX1, _MIX2 = 0x85EBCA6B, 0xC2B2AE35   # murmur3 fmix32 constants
+
+
+def mix32_py(x: int, seed: int = 0) -> int:
+    """murmur3-style finaliser over ``x ^ spread(seed)`` on Python
+    ints — the scalar reference the vectorised variants must match."""
+    h = (int(x) ^ ((seed * _GOLD) & _M32)) & _M32
+    h ^= h >> 16
+    h = (h * _MIX1) & _M32
+    h ^= h >> 13
+    h = (h * _MIX2) & _M32
+    h ^= h >> 16
+    return h
+
+
+def mix32_np(x, seed: int = 0) -> np.ndarray:
+    """Vectorised `mix32_py` on a numpy integer array."""
+    h = np.asarray(x).astype(np.uint64)
+    h = (h ^ ((seed * _GOLD) & _M32)) & _M32
+    h ^= h >> np.uint64(16)
+    h = (h * _MIX1) & _M32
+    h ^= h >> np.uint64(13)
+    h = (h * _MIX2) & _M32
+    h ^= h >> np.uint64(16)
+    return h.astype(np.int64)
+
+
+def mix32_jax(x, seed: int = 0):
+    """Traced `mix32_py` for in-loop routing draws. Stays in uint32
+    lanes (x64-independent); callers reduce with ``% K`` and cast."""
+    import jax.numpy as jnp
+    h = jnp.asarray(x).astype(jnp.uint32)
+    h = h ^ jnp.uint32((seed * _GOLD) & _M32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_MIX1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_MIX2)
+    h = h ^ (h >> 16)
+    return h
+
+
+class ClusterView:
+    """Per-lane snapshot a `DynamicRouter.pick` reads (all arrays are
+    one lane's view, node-major): queue depths ``q_len`` (K, F), slot
+    rails ``slot_fn``/``slot_state`` + ``cap_mask`` (K, C), per-node
+    estimator state ``est_sum``/``est_n`` (K, F) with node globals
+    ``node_gn``/``node_gsum`` (K,), the function catalogue ``t_cold``
+    (F,), the estimator ``prior`` and the static ``n_nodes``/``seed``
+    knobs of the ClusterSpec."""
+
+    def __init__(self, **kw):
+        self.__dict__.update(kw)
+
+
+class Router:
+    """Base class: subclass `StaticRouter` or `DynamicRouter`."""
+
+    name = "base"
+    dynamic = False
+
+
+class StaticRouter(Router):
+    """Node choice is a pure function of the trace."""
+
+    def assign(self, fn_id: np.ndarray, arrival: np.ndarray,
+               spec) -> np.ndarray:
+        """(N,) int node ids in [0, spec.n_nodes)."""
+        raise NotImplementedError
+
+
+class DynamicRouter(Router):
+    """Node choice reads live cluster state (traced per arrival)."""
+
+    dynamic = True
+
+    def pick(self, g: ClusterView, j, rid, t):
+        """Traced node id (i32 scalar) for request ``rid`` of function
+        ``j`` arriving at ``t``; ``g`` is this lane's `ClusterView`."""
+        raise NotImplementedError
+
+
+# ------------------------------------------------------- static builtins
+class HashRouter(StaticRouter):
+    """Function-affinity hashing: every invocation of f_j lands on the
+    same node (``mix32(j, seed) % K``), the classic serverless-edge
+    sticky routing that maximises warm reuse and accepts imbalance."""
+
+    name = "hash"
+
+    def assign(self, fn_id, arrival, spec):
+        return (mix32_np(fn_id, spec.seed)
+                % spec.n_nodes).astype(np.int32)
+
+
+class RoundRobinRouter(StaticRouter):
+    """Global round-robin over the arrival sequence — perfect request
+    balance, worst-case warm-instance dilution."""
+
+    name = "round_robin"
+
+    def assign(self, fn_id, arrival, spec):
+        return (np.arange(len(fn_id), dtype=np.int64)
+                % spec.n_nodes).astype(np.int32)
+
+
+class WeightedRandomRouter(StaticRouter):
+    """Seeded weighted-random spread (default uniform): node k drawn
+    with probability weight_k / sum(weights) per request id."""
+
+    name = "weighted_random"
+
+    def assign(self, fn_id, arrival, spec):
+        w = np.asarray(spec.weights if spec.weights is not None
+                       else [1.0] * spec.n_nodes, np.float64)
+        cum = np.cumsum(w / w.sum())
+        u = (mix32_np(np.arange(len(fn_id)), spec.seed)
+             + 0.5) / 2.0 ** 32
+        return np.minimum(np.searchsorted(cum, u, side="right"),
+                          spec.n_nodes - 1).astype(np.int32)
+
+
+# ------------------------------------------------------ dynamic builtins
+class JSQRouter(DynamicRouter):
+    """JSQ(d) / power-of-d-choices: hash-sample ``d`` distinct nodes
+    (a partial Fisher-Yates draw over the node ids, one `mix32` swap
+    per position, so distinctness holds for every d <= K), send the
+    request to the least loaded (load = queued + running; ties keep
+    the earliest draw). ``d=2`` is the classic power-of-two-choices
+    router."""
+
+    def __init__(self, name: str = "jsq2", d: int = 2):
+        self.name = name
+        self.d = int(d)
+
+    @staticmethod
+    def sample(rid, seed: int, K: int, d: int, mix=mix32_py):
+        """Swap positions of the first min(d, K) entries of a partial
+        Fisher-Yates shuffle of range(K): position i swaps with
+        ``i + mix(rid, seed + i) % (K - i)``. Returns the list of
+        (i, j) swap pairs — both the traced and the pure-Python
+        routers replay the same pairs, so their candidate sets match
+        exactly."""
+        return [(i, i + int(mix(rid, seed + i) % (K - i)))
+                for i in range(min(d, K))]
+
+    def pick(self, g, j, rid, t):
+        import jax.numpy as jnp
+
+        from repro.core.jax_engine import BUSY
+        K = g.n_nodes
+        if K == 1:
+            return jnp.int32(0)
+        load = (g.q_len.sum(axis=1)
+                + ((g.slot_state == BUSY) & g.cap_mask).sum(axis=1))
+        nodes = jnp.arange(K, dtype=jnp.int32)
+        for i in range(min(self.d, K)):
+            jdraw = i + (mix32_jax(rid, g.seed + i)
+                         % (K - i)).astype(jnp.int32)
+            ni, nj = nodes[i], nodes[jdraw]
+            nodes = nodes.at[i].set(nj).at[jdraw].set(ni)
+        best = nodes[0]
+        for i in range(1, min(self.d, K)):
+            cand = nodes[i]
+            best = jnp.where(load[cand] < load[best], cand, best)
+        return best
+
+
+class ColdAwareRouter(DynamicRouter):
+    """Cold-start-aware routing: score each node by the estimated time
+    until this request could start there and take the argmin (ties:
+    lowest node id) —
+
+        score_k = [0 if node k has an idle warm instance of f_j,
+                   else t_cold(j)]
+                + mean_j(k) * queued_j(k)
+                + gmean(k) * (queued_total(k) + busy(k))
+
+    where mean_j(k) is node k's running-mean execution estimate of f_j
+    (node-global mean, then prior, fallback — the same chain its
+    scheduler uses) and gmean(k) the node-global mean. The first term
+    is the warm-instance availability; the others weight the backlog
+    by the ESFF-style execution estimates."""
+
+    name = "cold_aware"
+
+    def pick(self, g, j, rid, t):
+        import jax.numpy as jnp
+
+        from repro.core.jax_engine import BUSY, IDLE
+        jc = jnp.clip(j, 0, g.q_len.shape[1] - 1)
+        gn = g.node_gn.astype(jnp.float64)
+        gmean = jnp.where(g.node_gn > 0,
+                          g.node_gsum / jnp.maximum(gn, 1), g.prior)
+        n_j = g.est_n[:, jc]
+        mean_j = jnp.where(n_j > 0,
+                           g.est_sum[:, jc]
+                           / jnp.maximum(n_j.astype(jnp.float64), 1),
+                           gmean)
+        own = (g.slot_fn == jc) & g.cap_mask
+        has_idle = (own & (g.slot_state == IDLE)).any(axis=1)
+        busy = ((g.slot_state == BUSY) & g.cap_mask).sum(axis=1)
+        qtot = g.q_len.sum(axis=1)
+        score = (jnp.where(has_idle, 0.0, g.t_cold[jc])
+                 + mean_j * g.q_len[:, jc]
+                 + gmean * (qtot + busy))
+        return jnp.argmin(score).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- registry
+ROUTERS: Dict[str, Router] = {
+    "hash": HashRouter(),
+    "round_robin": RoundRobinRouter(),
+    "weighted_random": WeightedRandomRouter(),
+    "jsq2": JSQRouter("jsq2", d=2),
+    "cold_aware": ColdAwareRouter(),
+}
+
+
+def available_routers() -> List[str]:
+    """Registered router names (built-ins + `register_router` adds)."""
+    return sorted(ROUTERS)
+
+
+def get_router(name: str) -> Router:
+    """Router registered under ``name`` (KeyError lists what exists)."""
+    try:
+        return ROUTERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown router {name!r}; registered routers: "
+            f"{sorted(ROUTERS)} (add your own with "
+            "repro.api.register_router)") from None
+
+
+def register_router(name: str, router: Router, *,
+                    replace: bool = False) -> Router:
+    """Register a `Router` instance under ``name`` (mirrors
+    `repro.api.register_policy`).
+
+    The instance must be a singleton the caller keeps stable: the
+    cluster engine jit-caches per router *identity*. ``replace=True``
+    allows overwriting an existing name deliberately. Returns
+    ``router`` for one-liner use.
+    """
+    if not isinstance(router, Router):
+        raise TypeError(
+            f"register_router({name!r}): expected a Router *instance* "
+            f"(got {type(router).__name__}); subclass "
+            "repro.cluster.routers.StaticRouter or DynamicRouter and "
+            "pass an instance")
+    if not name or not isinstance(name, str):
+        raise ValueError("register_router: name must be a non-empty "
+                         "string")
+    if name in ROUTERS and not replace:
+        raise ValueError(
+            f"register_router: router {name!r} is already registered "
+            f"(to {type(ROUTERS[name]).__name__}); pass replace=True "
+            "to overwrite deliberately")
+    ROUTERS[name] = router
+    return router
+
+
+def unregister_router(name: str) -> None:
+    """Remove a registered router (primarily for test cleanup)."""
+    if name not in ROUTERS:
+        raise KeyError(f"unregister_router: {name!r} is not registered")
+    del ROUTERS[name]

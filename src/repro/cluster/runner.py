@@ -1,0 +1,181 @@
+"""Lower the `ExperimentSpec.cluster` axis onto the two routing tiers.
+
+`run_cluster_experiment` executes one spec whose ``cluster`` field
+declares a sequence of topologies and stacks the per-entry
+(P, T, K, B) metric grids into a 5-axis `ResultSet` (the new trailing
+``cluster`` dim, labeled by `ClusterSpec.label`):
+
+* ``None`` entries run the plain single-node path — literally
+  `repro.api.runner.run_experiment` on a cluster-less copy of the
+  spec, so those cells are bitwise the non-cluster API's;
+* static-router entries run the sub-stream fast path
+  (`repro.cluster.static.run_static_entry`);
+* dynamic-router entries run the K-node event loop
+  (`repro.cluster.engine._cluster_metrics`), lane-batched over
+  (trace × capacity × beta) exactly like the single-node sweep.
+
+Every entry contributes the same metric set (plain cells synthesise a
+one-node ``node_done``), padded to the axis-wide max node count, so
+the stacked arrays stay rectangular.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster.spec import ClusterSpec
+from repro.cluster.static import run_static_entry
+
+
+def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
+                       N: int, kernels, beta_cols
+                       ) -> Dict[str, np.ndarray]:
+    """One dynamic-router entry over the spec grid: (P, T, KC, B)
+    metric arrays from the K-node loop."""
+    import jax.numpy as jnp
+
+    from repro.cluster.engine import _cluster_metrics
+    from repro.core.jax_engine import resolve_lane_chunk
+
+    T = stacked["fn_id"].shape[0]
+    Kn = entry.n_nodes
+    KC = len(spec.capacities)
+    B = 1 if spec.betas is None else len(spec.betas)
+    C = max(max(entry.node_caps(c)) for c in spec.capacities)
+    router = entry.get_router()
+
+    node_masks = {c: np.stack([np.arange(C) < nc
+                               for nc in entry.node_caps(c)])
+                  for c in spec.capacities}
+    tix = np.repeat(np.arange(T, dtype=np.int32), KC * B)
+    masks = np.tile(
+        np.repeat(np.stack([node_masks[c] for c in spec.capacities]),
+                  B, axis=0), (T, 1, 1))
+    L = T * KC * B
+
+    shared = tuple(jnp.asarray(stacked[k]) for k in
+                   ("fn_id", "arrival", "exec_time", "cold_start",
+                    "evict"))
+    chunk = resolve_lane_chunk(spec.lane_chunk)
+    per_policy: Dict[str, Dict[str, np.ndarray]] = {}
+    for policy in spec.policies:
+        beta_l = beta_cols[policy]
+        outs: Dict[str, list] = {}
+        for lo in range(0, L, chunk):
+            hi = min(lo + chunk, L)
+            out = _cluster_metrics(
+                *shared, jnp.asarray(tix[lo:hi]),
+                jnp.asarray(masks[lo:hi]), jnp.asarray(beta_l[lo:hi]),
+                jnp.float64(spec.prior), jnp.float64(spec.threshold),
+                kernel=kernels[policy], router=router, n_nodes=Kn,
+                n_fns=F, capacity=C, queue_cap=spec.queue_cap,
+                seed=entry.seed, stream=spec.stream,
+                tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
+                keep_responses=spec.keep_per_request)
+            for k, v in out.items():
+                outs.setdefault(k, []).append(np.asarray(v))
+        per_policy[policy] = {
+            k: np.concatenate(v).reshape((T, KC, B) + v[0].shape[1:])
+            for k, v in outs.items()}
+
+    data: Dict[str, np.ndarray] = {}
+    for pi, policy in enumerate(spec.policies):
+        for m, v in per_policy[policy].items():
+            if m not in data:
+                data[m] = np.zeros((len(spec.policies),) + v.shape,
+                                   v.dtype)
+            data[m][pi] = v
+    return data
+
+
+def _pad_node_dim(a: np.ndarray, k_max: int) -> np.ndarray:
+    """Right-pad the trailing node axis with zeros to ``k_max``."""
+    if a.shape[-1] == k_max:
+        return a
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, k_max - a.shape[-1])]
+    return np.pad(a, pad)
+
+
+def run_cluster_experiment(spec) -> "ResultSet":
+    """Execute a cluster-axed `ExperimentSpec`; see the module
+    docstring."""
+    import jax
+
+    from repro.api.registry import get_kernel
+    from repro.api.results import ResultSet
+    from repro.api.runner import _lower_grid, _unique_labels
+    from repro.api.runner import run_experiment as _run_plain
+
+    spec.validate()
+    sources, stacked, F, N = _lower_grid(spec)
+    T = len(sources)
+    KC = len(spec.capacities)
+    B = 1 if spec.betas is None else len(spec.betas)
+    P = len(spec.policies)
+    kernels = {p: get_kernel(p) for p in spec.policies}
+
+    def beta_col(policy: str) -> np.ndarray:
+        bs = np.asarray(
+            [kernels[policy].default_beta] if spec.betas is None
+            else list(spec.betas), np.float64)
+        return np.tile(bs, T * KC)
+
+    beta_cols = {p: beta_col(p) for p in spec.policies}
+
+    entries = list(spec.cluster)
+    k_max = max((e.n_nodes if e is not None else 1) for e in entries)
+    entry_data: List[Dict[str, np.ndarray]] = []
+    for entry in entries:
+        if entry is None:
+            # devices=1 keeps plain cells on the same (default) device
+            # the cluster tiers use — spec.validate() already rejects
+            # explicit multi-device cluster runs
+            rs = _run_plain(replace(spec, cluster=None, devices=1))
+            d = dict(rs.data)
+            d["node_done"] = d["done"][..., None].astype(np.int32)
+        elif entry.get_router().dynamic:
+            d = _run_dynamic_entry(spec, entry, stacked, F, N,
+                                   kernels, beta_cols)
+        else:
+            d = run_static_entry(spec, entry, stacked, F, N, kernels,
+                                 beta_cols)
+        d["node_done"] = _pad_node_dim(d["node_done"], k_max)
+        entry_data.append(d)
+
+    keys = set(entry_data[0])
+    for d, entry in zip(entry_data[1:], entries[1:]):
+        if set(d) != keys:
+            raise RuntimeError(
+                f"cluster entries disagree on metrics: "
+                f"{sorted(keys ^ set(d))}")
+    data = {m: np.stack([d[m] for d in entry_data], axis=4)
+            for m in keys}
+
+    labels = _unique_labels([(e.label if e is not None else "none")
+                             for e in entries])
+    coords = dict(policy=list(spec.policies),
+                  trace=_unique_labels([s.label for s in sources]),
+                  capacity=list(spec.capacities),
+                  beta=(list(spec.betas) if spec.betas is not None
+                        else ["default"]),
+                  cluster=labels)
+    meta = dict(spec.meta,
+                n_requests=N, n_functions=F, queue_cap=spec.queue_cap,
+                stream=spec.stream, window=spec.window,
+                tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
+                prior=spec.prior, threshold=spec.threshold,
+                backend=jax.default_backend(),
+                seeds=(list(spec.seeds) if spec.seeds is not None
+                       else None),
+                cluster=[None if e is None else dict(
+                    n_nodes=e.n_nodes, router=e.router,
+                    node_capacity=(list(e.node_capacity)
+                                   if e.node_capacity is not None
+                                   else None),
+                    net_delay=list(e.delays()), seed=e.seed)
+                    for e in entries],
+                default_betas={p: kernels[p].default_beta
+                               for p in spec.policies})
+    return ResultSet(data=data, coords=coords, meta=meta)

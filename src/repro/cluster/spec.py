@@ -1,0 +1,146 @@
+"""`ClusterSpec` — one declared multi-node edge cluster topology.
+
+The paper schedules functions on a *single* resource-limited edge
+server; real edge deployments (LaSS-style) are K small nodes behind a
+request router. A `ClusterSpec` declares that topology — node count,
+per-node slot capacities (heterogeneity), the routing policy and its
+knobs — as one frozen value that rides the `repro.api.ExperimentSpec`
+``cluster`` axis exactly like a policy name rides the policy axis.
+
+Two execution tiers implement a spec (see docs/cluster.md):
+
+* **static routers** (`hash` / `round_robin` / `weighted_random`) fix
+  each request's node from the trace alone, so the runner partitions
+  the arrival stream into per-node sub-streams as a vectorised
+  pre-pass and runs them through the unmodified single-node engine
+  (`repro.cluster.static`), merging streamed metrics exactly;
+* **dynamic routers** (`jsq2` / `cold_aware`) read cluster state at
+  each arrival, so they fold into a generalised K-node event loop
+  (`repro.cluster.engine`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple, Union
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """K heterogeneous edge nodes behind one request router.
+
+    ``n_nodes``       K — how many nodes the cluster has.
+    ``router``        a name registered in `repro.cluster.routers`
+                      (built-ins: ``hash``, ``round_robin``,
+                      ``weighted_random`` static; ``jsq2``,
+                      ``cold_aware`` dynamic).
+    ``node_capacity`` per-node slot counts (length K) for heterogeneous
+                      nodes / fixed-aggregate scale-out studies. When
+                      set it overrides the spec's capacity axis (which
+                      must then have exactly one entry, kept as the
+                      row label); ``None`` gives every node the
+                      capacity-axis value.
+    ``net_delay``     per-node network delay (seconds; scalar or
+                      length-K tuple) added to each routed request's
+                      arrival before it reaches its node. Static
+                      routers only — a dynamic router would need an
+                      in-flight event rail (ROADMAP).
+    ``seed``          the deterministic hash seed of the randomised
+                      routers (``weighted_random`` sampling, ``jsq2``
+                      candidate draws).
+    ``weights``       relative node weights for ``weighted_random``
+                      (length K; defaults to uniform).
+    """
+
+    n_nodes: int = 2
+    router: str = "hash"
+    node_capacity: Optional[Tuple[int, ...]] = None
+    net_delay: Union[float, Tuple[float, ...]] = 0.0
+    seed: int = 0
+    weights: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "n_nodes", int(self.n_nodes))
+        if self.node_capacity is not None:
+            object.__setattr__(
+                self, "node_capacity",
+                tuple(int(c) for c in self.node_capacity))
+        if not isinstance(self.net_delay, (int, float)):
+            object.__setattr__(
+                self, "net_delay",
+                tuple(float(d) for d in self.net_delay))
+        else:
+            object.__setattr__(self, "net_delay", float(self.net_delay))
+        if self.weights is not None:
+            object.__setattr__(
+                self, "weights", tuple(float(w) for w in self.weights))
+
+    # ---------------------------------------------------------- helpers
+    @property
+    def label(self) -> str:
+        """Coordinate label on the ResultSet cluster axis, router
+        first: ``jsq2:K4``, ``hash:K2x[8,4]``, ``rr:K2+d``."""
+        tag = f"{self.router}:K{self.n_nodes}"
+        if self.node_capacity is not None:
+            caps = set(self.node_capacity)
+            tag += (f"x{self.node_capacity[0]}" if len(caps) == 1
+                    else "x" + ",".join(map(str, self.node_capacity)))
+        if self.delays() and any(self.delays()):
+            tag += "+d"
+        return tag
+
+    def delays(self) -> Tuple[float, ...]:
+        """Per-node network delays, expanded to length K."""
+        if isinstance(self.net_delay, tuple):
+            return self.net_delay
+        return (self.net_delay,) * self.n_nodes
+
+    def node_caps(self, capacity: int) -> Tuple[int, ...]:
+        """Per-node slot counts given the capacity-axis value."""
+        if self.node_capacity is not None:
+            return self.node_capacity
+        return (int(capacity),) * self.n_nodes
+
+    def get_router(self):
+        from repro.cluster.routers import get_router
+        return get_router(self.router)
+
+    def validate(self) -> "ClusterSpec":
+        """Raise with a precise message on the first bad field;
+        returns self for chaining."""
+        if self.n_nodes < 1:
+            raise ValueError(
+                f"ClusterSpec: n_nodes must be >= 1, got {self.n_nodes}")
+        router = self.get_router()      # KeyError lists registered
+        if self.node_capacity is not None:
+            if len(self.node_capacity) != self.n_nodes:
+                raise ValueError(
+                    f"ClusterSpec: node_capacity has "
+                    f"{len(self.node_capacity)} entries for "
+                    f"{self.n_nodes} nodes")
+            if any(c < 1 for c in self.node_capacity):
+                raise ValueError(
+                    f"ClusterSpec: node capacities must be positive, "
+                    f"got {self.node_capacity}")
+        d = self.delays()
+        if len(d) != self.n_nodes:
+            raise ValueError(
+                f"ClusterSpec: net_delay has {len(d)} entries for "
+                f"{self.n_nodes} nodes")
+        if any(x < 0 for x in d):
+            raise ValueError(
+                f"ClusterSpec: net_delay must be >= 0, got {d}")
+        if router.dynamic and any(d):
+            raise ValueError(
+                f"ClusterSpec: router {self.router!r} is dynamic; "
+                "per-node net_delay is only supported on the static "
+                "routing path (see docs/cluster.md)")
+        if self.weights is not None:
+            if len(self.weights) != self.n_nodes:
+                raise ValueError(
+                    f"ClusterSpec: weights has {len(self.weights)} "
+                    f"entries for {self.n_nodes} nodes")
+            if any(w <= 0 for w in self.weights):
+                raise ValueError(
+                    f"ClusterSpec: weights must be positive, got "
+                    f"{self.weights}")
+        return self

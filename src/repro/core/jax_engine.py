@@ -352,33 +352,52 @@ class EngineCtx:
     ``tix``: under vmap a gather whose operand is unbatched lowers to a
     single efficient gather, whereas a batched operand takes a generic
     path that is orders of magnitude slower on the CPU backend. The
-    per-request reads (`fn_at` / `arrival_at` / `exec_at`, and the
-    positional queue reads `rid_at_pos`) are *dual-source*: indices
-    inside the current window read the (T, W) L2-resident slab, the
-    rest (queue links spanning a window boundary, long-running
-    requests) fall back to the full operand — a bounds check plus two
-    guarded gathers whose disabled side reads a fixed cached location,
-    never a branch. Slabs hold exact f64/i32 copies, so which source
-    serves a read can never change a result bit.
+    row-indexed (T, X) operands are additionally read through
+    *flattened* views with a precomputed per-lane base offset
+    (``tix * X + i``): a two-index-dim gather only hits XLA:CPU's fast
+    path when the leading dim is size 1 (the simplifier drops the
+    always-clamped index) — at T > 1 (multi-trace grids, the cluster
+    static path's (T·K) sub-stream rows) it falls to the generic
+    gather, measured ~25x slower per event. The per-request reads
+    (`fn_at` / `arrival_at` / `exec_at`, and the positional queue
+    reads `rid_at_pos`) are *dual-source*: indices inside the current
+    window read the (T, W) L2-resident slab, the rest (queue links
+    spanning a window boundary, long-running requests) fall back to
+    the full operand — a bounds check plus two guarded gathers whose
+    disabled side reads a fixed cached location, never a branch. Slabs
+    hold exact f64/i32 copies, so which source serves a read can never
+    change a result bit.
     """
 
     def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2,
                  pos_rids2, pos_off2, slabs, win_base, win_w, tix,
                  cap_mask, beta, prior, threshold, k, n, f, c, q,
                  stream=False, tl_bins=0, tl_bucket=60.0):
-        self._fn = fn_id2          # (T, N) shared
-        self._arr = arrival2       # (T, N) shared
-        self._ex = exec2           # (T, N) shared
-        self._pos = pos_rids2      # (T, N) shared: rids by (fn, id)
-        self._off = pos_off2       # (T, F+1) shared: per-fn offsets
+        flat = lambda a: (None if a is None          # noqa: E731
+                          else a.reshape(-1))
+        self._fn = flat(fn_id2)     # (T*N,) shared, flattened view
+        self._arr = flat(arrival2)
+        self._ex = flat(exec2)
+        self._pos = flat(pos_rids2)  # rids by (fn, id)
+        self._off = flat(pos_off2)   # per-fn offsets ((T*(F+1),))
         # current-window slabs: rid-indexed (T, W) copies + the
-        # window-major positional slab and its per-fn (T, F) rows
-        (self._fn_s, self._arr_s, self._ex_s, self._pos_s,
-         self._offw, self._cc_lo, self._cc_hi) = slabs
+        # window-major positional slab and its per-fn (T, F) rows —
+        # all flattened the same way
+        (fn_s, arr_s, ex_s, pos_s, offw, cc_lo, cc_hi) = slabs
+        self._fn_s, self._arr_s, self._ex_s = \
+            flat(fn_s), flat(arr_s), flat(ex_s)
+        self._pos_s = flat(pos_s)
+        self._offw, self._cc_lo, self._cc_hi = \
+            flat(offw), flat(cc_lo), flat(cc_hi)
         self.win_base = win_base   # first request id of the window
         self.W = win_w             # static window length
         self.single_win = win_w >= n   # static: slab == whole trace
         self.tix = tix             # this lane's trace index
+        # per-lane flat base offsets into each operand family
+        self._b_n = tix * n            # (T, N) rows
+        self._b_w = tix * win_w        # (T, W) slabs
+        self._b_f = tix * f            # (T, F) rows
+        self._b_f1 = tix * (f + 1)     # (T, F+1) offsets
         self.t_cold = cold2        # (F,) — this lane's row, pre-gathered
         self.t_evict = evict2      # once outside the loops
         self.cap_mask = cap_mask
@@ -400,11 +419,11 @@ class EngineCtx:
         the bounds check statically: the one window covers every id."""
         r = jnp.clip(jnp.asarray(rid, jnp.int32), 0, self.N - 1)
         if self.single_win:
-            return full[self.tix, r]
+            return full[self._b_n + r]
         off = r - self.win_base
         inw = (off >= 0) & (off < self.W)
-        sv = slab[self.tix, jnp.where(inw, off, 0)]
-        fv = full[self.tix, jnp.where(inw, self.win_base, r)]
+        sv = slab[self._b_w + jnp.where(inw, off, 0)]
+        fv = full[self._b_n + jnp.where(inw, self.win_base, r)]
         return jnp.where(inw, sv, fv)
 
     def fn_at(self, rid):
@@ -428,17 +447,91 @@ class EngineCtx:
         layout directly (it is the slab)."""
         fc = jnp.clip(fn, 0, self.F - 1)
         if self.single_win:
-            gi = self._off[self.tix, fc] + pos
-            return self._pos[self.tix, jnp.clip(gi, 0, self.N - 1)]
-        lo = self._cc_lo[self.tix, fc]
-        inw = (pos >= lo) & (pos < self._cc_hi[self.tix, fc])
-        si = self._offw[self.tix, fc] + (pos - lo)
-        sv = self._pos_s[self.tix,
-                         jnp.where(inw, jnp.clip(si, 0, self.W - 1), 0)]
-        gi = self._off[self.tix, fc] + pos
-        fv = self._pos[self.tix,
-                       jnp.where(inw, 0, jnp.clip(gi, 0, self.N - 1))]
+            gi = self._off[self._b_f1 + fc] + pos
+            return self._pos[self._b_n + jnp.clip(gi, 0, self.N - 1)]
+        lo = self._cc_lo[self._b_f + fc]
+        inw = (pos >= lo) & (pos < self._cc_hi[self._b_f + fc])
+        si = self._offw[self._b_f + fc] + (pos - lo)
+        sv = self._pos_s[self._b_w
+                         + jnp.where(inw, jnp.clip(si, 0, self.W - 1),
+                                     0)]
+        gi = self._off[self._b_f1 + fc] + pos
+        fv = self._pos[self._b_n
+                       + jnp.where(inw, 0, jnp.clip(gi, 0, self.N - 1))]
         return jnp.where(inw, sv, fv)
+
+    # ------------------------------------------------- overridable ops
+    # The queue discipline and the estimator's fallback chain are ctx
+    # *methods* so an alternative engine (the multi-node cluster loop,
+    # `repro.cluster.engine`) can substitute its own carried layout —
+    # linked-list per-(node, function) queues, per-node estimator
+    # globals — while policy kernels keep calling the same module-level
+    # helpers (`q_push`/`q_pop`/`q_head`/`q_consume_direct`/
+    # `est_means`), which delegate here.
+
+    def est_means(self, s):
+        """Per-function running means with global-mean / prior
+        fallback."""
+        counts = s["est_n"].astype(jnp.float64)
+        g_n = s["ci"][CI_GN]
+        gcount = g_n.astype(jnp.float64)
+        g = jnp.where(g_n > 0,
+                      s["cf"][CF_GSUM] / jnp.maximum(gcount, 1),
+                      self.prior)
+        return jnp.where(s["est_n"] > 0,
+                         s["est_sum"] / jnp.maximum(counts, 1), g)
+
+    def q_head(self, s, fn):
+        """Request id at the head of ``fn``'s queue (garbage when
+        empty — callers gate on ``q_len``). Served from the carried
+        q_head_rid cache so head reads — including the central-queue
+        (F,) head scan — cost no gathers into the big positional
+        operand."""
+        return s["q_head_rid"][jnp.clip(fn, 0, self.F - 1)]
+
+    def q_push(self, s, fn, rid, on):
+        """Append ``rid``; returns (state, pushed). The pushed request
+        is by construction the next arrival position of ``fn``, so only
+        the length moves (plus the head cache when the queue was
+        empty). A push onto a full backlog (q_len == queue_cap) is
+        dropped and counted in overflow."""
+        fc = jnp.clip(fn, 0, self.F - 1)
+        was_empty = s["q_len"][fc] == 0
+        full = s["q_len"][fc] >= self.Q
+        do = on & ~full
+        s = dict(s)
+        s["q_head_rid"] = s["q_head_rid"].at[
+            _gidx(do & was_empty, fn, self.F)].set(
+            jnp.asarray(rid, jnp.int32), mode="drop")
+        s["q_len"] = s["q_len"].at[_gidx(do, fn, self.F)].add(
+            1, mode="drop")
+        s["ci"] = s["ci"].at[CI_OVF].add((on & full).astype(jnp.int32))
+        return s, do
+
+    def q_consume_direct(self, s, fn, on):
+        """Account a directly dispatched arrival: its (empty-queue)
+        head position is consumed without ever being enqueued. The head
+        cache stays stale-but-gated (q_len == 0) until the next push
+        rewrites it."""
+        s = dict(s)
+        s["q_head_pos"] = s["q_head_pos"].at[
+            _gidx(on, fn, self.F)].add(1, mode="drop")
+        return s
+
+    def q_pop(self, s, fn, on):
+        """Consume the head of ``fn``'s queue; returns (state, rid).
+        The one positional gather refreshes the head cache with the
+        successor (garbage when the queue empties — reads gate on
+        q_len)."""
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rid = s["q_head_rid"][fc]
+        succ = self.rid_at_pos(fc, s["q_head_pos"][fc] + 1)
+        fi = _gidx(on, fn, self.F)
+        s = dict(s)
+        s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
+        s["q_head_pos"] = s["q_head_pos"].at[fi].add(1, mode="drop")
+        s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+        return s, rid
 
 
 class PolicyKernel:
@@ -505,14 +598,10 @@ def argmin_i32(vals, valid):
 
 
 def est_means(ctx, s):
-    """Per-function running means with global-mean / prior fallback."""
-    counts = s["est_n"].astype(jnp.float64)
-    g_n = s["ci"][CI_GN]
-    gcount = g_n.astype(jnp.float64)
-    g = jnp.where(g_n > 0, s["cf"][CF_GSUM] / jnp.maximum(gcount, 1),
-                  ctx.prior)
-    return jnp.where(s["est_n"] > 0,
-                     s["est_sum"] / jnp.maximum(counts, 1), g)
+    """Per-function running means with global-mean / prior fallback
+    (delegates to the ctx so cluster node views can rebind the
+    globals)."""
+    return ctx.est_means(s)
 
 
 def k_counts(ctx, s):
@@ -545,57 +634,24 @@ def pick_idle_own(ctx, s, fn):
 
 
 def q_head(ctx, s, fn):
-    """Request id at the head of ``fn``'s queue (garbage when empty —
-    callers gate on ``q_len``). Served from the carried q_head_rid
-    cache so head reads — including the central-queue (F,) head scan —
-    cost no gathers into the big positional operand."""
-    return s["q_head_rid"][jnp.clip(fn, 0, ctx.F - 1)]
+    """Head request id of ``fn``'s queue (ctx-dispatched)."""
+    return ctx.q_head(s, fn)
 
 
 def q_push(ctx, s, fn, rid, on):
-    """Append ``rid``; returns (state, pushed). The pushed request is
-    by construction the next arrival position of ``fn``, so only the
-    length moves (plus the head cache when the queue was empty). A push
-    onto a full backlog (q_len == queue_cap) is dropped and counted in
-    overflow."""
-    fc = jnp.clip(fn, 0, ctx.F - 1)
-    was_empty = s["q_len"][fc] == 0
-    full = s["q_len"][fc] >= ctx.Q
-    do = on & ~full
-    s = dict(s)
-    s["q_head_rid"] = s["q_head_rid"].at[
-        _gidx(do & was_empty, fn, ctx.F)].set(
-        jnp.asarray(rid, jnp.int32), mode="drop")
-    s["q_len"] = s["q_len"].at[_gidx(do, fn, ctx.F)].add(
-        1, mode="drop")
-    s["ci"] = s["ci"].at[CI_OVF].add((on & full).astype(jnp.int32))
-    return s, do
+    """Append ``rid``; returns (state, pushed) (ctx-dispatched)."""
+    return ctx.q_push(s, fn, rid, on)
 
 
 def q_consume_direct(ctx, s, fn, on):
-    """Account a directly dispatched arrival: its (empty-queue) head
-    position is consumed without ever being enqueued. The head cache
-    stays stale-but-gated (q_len == 0) until the next push rewrites
-    it."""
-    s = dict(s)
-    s["q_head_pos"] = s["q_head_pos"].at[_gidx(on, fn, ctx.F)].add(
-        1, mode="drop")
-    return s
+    """Account a directly dispatched arrival (ctx-dispatched)."""
+    return ctx.q_consume_direct(s, fn, on)
 
 
 def q_pop(ctx, s, fn, on):
-    """Consume the head of ``fn``'s queue; returns (state, rid). The
-    one positional gather refreshes the head cache with the successor
-    (garbage when the queue empties — reads gate on q_len)."""
-    fc = jnp.clip(fn, 0, ctx.F - 1)
-    rid = s["q_head_rid"][fc]
-    succ = ctx.rid_at_pos(fc, s["q_head_pos"][fc] + 1)
-    fi = _gidx(on, fn, ctx.F)
-    s = dict(s)
-    s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
-    s["q_head_pos"] = s["q_head_pos"].at[fi].add(1, mode="drop")
-    s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
-    return s, rid
+    """Consume the head of ``fn``'s queue; returns (state, rid)
+    (ctx-dispatched)."""
+    return ctx.q_pop(s, fn, on)
 
 
 def arm_timer(ctx, s, fn, t, pushed, on):
@@ -785,9 +841,9 @@ def hist_cdf(hist):
                                     "queue_cap", "stream", "window",
                                     "tl_bins"))
 def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
-              cap_mask, beta, prior, threshold, *, kernel, n_fns,
-              capacity, queue_cap, stream=False, window=0, tl_bins=0,
-              tl_bucket=60.0):
+              cap_mask, beta, prior, threshold, n_live=None, *, kernel,
+              n_fns, capacity, queue_cap, stream=False, window=0,
+              tl_bins=0, tl_bucket=60.0):
     """Lane-batched engine. Trace arrays are shared (T, ...) operands;
     ``trace_ix``, ``cap_mask`` and ``beta`` carry the leading lane
     dimension L (one lane per sweep point). The loop nest is windows ->
@@ -803,11 +859,21 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
     ``window`` (static; 0 -> `DEFAULT_WINDOW`) sets the slab size and
     never changes results, only locality. ``tl_bins > 0`` adds the
     minute-binned timeline fold (bucket width ``tl_bucket`` seconds).
+
+    ``n_live`` ((L,) i32, optional) caps how many leading requests of
+    each lane's trace row are real: a lane completes once its first
+    ``n_live`` requests have finished and never consumes the padding
+    tail. This is what lets ragged request streams — the per-node
+    sub-streams of `repro.cluster`'s static routing path — share one
+    padded (T, N) operand without recompilation per length. ``None``
+    (every existing caller) means all N requests are live.
     """
     L = trace_ix.shape[0]
     T_ = fn_id.shape[0]
     N = fn_id.shape[1]
     F, C, Q = n_fns, capacity, queue_cap
+    nl = (jnp.full((L,), N, jnp.int32) if n_live is None
+          else jnp.asarray(n_live, jnp.int32))
 
     W = int(window) if window else DEFAULT_WINDOW
     W = max(1, min(W, N))
@@ -907,6 +973,11 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
     # gather would otherwise sit inside the per-event body)
     t_cold_l = t_cold[trace_ix]
     t_evict_l = t_evict[trace_ix]
+    # lane-stacked arrival reads go through the flattened operand with
+    # a per-lane base — a (T, N) two-dim gather only hits the fast
+    # XLA:CPU path at T == 1 (see EngineCtx)
+    arr_flat = arrival.reshape(-1)
+    base_n = trace_ix * N
 
     def window_body(w, s):
         base = w * W
@@ -939,13 +1010,14 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
             na = s["ci"][:, CI_NEXT]
             r = jnp.minimum(na, N - 1)
             if single_win:
-                t_arr = jnp.where(na < N, arrival[trace_ix, r], BIG)
+                t_arr = jnp.where(na < nl, arr_flat[base_n + r], BIG)
             else:
                 off = r - base
                 inw = (off >= 0) & (off < W)
-                sv = arr_s[trace_ix, jnp.where(inw, off, 0)]
-                fv = arrival[trace_ix, jnp.where(inw, base, r)]
-                t_arr = jnp.where(na < N, jnp.where(inw, sv, fv), BIG)
+                sv = arr_s.reshape(-1)[trace_ix * W
+                                       + jnp.where(inw, off, 0)]
+                fv = arr_flat[base_n + jnp.where(inw, base, r)]
+                t_arr = jnp.where(na < nl, jnp.where(inw, sv, fv), BIG)
             ready = jnp.where(cap_mask, s["slot_ready"], BIG)
             st = s["slot_state"]
             blocks = [jnp.where(st == BUSY, ready, BIG),
@@ -958,8 +1030,8 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
             t_ev = jnp.take_along_axis(cand, ei[:, None], axis=1)[:, 0]
             return ei, t_ev, t_arr
 
-        def lane_step(k, s, tix, cold_l, evict_l, cap_mask, beta, ei,
-                      t_ev, t_arr):
+        def lane_step(k, s, tix, cold_l, evict_l, cap_mask, beta,
+                      nl_l, ei, t_ev, t_arr):
             ctx = EngineCtx(fn_id2=fn_id, arrival2=arrival,
                             exec2=exec_time, cold2=cold_l,
                             evict2=evict_l, pos_rids2=pos_rids,
@@ -970,7 +1042,7 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
                             q=Q, stream=stream, tl_bins=tl_bins,
                             tl_bucket=tl_bucket)
             ci = s["ci"]
-            active = (ci[CI_DONE] < N) & (ci[CI_STALL] == 0)
+            active = (ci[CI_DONE] < nl_l) & (ci[CI_STALL] == 0)
             na = ci[CI_NEXT]
             live = active & (t_ev < BIG)
             # per-event dispatch registers (consumed by _fold_event)
@@ -1066,11 +1138,11 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
             return s
 
         step_lanes = jax.vmap(
-            lane_step, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+            lane_step, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
 
         def cond(s):
             ci = s["ci"]
-            act = (ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0)
+            act = (ci[:, CI_DONE] < nl) & (ci[:, CI_STALL] == 0)
             return jnp.any(act & (is_last | (ci[:, CI_NEXT] < win_end)))
 
         def segment(s):
@@ -1086,7 +1158,7 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
             def step(k, s):
                 ei, t_ev, t_arr = pick_events(s)
                 return step_lanes(k, s, trace_ix, t_cold_l, t_evict_l,
-                                  cap_mask, beta, ei, t_ev, t_arr)
+                                  cap_mask, beta, nl, ei, t_ev, t_arr)
 
             s = lax.fori_loop(0, SEG, step, s)
             if not stream:
@@ -1187,32 +1259,49 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
                                     "queue_cap", "stream", "window",
                                     "tl_bins", "keep_responses"))
 def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                   threshold, *, kernel, n_fns, capacity, queue_cap,
-                   stream=True, window=0, tl_bins=0, tl_bucket=60.0,
-                   keep_responses=False):
+                   threshold, n_live=None, *, kernel, n_fns, capacity,
+                   queue_cap, stream=True, window=0, tl_bins=0,
+                   tl_bucket=60.0, keep_responses=False):
     """Lane-batched run + on-device metric reduction. Means and
     slowdowns come from the streaming accumulators in *both* modes (so
     streamed and exact sweeps agree bitwise); p99 is exact in exact
     mode and one-bin-accurate from the histogram in streaming mode.
     ``keep_responses`` (exact mode only) additionally returns the
     (L, N) per-request response vector — the CDF/percentile surface
-    `repro.api.ExperimentSpec(keep_per_request=True)` exposes."""
+    `repro.api.ExperimentSpec(keep_per_request=True)` exposes.
+    ``n_live`` ((L,) i32) marks lanes as ragged prefixes of their
+    padded trace rows (see `_simulate`); means/quantiles then reduce
+    over each lane's live prefix only."""
     if keep_responses and stream:
         raise ValueError("keep_responses requires stream=False")
     out = _simulate(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                    threshold, kernel=kernel, n_fns=n_fns,
+                    threshold, n_live, kernel=kernel, n_fns=n_fns,
                     capacity=capacity, queue_cap=queue_cap,
                     stream=stream, window=window, tl_bins=tl_bins,
                     tl_bucket=tl_bucket)
     N = fn.shape[1]
+    if n_live is None:
+        denom = N
+    else:
+        n_live = jnp.asarray(n_live, jnp.int32)
+        denom = jnp.maximum(n_live, 1).astype(jnp.float64)
     if stream:
-        p99 = hist_quantile(out["resp_hist"], 0.99, N,
+        p99 = hist_quantile(out["resp_hist"], 0.99,
+                            N if n_live is None else n_live[:, None],
                             out["max_response"])
     else:
         resp = out["completion"] - arr[tix]
-        p99 = jnp.percentile(resp, 99.0, axis=1)
-    res = dict(mean_response=out["resp_sum"] / N,
-               mean_slowdown=out["slow_sum"] / N,
+        if n_live is None:
+            p99 = jnp.percentile(resp, 99.0, axis=1)
+        else:
+            live = jnp.arange(N) < n_live[:, None]
+            p99 = jnp.nanpercentile(
+                jnp.where(live, resp, jnp.nan), 99.0, axis=1)
+    res = dict(mean_response=out["resp_sum"] / denom,
+               mean_slowdown=out["slow_sum"] / denom,
+               resp_sum=out["resp_sum"],
+               slow_sum=out["slow_sum"],
+               done=out["done"],
                p99_response=p99,
                max_response=out["max_response"],
                resp_hist=out["resp_hist"],

@@ -1,0 +1,260 @@
+"""Multi-node cluster subsystem: routing invariants, K=1 bitwise
+equivalence with the single-node engine, request-for-request parity of
+both routing tiers against the straightforward Python reference
+cluster, and the ClusterSpec/router-registry API surface."""
+import numpy as np
+import pytest
+
+from repro.api import (ClusterSpec, ExperimentSpec, ResultSet,
+                       SyntheticTrace, register_router, run_experiment,
+                       unregister_router)
+from repro.cluster.routers import (ROUTERS, StaticRouter, mix32_jax,
+                                   mix32_np, mix32_py)
+from repro.cluster.static import build_node_streams
+
+SRC = SyntheticTrace.make(n_functions=12, n_requests=400, seed=3,
+                          utilization=0.25)
+GRID = dict(traces=[SRC], policies=("esff", "sff"), capacities=(6,),
+            queue_cap=256)
+STATIC_ROUTERS = ("hash", "round_robin", "weighted_random")
+
+
+@pytest.fixture(scope="module")
+def plain():
+    return run_experiment(ExperimentSpec(**GRID)).check()
+
+
+# ---------------------------------------------------------- hash parity
+def test_mix32_variants_agree():
+    ids = np.arange(1000)
+    for seed in (0, 7, 12345):
+        py = np.array([mix32_py(i, seed) for i in ids])
+        np.testing.assert_array_equal(py, mix32_np(ids, seed))
+        np.testing.assert_array_equal(
+            py, np.asarray(mix32_jax(ids, seed)).astype(np.int64))
+
+
+# ------------------------------------------------------- K=1 bitwise
+def test_k1_cluster_bitwise_identical_to_single_node(plain):
+    """A 1-node cluster with zero network delay must be bitwise the
+    single-node engine — on the static fast path AND through the
+    dynamic routers' K-node event loop."""
+    rs = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=1, router="hash"),
+                 ClusterSpec(n_nodes=1, router="round_robin"),
+                 ClusterSpec(n_nodes=1, router="jsq2"),
+                 ClusterSpec(n_nodes=1, router="cold_aware")], **GRID))
+    assert rs.dims[-1] == "cluster"
+    for u, lab in enumerate(rs.coords["cluster"]):
+        for m in plain.data:
+            np.testing.assert_array_equal(
+                plain.data[m], np.take(rs.data[m], u, axis=4),
+                err_msg=f"{lab}/{m}")
+
+
+# ------------------------------------------------- routing conservation
+def test_static_partition_routes_every_request_exactly_once():
+    a = SRC.arrays()
+    N = len(a["fn_id"])
+    for name in STATIC_ROUTERS:
+        cs = ClusterSpec(n_nodes=4, router=name)
+        assign, streams, n_live, index = build_node_streams(a, cs)
+        assert assign.shape == (N,)
+        assert assign.min() >= 0 and assign.max() < 4
+        # the per-node index sets partition [0, N)
+        allidx = np.concatenate(index)
+        assert len(allidx) == N
+        assert np.array_equal(np.sort(allidx), np.arange(N))
+        assert n_live.sum() == N
+        # each sub-stream preserves arrival order and function ids
+        for k in range(4):
+            nk = int(n_live[k])
+            assert np.array_equal(streams["fn_id"][k, :nk],
+                                  a["fn_id"][index[k]])
+            arr = streams["arrival"][k, :nk]
+            assert np.all(np.diff(arr) >= 0)
+
+
+def test_dynamic_cluster_conserves_requests():
+    rs = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=4, router="jsq2"),
+                 ClusterSpec(n_nodes=4, router="cold_aware")],
+        **GRID)).check()
+    nd = rs["node_done"]          # (P, T, K, B, U, nodes)
+    assert np.all(nd.sum(axis=-1) == SRC.n_requests)
+    assert np.all(rs["done"] == SRC.n_requests)
+
+
+# -------------------------------------------- node-order invariance
+class _PermutedHash(StaticRouter):
+    """Hash routing with relabeled node ids — same partition, nodes
+    numbered differently."""
+
+    name = "perm_hash"
+
+    def __init__(self, perm):
+        self.perm = np.asarray(perm, np.int32)
+
+    def assign(self, fn_id, arrival, spec):
+        return self.perm[ROUTERS["hash"].assign(fn_id, arrival, spec)]
+
+
+def test_static_merge_bitwise_invariant_to_node_order():
+    perm = [2, 0, 3, 1]
+    register_router("perm_hash", _PermutedHash(perm))
+    try:
+        base = run_experiment(ExperimentSpec(
+            cluster=[ClusterSpec(n_nodes=4, router="hash")], **GRID))
+        relabeled = run_experiment(ExperimentSpec(
+            cluster=[ClusterSpec(n_nodes=4, router="perm_hash")],
+            **GRID))
+    finally:
+        unregister_router("perm_hash")
+    for m in base.data:
+        a, b = base.data[m], relabeled.data[m]
+        if m == "node_done":      # per-node counts permute with ids:
+            b = b[..., perm]      # relabeled[perm[k]] == base[k]
+        np.testing.assert_array_equal(a, b, err_msg=m)
+
+
+# ------------------------------------------------ parity vs reference
+@pytest.mark.parametrize("router", ("jsq2", "cold_aware"))
+@pytest.mark.parametrize("policy", ("esff", "sff"))
+def test_dynamic_router_parity_vs_python_reference(router, policy):
+    """K=4 dynamic cluster, request-for-request against K ordinary
+    Python engines behind the mirrored router."""
+    from repro.cluster.reference import simulate_cluster_reference
+    cs = ClusterSpec(n_nodes=4, router=router)
+    rs = run_experiment(ExperimentSpec(
+        traces=[SRC], policies=(policy,), capacities=(3,),
+        queue_cap=256, stream=False, keep_per_request=True,
+        cluster=[cs]))
+    ref = simulate_cluster_reference(SRC.to_trace(), policy, cs,
+                                     capacity=3)
+    np.testing.assert_allclose(rs.value("response", policy=policy),
+                               ref["response"], rtol=1e-9, atol=1e-9)
+    assert int(rs.value("cold_starts", policy=policy)) \
+        == ref["cold_starts"]
+    np.testing.assert_array_equal(
+        rs.value("node_done", policy=policy), ref["node_done"])
+
+
+def test_static_path_parity_vs_python_reference():
+    """Heterogeneous nodes + per-node network delay through the
+    sub-stream fast path, against the same partition replayed on
+    Python engines (timer policy included — the static path supports
+    the full kernel set)."""
+    from repro.cluster.reference import simulate_cluster_reference
+    cs = ClusterSpec(n_nodes=3, router="hash",
+                     node_capacity=(4, 2, 3),
+                     net_delay=(0.0, 0.05, 0.1))
+    for policy in ("esff", "openwhisk_v2"):
+        rs = run_experiment(ExperimentSpec(
+            traces=[SRC], policies=(policy,), capacities=(9,),
+            queue_cap=256, stream=False, keep_per_request=True,
+            cluster=[cs]))
+        ref = simulate_cluster_reference(SRC.to_trace(), policy, cs)
+        np.testing.assert_allclose(
+            rs.value("response", policy=policy), ref["response"],
+            rtol=1e-9, atol=1e-9)
+        assert int(rs.value("cold_starts", policy=policy)) \
+            == ref["cold_starts"]
+
+
+# --------------------------------------------------- spec validation
+def test_cluster_spec_validation_errors():
+    with pytest.raises(ValueError, match="n_nodes"):
+        ClusterSpec(n_nodes=0).validate()
+    with pytest.raises(KeyError, match="unknown router"):
+        ClusterSpec(router="nope").validate()
+    with pytest.raises(ValueError, match="node_capacity"):
+        ClusterSpec(n_nodes=3, node_capacity=(4, 2)).validate()
+    with pytest.raises(ValueError, match="dynamic"):
+        ClusterSpec(router="jsq2", net_delay=0.1).validate()
+    with pytest.raises(ValueError, match="weights"):
+        ClusterSpec(n_nodes=2, router="weighted_random",
+                    weights=(1.0,)).validate()
+    with pytest.raises(TypeError, match="ClusterSpec or None"):
+        ExperimentSpec(traces=[SRC], cluster=["hash"]).validate()
+    with pytest.raises(ValueError, match="capacity axis"):
+        ExperimentSpec(traces=[SRC], capacities=(4, 8),
+                       cluster=[ClusterSpec(n_nodes=2,
+                                            node_capacity=(2, 2))]
+                       ).validate()
+    with pytest.raises(ValueError, match="host_shard"):
+        ExperimentSpec(traces=[SRC], host_shard=(0, 2),
+                       cluster=[ClusterSpec()]).validate()
+    # a single ClusterSpec is promoted to a one-entry axis
+    spec = ExperimentSpec(traces=[SRC], cluster=ClusterSpec()
+                          ).validate()
+    assert len(spec.cluster) == 1
+
+
+def test_register_router_errors_and_custom_router(plain):
+    with pytest.raises(TypeError, match="Router"):
+        register_router("bad", object())
+    with pytest.raises(ValueError, match="already registered"):
+        register_router("hash", ROUTERS["hash"])
+
+    class _AllToZero(StaticRouter):
+        name = "all_zero"
+
+        def assign(self, fn_id, arrival, spec):
+            return np.zeros(len(fn_id), np.int32)
+
+    register_router("all_zero", _AllToZero())
+    try:
+        # everything lands on node 0 (6 slots); node 1 idles — the
+        # merged metrics equal the plain 6-slot single-node run
+        rs = run_experiment(ExperimentSpec(
+            traces=[SRC], policies=("esff", "sff"), capacities=(6,),
+            queue_cap=256,
+            cluster=[ClusterSpec(n_nodes=2, router="all_zero",
+                                 node_capacity=(6, 6))]))
+        for m in ("mean_response", "cold_starts", "resp_hist"):
+            np.testing.assert_array_equal(
+                plain.data[m], np.take(rs.data[m], 0, axis=4),
+                err_msg=m)
+        assert rs.data["node_done"][0, 0, 0, 0, 0].tolist() \
+            == [SRC.n_requests, 0]
+    finally:
+        unregister_router("all_zero")
+    with pytest.raises(KeyError):
+        unregister_router("all_zero")
+
+
+# ------------------------------------------------ ResultSet cluster axis
+def test_resultset_cluster_axis_sel_rows_npz(tmp_path):
+    rs = run_experiment(ExperimentSpec(
+        cluster=[None, ClusterSpec(n_nodes=2, router="hash")], **GRID))
+    assert rs.grid_shape == (2, 1, 1, 1, 2)
+    assert rs.coords["cluster"] == ["none", "hash:K2"]
+    sub = rs.sel(cluster="hash:K2", policy="esff")
+    assert sub.grid_shape == (1, 1, 1, 1, 1)
+    v = sub.value("mean_response")
+    assert v == rs.value("mean_response", policy="esff",
+                         cluster="hash:K2")
+    rows = list(rs.rows())
+    assert len(rows) == 4 and all("cluster" in r for r in rows)
+    path = tmp_path / "rs.npz"
+    rs.save_npz(path)
+    back = ResultSet.load_npz(path)
+    assert back.coords == rs.coords and back.dims == rs.dims
+    for m in rs.data:
+        np.testing.assert_array_equal(back.data[m], rs.data[m])
+
+
+def test_net_delay_shifts_node_clock():
+    """A uniform delay on a 1-node cluster shifts every event by the
+    same constant: responses are unchanged up to float associativity,
+    and the timeline moves."""
+    base = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=1, router="hash")], **GRID))
+    delayed = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=1, router="hash",
+                             net_delay=5.0)], **GRID))
+    np.testing.assert_allclose(delayed["mean_response"],
+                               base["mean_response"],
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_array_equal(delayed["cold_starts"],
+                                  base["cold_starts"])

@@ -27,6 +27,8 @@ import argparse
 import os
 import time
 
+import numpy as np
+
 from benchmarks.common import (default_trace_source, emit,
                                enable_compilation_cache, timed)
 from repro.api import ExperimentSpec, NpzTrace, run_experiment
@@ -67,6 +69,40 @@ def _run_one(src, policy, *, name, window, devices, t_gen=0.0):
         derived=f"{n / dt:.0f} req/s (gen {t_gen:.1f}s)")
 
 
+MULTI_N = 250_000
+MULTI_T = 4
+
+
+def _run_multi(policy, *, window, devices, n=MULTI_N, t=MULTI_T):
+    """T-trace stacked grid at N per row, plus the matching
+    single-trace row: the pair regression-gates the multi-row
+    shared-operand grouping in `repro.api.run_experiment` (without it
+    the stacked (T, N) operand falls off the XLA:CPU batched-gather
+    cliff and the T-row grid runs ~an order of magnitude slower than
+    T single-row grids)."""
+    srcs = [default_trace_source(seed=i, n_requests=n)
+            for i in range(t)]
+    for s in srcs:
+        s.arrays()
+    rows = [_run_one(srcs[0], policy, name=f"N{n}", window=window,
+                     devices=devices)]
+    spec = ExperimentSpec(traces=srcs, policies=(policy,),
+                          capacities=(CAPACITY,), queue_cap=QUEUE_CAP,
+                          stream=True, window=window, devices=devices)
+    run_experiment(spec)
+    rs, dt = timed(run_experiment, spec, repeats=3)
+    rs.check()
+    total = n * t
+    rows.append(dict(
+        name=f"{policy}_T{t}xN{n}", n_requests=total, policy=policy,
+        window=(window or DEFAULT_WINDOW), us_per_call=dt * 1e6,
+        req_s=total / dt,
+        mean_response=float(np.mean(rs.data["mean_response"])),
+        p99_response=float(np.max(rs.data["p99_response"])),
+        derived=f"{total / dt:.0f} req/s ({t} traces)"))
+    return rows
+
+
 def run(ns=NS, policies=POLICIES, window=0, trace_npz="",
         devices=None):
     rows = []
@@ -79,6 +115,7 @@ def run(ns=NS, policies=POLICIES, window=0, trace_npz="",
             rows.append(_run_one(src, policy, name=f"N{n}",
                                  window=window, devices=devices,
                                  t_gen=t_gen))
+    rows += _run_multi(policies[0], window=window, devices=devices)
     if trace_npz:
         src = NpzTrace(path=trace_npz)
         n = src.n_requests

@@ -1,4 +1,4 @@
-"""Cluster scale-out: K = 1..16 edge nodes at fixed aggregate capacity.
+"""Cluster scale-out: K = 1..64 edge nodes at fixed aggregate capacity.
 
 The LaSS-style question the single-server paper cannot ask: given a
 fixed slot budget, is it better served as one big edge server or as K
@@ -26,7 +26,11 @@ from benchmarks.common import (default_trace_source, emit,
 from repro.api import ClusterSpec, ExperimentSpec, run_experiment
 
 AGG = 32                      # fixed aggregate slot budget
-KS = (1, 2, 4, 8, 16)
+KS = (1, 2, 4, 8, 16, 32)
+# fleet tier: K=64 single-slot nodes needs a 64-slot aggregate so
+# node_capacity stays >= 1 — a second spec at its own fixed budget
+AGG_FLEET = 64
+KS_FLEET = (64,)
 ROUTERS = ("hash", "round_robin", "jsq2", "cold_aware")
 POLICIES = ("esff", "sff")
 QUEUE_CAP = 1 << 15
@@ -100,6 +104,12 @@ def main(argv=None):
 
     rows, src, entries = run(routers=routers, ks=ks, agg=args.agg,
                              policies=policies, head=head)
+    fleet_rows, _, fleet_entries = [], None, []
+    if not args.quick:
+        fleet_rows, _, fleet_entries = run(
+            routers=routers, ks=KS_FLEET, agg=AGG_FLEET,
+            policies=policies, head=head)
+        rows += fleet_rows
     emit(rows, rows[0].keys())
     print()
     for r in routers:
@@ -109,6 +119,8 @@ def main(argv=None):
                         for k, v in sorted(curve.items()))
         print(f"# {policies[0]} scale-out under {r}: {pts}")
     tp = throughput_rows(src, entries, args.agg)
+    if fleet_entries:
+        tp += throughput_rows(src, fleet_entries, AGG_FLEET)
     print()
     emit(tp, tp[0].keys())
     return rows + tp

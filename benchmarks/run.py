@@ -110,23 +110,44 @@ def smoke() -> int:
 
     # K=1 cluster gate: a 1-node cluster with zero network delay must
     # be bitwise the single-node engine — through the static
-    # sub-stream fast path AND the dynamic routers' K-node event loop
+    # sub-stream fast path AND the dynamic routers' K-node event loop,
+    # timer-rail policies (openwhisk_v2) included
     from repro.api import ClusterSpec
+    cl_policies = ("esff", "sff", "openwhisk_v2")
     cl = run_experiment(ExperimentSpec(
-        traces=[src], policies=("esff", "sff"), capacities=(capacity,),
+        traces=[src], policies=cl_policies, capacities=(capacity,),
         queue_cap=256,
         cluster=[ClusterSpec(n_nodes=1, router="hash"),
                  ClusterSpec(n_nodes=1, router="jsq2"),
                  ClusterSpec(n_nodes=1, router="cold_aware")]))
     ref = run_experiment(ExperimentSpec(
-        traces=[src], policies=("esff", "sff"),
+        traces=[src], policies=cl_policies,
         capacities=(capacity,), queue_cap=256))
     ok = all(
         np.array_equal(ref.data[m], np.take(cl.data[m], u, axis=4))
         for u in range(len(cl.coords["cluster"])) for m in ref.data)
     failures += 0 if ok else 1
-    print("cluster K=1 (static + dynamic): "
+    print("cluster K=1 (static + dynamic, incl. timer rail): "
           + ("bitwise-identical to single node  OK" if ok
+             else "MISMATCH"))
+
+    # dynamic-tier conservation: openwhisk_v2 over a 3-node jsq2
+    # cluster with heterogeneous per-node delays must complete every
+    # request exactly once (no overflow, no stalls, node_done sums to
+    # done) — the deferred-event rail cannot drop or duplicate work
+    cv = run_experiment(ExperimentSpec(
+        traces=[src], policies=("openwhisk_v2",),
+        capacities=(capacity,), queue_cap=256,
+        cluster=[ClusterSpec(n_nodes=3, router="jsq2",
+                             net_delay=(0.0, 0.002, 0.005))]))
+    done = cv.data["done"]
+    ok = (bool(np.all(done == src.n_requests))
+          and not np.any(cv.data["overflow"])
+          and not np.any(cv.data["stalled"])
+          and bool(np.all(cv.data["node_done"].sum(axis=-1) == done)))
+    failures += 0 if ok else 1
+    print("dynamic openwhisk_v2 + net_delay conservation: "
+          + ("every request completes exactly once  OK" if ok
              else "MISMATCH"))
 
     # NpzTrace round-trip: save_npz -> NpzTrace -> run must match the
@@ -154,7 +175,8 @@ def smoke() -> int:
     failures += deprecation_scan()
     print(f"# smoke: {len(POLICIES)} policies, "
           f"{len(POLICIES)} engine-equivalence checks + streaming, "
-          f"shim-parity, cluster-K=1, npz round-trip, 2-device and "
+          f"shim-parity, cluster-K=1 (incl. timer rail), dynamic "
+          f"conservation, npz round-trip, 2-device and "
           f"deprecation gates, {failures} failures")
     return failures
 

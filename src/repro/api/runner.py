@@ -34,6 +34,16 @@ from repro.api.spec import ExperimentSpec
 
 _BETA_DEFAULT = "default"
 
+# Multi-trace grids whose stacked (T, N) trace operands exceed this
+# many elements run one trace row per engine call instead: inside the
+# lanes' vmap a (T, N) operand is a *batched* gather operand, and
+# XLA:CPU drops batched multi-element gathers onto its generic
+# (~25x slower) path once the operand outgrows cache scale. Per-row
+# calls keep every shared operand (1, N) — the fast path — and
+# per-lane outputs depend only on the lane's own trace row, so the
+# grouped grid is bitwise the stacked one (gated in tests/test_api.py).
+ROW_SPLIT_ELEMS = 1 << 16
+
 
 def _unique_labels(labels):
     """Disambiguate repeated source labels positionally (``#k`` suffix)
@@ -68,16 +78,22 @@ def _lower_grid(spec: ExperimentSpec):
     return sources, stacked, F, N
 
 
-def _chunk_plan(spec: ExperimentSpec, T: int, chunk: int):
+def _chunk_plan(spec: ExperimentSpec, T: int, chunk: int,
+                row_split: bool = False):
     """The global chunk list [(policy_index, lane_lo, lane_hi)] in the
     legacy sweep order (policy-major; lanes trace-major, then capacity,
-    then beta)."""
+    then beta). Under ``row_split`` chunks additionally never cross a
+    trace boundary, so each engine call sees lanes of a single trace
+    row."""
     K = len(spec.capacities)
     B = 1 if spec.betas is None else len(spec.betas)
+    bounds = ([(t * K * B, (t + 1) * K * B) for t in range(T)]
+              if row_split else [(0, T * K * B)])
     plan = []
     for pi in range(len(spec.policies)):
-        for lo in range(0, T * K * B, chunk):
-            plan.append((pi, lo, min(lo + chunk, T * K * B)))
+        for blo, bhi in bounds:
+            for lo in range(blo, bhi, chunk):
+                plan.append((pi, lo, min(lo + chunk, bhi)))
     return plan, K, B
 
 
@@ -103,7 +119,8 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
     C = max(spec.capacities)
     masks = np.stack([np.arange(C) < c for c in spec.capacities])
     chunk = resolve_lane_chunk(spec.lane_chunk)
-    plan, K, B = _chunk_plan(spec, T, chunk)
+    row_split = T > 1 and T * N > ROW_SPLIT_ELEMS
+    plan, K, B = _chunk_plan(spec, T, chunk, row_split)
 
     host_i, host_n = spec.host_shard
     mine = [ci for ci in range(len(plan)) if ci % host_n == host_i]
@@ -154,6 +171,12 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
         di = mine.index(ci) % len(devs)
         sh = shared_per_dev[di]
         tix_l = jnp.asarray(tix_col[lo:hi])
+        if row_split:
+            # single-trace chunk: slice the shared operands to this
+            # chunk's trace row and renumber the lanes' trace index
+            t0 = int(tix_col[lo])
+            sh = {k: v[t0:t0 + 1] for k, v in sh.items()}
+            tix_l = jnp.zeros((hi - lo,), jnp.int32)
         mask_l = jnp.asarray(mask_col[lo:hi])
         beta_l = jnp.asarray(beta_cols[policy][lo:hi])
         if multi_dev:
@@ -209,6 +232,7 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
                 tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
                 prior=spec.prior, threshold=spec.threshold,
                 lane_chunk=chunk, host_shard=list(spec.host_shard),
+                row_split=row_split,
                 n_devices=len(devs), backend=jax.default_backend(),
                 seeds=(list(spec.seeds) if spec.seeds is not None
                        else None),

@@ -8,38 +8,71 @@ generalises `repro.core.jax_engine._simulate` to K co-simulated nodes
 per lane:
 
 * **slots** become a (L, K, C) node-major rail — the packed next-event
-  argmin runs over the flattened (L, 2·K·C + 1) candidate matrix, so
-  the same-time class order (EXEC < COLD < ARRIVAL) and the
-  within-class index tie-break extend the single-node engine's exactly
-  (node-major slot order);
-* **queues** become per-(node, function) FIFOs. The single-node
-  engine's positional cursors assume a function's queue is a contiguous
-  range of its precomputed arrival order — runtime routing breaks that
-  invariant (which arrivals of f_j reach node k is state-dependent) —
-  so the cluster carries an (L, N) linked-list rail ``nxt`` plus
-  (L, K, F) head/tail/length cursors. ``nxt`` is both gathered and
-  scattered per event, the pattern the single-node engine's rule 3
-  avoids; the resulting per-event copy is O(N) and is the documented
-  cost of the dynamic tier (fine at the 10^4–10^5-request traces
-  cluster studies run; the static tier keeps the O(F+C) carry).
-* **estimators** become node-local ((L, K, F) running sums plus
-  (L, K) node-global fallbacks): each node's scheduler learns only
-  from its own completions, exactly as K independent servers would.
+  argmin runs over the flattened (L, 2·K·C + …) candidate matrix, so
+  the same-time class order (EXEC < COLD < TIMER < NODE_ARRIVAL <
+  ARRIVAL) and the within-class index tie-break extend the single-node
+  engine's exactly (node-major order within each class);
+* **queues** become per-(node, function) FIFOs carried as a
+  *segment-overlay link rail*: runtime routing breaks the single-node
+  engine's positional-cursor invariant (which arrivals of f_j reach
+  node k is state-dependent), so successor links live in an (L, N) i32
+  rail ``nxt`` — but per event only a per-lane (pos, val) register is
+  written, staged into an (L, SEG) overlay slot, and the rail itself is
+  batch-scattered **once per segment**. Link *reads* (queue pops) are
+  lazy: the popped head's successor is chased in-body (overlay match
+  first, single-element rail gather second — each link position is
+  written at most once ever, so a stale overlay entry can only repeat
+  the flushed rail value) and lands in the parked head register. All
+  queue-cursor writes (``q_len``/``q_head_rid``/``q_tail_rid``) park
+  in per-lane (pos, val/delta) registers and are applied as
+  single-element scatters at the **top of the next step**, before
+  anything reads those arrays — write-first carry, which keeps the
+  (L, K, F) cursor buffers copy-free under XLA's in-place analysis
+  (read-early/write-late keeps a buffer live across the body and
+  costs two full copies per event per array). Carried-copy cost is
+  one (L, N) scatter per SEG events — O(F + C + SEG)-amortised per
+  event, the single-node streaming-carry regime, instead of the
+  O(N)-per-event gather+scatter of the earlier linked-list spelling;
+* **timer rails** (``openwhisk_v2``) ride a second link chain ``tnx``
+  over *node arrivals*: per (node, fn) the engine carries the chain
+  tail, an arrival counter and a consumed counter, so the rid-chain
+  reproduces the single-node positional timer rail event-for-event
+  (arm at the node-local arrival, fire in arrival order, silent
+  consume on direct dispatch, no-op fires gated by the queue-head
+  check) without any arrival-order precomputation;
+* **per-node net_delay** becomes a third chain ``dnx``: the router
+  decides at the raw ARRIVAL time, the request is appended to its
+  node's in-flight FIFO and surfaces as a deferred NODE_ARRIVAL
+  candidate ``delay_k`` later — the node's policy, timers and response
+  accounting all run on the node-local clock (response is measured
+  from the delayed arrival, matching the static tier's convention);
+* **estimators** are node-local ((L, K, F) running sums plus (L, K)
+  node-global fallbacks): each node's scheduler learns only from its
+  own completions, exactly as K independent servers would.
 
 Policy kernels run *unmodified*: per event the lane state is sliced
-into a single-node **view** of the event's node (slot/queue/estimator
-rows; lane-global ci/cf/metric keys pass through) and the kernel's
-hooks operate on that view through a `ClusterNodeCtx`, which overrides
-the ctx-dispatched queue ops (`EngineCtx.q_push`/`q_pop`/…) with the
-linked-list discipline and `est_means` with the node-local fallback
-chain. Timer-rail policies (``openwhisk_v2``) ride arrival-order
-positions that routing also breaks — they are rejected here and
-supported on the static path only.
+into a single-node **view** of the event's node — one view/commit pair
+per event, shared by the slot, timer and arrival phases (the phases
+are mutually exclusive by construction, and the router runs first,
+before any enabled write) — and the kernel's hooks operate on that
+view through a `ClusterNodeCtx`, which overrides the ctx-dispatched
+queue/timer ops with the overlay-rail discipline and `est_means` with
+the node-local fallback chain. The view slice and the row commit are
+*lane-stacked*, outside the vmapped event body: a vmapped
+dynamic-index over (L, K, F) carries is a batched-operand gather —
+the generic XLA:CPU path, O(K·F) per event — while one
+`take_along_axis` / row scatter per nodal array stays on the fast
+path, so per-event cost is O(F + C), independent of K.
 
-With ``n_nodes=1`` the loop degenerates to the single-node engine —
-same candidate order, same helper arithmetic, same fold — and is
-bitwise identical to it (gated in ``benchmarks/run.py --smoke`` and
-tests/test_cluster.py).
+With ``n_nodes=1`` and zero delay the loop degenerates to the
+single-node engine — same candidate order, same helper arithmetic,
+same fold — and is bitwise identical to it for every kernel,
+timer-rail policies included (gated in ``benchmarks/run.py --smoke``
+and tests/test_cluster.py). The delay and timer machinery is gated
+*statically*, so the zero-delay/no-timer arithmetic contains no
+spurious ``+0.0`` or extra candidates. The static ``seg`` knob shrinks
+the segment length (default `SEG`) so tests can prove the overlay rail
+is bitwise invariant to where segment boundaries fall.
 """
 from __future__ import annotations
 
@@ -59,24 +92,36 @@ from repro.cluster.routers import ClusterView
 ensure_x64()
 
 # state keys sliced to the event's node before kernel hooks run (the
-# kernel's extra_state keys are appended per call)
+# timer-rail keys and the kernel's extra_state keys are appended per
+# call)
 _NODAL = ("slot_fn", "slot_state", "slot_ready", "slot_req",
           "slot_used", "slot_seq", "q_len", "q_head_rid", "q_tail_rid",
-          "est_sum", "est_n", "node_gn", "node_gsum")
+          "q_tot", "est_sum", "est_n", "node_gn", "node_gsum")
+_NODAL_TMR = ("arr_cnt", "tmr_seq", "tmr_rid", "tmr_next", "rearm_t",
+              "rearm_rid", "la_rid")
+_NODAL_PEND = ("pend_head", "pend_tail", "pend_len")
 
 
 class ClusterNodeCtx(EngineCtx):
     """Single-node view ctx over one node of a cluster lane.
 
     Reads go straight to the full trace operands (the cluster loop is
-    single-window); the ctx-dispatched queue ops are the linked-list
-    discipline over the ``nxt`` rail, and the estimator fallback chain
-    uses the node-local globals instead of the lane counters.
+    single-window); the ctx-dispatched queue/timer ops implement the
+    segment-overlay link-rail discipline — writes park per-event
+    registers (``lw_*`` link writes, ``qw_*`` queue-cursor writes,
+    ``pp_*``/``tp_*`` deferred reads) that the engine stages into the
+    overlay, resolves via the in-body chase pass, and applies
+    write-first at the top of the next step — and the estimator
+    fallback chain uses the
+    node-local globals instead of the lane counters. ``delay`` (only
+    under ``has_delay``) shifts `arrival_at` to the node-local clock so
+    the response fold measures from the delayed arrival.
     """
 
     def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2, tix,
                  cap_mask, beta, prior, threshold, k, n, f, c, q,
-                 stream, tl_bins, tl_bucket):
+                 stream, tl_bins, tl_bucket, node, delay=None,
+                 seg_n=SEG):
         super().__init__(
             fn_id2=fn_id2, arrival2=arrival2, exec2=exec2, cold2=cold2,
             evict2=evict2, pos_rids2=None, pos_off2=None,
@@ -84,6 +129,15 @@ class ClusterNodeCtx(EngineCtx):
             cap_mask=cap_mask, beta=beta, prior=prior,
             threshold=threshold, k=k, n=n, f=f, c=c, q=q, stream=stream,
             tl_bins=tl_bins, tl_bucket=tl_bucket)
+        self._node = jnp.asarray(node, jnp.int32)
+        self._delay = delay
+        self.seg_n = seg_n
+
+    def arrival_at(self, rid):
+        a = super().arrival_at(rid)
+        if self._delay is None:
+            return a
+        return a + self._delay
 
     # ------------------------------------------------ estimator override
     def est_means(self, s):
@@ -96,7 +150,7 @@ class ClusterNodeCtx(EngineCtx):
         return jnp.where(s["est_n"] > 0,
                          s["est_sum"] / jnp.maximum(counts, 1), g)
 
-    # ------------------------------------------- linked-list queue ops
+    # ------------------------------------------ overlay-rail queue ops
     # (q_head is inherited: the head cache works the same way)
     def q_push(self, s, fn, rid, on):
         fc = jnp.clip(fn, 0, self.F - 1)
@@ -105,62 +159,111 @@ class ClusterNodeCtx(EngineCtx):
         do = on & ~full
         rid32 = jnp.asarray(rid, jnp.int32)
         tail = s["q_tail_rid"][fc]
+        link = do & ~was_empty
+        kf = self._node * self.F + fc
         s = dict(s)
+        # the view-row updates keep intra-event reads consistent; the
+        # carried (L, K, F) queue arrays are updated via the qw_*
+        # write registers instead (scalar scatters in step() — a row
+        # commit of these arrays defeats XLA's in-place rewrite and
+        # costs two full copies per event)
         s["q_head_rid"] = s["q_head_rid"].at[
             _gidx(do & was_empty, fn, self.F)].set(rid32, mode="drop")
-        s["nxt"] = s["nxt"].at[
-            _gidx(do & ~was_empty, tail, self.N)].set(rid32,
-                                                      mode="drop")
+        s["qw_head_pos"] = jnp.where(do & was_empty, kf,
+                                     s["qw_head_pos"])
+        s["qw_head_val"] = jnp.where(do & was_empty, rid32,
+                                     s["qw_head_val"])
+        # nxt[tail] = rid, staged via the per-event link register
+        s["lw_q_pos"] = jnp.where(link, tail, s["lw_q_pos"])
+        s["lw_q_val"] = jnp.where(link, rid32, s["lw_q_val"])
         s["q_tail_rid"] = s["q_tail_rid"].at[
             _gidx(do, fn, self.F)].set(rid32, mode="drop")
+        s["qw_tail_pos"] = jnp.where(do, kf, s["qw_tail_pos"])
+        s["qw_tail_val"] = jnp.where(do, rid32, s["qw_tail_val"])
         s["q_len"] = s["q_len"].at[_gidx(do, fn, self.F)].add(
             1, mode="drop")
+        s["qw_len_pos"] = jnp.where(do, kf, s["qw_len_pos"])
+        s["qw_len_delta"] = jnp.where(do, jnp.int32(1),
+                                      s["qw_len_delta"])
+        s["q_tot"] = s["q_tot"] + do.astype(jnp.int32)
         s["ci"] = s["ci"].at[CI_OVF].add((on & full).astype(jnp.int32))
         return s, do
 
     def q_consume_direct(self, s, fn, on):
         # no positional cursor to advance: a directly dispatched
-        # arrival simply never enters the linked list
+        # arrival simply never enters the link chain
         return s
 
     def q_pop(self, s, fn, on):
         fc = jnp.clip(fn, 0, self.F - 1)
         rid = s["q_head_rid"][fc]
-        succ = s["nxt"][jnp.clip(rid, 0, self.N - 1)]
+        defer = on & (s["q_len"][fc] > 1)
         fi = _gidx(on, fn, self.F)
+        kf = self._node * self.F + fc
         s = dict(s)
-        s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
+        # the successor lookup is deferred: the chase pass rewrites
+        # the parked head register from the overlay/rail before the
+        # registers are applied to the carried queue arrays
+        s["q_head_rid"] = s["q_head_rid"].at[fi].set(-1, mode="drop")
+        s["qw_head_pos"] = jnp.where(on, kf, s["qw_head_pos"])
+        s["qw_head_val"] = jnp.where(on, jnp.int32(-1),
+                                     s["qw_head_val"])
         s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+        s["qw_len_pos"] = jnp.where(on, kf, s["qw_len_pos"])
+        s["qw_len_delta"] = jnp.where(on, jnp.int32(-1),
+                                      s["qw_len_delta"])
+        s["q_tot"] = s["q_tot"] - on.astype(jnp.int32)
+        s["pp_kf"] = jnp.where(defer, kf, s["pp_kf"])
+        s["pp_rid"] = jnp.where(defer, rid, s["pp_rid"])
         return s, rid
+
+    # -------------------------------------------- rid-chain timer rail
+    def arm_timer(self, s, fn, rid, t, pushed, on):
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rail_head = s["tmr_seq"][fc] == s["arr_cnt"][fc] - 1
+        rid32 = jnp.asarray(rid, jnp.int32)
+        head_arm = on & rail_head & pushed
+        hi = _gidx(head_arm, fn, self.F)
+        s = dict(s)
+        s["tmr_rid"] = s["tmr_rid"].at[hi].set(rid32, mode="drop")
+        s["tmr_next"] = s["tmr_next"].at[hi].set(
+            t + self.threshold, mode="drop")
+        s["tmr_seq"] = s["tmr_seq"].at[
+            _gidx(on & rail_head & ~pushed, fn, self.F)].add(
+            1, mode="drop")
+        return s
 
 
 # ------------------------------------------------------------ event loop
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "router", "n_nodes",
                                     "n_fns", "capacity", "queue_cap",
-                                    "seed", "stream", "tl_bins"))
+                                    "seed", "stream", "tl_bins",
+                                    "has_delay", "seg"))
 def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
-                      trace_ix, cap_mask, beta, prior, threshold, *,
-                      kernel, router, n_nodes, n_fns, capacity,
-                      queue_cap, seed=0, stream=False, tl_bins=0,
-                      tl_bucket=60.0):
+                      trace_ix, cap_mask, beta, prior, threshold,
+                      delays, *, kernel, router, n_nodes, n_fns,
+                      capacity, queue_cap, seed=0, stream=False,
+                      tl_bins=0, tl_bucket=60.0, has_delay=False,
+                      seg=0):
     """K-node lane-batched cluster loop (see the module docstring).
 
     ``cap_mask`` is (L, K, C) — heterogeneous node capacities are
-    per-node slot masks over the common C = max slots. Returns the
-    single-node engine's output dict plus ``node_done`` (L, K), the
-    per-node completion counts (the router balance diagnostic, and the
-    conservation check: rows sum to N).
-    """
-    if kernel.has_timers:
-        raise ValueError(
-            f"dynamic cluster routing does not support timer-rail "
-            f"policies ({kernel.name!r}); use a static router for "
-            "them (docs/cluster.md)")
+    per-node slot masks over the common C = max slots. ``delays`` is
+    the (K,) per-node network delay operand, only read when the static
+    ``has_delay`` flag is set (so zero-delay runs stay bitwise the
+    single-node arithmetic). ``seg`` (static; 0 -> `SEG`) sets the
+    overlay segment length and never changes results. Returns the
+    single-node engine's output dict plus ``node_done`` (L, K) and, in
+    exact mode under delay, ``node_of`` (L, N), the per-request
+    dispatching node."""
     L = trace_ix.shape[0]
     N = fn_id.shape[1]
     F, C, K, Q = n_fns, capacity, n_nodes, queue_cap
     KC = K * C
+    KF = K * F
+    SG = int(seg) if seg else SEG
+    timers = kernel.has_timers
 
     fn_id = fn_id.astype(jnp.int32)
     arrival = arrival.astype(jnp.float64)
@@ -171,6 +274,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     prior = jnp.float64(prior)
     threshold = jnp.float64(threshold)
     tl_bucket = jnp.float64(tl_bucket)
+    delays = jnp.asarray(delays, jnp.float64)
 
     s = dict(
         slot_fn=jnp.full((L, K, C), -1, jnp.int32),
@@ -182,7 +286,20 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         q_len=jnp.zeros((L, K, F), jnp.int32),
         q_head_rid=jnp.full((L, K, F), -1, jnp.int32),
         q_tail_rid=jnp.full((L, K, F), -1, jnp.int32),
+        q_tot=jnp.zeros((L, K), jnp.int32),
+        # queue write registers, carried across steps: the previous
+        # event's parked queue writes are applied at the *top* of the
+        # next step (see step()), so within one step the queue arrays'
+        # only direct user is the opening in-place scatter
+        qw_len_pos=jnp.full((L,), -1, jnp.int32),
+        qw_len_delta=jnp.zeros((L,), jnp.int32),
+        qw_head_pos=jnp.full((L,), -1, jnp.int32),
+        qw_head_val=jnp.zeros((L,), jnp.int32),
+        qw_tail_pos=jnp.full((L,), -1, jnp.int32),
+        qw_tail_val=jnp.zeros((L,), jnp.int32),
         nxt=jnp.full((L, N), -1, jnp.int32),
+        ov_q_pos=jnp.full((L, SG), N, jnp.int32),
+        ov_q_val=jnp.zeros((L, SG), jnp.int32),
         est_sum=jnp.zeros((L, K, F), jnp.float64),
         est_n=jnp.zeros((L, K, F), jnp.int32),
         node_gn=jnp.zeros((L, K), jnp.int32),
@@ -192,24 +309,49 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         cf=jnp.zeros((L, NCF), jnp.float64),
         hist=jnp.zeros((L, HIST_BINS), jnp.int32),
     )
+    if timers:
+        s["arr_cnt"] = jnp.zeros((L, K, F), jnp.int32)
+        s["tmr_seq"] = jnp.zeros((L, K, F), jnp.int32)
+        s["tmr_rid"] = jnp.full((L, K, F), -1, jnp.int32)
+        s["tmr_next"] = jnp.full((L, K, F), BIG, jnp.float64)
+        s["rearm_t"] = jnp.full((L, K, F), BIG, jnp.float64)
+        s["rearm_rid"] = jnp.full((L, K, F), -1, jnp.int32)
+        s["la_rid"] = jnp.full((L, K, F), -1, jnp.int32)
+        s["tnx"] = jnp.full((L, N), -1, jnp.int32)
+        s["ov_t_pos"] = jnp.full((L, SG), N, jnp.int32)
+        s["ov_t_val"] = jnp.zeros((L, SG), jnp.int32)
+    if has_delay:
+        s["pend_head"] = jnp.full((L, K), -1, jnp.int32)
+        s["pend_tail"] = jnp.full((L, K), -1, jnp.int32)
+        s["pend_len"] = jnp.zeros((L, K), jnp.int32)
+        s["dnx"] = jnp.full((L, N), -1, jnp.int32)
+        s["ov_d_pos"] = jnp.full((L, SG), N, jnp.int32)
+        s["ov_d_val"] = jnp.zeros((L, SG), jnp.int32)
     if not stream:
-        s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
-        s["d_start"] = jnp.zeros((L, SEG), jnp.float64)
-        s["d_comp"] = jnp.zeros((L, SEG), jnp.float64)
+        s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
+        s["d_start"] = jnp.zeros((L, SG), jnp.float64)
+        s["d_comp"] = jnp.zeros((L, SG), jnp.float64)
         s["start"] = jnp.full((L, N), -1.0, jnp.float64)
         s["completion"] = jnp.full((L, N), -1.0, jnp.float64)
+        if has_delay:
+            s["d_node"] = jnp.zeros((L, SG), jnp.int32)
+            s["node_of"] = jnp.zeros((L, N), jnp.int32)
     if tl_bins:
         s["tl_cnt"] = jnp.zeros((L, tl_bins), jnp.int32)
         s["tl_resp"] = jnp.zeros((L, tl_bins), jnp.float64)
         s["tl_exec"] = jnp.zeros((L, tl_bins), jnp.float64)
     extra = kernel.extra_state(L, C, F)
-    nodal = _NODAL + tuple(extra)
+    nodal = _NODAL + (_NODAL_TMR if timers else ()) \
+        + (_NODAL_PEND if has_delay else ()) + tuple(extra)
     for kk, v in extra.items():
         # one copy of the kernel's per-server state per node
         s[kk] = jnp.repeat(v[:, None, ...], K, axis=1)
 
     max_iters = 256 * N + 4096
-    n_cand = 2 * KC + 1
+    n_slot = 2 * KC
+    tmr_base = n_slot
+    pend_base = n_slot + (2 * KF if timers else 0)
+    n_cand = pend_base + (K if has_delay else 0) + 1
     lanes = jnp.arange(L, dtype=jnp.int32)
     lane_iota = lanes[:, None]
     t_cold_l = t_cold[trace_ix]
@@ -220,25 +362,44 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     fn_flat = fn_id.reshape(-1)
     base_n = trace_ix * N
 
-    def node_view(s, k):
+    # node view/commit live OUTSIDE the vmapped body: a vmapped
+    # dynamic_index over the (L, K, F) nodal arrays is a
+    # batched-operand gather — the generic XLA:CPU path, measured
+    # O(K*F) per event — whereas one lane-stacked take_along_axis /
+    # row scatter per array rides the fast gather/scatter path
+    # the queue trio's carried writes are at most one scalar position
+    # per array per event, so they skip the row commit — XLA's
+    # copy-insertion cannot prove the fused row arithmetic of these
+    # rows in-place and charges two full (L, K, F) copies per event —
+    # and ride the qw_* write registers instead (scalar drop-scatters
+    # in step(); the gathered view row stays for kernel full-row reads)
+    _Q_TRIO = ("q_len", "q_head_rid", "q_tail_rid")
+    nodal_commit = tuple(kk for kk in nodal if kk not in _Q_TRIO)
+
+    def gather_nodal(s, k_ev):
         v = dict(s)
         for key in nodal:
-            v[key] = lax.dynamic_index_in_dim(s[key], k, 0, False)
+            a = s[key]
+            idx = k_ev.reshape((L,) + (1,) * (a.ndim - 1))
+            v[key] = jnp.take_along_axis(a, idx, axis=1)[:, 0]
         return v
 
-    def node_commit(s, v, k):
+    def commit_nodal(s, v, k_ev):
         out = dict(v)
-        for key in nodal:
-            out[key] = s[key].at[k].set(v[key])
+        for key in nodal_commit:
+            out[key] = s[key].at[lanes, k_ev].set(v[key])
+        for key in _Q_TRIO:
+            out[key] = s[key]
         return out
 
-    def make_ctx(tix, cold_l, evict_l, capm_node, beta, k_step):
+    def make_ctx(tix, cold_l, evict_l, capm_node, beta, k_step, node):
         return ClusterNodeCtx(
             fn_id2=fn_id, arrival2=arrival, exec2=exec_time,
             cold2=cold_l, evict2=evict_l, tix=tix, cap_mask=capm_node,
             beta=beta, prior=prior, threshold=threshold, k=k_step,
             n=N, f=F, c=C, q=Q, stream=stream, tl_bins=tl_bins,
-            tl_bucket=tl_bucket)
+            tl_bucket=tl_bucket, node=node,
+            delay=(delays[node] if has_delay else None), seg_n=SG)
 
     def pick_events(s):
         na = s["ci"][:, CI_NEXT]
@@ -247,40 +408,102 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         ready = jnp.where(cap_mask, s["slot_ready"], BIG
                           ).reshape(L, KC)
         st = s["slot_state"].reshape(L, KC)
-        cand = jnp.concatenate(
-            [jnp.where(st == BUSY, ready, BIG),
-             jnp.where(st == COLD, ready, BIG),
-             t_arr[:, None]], axis=1)
+        blocks = [jnp.where(st == BUSY, ready, BIG),
+                  jnp.where(st == COLD, ready, BIG)]
+        if timers:
+            blocks += [s["tmr_next"].reshape(L, KF),
+                       s["rearm_t"].reshape(L, KF)]
+        if has_delay:
+            ph = jnp.clip(s["pend_head"], 0, N - 1)
+            blocks.append(jnp.where(
+                s["pend_len"] > 0,
+                arr_flat[base_n[:, None] + ph] + delays[None, :], BIG))
+        blocks.append(t_arr[:, None])
+        cand = jnp.concatenate(blocks, axis=1)
         ei = jnp.argmin(cand, axis=1).astype(jnp.int32)
         t_ev = jnp.take_along_axis(cand, ei[:, None], axis=1)[:, 0]
         return ei, t_ev, t_arr
 
+    def pick_one(q_len, q_tot, slot_fn, slot_state, capm, est_sum,
+                 est_n, node_gn, node_gsum, cold_l, j, rid, t):
+        g = ClusterView(q_len=q_len, q_tot=q_tot, slot_fn=slot_fn,
+                        slot_state=slot_state, cap_mask=capm,
+                        est_sum=est_sum, est_n=est_n, node_gn=node_gn,
+                        node_gsum=node_gsum, t_cold=cold_l,
+                        prior=prior, n_nodes=K, seed=seed)
+        return router.pick(g, j, rid, t)
+
+    pick_lanes = jax.vmap(pick_one)
+
     def lane_step(k_step, s, tix, cold_l, evict_l, capm, beta, ei,
-                  t_ev, t_arr):
+                  t_ev, t_arr, node):
+        # ``s`` arrives with the nodal keys already sliced to
+        # ``node``'s row (gather_nodal); ``capm`` is that node's (C,)
+        # slot mask
         ci = s["ci"]
         active = (ci[CI_DONE] < N) & (ci[CI_STALL] == 0)
         na = ci[CI_NEXT]
         live = active & (t_ev < BIG)
+        # per-event registers: dispatch record (consumed by
+        # _fold_event), link writes (staged into the overlays) and
+        # deferred link reads (resolved by the chase pass)
         s = dict(s)
         s["ev_rid"] = jnp.int32(-1)
         s["ev_comp"] = jnp.float64(0.0)
         s["ev_exec"] = jnp.float64(0.0)
-        ev_slot = live & (ei < 2 * KC)
+        s["lw_q_pos"] = jnp.int32(-1)
+        s["lw_q_val"] = jnp.int32(0)
+        s["pp_kf"] = jnp.int32(-1)
+        s["pp_rid"] = jnp.int32(-1)
+        # queue write registers: each event performs at most one push
+        # or one pop (the kernels' hooks are push-xor-pop and the
+        # event classes are mutually exclusive), so one scalar write
+        # per queue array covers every case
+        s["qw_len_pos"] = jnp.int32(-1)
+        s["qw_len_delta"] = jnp.int32(0)
+        s["qw_head_pos"] = jnp.int32(-1)
+        s["qw_head_val"] = jnp.int32(0)
+        s["qw_tail_pos"] = jnp.int32(-1)
+        s["qw_tail_val"] = jnp.int32(0)
+        if timers:
+            s["lw_t_pos"] = jnp.int32(-1)
+            s["lw_t_val"] = jnp.int32(0)
+            s["tp_kf"] = jnp.int32(-1)
+            s["tp_rid"] = jnp.int32(-1)
+        if has_delay:
+            s["lw_d_pos"] = jnp.int32(-1)
+            s["lw_d_val"] = jnp.int32(0)
+            s["dp_k"] = jnp.int32(-1)
+            s["dp_rid"] = jnp.int32(-1)
+
+        # ------------------------------------------ event class decode
+        ev_slot = live & (ei < n_slot)
         is_cold = ei >= KC
         sflat = jnp.clip(jnp.where(is_cold, ei - KC, ei), 0, KC - 1)
-        node_s = sflat // C
         slot = sflat % C
         ev_arr = live & (ei == n_cand - 1)
+        ev_timer = jnp.bool_(False)
+        if timers:
+            fire_orig = live & (ei >= tmr_base) & (ei < tmr_base + KF)
+            fire_re = (live & (ei >= tmr_base + KF)
+                       & (ei < tmr_base + 2 * KF))
+            ev_timer = fire_orig | fire_re
+            kf_t = jnp.clip(jnp.where(fire_orig, ei - tmr_base,
+                                      ei - tmr_base - KF), 0, KF - 1)
+            f_t = kf_t % F
+        if has_delay:
+            ev_pend = live & (ei >= pend_base) & (ei < pend_base + K)
+
+        rid_a = jnp.minimum(na, N - 1)
+        ctx = make_ctx(tix, cold_l, evict_l, capm, beta, k_step, node)
+        v = s
 
         # ------------------------------------------------- slot event
         cold_on = ev_slot & is_cold
         exec_on = ev_slot & ~is_cold
-        v = node_view(s, node_s)
-        ctx_s = make_ctx(tix, cold_l, evict_l, capm[node_s], beta,
-                         k_step)
         rid_done = v["slot_req"][slot]
         j_done = v["slot_fn"][slot]
-        e_done = ctx_s.exec_at(rid_done)
+        e_done = ctx.exec_at(rid_done)
         si = _gidx(ev_slot, slot, C)
         ji = _gidx(exec_on, j_done, F)
         exec_i = exec_on.astype(jnp.int32)
@@ -296,36 +519,151 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                                                     0.0)
         v["node_gn"] = v["node_gn"] + exec_i
         v["ci"] = v["ci"].at[CI_DONE].add(exec_i)
-        v = kernel.on_cold_done(ctx_s, v, slot, t_ev, cold_on)
-        v = kernel.on_exec_done(ctx_s, v, slot, rid_done, t_ev,
+        v = kernel.on_cold_done(ctx, v, slot, t_ev, cold_on)
+        v = kernel.on_exec_done(ctx, v, slot, rid_done, t_ev,
                                 exec_on)
-        s = node_commit(s, v, node_s)
-        s["node_done"] = s["node_done"].at[
-            _gidx(exec_on, node_s, K)].add(1, mode="drop")
 
-        # ---------------------------------------------------- arrival
-        rid_a = jnp.minimum(na, N - 1)
-        j_a = fn_flat[tix * N + rid_a]
-        g = ClusterView(q_len=s["q_len"], slot_fn=s["slot_fn"],
-                        slot_state=s["slot_state"], cap_mask=capm,
-                        est_sum=s["est_sum"], est_n=s["est_n"],
-                        node_gn=s["node_gn"], node_gsum=s["node_gsum"],
-                        t_cold=cold_l, prior=prior, n_nodes=K,
-                        seed=seed)
-        k_route = jnp.clip(router.pick(g, j_a, rid_a, t_arr), 0, K - 1)
-        v = node_view(s, k_route)
-        ctx_a = make_ctx(tix, cold_l, evict_l, capm[k_route], beta,
-                         k_step)
-        progress = ev_slot | ev_arr
+        # ------------------------------------------------- timer event
+        if timers:
+            rid_o = v["tmr_rid"][f_t]
+            seq_o = v["tmr_seq"][f_t]
+            more = seq_o + 1 < v["arr_cnt"][f_t]
+            oi = _gidx(fire_orig, f_t, F)
+            rid_r = v["rearm_rid"][f_t]
+            v = dict(v)
+            v["tmr_seq"] = v["tmr_seq"].at[oi].add(1, mode="drop")
+            # placeholder; the chase pass installs the chained
+            # successor and its fire time before the next pick
+            v["tmr_rid"] = v["tmr_rid"].at[oi].set(-1, mode="drop")
+            v["tmr_next"] = v["tmr_next"].at[oi].set(BIG, mode="drop")
+            v["rearm_t"] = v["rearm_t"].at[
+                _gidx(fire_re, f_t, F)].set(BIG, mode="drop")
+            chase = fire_orig & more
+            v["tp_kf"] = jnp.where(chase, node * F + f_t, v["tp_kf"])
+            v["tp_rid"] = jnp.where(chase, rid_o, v["tp_rid"])
+            rid_t = jnp.where(fire_orig, rid_o, rid_r)
+            v = kernel.on_timer(ctx, v, rid_t, t_ev, ev_timer)
+
+        # ------------------------------------- node arrival / deferral
+        if has_delay:
+            # deferred-arrival pop: the event time is the node-local
+            # (delayed) arrival; the FIFO successor resolves lazily
+            plen0 = v["pend_len"]
+            rid_p = v["pend_head"]
+            v = dict(v)
+            v["pend_head"] = jnp.where(ev_pend, jnp.int32(-1),
+                                       v["pend_head"])
+            v["pend_len"] = v["pend_len"] - ev_pend.astype(jnp.int32)
+            defer_p = ev_pend & (plen0 > 1)
+            v["dp_k"] = jnp.where(defer_p, node, v["dp_k"])
+            v["dp_rid"] = jnp.where(defer_p, rid_p, v["dp_rid"])
+            rid_na = jnp.where(ev_pend, rid_p, rid_a)
+            t_na = t_ev
+            na_on = ev_pend
+        else:
+            rid_na = rid_a
+            t_na = t_arr
+            na_on = ev_arr
+        rid_na32 = jnp.asarray(rid_na, jnp.int32)
+        if timers:
+            # chain every node arrival onto the (node, fn) timer rail
+            j_na = ctx.fn_at(rid_na)
+            prev_tail = v["la_rid"][jnp.clip(j_na, 0, F - 1)]
+            chain = na_on & (prev_tail >= 0)
+            v = dict(v)
+            v["lw_t_pos"] = jnp.where(chain, prev_tail, v["lw_t_pos"])
+            v["lw_t_val"] = jnp.where(chain, rid_na32, v["lw_t_val"])
+            ni = _gidx(na_on, j_na, F)
+            v["la_rid"] = v["la_rid"].at[ni].set(rid_na32, mode="drop")
+            v["arr_cnt"] = v["arr_cnt"].at[ni].add(1, mode="drop")
+        progress = ev_slot | ev_timer | ev_arr
+        if has_delay:
+            progress = progress | ev_pend
         v = dict(v)
         v["ci"] = v["ci"].at[jnp.array([CI_NEXT, CI_ITERS])].add(
             jnp.stack([ev_arr.astype(jnp.int32),
                        progress.astype(jnp.int32)]))
-        v = kernel.on_arrival(ctx_a, v, rid_a, t_arr, ev_arr)
-        s = node_commit(s, v, k_route)
+        v = kernel.on_arrival(ctx, v, rid_na, t_na, na_on)
+        if has_delay:
+            # raw arrival: the routing decision is made (``node`` is
+            # the pick) and the request goes in flight to that node
+            rid_a32 = jnp.asarray(rid_a, jnp.int32)
+            ptail = v["pend_tail"]
+            pempty = v["pend_len"] == 0
+            v = dict(v)
+            v["pend_head"] = jnp.where(ev_arr & pempty, rid_a32,
+                                       v["pend_head"])
+            v["lw_d_pos"] = jnp.where(ev_arr & ~pempty, ptail,
+                                      v["lw_d_pos"])
+            v["lw_d_val"] = jnp.where(ev_arr & ~pempty, rid_a32,
+                                      v["lw_d_val"])
+            v["pend_tail"] = jnp.where(ev_arr, rid_a32,
+                                       v["pend_tail"])
+            v["pend_len"] = v["pend_len"] + ev_arr.astype(jnp.int32)
+        s = v
+        if has_delay and not stream:
+            ki = jnp.where(s["ev_rid"] >= 0, k_step, SG)
+            s["d_node"] = s["d_node"].at[ki].set(
+                jnp.asarray(node, jnp.int32), mode="drop")
 
-        s = _fold_event(ctx_a, s)
+        s = _fold_event(ctx, s)
         s = dict(s)
+        # stage this event's link writes into the overlay slot (every
+        # step overwrites its own slot, so no per-segment reset — a
+        # stale entry can only repeat the already-flushed rail value)
+        lwp, lwv = s.pop("lw_q_pos"), s.pop("lw_q_val")
+        s["ov_q_pos"] = s["ov_q_pos"].at[k_step].set(
+            jnp.where(lwp >= 0, lwp, jnp.int32(N)))
+        s["ov_q_val"] = s["ov_q_val"].at[k_step].set(lwv)
+        if timers:
+            ltp, ltv = s.pop("lw_t_pos"), s.pop("lw_t_val")
+            s["ov_t_pos"] = s["ov_t_pos"].at[k_step].set(
+                jnp.where(ltp >= 0, ltp, jnp.int32(N)))
+            s["ov_t_val"] = s["ov_t_val"].at[k_step].set(ltv)
+        if has_delay:
+            ldp, ldv = s.pop("lw_d_pos"), s.pop("lw_d_val")
+            s["ov_d_pos"] = s["ov_d_pos"].at[k_step].set(
+                jnp.where(ldp >= 0, ldp, jnp.int32(N)))
+            s["ov_d_val"] = s["ov_d_val"].at[k_step].set(ldv)
+
+        # deferred link reads: a push and a pop of the same chain
+        # never share an event, so the parked successor lookups can
+        # run here — each rail read is a *single-element* gather
+        # (cheap even on the vmap batched-operand path; it's full-row
+        # batched gathers the design keeps out of the body) and every
+        # park register targets the event's own node, so the
+        # successor lands in the node's view row and rides the one
+        # row commit
+        def chase(rail, ov_pos, ov_val, rid):
+            m = ov_pos == rid
+            ov = ov_val[jnp.argmax(m)]
+            return jnp.where(m.any(), ov,
+                             rail[jnp.clip(rid, 0, N - 1)])
+
+        pp_kf, pp_rid = s.pop("pp_kf"), s.pop("pp_rid")
+        succ = chase(s["nxt"], s["ov_q_pos"], s["ov_q_val"], pp_rid)
+        # a deferred pop's successor overrides the parked head write
+        # (the pop already set qw_head_pos to the same (node, fn) slot)
+        s["qw_head_val"] = jnp.where(pp_kf >= 0, succ,
+                                     s["qw_head_val"])
+        if timers:
+            tp_kf, tp_rid = s.pop("tp_kf"), s.pop("tp_rid")
+            tsucc = chase(s["tnx"], s["ov_t_pos"], s["ov_t_val"],
+                          tp_rid)
+            # ctx.arrival_at is the node-local clock (+delay under
+            # has_delay) — the same float association as arming at
+            # the head of the rail
+            t_fire = ctx.arrival_at(tsucc) + threshold
+            ti = _gidx(tp_kf >= 0, tp_kf % F, F)
+            s["tmr_rid"] = s["tmr_rid"].at[ti].set(tsucc, mode="drop")
+            s["tmr_next"] = s["tmr_next"].at[ti].set(t_fire,
+                                                     mode="drop")
+        if has_delay:
+            dp_k, dp_rid = s.pop("dp_k"), s.pop("dp_rid")
+            dsucc = chase(s["dnx"], s["ov_d_pos"], s["ov_d_val"],
+                          dp_rid)
+            s["pend_head"] = jnp.where(dp_k >= 0, dsucc,
+                                       s["pend_head"])
         stall = jnp.where(
             active & ~live, 1,
             jnp.where(active & (s["ci"][CI_ITERS] >= max_iters), 2,
@@ -334,7 +672,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         return s
 
     step_lanes = jax.vmap(
-        lane_step, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+        lane_step, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
 
     def cond(s):
         ci = s["ci"]
@@ -343,21 +681,98 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     def segment(s):
         if not stream:
             s = dict(s)
-            s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+            s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
 
         def step(k_step, s):
-            ei, t_ev, t_arr = pick_events(s)
-            return step_lanes(k_step, s, trace_ix, t_cold_l,
-                              t_evict_l, cap_mask, beta, ei, t_ev,
-                              t_arr)
+            # apply the previous event's parked queue writes before
+            # anything reads the queue arrays: with the in-place
+            # scatter as each buffer's sole direct user and every
+            # later read consuming its output, copy-insertion carries
+            # the (L, K, F) queue arrays copy-free (writing them at
+            # the end of the step instead costs two full copies per
+            # event per array). The final event's registers are never
+            # applied — nothing reads the queues after the loop.
+            def qw_idx(pos):
+                return (jnp.where(pos >= 0, pos // F, K),
+                        jnp.where(pos >= 0, pos % F, F))
 
-        s = lax.fori_loop(0, SEG, step, s)
-        if not stream:
             s = dict(s)
+            kw, fw = qw_idx(s["qw_len_pos"])
+            s["q_len"] = s["q_len"].at[lanes, kw, fw].add(
+                s["qw_len_delta"], mode="drop")
+            kw, fw = qw_idx(s["qw_head_pos"])
+            s["q_head_rid"] = s["q_head_rid"].at[lanes, kw, fw].set(
+                s["qw_head_val"], mode="drop")
+            kw, fw = qw_idx(s["qw_tail_pos"])
+            s["q_tail_rid"] = s["q_tail_rid"].at[lanes, kw, fw].set(
+                s["qw_tail_val"], mode="drop")
+            ei, t_ev, t_arr = pick_events(s)
+            ci = s["ci"]
+            live = ((ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0)
+                    & (t_ev < BIG))
+            # the router runs first, read-only: in an arrival event no
+            # enabled write precedes the arrival phase, so the state
+            # it reads equals the post-slot-phase state of the old
+            # two-view spelling bit-for-bit
+            rid_a = jnp.minimum(ci[:, CI_NEXT], N - 1)
+            j_a = fn_flat[base_n + rid_a]
+            k_route = jnp.clip(
+                pick_lanes(s["q_len"], s["q_tot"], s["slot_fn"],
+                           s["slot_state"], cap_mask, s["est_sum"],
+                           s["est_n"], s["node_gn"], s["node_gsum"],
+                           t_cold_l, j_a, rid_a, t_arr), 0, K - 1)
+            # the event's node: the phases are mutually exclusive, so
+            # one view/commit pair serves slot, timer,
+            # deferred-arrival and arrival events alike
+            ev_slot = live & (ei < n_slot)
+            node_s = jnp.clip(jnp.where(ei >= KC, ei - KC, ei),
+                              0, KC - 1) // C
+            k_ev = jnp.where(ev_slot, node_s, k_route)
+            if timers:
+                ev_timer = live & (ei >= tmr_base) & (ei < pend_base)
+                kf_t = jnp.clip(jnp.where(ei < tmr_base + KF,
+                                          ei - tmr_base,
+                                          ei - tmr_base - KF),
+                                0, KF - 1)
+                k_ev = jnp.where(ev_timer, kf_t // F, k_ev)
+            if has_delay:
+                ev_pend = (live & (ei >= pend_base)
+                           & (ei < pend_base + K))
+                k_ev = jnp.where(
+                    ev_pend, jnp.clip(ei - pend_base, 0, K - 1), k_ev)
+            v = gather_nodal(s, k_ev)
+            capm_node = jnp.take_along_axis(
+                cap_mask, k_ev[:, None, None], axis=1)[:, 0]
+            v = step_lanes(k_step, v, trace_ix, t_cold_l, t_evict_l,
+                           capm_node, beta, ei, t_ev, t_arr, k_ev)
+            s = commit_nodal(s, v, k_ev)
+            exec_on = ev_slot & (ei < KC)
+            s["node_done"] = s["node_done"].at[
+                lanes, jnp.where(exec_on, k_ev, K)].add(
+                1, mode="drop")
+            return s
+
+        s = lax.fori_loop(0, SG, step, s)
+        # batch-flush the staged links — the only (L, N) rail writes,
+        # paid once per SG events
+        s = dict(s)
+        s["nxt"] = s["nxt"].at[lane_iota, s["ov_q_pos"]].set(
+            s["ov_q_val"], mode="drop")
+        if timers:
+            s["tnx"] = s["tnx"].at[lane_iota, s["ov_t_pos"]].set(
+                s["ov_t_val"], mode="drop")
+        if has_delay:
+            s["dnx"] = s["dnx"].at[lane_iota, s["ov_d_pos"]].set(
+                s["ov_d_val"], mode="drop")
+        if not stream:
             s["start"] = s["start"].at[lane_iota, s["d_rid"]].set(
                 s["d_start"], mode="drop")
             s["completion"] = s["completion"].at[
                 lane_iota, s["d_rid"]].set(s["d_comp"], mode="drop")
+            if has_delay:
+                s["node_of"] = s["node_of"].at[
+                    lane_iota, s["d_rid"]].set(s["d_node"],
+                                               mode="drop")
         return s
 
     final = lax.while_loop(cond, segment, s)
@@ -379,6 +794,8 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     if not stream:
         out["start"] = final["start"]
         out["completion"] = final["completion"]
+        if has_delay:
+            out["node_of"] = final["node_of"]
     return out
 
 
@@ -386,29 +803,39 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                    static_argnames=("kernel", "router", "n_nodes",
                                     "n_fns", "capacity", "queue_cap",
                                     "seed", "stream", "tl_bins",
+                                    "has_delay", "seg",
                                     "keep_responses"))
 def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                     threshold, *, kernel, router, n_nodes, n_fns,
-                     capacity, queue_cap, seed=0, stream=True,
-                     tl_bins=0, tl_bucket=60.0, keep_responses=False):
+                     threshold, delays=None, *, kernel, router,
+                     n_nodes, n_fns, capacity, queue_cap, seed=0,
+                     stream=True, tl_bins=0, tl_bucket=60.0,
+                     has_delay=False, seg=0, keep_responses=False):
     """Cluster counterpart of `jax_engine._sweep_metrics`: lane-batched
     dynamic-router run + on-device metric reduction (same metric
-    names, plus ``node_done``)."""
+    names, plus ``node_done``). ``delays``/``has_delay`` switch on the
+    deferred-arrival rail; exact-mode responses are then measured from
+    each request's node-local (delayed) arrival."""
     if keep_responses and stream:
         raise ValueError("keep_responses requires stream=False")
+    if delays is None:
+        delays = jnp.zeros((n_nodes,), jnp.float64)
     out = _simulate_cluster(fn, arr, ex, cold, ev, tix, masks, betas,
-                            prior, threshold, kernel=kernel,
+                            prior, threshold, delays, kernel=kernel,
                             router=router, n_nodes=n_nodes,
                             n_fns=n_fns, capacity=capacity,
                             queue_cap=queue_cap, seed=seed,
                             stream=stream, tl_bins=tl_bins,
-                            tl_bucket=tl_bucket)
+                            tl_bucket=tl_bucket, has_delay=has_delay,
+                            seg=seg)
     N = fn.shape[1]
     if stream:
         p99 = hist_quantile(out["resp_hist"], 0.99, N,
                             out["max_response"])
     else:
-        resp = out["completion"] - arr[tix]
+        arr_l = arr[tix]
+        if has_delay:
+            arr_l = arr_l + delays[out["node_of"]]
+        resp = out["completion"] - arr_l
         p99 = jnp.percentile(resp, 99.0, axis=1)
     res = dict(mean_response=out["resp_sum"] / N,
                mean_slowdown=out["slow_sum"] / N,

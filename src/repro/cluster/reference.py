@@ -127,6 +127,7 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
         static_assign = np.asarray(
             router.assign(a["fn_id"], a["arrival"], cspec))
 
+    deferred = router.dynamic and any(delays)
     for r in trace.requests:
         r.start = -1.0
         r.completion = -1.0
@@ -162,7 +163,16 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                                   trace.functions, req.req_id,
                                   req.fn_id, cspec.seed, exec_prior)
             assign[req.req_id] = k
-            policies[k].on_arrival(req, ev.time)
+            if deferred:
+                # dynamic routing under net_delay: the decision is
+                # made now, the node sees the request delay_k later
+                events.push(ev.time + delays[k],
+                            EventKind.NODE_ARRIVAL, req)
+            else:
+                policies[k].on_arrival(req, ev.time)
+        elif ev.kind == EventKind.NODE_ARRIVAL:
+            req = ev.payload
+            policies[int(assign[req.req_id])].on_arrival(req, ev.time)
         elif ev.kind == EventKind.EXEC_DONE:
             inst = ev.payload
             k = owner(inst)
@@ -188,6 +198,8 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
     arr = np.array([r.arrival for r in trace.requests])
     if static_assign is not None:
         arr = arr + np.asarray(delays)[static_assign]
+    elif deferred:
+        arr = arr + np.asarray(delays)[np.clip(assign, 0, K - 1)]
     return dict(
         start=start, completion=completion, response=completion - arr,
         assign=assign, node_done=node_done,

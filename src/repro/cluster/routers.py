@@ -75,8 +75,10 @@ def mix32_jax(x, seed: int = 0):
 
 class ClusterView:
     """Per-lane snapshot a `DynamicRouter.pick` reads (all arrays are
-    one lane's view, node-major): queue depths ``q_len`` (K, F), slot
-    rails ``slot_fn``/``slot_state`` + ``cap_mask`` (K, C), per-node
+    one lane's view, node-major): queue depths ``q_len`` (K, F) with
+    the carried per-node totals ``q_tot`` (K,) (maintained O(1) per
+    event — prefer it to summing ``q_len``), slot rails
+    ``slot_fn``/``slot_state`` + ``cap_mask`` (K, C), per-node
     estimator state ``est_sum``/``est_n`` (K, F) with node globals
     ``node_gn``/``node_gsum`` (K,), the function catalogue ``t_cold``
     (F,), the estimator ``prior`` and the static ``n_nodes``/``seed``
@@ -184,7 +186,7 @@ class JSQRouter(DynamicRouter):
         K = g.n_nodes
         if K == 1:
             return jnp.int32(0)
-        load = (g.q_len.sum(axis=1)
+        load = (g.q_tot
                 + ((g.slot_state == BUSY) & g.cap_mask).sum(axis=1))
         nodes = jnp.arange(K, dtype=jnp.int32)
         for i in range(min(self.d, K)):
@@ -233,7 +235,7 @@ class ColdAwareRouter(DynamicRouter):
         own = (g.slot_fn == jc) & g.cap_mask
         has_idle = (own & (g.slot_state == IDLE)).any(axis=1)
         busy = ((g.slot_state == BUSY) & g.cap_mask).sum(axis=1)
-        qtot = g.q_len.sum(axis=1)
+        qtot = g.q_tot
         score = (jnp.where(has_idle, 0.0, g.t_cold[jc])
                  + mean_j * g.q_len[:, jc]
                  + gmean * (qtot + busy))

@@ -59,6 +59,9 @@ def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                    ("fn_id", "arrival", "exec_time", "cold_start",
                     "evict"))
     chunk = resolve_lane_chunk(spec.lane_chunk)
+    delays = entry.delays()
+    has_delay = any(delays)
+    delays_op = jnp.asarray(delays, jnp.float64)
     per_policy: Dict[str, Dict[str, np.ndarray]] = {}
     for policy in spec.policies:
         beta_l = beta_cols[policy]
@@ -69,10 +72,12 @@ def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                 *shared, jnp.asarray(tix[lo:hi]),
                 jnp.asarray(masks[lo:hi]), jnp.asarray(beta_l[lo:hi]),
                 jnp.float64(spec.prior), jnp.float64(spec.threshold),
+                delays_op,
                 kernel=kernels[policy], router=router, n_nodes=Kn,
                 n_fns=F, capacity=C, queue_cap=spec.queue_cap,
                 seed=entry.seed, stream=spec.stream,
                 tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
+                has_delay=has_delay,
                 keep_responses=spec.keep_per_request)
             for k, v in out.items():
                 outs.setdefault(k, []).append(np.asarray(v))

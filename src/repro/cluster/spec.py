@@ -41,9 +41,11 @@ class ClusterSpec:
                       capacity-axis value.
     ``net_delay``     per-node network delay (seconds; scalar or
                       length-K tuple) added to each routed request's
-                      arrival before it reaches its node. Static
-                      routers only — a dynamic router would need an
-                      in-flight event rail (ROADMAP).
+                      arrival before it reaches its node. On the
+                      dynamic tier the router still decides at the raw
+                      arrival; the request then rides the deferred
+                      in-flight event rail to its node (see
+                      docs/cluster.md).
     ``seed``          the deterministic hash seed of the randomised
                       routers (``weighted_random`` sampling, ``jsq2``
                       candidate draws).
@@ -129,11 +131,6 @@ class ClusterSpec:
         if any(x < 0 for x in d):
             raise ValueError(
                 f"ClusterSpec: net_delay must be >= 0, got {d}")
-        if router.dynamic and any(d):
-            raise ValueError(
-                f"ClusterSpec: router {self.router!r} is dynamic; "
-                "per-node net_delay is only supported on the static "
-                "routing path (see docs/cluster.md)")
         if self.weights is not None:
             if len(self.weights) != self.n_nodes:
                 raise ValueError(

@@ -4,9 +4,14 @@ A single binary heap of ``(time, priority, seq)`` keys. Priorities order
 simultaneous events so that capacity freed at time t is visible to an
 arrival at the same t:
 
-    EXEC_DONE < COLD_DONE < TIMER < ARRIVAL
+    EXEC_DONE < COLD_DONE < TIMER < NODE_ARRIVAL < ARRIVAL
 
-``seq`` breaks remaining ties FIFO, keeping runs fully deterministic.
+``NODE_ARRIVAL`` is the deferred-delivery leg of a routed request
+(dynamic cluster routing under per-node network delay: the router
+decides at the raw ARRIVAL, the node sees the request ``delay`` later);
+it sorts before raw ARRIVALs so an in-flight request reaches its node
+before the router decides the next one at the same instant. ``seq``
+breaks remaining ties FIFO, keeping runs fully deterministic.
 """
 from __future__ import annotations
 
@@ -18,10 +23,11 @@ from typing import Any, Optional
 
 
 class EventKind(IntEnum):
-    EXEC_DONE = 0   # an instance finished a request       -> FRP hook
-    COLD_DONE = 1   # a (re)initialisation finished        -> instance ready
-    TIMER = 2       # policy-armed timer (OpenWhisk V2 threshold)
-    ARRIVAL = 3     # a request arrives                    -> FCP hook
+    EXEC_DONE = 0     # an instance finished a request     -> FRP hook
+    COLD_DONE = 1     # a (re)initialisation finished      -> instance ready
+    TIMER = 2         # policy-armed timer (OpenWhisk V2 threshold)
+    NODE_ARRIVAL = 3  # a routed request reaches its node  -> FCP hook
+    ARRIVAL = 4       # a request arrives (router decides) -> FCP hook
 
 
 @dataclass(order=True)

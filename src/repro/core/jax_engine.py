@@ -405,6 +405,7 @@ class EngineCtx:
         self.prior = prior
         self.threshold = threshold
         self.k = k                  # segment step (overlay slot)
+        self.seg_n = SEG            # overlay length (drop sentinel)
         self.N, self.F, self.C, self.Q = n, f, c, q
         self.stream = stream        # static: drop per-request records
         self.tl_bins = tl_bins      # static: timeline fold bins (0=off)
@@ -533,6 +534,23 @@ class EngineCtx:
         s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
         return s, rid
 
+    def arm_timer(self, s, fn, rid, t, pushed, on):
+        """Account the original timer of an arrival (position
+        ``arr_cnt - 1`` of the positional timer rail; ``rid`` is
+        redundant here — the position identifies the request — but the
+        cluster's rid-chain rail needs it). See the module-level
+        `arm_timer` for the semantics."""
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rail_head = s["tmr_pos"][fc] == s["arr_cnt"][fc] - 1
+        s = dict(s)
+        s["tmr_next"] = s["tmr_next"].at[
+            _gidx(on & rail_head & pushed, fn, self.F)].set(
+            t + self.threshold, mode="drop")
+        s["tmr_pos"] = s["tmr_pos"].at[
+            _gidx(on & rail_head & ~pushed, fn, self.F)].add(
+            1, mode="drop")
+        return s
+
 
 class PolicyKernel:
     """Interface a vectorised policy implements over the engine state.
@@ -654,25 +672,17 @@ def q_pop(ctx, s, fn, on):
     return ctx.q_pop(s, fn, on)
 
 
-def arm_timer(ctx, s, fn, t, pushed, on):
-    """Account the original timer of an arrival (position cnt-1).
+def arm_timer(ctx, s, fn, rid, t, pushed, on):
+    """Account the original timer of the arrival ``rid`` (the newest
+    entry of ``fn``'s timer rail; ctx-dispatched).
 
-    The rail covers every arrival position in order. If the rail is
-    idle (this arrival is its head) a *pushed* arrival arms the head
-    fire time, while a directly dispatched one is consumed silently;
-    a direct dispatch behind a busy rail stays armed and later fires
-    as a no-op (its is-head gate fails), mirroring how the Python
-    policy drops timers of already-served requests."""
-    fc = jnp.clip(fn, 0, ctx.F - 1)
-    rail_head = s["tmr_pos"][fc] == s["arr_cnt"][fc] - 1
-    s = dict(s)
-    s["tmr_next"] = s["tmr_next"].at[
-        _gidx(on & rail_head & pushed, fn, ctx.F)].set(
-        t + ctx.threshold, mode="drop")
-    s["tmr_pos"] = s["tmr_pos"].at[
-        _gidx(on & rail_head & ~pushed, fn, ctx.F)].add(
-        1, mode="drop")
-    return s
+    The rail covers every arrival in order. If the rail is idle (this
+    arrival is its head) a *pushed* arrival arms the head fire time,
+    while a directly dispatched one is consumed silently; a direct
+    dispatch behind a busy rail stays armed and later fires as a no-op
+    (its is-head gate fails), mirroring how the Python policy drops
+    timers of already-served requests."""
+    return ctx.arm_timer(s, fn, rid, t, pushed, on)
 
 
 def rearm_timer(ctx, s, fn, rid, t_fire, on):
@@ -721,7 +731,7 @@ def dispatch(ctx, s, slot, rid, t, on):
     s["ev_comp"] = jnp.where(on, comp, s["ev_comp"])
     s["ev_exec"] = jnp.where(on, e, s["ev_exec"])
     if not ctx.stream:
-        ki = jnp.where(on, ctx.k, SEG)
+        ki = jnp.where(on, ctx.k, ctx.seg_n)
         s["d_rid"] = s["d_rid"].at[ki].set(
             jnp.asarray(rid, jnp.int32), mode="drop")
         s["d_start"] = s["d_start"].at[ki].set(t, mode="drop")

@@ -315,7 +315,7 @@ class OpenWhiskV2Kernel(PolicyKernel):
         s = q_consume_direct(ctx, s, j, direct)
         queued = on & ~direct
         s, pushed = q_push(ctx, s, j, rid, queued)
-        return arm_timer(ctx, s, j, t, pushed, on)
+        return arm_timer(ctx, s, j, rid, t, pushed, on)
 
     def on_timer(self, ctx, s, rid, t, on):
         j = ctx.fn_at(rid)

@@ -186,6 +186,35 @@ def test_host_shard_with_no_chunks_errors():
                                       host_shard=(50, 99), **GRID))
 
 
+# -------------------------------------------- multi-trace row grouping
+def test_row_split_grid_bitwise_equal(monkeypatch):
+    """Big multi-trace grids run one trace row per engine call (the
+    stacked (T, N) operand is a batched-gather cliff on XLA:CPU); a
+    lane's metrics depend only on its own trace row, so the grouped
+    grid must be bitwise the stacked one."""
+    import repro.api.runner as runner_mod
+
+    srcs = [SyntheticTrace.make(n_functions=10, n_requests=300,
+                                seed=s, utilization=0.25)
+            for s in range(4)]
+    grid = dict(traces=srcs, policies=("esff", "openwhisk"),
+                capacities=(3, 5), queue_cap=256)
+    monkeypatch.setattr(runner_mod, "ROW_SPLIT_ELEMS", 1 << 30)
+    stacked = run_experiment(ExperimentSpec(**grid))
+    assert stacked.meta["row_split"] is False
+    monkeypatch.setattr(runner_mod, "ROW_SPLIT_ELEMS", 1)
+    split = run_experiment(ExperimentSpec(**grid))
+    assert split.meta["row_split"] is True
+    for k in stacked.data:
+        np.testing.assert_array_equal(split.data[k], stacked.data[k])
+    # row boundaries must also survive a lane_chunk that straddles
+    # them in the stacked plan
+    split_c = run_experiment(ExperimentSpec(lane_chunk=3, **grid))
+    for k in stacked.data:
+        np.testing.assert_array_equal(split_c.data[k],
+                                      stacked.data[k])
+
+
 # ------------------------------------------------------ policy registry
 def test_register_policy_errors_and_custom_kernel():
     from repro.core.jax_policies import ESFFKernel

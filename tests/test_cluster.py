@@ -119,7 +119,7 @@ def test_static_merge_bitwise_invariant_to_node_order():
 
 # ------------------------------------------------ parity vs reference
 @pytest.mark.parametrize("router", ("jsq2", "cold_aware"))
-@pytest.mark.parametrize("policy", ("esff", "sff"))
+@pytest.mark.parametrize("policy", ("esff", "sff", "openwhisk_v2"))
 def test_dynamic_router_parity_vs_python_reference(router, policy):
     """K=4 dynamic cluster, request-for-request against K ordinary
     Python engines behind the mirrored router."""
@@ -137,6 +137,86 @@ def test_dynamic_router_parity_vs_python_reference(router, policy):
         == ref["cold_starts"]
     np.testing.assert_array_equal(
         rs.value("node_done", policy=policy), ref["node_done"])
+
+
+def test_dynamic_net_delay_parity_vs_python_reference():
+    """Dynamic routing under heterogeneous per-node network delay: the
+    router decides at the raw arrival, the request rides the deferred
+    in-flight rail, responses are measured from the node-local
+    (delayed) arrival — request-for-request against the Python
+    reference's NODE_ARRIVAL leg."""
+    from repro.cluster.reference import simulate_cluster_reference
+    cs = ClusterSpec(n_nodes=4, router="jsq2",
+                     net_delay=(0.0, 0.013, 0.027, 0.041))
+    for policy in ("esff", "openwhisk_v2"):
+        rs = run_experiment(ExperimentSpec(
+            traces=[SRC], policies=(policy,), capacities=(3,),
+            queue_cap=256, stream=False, keep_per_request=True,
+            cluster=[cs]))
+        ref = simulate_cluster_reference(SRC.to_trace(), policy, cs,
+                                         capacity=3)
+        np.testing.assert_allclose(
+            rs.value("response", policy=policy), ref["response"],
+            rtol=1e-9, atol=1e-9, err_msg=policy)
+        assert int(rs.value("cold_starts", policy=policy)) \
+            == ref["cold_starts"]
+        np.testing.assert_array_equal(
+            rs.value("node_done", policy=policy), ref["node_done"])
+
+
+def test_k1_dynamic_timer_policy_bitwise_identical_to_single_node():
+    """The rid-chain timer rail at K=1 must reproduce the single-node
+    positional timer rail bit for bit, through both dynamic routers."""
+    grid = dict(traces=[SRC], policies=("openwhisk_v2",),
+                capacities=(6,), queue_cap=256)
+    plain = run_experiment(ExperimentSpec(**grid)).check()
+    rs = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=1, router="jsq2"),
+                 ClusterSpec(n_nodes=1, router="cold_aware")], **grid))
+    for u, lab in enumerate(rs.coords["cluster"]):
+        for m in plain.data:
+            np.testing.assert_array_equal(
+                plain.data[m], np.take(rs.data[m], u, axis=4),
+                err_msg=f"{lab}/{m}")
+
+
+@pytest.mark.parametrize("policy,delayed", [("esff", False),
+                                            ("openwhisk_v2", True)])
+def test_cluster_engine_seg_boundary_bitwise_invariance(policy,
+                                                        delayed):
+    """The segment-overlay link rails (queue chain, timer chain,
+    deferred-arrival chain) must be bitwise invariant to where segment
+    boundaries fall: segment lengths 1 and 5 cut every backlog and
+    every in-flight deferred event mid-chain, and must reproduce the
+    default (SEG=32) results exactly."""
+    import jax.numpy as jnp
+
+    from repro.api.registry import get_kernel
+    from repro.cluster.engine import _cluster_metrics
+    a = SRC.arrays()
+    shared = tuple(jnp.asarray(a[k])[None] for k in
+                   ("fn_id", "arrival", "exec_time", "cold_start",
+                    "evict"))
+    K, C = 4, 3
+    delays = (jnp.asarray((0.0, 0.013, 0.027, 0.041))
+              if delayed else None)
+    outs = []
+    for seg in (1, 5, 32):
+        out = _cluster_metrics(
+            *shared, jnp.zeros((1,), jnp.int32),
+            jnp.ones((1, K, C), bool), jnp.ones((1,), jnp.float64),
+            jnp.float64(0.1), jnp.float64(0.1), delays,
+            kernel=get_kernel(policy), router=ROUTERS["jsq2"],
+            n_nodes=K, n_fns=12, capacity=C, queue_cap=256,
+            stream=False, has_delay=delayed, seg=seg,
+            keep_responses=True)
+        outs.append({k: np.asarray(v) for k, v in out.items()})
+    assert outs[0]["stalled"].sum() == 0
+    assert int(outs[0]["done"][0]) == SRC.n_requests
+    for other, tag in ((outs[0], "seg=1"), (outs[1], "seg=5")):
+        for m in outs[2]:
+            np.testing.assert_array_equal(
+                other[m], outs[2][m], err_msg=f"{tag}: {m}")
 
 
 def test_static_path_parity_vs_python_reference():
@@ -169,8 +249,10 @@ def test_cluster_spec_validation_errors():
         ClusterSpec(router="nope").validate()
     with pytest.raises(ValueError, match="node_capacity"):
         ClusterSpec(n_nodes=3, node_capacity=(4, 2)).validate()
-    with pytest.raises(ValueError, match="dynamic"):
-        ClusterSpec(router="jsq2", net_delay=0.1).validate()
+    # dynamic routers accept net_delay (deferred-event rail, PR 6)
+    ClusterSpec(router="jsq2", net_delay=0.1).validate()
+    with pytest.raises(ValueError, match="net_delay"):
+        ClusterSpec(net_delay=-0.1).validate()
     with pytest.raises(ValueError, match="weights"):
         ClusterSpec(n_nodes=2, router="weighted_random",
                     weights=(1.0,)).validate()

@@ -1,0 +1,141 @@
+"""SLO attainment under node churn: K edge nodes with staggered
+availability windows.
+
+The robustness question the steady-state scale-out figure cannot ask:
+when nodes blink in and out (maintenance, mobility, failures), how
+much SLO attainment does each dynamic router preserve — and what does
+the churn-aware event rail cost in raw throughput? One
+`repro.api.ExperimentSpec` declares the surface: every (router, K)
+topology carries `PeriodicChurn` windows on nodes 1..K-1 (node 0
+stays up so requests are always routable), heterogeneous per-node
+network delays so ``slo_aware`` has signal, and a scalar deadline so
+every cell folds `deadline_miss` / `slo_attainment`.
+
+Emitted per (router, K, policy): SLO attainment, mean response,
+deadline-miss count, cold-start fraction. A second, timed pass
+records per-(router, K) ``req_s`` rows (``churn_<router>_K<n>``) —
+the BENCH_<stamp>.json throughput trajectory of the churn rail,
+gated by ``benchmarks/run.py --baseline``.
+
+    PYTHONPATH=src python -m benchmarks.fig_churn [--quick]
+        [--agg 32] [--deadline 0.35] [--policies esff,sff]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (default_trace_source, emit,
+                               enable_compilation_cache, timed)
+from repro.api import (ClusterSpec, ExperimentSpec, PeriodicChurn,
+                       run_experiment)
+
+AGG = 32                      # fixed aggregate slot budget
+KS = (2, 4, 8)
+ROUTERS = ("jsq2", "cold_aware", "slo_aware")
+POLICIES = ("esff", "sff")
+DEADLINE = 0.35
+QUEUE_CAP = 1 << 15
+# one availability cycle per minute, node up 70% of it; phases stagger
+# so outages roll around the cluster instead of aligning
+CHURN_PERIOD = 60.0
+CHURN_DUTY = 0.7
+
+
+def _entries(routers, ks, agg):
+    out = []
+    for r in routers:
+        for k in ks:
+            if agg % k:
+                continue
+            churn = (None,) + tuple(
+                PeriodicChurn(period=CHURN_PERIOD, duty=CHURN_DUTY,
+                              phase=i * CHURN_PERIOD / k)
+                for i in range(1, k))
+            delays = tuple(0.004 * i / max(k - 1, 1) for i in range(k))
+            out.append(ClusterSpec(
+                n_nodes=k, router=r, node_capacity=(agg // k,) * k,
+                net_delay=delays, churn=churn))
+    return out
+
+
+def run(seed: int = 0, routers=ROUTERS, ks=KS, agg=AGG,
+        policies=POLICIES, deadline=DEADLINE, head=None):
+    src = default_trace_source(seed)
+    if head:
+        src = src.head(head)
+    entries = _entries(routers, ks, agg)
+    spec = ExperimentSpec(traces=[src], policies=policies,
+                          capacities=(agg,), queue_cap=QUEUE_CAP,
+                          deadlines=deadline, cluster=entries)
+    rs = run_experiment(spec).check()
+    n = rs.meta["n_requests"]
+    rows = []
+    for e in entries:
+        for policy in policies:
+            cell = rs.sel(policy=policy, cluster=e.label)
+            rows.append(dict(
+                router=e.router, n_nodes=e.n_nodes,
+                node_capacity=agg // e.n_nodes, policy=policy,
+                slo_attainment=cell.value("slo_attainment"),
+                mean_response=cell.value("mean_response"),
+                deadline_miss=int(cell.value("deadline_miss").sum()),
+                cold_frac=cell.value("cold_starts") / n,
+            ))
+    return rows, src, entries
+
+
+def throughput_rows(src, entries, agg, deadline=DEADLINE,
+                    queue_cap=QUEUE_CAP):
+    """Timed per-(router, K) re-runs of the churn rail (jit warm from
+    the figure pass, best-of-3): the ``req_s`` rows
+    `benchmarks/run.py --baseline` regression-gates alongside the
+    no-churn cluster curve."""
+    rows = []
+    for e in entries:
+        spec = ExperimentSpec(traces=[src], policies=("esff",),
+                              capacities=(agg,), queue_cap=queue_cap,
+                              deadlines=deadline, cluster=[e])
+        run_experiment(spec)                 # warm this topology
+        rs, dt = timed(run_experiment, spec, repeats=3)
+        n = rs.meta["n_requests"]
+        rows.append(dict(
+            name=f"churn_{e.router}_K{e.n_nodes}", router=e.router,
+            n_nodes=e.n_nodes, n_requests=n, us_per_call=dt * 1e6,
+            req_s=n / dt, derived=f"{n / dt:.0f} req/s"))
+    return rows
+
+
+def main(argv=None):
+    enable_compilation_cache()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 routers, K in (2, 4), 4k-request head")
+    ap.add_argument("--agg", type=int, default=AGG)
+    ap.add_argument("--deadline", type=float, default=DEADLINE)
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    args = ap.parse_args(argv)
+    routers = ("jsq2", "slo_aware") if args.quick else ROUTERS
+    ks = (2, 4) if args.quick else KS
+    head = 4000 if args.quick else None
+    policies = tuple(args.policies.split(","))
+
+    rows, src, entries = run(routers=routers, ks=ks, agg=args.agg,
+                             policies=policies,
+                             deadline=args.deadline, head=head)
+    emit(rows, rows[0].keys())
+    print()
+    for r in routers:
+        curve = {x["n_nodes"]: x["slo_attainment"] for x in rows
+                 if x["router"] == r and x["policy"] == policies[0]}
+        pts = "  ".join(f"K={k}:{v:.3f}"
+                        for k, v in sorted(curve.items()))
+        print(f"# {policies[0]} SLO attainment under {r} churn: {pts}")
+    tp = throughput_rows(src, entries, args.agg,
+                         deadline=args.deadline)
+    print()
+    emit(tp, tp[0].keys())
+    return rows + tp
+
+
+if __name__ == "__main__":
+    main()

@@ -36,7 +36,7 @@ import sys
 import time
 
 SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "cluster",
-            "kernels", "simthroughput", "enginescale")
+            "churn", "kernels", "simthroughput", "enginescale")
 
 
 def smoke() -> int:
@@ -150,6 +150,61 @@ def smoke() -> int:
           + ("every request completes exactly once  OK" if ok
              else "MISMATCH"))
 
+    # churn gates: the fault-injection rail must (a) conserve every
+    # request across mid-flight node deaths, (b) lower trivial
+    # always-up schedules onto the plain dynamic loop bitwise, and
+    # (c) park arrivals while every node is down and drain them all
+    # once a node returns
+    from repro.api import PeriodicChurn
+    arr = src.arrays()["arrival"]
+    t30, t60 = (float(np.quantile(arr, q)) for q in (0.30, 0.60))
+    ck = dict(traces=[src], policies=("esff",),
+              capacities=(capacity,), queue_cap=256)
+    churned = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=3, router="jsq2",
+                             churn=(None, ((t30, t60),), None))],
+        **ck))
+    done = churned.data["done"]
+    ok = (bool(np.all(done == src.n_requests))
+          and not np.any(churned.data["overflow"])
+          and not np.any(churned.data["stalled"])
+          and bool(np.all(
+              churned.data["node_done"].sum(axis=-1) == done)))
+    failures += 0 if ok else 1
+    print("churn conservation (mid-window node death): "
+          + ("every request completes exactly once  OK" if ok
+             else "MISMATCH"))
+
+    plain1 = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=1, router="jsq2")], **ck))
+    triv = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(
+            n_nodes=1, router="jsq2",
+            churn=(PeriodicChurn(period=10.0, duty=1.0),))], **ck))
+    ok = all(np.array_equal(plain1.data[m], triv.data[m])
+             for m in plain1.data)
+    failures += 0 if ok else 1
+    print("trivial churn lowering (K=1, duty=1.0): "
+          + ("bitwise-identical to plain dynamic loop  OK" if ok
+             else "MISMATCH"))
+
+    t45 = float(np.quantile(arr, 0.45))
+    alldown = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=2, router="jsq2",
+                             churn=(((t30, t45),), ((t30, t45),)))],
+        keep_per_request=True, stream=False, **ck))
+    resp = np.asarray(alldown.data["response"]).reshape(-1)[
+        : src.n_requests]
+    inside = (arr >= t30) & (arr < t45)
+    done = alldown.data["done"]
+    ok = (bool(np.all(done == src.n_requests))
+          and not np.any(alldown.data["overflow"])
+          and bool(np.all(arr[inside] + resp[inside] >= t45)))
+    failures += 0 if ok else 1
+    print("all-down window parks and resumes: "
+          + ("parked arrivals complete after the window  OK" if ok
+             else "MISMATCH"))
+
     # NpzTrace round-trip: save_npz -> NpzTrace -> run must match the
     # in-memory source bitwise (keeps the real-Azure path covered in
     # containers without the dataset)
@@ -176,7 +231,8 @@ def smoke() -> int:
     print(f"# smoke: {len(POLICIES)} policies, "
           f"{len(POLICIES)} engine-equivalence checks + streaming, "
           f"shim-parity, cluster-K=1 (incl. timer rail), dynamic "
-          f"conservation, npz round-trip, 2-device and "
+          f"conservation, churn (conservation, trivial lowering, "
+          f"all-down park), npz round-trip, 2-device and "
           f"deprecation gates, {failures} failures")
     return failures
 
@@ -325,7 +381,15 @@ def check_regression(baseline_path: str, report: dict,
                  and "req_s" in r}
         for r in sdata.get("rows", []):
             if not (isinstance(r, dict) and "req_s" in r
-                    and r.get("name") in brows):
+                    and r.get("name")):
+                continue
+            if r["name"] not in brows:
+                # new rows (fresh benchmarks, renamed configs) have
+                # no baseline yet — warn and skip instead of silently
+                # ignoring or failing the gate
+                print(f"BASELINE MISSING {sec}/{r['name']}: not in "
+                      f"{baseline_path} — skipping (new row?)",
+                      file=sys.stderr)
                 continue
             checked += 1
             now = float(r["req_s"])
@@ -377,12 +441,15 @@ def main() -> None:
 
     from benchmarks import (ablation_esffh, engine_scale, fig5_capacity,
                             fig6_intensity, fig7_cdf, fig8_timeline,
-                            fig_cluster, kernels_bench, sim_throughput)
+                            fig_churn, fig_cluster, kernels_bench,
+                            sim_throughput)
     scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
     mods = dict(fig5=fig5_capacity.main, fig6=fig6_intensity.main,
                 fig7=fig7_cdf.main, fig8=fig8_timeline.main,
                 ablation=ablation_esffh.main,
                 cluster=lambda: fig_cluster.main(
+                    ["--quick"] if scale < 1.0 else []),
+                churn=lambda: fig_churn.main(
                     ["--quick"] if scale < 1.0 else []),
                 kernels=kernels_bench.main,
                 simthroughput=sim_throughput.main,

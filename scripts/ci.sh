@@ -8,8 +8,9 @@
 # Tier-1 is the repo's correctness bar (ROADMAP.md); the smoke gate
 # re-verifies request-for-request Python/JAX engine equivalence, the
 # streaming/exact + sweep-shim + cluster-K=1 + npz-round-trip bitwise
-# gates, 2-device sharded parity and the deprecated-entry-point scan
-# in <60s.
+# gates, the churn rail (conservation under mid-window node death,
+# trivial-schedule lowering, all-down park/resume), 2-device sharded
+# parity and the deprecated-entry-point scan in <60s.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -23,7 +23,8 @@ from repro.api.runner import run, run_experiment
 from repro.api.spec import (ArrayTrace, ExperimentSpec, NpzTrace,
                             SyntheticTrace, TraceSource,
                             as_trace_source)
-from repro.cluster import (ClusterSpec, available_routers, get_router,
+from repro.cluster import (ClusterSpec, DelaySchedule, PeriodicChurn,
+                           available_routers, get_router,
                            register_router, unregister_router)
 
 __all__ = [
@@ -31,6 +32,7 @@ __all__ = [
     "ArrayTrace", "as_trace_source", "ResultSet", "run",
     "run_experiment", "register_policy", "unregister_policy",
     "get_kernel", "available_policies", "ClusterSpec",
+    "PeriodicChurn", "DelaySchedule",
     "register_router", "unregister_router", "get_router",
     "available_routers",
 ]

@@ -151,6 +151,8 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
         shared_per_dev = [shared0]
 
     kernels = {p: get_kernel(p) for p in spec.policies}
+    dl = spec.deadline_ops(F)
+    dl_op = None if dl is None else jnp.asarray(dl)
 
     # per-policy lane coordinate columns (identical for every policy:
     # betas=None resolves per kernel at chunk build time)
@@ -188,6 +190,7 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
             sh["fn_id"], sh["arrival"], sh["exec_time"],
             sh["cold_start"], sh["evict"], tix_l, mask_l, beta_l,
             jnp.float64(spec.prior), jnp.float64(spec.threshold),
+            deadlines=dl_op,
             kernel=kernels[policy], n_fns=F, capacity=C,
             queue_cap=spec.queue_cap, stream=spec.stream,
             window=spec.window, tl_bins=spec.tl_bins,
@@ -220,6 +223,10 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
 
     grid = lambda a: a.reshape((P, T, K, B) + a.shape[2:])  # noqa: E731
     data = {k: grid(v) for k, v in flat.items()}
+    if dl is not None:
+        from repro.core.jax_engine import slo_attainment
+        data["slo_attainment"] = slo_attainment(
+            data["deadline_miss"], data["done"])
     beta_coord = (list(spec.betas) if spec.betas is not None
                   else [_BETA_DEFAULT])
     coords = dict(policy=list(spec.policies),
@@ -233,6 +240,10 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
                 prior=spec.prior, threshold=spec.threshold,
                 lane_chunk=chunk, host_shard=list(spec.host_shard),
                 row_split=row_split,
+                deadlines=(None if dl is None else
+                           (spec.deadlines
+                            if isinstance(spec.deadlines, float)
+                            else list(spec.deadlines))),
                 n_devices=len(devs), backend=jax.default_backend(),
                 seeds=(list(spec.seeds) if spec.seeds is not None
                        else None),

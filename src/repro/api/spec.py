@@ -282,7 +282,11 @@ class ExperimentSpec:
     ``tl_bins > 0`` adds the minute-binned Fig.-8 timeline,
     ``keep_per_request=True`` (requires ``stream=False``) additionally
     returns the (N,)-per-lane response vector for CDF/percentile
-    studies.
+    studies. ``deadlines`` (one scalar, or one value per function)
+    switches on SLO accounting: every tier folds a per-function
+    ``deadline_miss`` counter (``response > deadline`` at completion
+    time) and the ResultSet gains the derived ``slo_attainment``
+    metric (`repro.core.jax_engine.slo_attainment`).
 
     Scale-out: ``devices`` caps how many local JAX devices the runner
     shards lane chunks over (None = all of ``jax.local_devices()``);
@@ -314,6 +318,7 @@ class ExperimentSpec:
     tl_bins: int = 0
     tl_bucket: float = 60.0
     keep_per_request: bool = False
+    deadlines: Union[float, Sequence[float], None] = None
     lane_chunk: Union[int, str, None] = None
     devices: Optional[int] = None
     host_shard: Tuple[int, int] = (0, 1)
@@ -332,6 +337,12 @@ class ExperimentSpec:
         if self.seeds is not None:
             self.seeds = tuple(int(s) for s in self.seeds)
         self.host_shard = tuple(int(x) for x in self.host_shard)
+        if self.deadlines is not None:
+            if np.isscalar(self.deadlines):
+                self.deadlines = float(self.deadlines)
+            else:
+                self.deadlines = tuple(float(d)
+                                       for d in self.deadlines)
         if self.cluster is not None:
             from repro.cluster.spec import ClusterSpec
             if isinstance(self.cluster, ClusterSpec):
@@ -377,6 +388,19 @@ class ExperimentSpec:
             raise ValueError(
                 "ExperimentSpec: keep_per_request needs stream=False "
                 "(streaming folds per-request records away)")
+        if self.deadlines is not None:
+            vals = ([self.deadlines]
+                    if isinstance(self.deadlines, float)
+                    else list(self.deadlines))
+            if not vals:
+                raise ValueError(
+                    "ExperimentSpec: deadlines=() — use None to "
+                    "disable SLO accounting")
+            for d in vals:
+                if not np.isfinite(d) or d <= 0:
+                    raise ValueError(
+                        f"ExperimentSpec: deadlines must be finite "
+                        f"and > 0, got {d}")
         i, n = self.host_shard
         if n < 1 or not (0 <= i < n):
             raise ValueError(
@@ -418,6 +442,23 @@ class ExperimentSpec:
                     "default device; devices must be None or 1, got "
                     f"{self.devices}")
         return self
+
+    def deadline_ops(self, n_fns: int) -> Optional[np.ndarray]:
+        """Lower ``deadlines`` to the engine's (F,) float64 operand
+        (a scalar broadcasts to every function), or ``None`` when SLO
+        accounting is off. Raises if a per-function sequence does not
+        match the catalogue size."""
+        if self.deadlines is None:
+            return None
+        if isinstance(self.deadlines, float):
+            return np.full((n_fns,), self.deadlines, np.float64)
+        if len(self.deadlines) != n_fns:
+            raise ValueError(
+                f"ExperimentSpec: deadlines has {len(self.deadlines)} "
+                f"entries but the trace catalogue declares {n_fns} "
+                "functions (pass one scalar or one deadline per "
+                "function)")
+        return np.asarray(self.deadlines, np.float64)
 
     # -------------------------------------------------------- expansion
     def expanded_traces(self) -> Tuple[TraceSource, ...]:

@@ -5,11 +5,12 @@ package simulates K heterogeneous edge nodes behind a request router —
 the LaSS-style deployment shape — on top of the same policy kernels:
 
 * `ClusterSpec` declares a topology (node count, per-node capacities,
-  router, network delays) and rides `repro.api.ExperimentSpec`'s
-  ``cluster`` axis;
+  router, network delays, plus `PeriodicChurn` / explicit-window
+  availability schedules and per-node `DelaySchedule`s) and rides
+  `repro.api.ExperimentSpec`'s ``cluster`` axis;
 * `repro.cluster.routers` holds the router registry (static: ``hash``,
   ``round_robin``, ``weighted_random``; dynamic: ``jsq2``,
-  ``cold_aware``) with `register_router` for plug-ins;
+  ``cold_aware``, ``slo_aware``) with `register_router` for plug-ins;
 * `repro.cluster.static` is the static-routing fast path (sub-stream
   partition → unmodified single-node engine → exact merge);
 * `repro.cluster.engine` is the dynamic-routing K-node event loop;
@@ -22,10 +23,12 @@ from repro.cluster.routers import (ROUTERS, ClusterView, DynamicRouter,
                                    Router, StaticRouter,
                                    available_routers, get_router,
                                    register_router, unregister_router)
-from repro.cluster.spec import ClusterSpec
+from repro.cluster.spec import (ClusterSpec, DelaySchedule,
+                                PeriodicChurn)
 
 __all__ = [
-    "ClusterSpec", "Router", "StaticRouter", "DynamicRouter",
-    "ClusterView", "ROUTERS", "available_routers", "get_router",
-    "register_router", "unregister_router",
+    "ClusterSpec", "PeriodicChurn", "DelaySchedule", "Router",
+    "StaticRouter", "DynamicRouter", "ClusterView", "ROUTERS",
+    "available_routers", "get_router", "register_router",
+    "unregister_router",
 ]

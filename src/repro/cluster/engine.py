@@ -48,7 +48,30 @@ per lane:
   from the delayed arrival, matching the static tier's convention);
 * **estimators** are node-local ((L, K, F) running sums plus (L, K)
   node-global fallbacks): each node's scheduler learns only from its
-  own completions, exactly as K independent servers would.
+  own completions, exactly as K independent servers would;
+* **churn** (PR 7) adds a NODE_DOWN/NODE_UP event class on a per-node
+  toggle-time operand ``churn_t`` with a carried cursor ``ch_ix``
+  (even parity = up). NODE_DOWN drains the dying node — busy-slot
+  requests sorted by rid, then the per-fn queues fn-major — onto a
+  per-lane *park FIFO* (an O(1) chain splice on the ``nxt`` rail);
+  one REROUTE/orphan candidate re-injects the park head through the
+  router per event. Routers never see a down node (`ClusterView.up`
+  mask + a lowest-up-id correction); when every node is down the park
+  queue simply holds (its candidate gates on ``any_up``) until the
+  next NODE_UP re-arms it. Cold state dies with the node, requests
+  never do — conservation is exact and parity-tested. Because a
+  drained rid re-enters some queue later, the write-once link
+  invariant behind the segment overlays no longer holds, so under the
+  static ``has_churn`` flag the engine switches to direct per-event
+  rail writes (and commits the queue-cursor rows like any other nodal
+  array); the no-churn path compiles to the exact PR-6 program. The
+  metric fold also moves from dispatch time to EXEC_DONE (a drained
+  request's dispatch record must not count) and responses are
+  measured from the *raw* arrival — the user-perceived, SLO-honest
+  convention; no-churn paths keep their node-local convention
+  bit-for-bit. Time-varying per-node delay (``var_delay`` +
+  `DelaySchedule` operands) rides the same deferred-arrival rail with
+  the landing time sampled at send time.
 
 Policy kernels run *unmodified*: per event the lane state is sliced
 into a single-node **view** of the event's node — one view/commit pair
@@ -102,6 +125,23 @@ _NODAL_TMR = ("arr_cnt", "tmr_seq", "tmr_rid", "tmr_next", "rearm_t",
 _NODAL_PEND = ("pend_head", "pend_tail", "pend_len")
 
 
+def _sched_delay(t, dt, dv, dp):
+    """Piecewise-constant `DelaySchedule` lookup, elementwise over
+    ``t``: value of the last step at or before ``t`` (mod ``dp`` when
+    periodic). ``dt``/``dv`` are the BIG-padded step times / values
+    with shape ``t.shape + (D,)``; ``dp`` has ``t.shape`` (0 = not
+    periodic). ``dt[..., 0] == 0`` (spec-validated), so the index is
+    always in range. Every call site — candidate times, router
+    ``delay_now``, landing times, the response convention — funnels
+    through this one function, so the same (t, node) pair can never
+    produce two different floats."""
+    per = jnp.where(dp > 0, dp, 1.0)
+    tt = jnp.where(dp > 0, jnp.mod(t, per), t)
+    ix = jnp.clip(jnp.sum(tt[..., None] >= dt, axis=-1) - 1,
+                  0, dt.shape[-1] - 1)
+    return jnp.take_along_axis(dv, ix[..., None], axis=-1)[..., 0]
+
+
 class ClusterNodeCtx(EngineCtx):
     """Single-node view ctx over one node of a cluster lane.
 
@@ -121,6 +161,7 @@ class ClusterNodeCtx(EngineCtx):
     def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2, tix,
                  cap_mask, beta, prior, threshold, k, n, f, c, q,
                  stream, tl_bins, tl_bucket, node, delay=None,
+                 delay_sched=None, deadlines=None, direct_links=False,
                  seg_n=SEG):
         super().__init__(
             fn_id2=fn_id2, arrival2=arrival2, exec2=exec2, cold2=cold2,
@@ -128,16 +169,21 @@ class ClusterNodeCtx(EngineCtx):
             slabs=(None,) * 7, win_base=0, win_w=n, tix=tix,
             cap_mask=cap_mask, beta=beta, prior=prior,
             threshold=threshold, k=k, n=n, f=f, c=c, q=q, stream=stream,
-            tl_bins=tl_bins, tl_bucket=tl_bucket)
+            tl_bins=tl_bins, tl_bucket=tl_bucket, deadlines=deadlines)
         self._node = jnp.asarray(node, jnp.int32)
         self._delay = delay
+        self._dsched = delay_sched  # (dt_row, dv_row, dp) of the node
+        self._direct = direct_links  # churn: rail writes, no overlays
         self.seg_n = seg_n
 
     def arrival_at(self, rid):
         a = super().arrival_at(rid)
-        if self._delay is None:
-            return a
-        return a + self._delay
+        if self._delay is not None:
+            return a + self._delay
+        if self._dsched is not None:
+            dt, dv, dp = self._dsched
+            return a + _sched_delay(a, dt, dv, dp)
+        return a
 
     # ------------------------------------------------ estimator override
     def est_means(self, s):
@@ -153,6 +199,8 @@ class ClusterNodeCtx(EngineCtx):
     # ------------------------------------------ overlay-rail queue ops
     # (q_head is inherited: the head cache works the same way)
     def q_push(self, s, fn, rid, on):
+        if self._direct:
+            return self._q_push_direct(s, fn, rid, on)
         fc = jnp.clip(fn, 0, self.F - 1)
         was_empty = s["q_len"][fc] == 0
         full = s["q_len"][fc] >= self.Q
@@ -189,12 +237,38 @@ class ClusterNodeCtx(EngineCtx):
         s["ci"] = s["ci"].at[CI_OVF].add((on & full).astype(jnp.int32))
         return s, do
 
+    def _q_push_direct(self, s, fn, rid, on):
+        # churn mode: a drained rid re-enters a queue, so links are no
+        # longer write-once — write the nxt rail per event and let the
+        # cursor trio ride the nodal row commit
+        fc = jnp.clip(fn, 0, self.F - 1)
+        was_empty = s["q_len"][fc] == 0
+        full = s["q_len"][fc] >= self.Q
+        do = on & ~full
+        rid32 = jnp.asarray(rid, jnp.int32)
+        tail = s["q_tail_rid"][fc]
+        s = dict(s)
+        s["q_head_rid"] = s["q_head_rid"].at[
+            _gidx(do & was_empty, fn, self.F)].set(rid32, mode="drop")
+        s["nxt"] = s["nxt"].at[
+            _gidx(do & ~was_empty, tail, self.N)].set(rid32,
+                                                      mode="drop")
+        s["q_tail_rid"] = s["q_tail_rid"].at[
+            _gidx(do, fn, self.F)].set(rid32, mode="drop")
+        s["q_len"] = s["q_len"].at[_gidx(do, fn, self.F)].add(
+            1, mode="drop")
+        s["q_tot"] = s["q_tot"] + do.astype(jnp.int32)
+        s["ci"] = s["ci"].at[CI_OVF].add((on & full).astype(jnp.int32))
+        return s, do
+
     def q_consume_direct(self, s, fn, on):
         # no positional cursor to advance: a directly dispatched
         # arrival simply never enters the link chain
         return s
 
     def q_pop(self, s, fn, on):
+        if self._direct:
+            return self._q_pop_direct(s, fn, on)
         fc = jnp.clip(fn, 0, self.F - 1)
         rid = s["q_head_rid"][fc]
         defer = on & (s["q_len"][fc] > 1)
@@ -215,6 +289,21 @@ class ClusterNodeCtx(EngineCtx):
         s["q_tot"] = s["q_tot"] - on.astype(jnp.int32)
         s["pp_kf"] = jnp.where(defer, kf, s["pp_kf"])
         s["pp_rid"] = jnp.where(defer, rid, s["pp_rid"])
+        return s, rid
+
+    def _q_pop_direct(self, s, fn, on):
+        # churn mode: the successor is read straight off the rail (it
+        # was written directly at push time, so it is always current)
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rid = s["q_head_rid"][fc]
+        succ = jnp.where(s["q_len"][fc] > 1,
+                         s["nxt"][jnp.clip(rid, 0, self.N - 1)],
+                         jnp.int32(-1))
+        fi = _gidx(on, fn, self.F)
+        s = dict(s)
+        s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
+        s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+        s["q_tot"] = s["q_tot"] - on.astype(jnp.int32)
         return s, rid
 
     # -------------------------------------------- rid-chain timer rail
@@ -239,13 +328,16 @@ class ClusterNodeCtx(EngineCtx):
                    static_argnames=("kernel", "router", "n_nodes",
                                     "n_fns", "capacity", "queue_cap",
                                     "seed", "stream", "tl_bins",
-                                    "has_delay", "seg"))
+                                    "has_delay", "has_churn",
+                                    "var_delay", "seg"))
 def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                       trace_ix, cap_mask, beta, prior, threshold,
-                      delays, *, kernel, router, n_nodes, n_fns,
-                      capacity, queue_cap, seed=0, stream=False,
-                      tl_bins=0, tl_bucket=60.0, has_delay=False,
-                      seg=0):
+                      delays, churn_t=None, dtimes=None, dvals=None,
+                      dper=None, deadlines=None, *, kernel, router,
+                      n_nodes, n_fns, capacity, queue_cap, seed=0,
+                      stream=False, tl_bins=0, tl_bucket=60.0,
+                      has_delay=False, has_churn=False,
+                      var_delay=False, seg=0):
     """K-node lane-batched cluster loop (see the module docstring).
 
     ``cap_mask`` is (L, K, C) — heterogeneous node capacities are
@@ -253,10 +345,21 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     the (K,) per-node network delay operand, only read when the static
     ``has_delay`` flag is set (so zero-delay runs stay bitwise the
     single-node arithmetic). ``seg`` (static; 0 -> `SEG`) sets the
-    overlay segment length and never changes results. Returns the
-    single-node engine's output dict plus ``node_done`` (L, K) and, in
-    exact mode under delay, ``node_of`` (L, N), the per-request
-    dispatching node."""
+    overlay segment length and never changes results.
+
+    PR 7 operands, each gated by its own static flag so every disabled
+    combination keeps its previous jaxpr: ``churn_t`` (K, E) f64
+    toggle times under ``has_churn`` (even index = node goes down, odd
+    = up; BIG-padded with at least one all-BIG trailing column so the
+    cursor can rest past the last real toggle); ``dtimes``/``dvals``
+    (K, D) + ``dper`` (K,) `DelaySchedule` steps under ``var_delay``
+    (implies ``has_delay``); ``deadlines`` (F,) per-function SLO
+    deadlines (or None), folded into a (L, F) ``deadline_miss``
+    output.
+
+    Returns the single-node engine's output dict plus ``node_done``
+    (L, K) and, in exact mode under delay without churn, ``node_of``
+    (L, N), the per-request dispatching node."""
     L = trace_ix.shape[0]
     N = fn_id.shape[1]
     F, C, K, Q = n_fns, capacity, n_nodes, queue_cap
@@ -264,6 +367,11 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     KF = K * F
     SG = int(seg) if seg else SEG
     timers = kernel.has_timers
+    if timers and has_churn:
+        raise ValueError("timer-rail kernels are not supported under "
+                         "churn (rejected at the runner)")
+    if var_delay and not has_delay:
+        raise ValueError("var_delay requires has_delay")
 
     fn_id = fn_id.astype(jnp.int32)
     arrival = arrival.astype(jnp.float64)
@@ -275,6 +383,19 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     threshold = jnp.float64(threshold)
     tl_bucket = jnp.float64(tl_bucket)
     delays = jnp.asarray(delays, jnp.float64)
+    if has_churn:
+        churn_t = jnp.asarray(churn_t, jnp.float64)
+        E = churn_t.shape[1]
+        churn_offs = jnp.arange(K, dtype=jnp.int32) * E
+    if var_delay:
+        dtimes = jnp.asarray(dtimes, jnp.float64)
+        dvals = jnp.asarray(dvals, jnp.float64)
+        dper = jnp.asarray(dper, jnp.float64)
+        dt_b = jnp.broadcast_to(dtimes[None], (L,) + dtimes.shape)
+        dv_b = jnp.broadcast_to(dvals[None], (L,) + dvals.shape)
+        dp_b = jnp.broadcast_to(dper[None], (L, K))
+    if deadlines is not None:
+        deadlines = jnp.asarray(deadlines, jnp.float64)
 
     s = dict(
         slot_fn=jnp.full((L, K, C), -1, jnp.int32),
@@ -287,19 +408,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         q_head_rid=jnp.full((L, K, F), -1, jnp.int32),
         q_tail_rid=jnp.full((L, K, F), -1, jnp.int32),
         q_tot=jnp.zeros((L, K), jnp.int32),
-        # queue write registers, carried across steps: the previous
-        # event's parked queue writes are applied at the *top* of the
-        # next step (see step()), so within one step the queue arrays'
-        # only direct user is the opening in-place scatter
-        qw_len_pos=jnp.full((L,), -1, jnp.int32),
-        qw_len_delta=jnp.zeros((L,), jnp.int32),
-        qw_head_pos=jnp.full((L,), -1, jnp.int32),
-        qw_head_val=jnp.zeros((L,), jnp.int32),
-        qw_tail_pos=jnp.full((L,), -1, jnp.int32),
-        qw_tail_val=jnp.zeros((L,), jnp.int32),
         nxt=jnp.full((L, N), -1, jnp.int32),
-        ov_q_pos=jnp.full((L, SG), N, jnp.int32),
-        ov_q_val=jnp.zeros((L, SG), jnp.int32),
         est_sum=jnp.zeros((L, K, F), jnp.float64),
         est_n=jnp.zeros((L, K, F), jnp.int32),
         node_gn=jnp.zeros((L, K), jnp.int32),
@@ -309,6 +418,39 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         cf=jnp.zeros((L, NCF), jnp.float64),
         hist=jnp.zeros((L, HIST_BINS), jnp.int32),
     )
+    if not has_churn:
+        # queue write registers, carried across steps: the previous
+        # event's parked queue writes are applied at the *top* of the
+        # next step (see step()), so within one step the queue arrays'
+        # only direct user is the opening in-place scatter. Under
+        # churn the trio rides the nodal row commit instead and links
+        # are written directly, so neither register family exists.
+        s["qw_len_pos"] = jnp.full((L,), -1, jnp.int32)
+        s["qw_len_delta"] = jnp.zeros((L,), jnp.int32)
+        s["qw_head_pos"] = jnp.full((L,), -1, jnp.int32)
+        s["qw_head_val"] = jnp.zeros((L,), jnp.int32)
+        s["qw_tail_pos"] = jnp.full((L,), -1, jnp.int32)
+        s["qw_tail_val"] = jnp.zeros((L,), jnp.int32)
+        s["ov_q_pos"] = jnp.full((L, SG), N, jnp.int32)
+        s["ov_q_val"] = jnp.zeros((L, SG), jnp.int32)
+    else:
+        # availability cursor (even parity = up) + the park FIFO of
+        # requests orphaned by node failures / all-down arrivals; the
+        # chain rides the nxt rail, park_t is the head's eligibility
+        # time (the whole FIFO drains at one instant whenever a node
+        # is up, so one scalar per lane suffices — see NODE_DOWN)
+        s["ch_ix"] = jnp.zeros((L, K), jnp.int32)
+        s["park_head"] = jnp.full((L,), -1, jnp.int32)
+        s["park_tail"] = jnp.full((L,), -1, jnp.int32)
+        s["park_len"] = jnp.zeros((L,), jnp.int32)
+        s["park_t"] = jnp.full((L,), BIG, jnp.float64)
+        if has_delay:
+            # landing time of each in-flight request, written at send
+            # time (an orphan's re-send samples the delay then, so the
+            # raw-arrival closed form no longer applies)
+            s["land_t"] = jnp.zeros((L, N), jnp.float64)
+    if deadlines is not None:
+        s["dl_miss"] = jnp.zeros((L, F), jnp.int32)
     if timers:
         s["arr_cnt"] = jnp.zeros((L, K, F), jnp.int32)
         s["tmr_seq"] = jnp.zeros((L, K, F), jnp.int32)
@@ -325,33 +467,49 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         s["pend_tail"] = jnp.full((L, K), -1, jnp.int32)
         s["pend_len"] = jnp.zeros((L, K), jnp.int32)
         s["dnx"] = jnp.full((L, N), -1, jnp.int32)
-        s["ov_d_pos"] = jnp.full((L, SG), N, jnp.int32)
-        s["ov_d_val"] = jnp.zeros((L, SG), jnp.int32)
+        if not has_churn:
+            s["ov_d_pos"] = jnp.full((L, SG), N, jnp.int32)
+            s["ov_d_val"] = jnp.zeros((L, SG), jnp.int32)
     if not stream:
-        s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
-        s["d_start"] = jnp.zeros((L, SG), jnp.float64)
-        s["d_comp"] = jnp.zeros((L, SG), jnp.float64)
         s["start"] = jnp.full((L, N), -1.0, jnp.float64)
         s["completion"] = jnp.full((L, N), -1.0, jnp.float64)
-        if has_delay:
-            s["d_node"] = jnp.zeros((L, SG), jnp.int32)
-            s["node_of"] = jnp.zeros((L, N), jnp.int32)
+        if not has_churn:
+            # churn writes the per-request records directly per event
+            # (ctx.direct_records) — no d_* overlays to stage
+            s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
+            s["d_start"] = jnp.zeros((L, SG), jnp.float64)
+            s["d_comp"] = jnp.zeros((L, SG), jnp.float64)
+            if has_delay:
+                s["d_node"] = jnp.zeros((L, SG), jnp.int32)
+                s["node_of"] = jnp.zeros((L, N), jnp.int32)
     if tl_bins:
         s["tl_cnt"] = jnp.zeros((L, tl_bins), jnp.int32)
         s["tl_resp"] = jnp.zeros((L, tl_bins), jnp.float64)
         s["tl_exec"] = jnp.zeros((L, tl_bins), jnp.float64)
     extra = kernel.extra_state(L, C, F)
     nodal = _NODAL + (_NODAL_TMR if timers else ()) \
-        + (_NODAL_PEND if has_delay else ()) + tuple(extra)
+        + (_NODAL_PEND if has_delay else ()) \
+        + (("ch_ix",) if has_churn else ()) + tuple(extra)
     for kk, v in extra.items():
         # one copy of the kernel's per-server state per node
         s[kk] = jnp.repeat(v[:, None, ...], K, axis=1)
+    if has_churn:
+        # pristine per-node kernel rows, for the NODE_DOWN reset
+        extra0 = {kk: v[0]
+                  for kk, v in kernel.extra_state(1, C, F).items()}
 
     max_iters = 256 * N + 4096
+    if has_churn:
+        # every toggle can orphan up to a nodeful of requests, each
+        # re-routed and re-executed — a generous stall guard, not a
+        # budget
+        max_iters += (4 * N + 64) * K * E
     n_slot = 2 * KC
     tmr_base = n_slot
     pend_base = n_slot + (2 * KF if timers else 0)
-    n_cand = pend_base + (K if has_delay else 0) + 1
+    orph_base = pend_base + (K if has_delay else 0)
+    churn_base = orph_base + (1 if has_churn else 0)
+    n_cand = churn_base + (K if has_churn else 0) + 1
     lanes = jnp.arange(L, dtype=jnp.int32)
     lane_iota = lanes[:, None]
     t_cold_l = t_cold[trace_ix]
@@ -374,7 +532,10 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     # and ride the qw_* write registers instead (scalar drop-scatters
     # in step(); the gathered view row stays for kernel full-row reads)
     _Q_TRIO = ("q_len", "q_head_rid", "q_tail_rid")
-    nodal_commit = tuple(kk for kk in nodal if kk not in _Q_TRIO)
+    # under churn the write registers don't exist (direct-link mode),
+    # so the trio commits like every other nodal array
+    nodal_commit = (nodal if has_churn else
+                    tuple(kk for kk in nodal if kk not in _Q_TRIO))
 
     def gather_nodal(s, k_ev):
         v = dict(s)
@@ -388,18 +549,38 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         out = dict(v)
         for key in nodal_commit:
             out[key] = s[key].at[lanes, k_ev].set(v[key])
-        for key in _Q_TRIO:
-            out[key] = s[key]
+        for key in nodal:
+            if key not in nodal_commit:
+                out[key] = s[key]
         return out
 
     def make_ctx(tix, cold_l, evict_l, capm_node, beta, k_step, node):
-        return ClusterNodeCtx(
+        # response convention: under churn requests are measured from
+        # the *raw* arrival (user-perceived — an orphaned request may
+        # traverse several nodes); without churn the node-local clock
+        # (+const delay, or +schedule-at-raw-arrival) is preserved
+        if has_churn:
+            dly, dsc = None, None
+        elif var_delay:
+            kc = jnp.clip(node, 0, K - 1)
+            dly, dsc = None, (dtimes[kc], dvals[kc], dper[kc])
+        elif has_delay:
+            dly, dsc = delays[node], None
+        else:
+            dly, dsc = None, None
+        ctx = ClusterNodeCtx(
             fn_id2=fn_id, arrival2=arrival, exec2=exec_time,
             cold2=cold_l, evict2=evict_l, tix=tix, cap_mask=capm_node,
             beta=beta, prior=prior, threshold=threshold, k=k_step,
             n=N, f=F, c=C, q=Q, stream=stream, tl_bins=tl_bins,
-            tl_bucket=tl_bucket, node=node,
-            delay=(delays[node] if has_delay else None), seg_n=SG)
+            tl_bucket=tl_bucket, node=node, delay=dly, delay_sched=dsc,
+            deadlines=deadlines, direct_links=has_churn, seg_n=SG)
+        if has_churn:
+            # fold at EXEC_DONE (a drained request's dispatch record
+            # must not count) and write exact-mode records per event
+            ctx.fold_at_dispatch = False
+            ctx.direct_records = True
+        return ctx
 
     def pick_events(s):
         na = s["ci"][:, CI_NEXT]
@@ -415,9 +596,25 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                        s["rearm_t"].reshape(L, KF)]
         if has_delay:
             ph = jnp.clip(s["pend_head"], 0, N - 1)
-            blocks.append(jnp.where(
-                s["pend_len"] > 0,
-                arr_flat[base_n[:, None] + ph] + delays[None, :], BIG))
+            if has_churn:
+                land = jnp.take_along_axis(s["land_t"], ph, axis=1)
+            elif var_delay:
+                arr_ph = arr_flat[base_n[:, None] + ph]
+                land = arr_ph + _sched_delay(arr_ph, dt_b, dv_b, dp_b)
+            else:
+                land = arr_flat[base_n[:, None] + ph] + delays[None, :]
+            blocks.append(jnp.where(s["pend_len"] > 0, land, BIG))
+        if has_churn:
+            # orphan (one column): the park head re-routes as soon as
+            # any node is up; churn (K columns): each node's next
+            # toggle time off the BIG-padded cursor
+            up = (s["ch_ix"] & 1) == 0
+            blocks.append(jnp.where((s["park_len"] > 0)
+                                    & up.any(axis=1),
+                                    s["park_t"], BIG)[:, None])
+            cix = jnp.clip(s["ch_ix"], 0, E - 1)
+            blocks.append(churn_t.reshape(-1)[churn_offs[None, :]
+                                              + cix])
         blocks.append(t_arr[:, None])
         cand = jnp.concatenate(blocks, axis=1)
         ei = jnp.argmin(cand, axis=1).astype(jnp.int32)
@@ -425,15 +622,24 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         return ei, t_ev, t_arr
 
     def pick_one(q_len, q_tot, slot_fn, slot_state, capm, est_sum,
-                 est_n, node_gn, node_gsum, cold_l, j, rid, t):
+                 est_n, node_gn, node_gsum, cold_l, up, delay_now, j,
+                 rid, t):
         g = ClusterView(q_len=q_len, q_tot=q_tot, slot_fn=slot_fn,
                         slot_state=slot_state, cap_mask=capm,
                         est_sum=est_sum, est_n=est_n, node_gn=node_gn,
                         node_gsum=node_gsum, t_cold=cold_l,
-                        prior=prior, n_nodes=K, seed=seed)
+                        prior=prior, n_nodes=K, seed=seed,
+                        up=up, delay_now=delay_now)
         return router.pick(g, j, rid, t)
 
-    pick_lanes = jax.vmap(pick_one)
+    # ``up``/``delay_now`` stay python-None (an empty pytree — any
+    # in_axes is legal) when their feature is off, so the no-churn /
+    # const-delay jaxprs are unchanged; a const (K,) delay_now is
+    # shared across lanes (in_axes None), a scheduled one is (L, K)
+    pick_lanes = jax.vmap(
+        pick_one, in_axes=(0,) * 10 + (0 if has_churn else None,
+                                       0 if var_delay else None)
+        + (0, 0, 0))
 
     def lane_step(k_step, s, tix, cold_l, evict_l, capm, beta, ei,
                   t_ev, t_arr, node):
@@ -446,31 +652,36 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         live = active & (t_ev < BIG)
         # per-event registers: dispatch record (consumed by
         # _fold_event), link writes (staged into the overlays) and
-        # deferred link reads (resolved by the chase pass)
+        # deferred link reads (resolved by the chase pass) — under
+        # churn the overlay/register families don't exist (links are
+        # written directly)
         s = dict(s)
+        if has_churn:
+            anyup = s.pop("anyup")
         s["ev_rid"] = jnp.int32(-1)
         s["ev_comp"] = jnp.float64(0.0)
         s["ev_exec"] = jnp.float64(0.0)
-        s["lw_q_pos"] = jnp.int32(-1)
-        s["lw_q_val"] = jnp.int32(0)
-        s["pp_kf"] = jnp.int32(-1)
-        s["pp_rid"] = jnp.int32(-1)
-        # queue write registers: each event performs at most one push
-        # or one pop (the kernels' hooks are push-xor-pop and the
-        # event classes are mutually exclusive), so one scalar write
-        # per queue array covers every case
-        s["qw_len_pos"] = jnp.int32(-1)
-        s["qw_len_delta"] = jnp.int32(0)
-        s["qw_head_pos"] = jnp.int32(-1)
-        s["qw_head_val"] = jnp.int32(0)
-        s["qw_tail_pos"] = jnp.int32(-1)
-        s["qw_tail_val"] = jnp.int32(0)
+        if not has_churn:
+            s["lw_q_pos"] = jnp.int32(-1)
+            s["lw_q_val"] = jnp.int32(0)
+            s["pp_kf"] = jnp.int32(-1)
+            s["pp_rid"] = jnp.int32(-1)
+            # queue write registers: each event performs at most one
+            # push or one pop (the kernels' hooks are push-xor-pop and
+            # the event classes are mutually exclusive), so one scalar
+            # write per queue array covers every case
+            s["qw_len_pos"] = jnp.int32(-1)
+            s["qw_len_delta"] = jnp.int32(0)
+            s["qw_head_pos"] = jnp.int32(-1)
+            s["qw_head_val"] = jnp.int32(0)
+            s["qw_tail_pos"] = jnp.int32(-1)
+            s["qw_tail_val"] = jnp.int32(0)
         if timers:
             s["lw_t_pos"] = jnp.int32(-1)
             s["lw_t_val"] = jnp.int32(0)
             s["tp_kf"] = jnp.int32(-1)
             s["tp_rid"] = jnp.int32(-1)
-        if has_delay:
+        if has_delay and not has_churn:
             s["lw_d_pos"] = jnp.int32(-1)
             s["lw_d_val"] = jnp.int32(0)
             s["dp_k"] = jnp.int32(-1)
@@ -482,6 +693,9 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         sflat = jnp.clip(jnp.where(is_cold, ei - KC, ei), 0, KC - 1)
         slot = sflat % C
         ev_arr = live & (ei == n_cand - 1)
+        if has_churn:
+            ev_orph = live & (ei == orph_base)
+            ev_churn = live & (ei >= churn_base) & (ei < churn_base + K)
         ev_timer = jnp.bool_(False)
         if timers:
             fire_orig = live & (ei >= tmr_base) & (ei < tmr_base + KF)
@@ -519,6 +733,15 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                                                     0.0)
         v["node_gn"] = v["node_gn"] + exec_i
         v["ci"] = v["ci"].at[CI_DONE].add(exec_i)
+        if has_churn:
+            # fold at EXEC_DONE: a drained execution never reaches
+            # here, so exactly the surviving run of each request folds
+            # (response = completion - raw arrival via the ctx)
+            v["ev_rid"] = jnp.where(exec_on,
+                                    jnp.asarray(rid_done, jnp.int32),
+                                    v["ev_rid"])
+            v["ev_comp"] = jnp.where(exec_on, t_ev, v["ev_comp"])
+            v["ev_exec"] = jnp.where(exec_on, e_done, v["ev_exec"])
         v = kernel.on_cold_done(ctx, v, slot, t_ev, cold_on)
         v = kernel.on_exec_done(ctx, v, slot, rid_done, t_ev,
                                 exec_on)
@@ -544,26 +767,144 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             rid_t = jnp.where(fire_orig, rid_o, rid_r)
             v = kernel.on_timer(ctx, v, rid_t, t_ev, ev_timer)
 
+        # ------------------------------------------ churn toggle event
+        if has_churn:
+            up0 = (v["ch_ix"] & 1) == 0  # pre-toggle parity
+            ev_down = ev_churn & up0
+            ev_up = ev_churn & ~up0
+            v = dict(v)
+            v["ch_ix"] = v["ch_ix"] + ev_churn.astype(jnp.int32)
+            # ---- NODE_DOWN: drain the node onto the park FIFO.
+            # Busy-slot requests first, ascending rid (an engine-
+            # independent order the reference mirrors), then the
+            # per-fn queues fn-major — all as O(C + F) chain splices
+            # on the nxt rail. The park FIFO is provably empty here:
+            # the toggling node was up, so any parked head (park_t <=
+            # t_ev, orphan class < CHURN) already re-routed.
+            busy_m = (v["slot_state"] == BUSY) & capm
+            rids_b = jnp.sort(jnp.where(busy_m & ev_down,
+                                        v["slot_req"], I32_MAX))
+            valid_b = rids_b < I32_MAX
+            n_busy = valid_b.sum().astype(jnp.int32)
+            succ_b = jnp.concatenate(
+                [rids_b[1:], jnp.array([I32_MAX], jnp.int32)])
+            link_b = ev_down & valid_b & (succ_b < I32_MAX)
+            v["nxt"] = v["nxt"].at[_gidx(link_b, rids_b, N)].set(
+                succ_b, mode="drop")
+            # queue chains: prev[f] = tail of the last nonempty fn
+            # before f (exclusive cummax of nonempty fn ids), else the
+            # last busy rid
+            nonempty = v["q_len"] > 0
+            idxf = jnp.arange(F, dtype=jnp.int32)
+            cmax = lax.associative_scan(
+                jnp.maximum, jnp.where(nonempty, idxf, -1))
+            lnb = jnp.concatenate(
+                [jnp.array([-1], jnp.int32), cmax[:-1]])
+            busy_last = jnp.where(
+                n_busy > 0, rids_b[jnp.clip(n_busy - 1, 0, C - 1)],
+                jnp.int32(-1))
+            prev = jnp.where(lnb >= 0,
+                             v["q_tail_rid"][jnp.clip(lnb, 0, F - 1)],
+                             busy_last)
+            heads = v["q_head_rid"]
+            v["nxt"] = v["nxt"].at[
+                _gidx(ev_down & nonempty & (prev >= 0), prev, N)].set(
+                heads, mode="drop")
+            has_q = nonempty.any()
+            first_ne = jnp.clip(jnp.argmax(nonempty), 0, F - 1)
+            d_head = jnp.where(
+                n_busy > 0, rids_b[0],
+                jnp.where(has_q, heads[first_ne], jnp.int32(-1)))
+            d_tail = jnp.where(
+                has_q, v["q_tail_rid"][jnp.clip(cmax[-1], 0, F - 1)],
+                busy_last)
+            n_drain = n_busy + v["q_tot"]
+            parked = ev_down & (n_drain > 0)
+            v["park_head"] = jnp.where(parked, d_head, v["park_head"])
+            v["park_tail"] = jnp.where(parked, d_tail, v["park_tail"])
+            v["park_len"] = jnp.where(parked, n_drain, v["park_len"])
+            v["park_t"] = jnp.where(parked, t_ev, v["park_t"])
+            # reset the node: cold state dies with it, requests never
+            # do; the estimator state deliberately survives (the node
+            # remembers its execution history across an outage)
+            v["slot_fn"] = jnp.where(ev_down, jnp.int32(-1),
+                                     v["slot_fn"])
+            v["slot_state"] = jnp.where(ev_down, jnp.int32(IDLE),
+                                        v["slot_state"])
+            v["slot_ready"] = jnp.where(ev_down, BIG, v["slot_ready"])
+            v["slot_req"] = jnp.where(ev_down, jnp.int32(-1),
+                                      v["slot_req"])
+            v["slot_used"] = jnp.where(ev_down, 0.0, v["slot_used"])
+            v["slot_seq"] = jnp.where(ev_down, jnp.int32(I32_MAX),
+                                      v["slot_seq"])
+            v["q_len"] = jnp.where(ev_down, jnp.int32(0), v["q_len"])
+            v["q_head_rid"] = jnp.where(ev_down, jnp.int32(-1),
+                                        v["q_head_rid"])
+            v["q_tail_rid"] = jnp.where(ev_down, jnp.int32(-1),
+                                        v["q_tail_rid"])
+            v["q_tot"] = jnp.where(ev_down, jnp.int32(0), v["q_tot"])
+            for kk in extra0:
+                v[kk] = jnp.where(ev_down, extra0[kk], v[kk])
+            # ---- NODE_UP: re-arm the park FIFO's eligibility clock
+            # (requests stranded all-down become routable now)
+            v["park_t"] = jnp.where(ev_up & (v["park_len"] > 0), t_ev,
+                                    v["park_t"])
+
+            # -------------------------------------- orphan re-route
+            # (one park-head pop per event; ``node`` is the router's
+            # pick for it, applied below exactly like an arrival)
+            rid_o = v["park_head"]
+            plen_pk = v["park_len"]
+            succ_o = jnp.where(plen_pk > 1,
+                               v["nxt"][jnp.clip(rid_o, 0, N - 1)],
+                               jnp.int32(-1))
+            v["park_head"] = jnp.where(ev_orph, succ_o, v["park_head"])
+            v["park_tail"] = jnp.where(ev_orph & (plen_pk <= 1),
+                                       jnp.int32(-1), v["park_tail"])
+            v["park_len"] = v["park_len"] - ev_orph.astype(jnp.int32)
+            node_up = (v["ch_ix"] & 1) == 0  # event node, post-toggle
+
         # ------------------------------------- node arrival / deferral
         if has_delay:
             # deferred-arrival pop: the event time is the node-local
             # (delayed) arrival; the FIFO successor resolves lazily
+            # (no-churn) or straight off the rail (churn)
             plen0 = v["pend_len"]
             rid_p = v["pend_head"]
             v = dict(v)
-            v["pend_head"] = jnp.where(ev_pend, jnp.int32(-1),
-                                       v["pend_head"])
-            v["pend_len"] = v["pend_len"] - ev_pend.astype(jnp.int32)
-            defer_p = ev_pend & (plen0 > 1)
-            v["dp_k"] = jnp.where(defer_p, node, v["dp_k"])
-            v["dp_rid"] = jnp.where(defer_p, rid_p, v["dp_rid"])
+            if has_churn:
+                succ_p = jnp.where(plen0 > 1,
+                                   v["dnx"][jnp.clip(rid_p, 0, N - 1)],
+                                   jnp.int32(-1))
+                v["pend_head"] = jnp.where(ev_pend, succ_p,
+                                           v["pend_head"])
+                v["pend_len"] = (v["pend_len"]
+                                 - ev_pend.astype(jnp.int32))
+                # a request landing on a node that died in flight
+                # parks instead of arriving
+                na_on = ev_pend & node_up
+            else:
+                v["pend_head"] = jnp.where(ev_pend, jnp.int32(-1),
+                                           v["pend_head"])
+                v["pend_len"] = (v["pend_len"]
+                                 - ev_pend.astype(jnp.int32))
+                defer_p = ev_pend & (plen0 > 1)
+                v["dp_k"] = jnp.where(defer_p, node, v["dp_k"])
+                v["dp_rid"] = jnp.where(defer_p, rid_p, v["dp_rid"])
+                na_on = ev_pend
             rid_na = jnp.where(ev_pend, rid_p, rid_a)
             t_na = t_ev
-            na_on = ev_pend
         else:
             rid_na = rid_a
             t_na = t_arr
             na_on = ev_arr
+            if has_churn:
+                # an orphan re-enters the node exactly like an
+                # arrival, at the orphan event's time; all-down fresh
+                # arrivals park instead
+                rid_na = jnp.where(ev_orph, rid_o, rid_na)
+                t_na = jnp.where(ev_orph, t_ev, t_na)
+                na_on = (ev_arr & anyup) | ev_orph
         rid_na32 = jnp.asarray(rid_na, jnp.int32)
         if timers:
             # chain every node arrival onto the (node, fn) timer rail
@@ -579,35 +920,98 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         progress = ev_slot | ev_timer | ev_arr
         if has_delay:
             progress = progress | ev_pend
+        if has_churn:
+            progress = progress | ev_orph | ev_churn
         v = dict(v)
         v["ci"] = v["ci"].at[jnp.array([CI_NEXT, CI_ITERS])].add(
             jnp.stack([ev_arr.astype(jnp.int32),
                        progress.astype(jnp.int32)]))
         v = kernel.on_arrival(ctx, v, rid_na, t_na, na_on)
         if has_delay:
-            # raw arrival: the routing decision is made (``node`` is
-            # the pick) and the request goes in flight to that node
+            # raw arrival (and, under churn, orphan re-route): the
+            # routing decision is made (``node`` is the pick) and the
+            # request goes in flight to that node
             rid_a32 = jnp.asarray(rid_a, jnp.int32)
-            ptail = v["pend_tail"]
-            pempty = v["pend_len"] == 0
+            if has_churn:
+                snd_on = (ev_arr & anyup) | ev_orph
+                rid_s = jnp.where(ev_orph, rid_o, rid_a32)
+                # landing time samples the delay at send time
+                kc = jnp.clip(node, 0, K - 1)
+                if var_delay:
+                    d_snd = _sched_delay(t_ev, dtimes[kc], dvals[kc],
+                                         dper[kc])
+                else:
+                    d_snd = delays[kc]
+                ptail = v["pend_tail"]
+                pempty = v["pend_len"] == 0
+                v = dict(v)
+                v["land_t"] = v["land_t"].at[
+                    _gidx(snd_on, rid_s, N)].set(t_ev + d_snd,
+                                                 mode="drop")
+                v["dnx"] = v["dnx"].at[
+                    _gidx(snd_on & ~pempty, ptail, N)].set(
+                    rid_s, mode="drop")
+                v["pend_head"] = jnp.where(snd_on & pempty, rid_s,
+                                           v["pend_head"])
+                v["pend_tail"] = jnp.where(snd_on, rid_s,
+                                           v["pend_tail"])
+                v["pend_len"] = (v["pend_len"]
+                                 + snd_on.astype(jnp.int32))
+            else:
+                ptail = v["pend_tail"]
+                pempty = v["pend_len"] == 0
+                v = dict(v)
+                v["pend_head"] = jnp.where(ev_arr & pempty, rid_a32,
+                                           v["pend_head"])
+                v["lw_d_pos"] = jnp.where(ev_arr & ~pempty, ptail,
+                                          v["lw_d_pos"])
+                v["lw_d_val"] = jnp.where(ev_arr & ~pempty, rid_a32,
+                                          v["lw_d_val"])
+                v["pend_tail"] = jnp.where(ev_arr, rid_a32,
+                                           v["pend_tail"])
+                v["pend_len"] = (v["pend_len"]
+                                 + ev_arr.astype(jnp.int32))
+        if has_churn:
+            # park append — the one code path that grows the FIFO:
+            # all-down fresh arrivals, and (under delay) requests
+            # landing on a node that died while they were in flight
+            if has_delay:
+                park_in = (ev_arr & ~anyup) | (ev_pend & ~node_up)
+                rid_pk = jnp.where(ev_pend, rid_p,
+                                   jnp.asarray(rid_a, jnp.int32))
+            else:
+                park_in = ev_arr & ~anyup
+                rid_pk = jnp.asarray(rid_a, jnp.int32)
+            pk_empty = v["park_len"] == 0
+            pk_tail = v["park_tail"]
             v = dict(v)
-            v["pend_head"] = jnp.where(ev_arr & pempty, rid_a32,
-                                       v["pend_head"])
-            v["lw_d_pos"] = jnp.where(ev_arr & ~pempty, ptail,
-                                      v["lw_d_pos"])
-            v["lw_d_val"] = jnp.where(ev_arr & ~pempty, rid_a32,
-                                      v["lw_d_val"])
-            v["pend_tail"] = jnp.where(ev_arr, rid_a32,
-                                       v["pend_tail"])
-            v["pend_len"] = v["pend_len"] + ev_arr.astype(jnp.int32)
+            v["nxt"] = v["nxt"].at[
+                _gidx(park_in & ~pk_empty, pk_tail, N)].set(
+                rid_pk, mode="drop")
+            v["park_head"] = jnp.where(park_in & pk_empty, rid_pk,
+                                       v["park_head"])
+            v["park_tail"] = jnp.where(park_in, rid_pk,
+                                       v["park_tail"])
+            v["park_len"] = v["park_len"] + park_in.astype(jnp.int32)
+            v["park_t"] = jnp.where(park_in & pk_empty, t_ev,
+                                    v["park_t"])
         s = v
-        if has_delay and not stream:
+        if has_delay and not stream and not has_churn:
             ki = jnp.where(s["ev_rid"] >= 0, k_step, SG)
             s["d_node"] = s["d_node"].at[ki].set(
                 jnp.asarray(node, jnp.int32), mode="drop")
 
         s = _fold_event(ctx, s)
         s = dict(s)
+        if has_churn:
+            # direct-link mode: no overlays to stage, no reads to
+            # chase — every link write already hit its rail
+            stall = jnp.where(
+                active & ~live, 1,
+                jnp.where(active & (s["ci"][CI_ITERS] >= max_iters),
+                          2, s["ci"][CI_STALL]))
+            s["ci"] = s["ci"].at[CI_STALL].set(stall)
+            return s
         # stage this event's link writes into the overlay slot (every
         # step overwrites its own slot, so no per-segment reset — a
         # stale entry can only repeat the already-flushed rail value)
@@ -679,7 +1083,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         return jnp.any((ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0))
 
     def segment(s):
-        if not stream:
+        if not stream and not has_churn:
             s = dict(s)
             s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
 
@@ -697,15 +1101,16 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                         jnp.where(pos >= 0, pos % F, F))
 
             s = dict(s)
-            kw, fw = qw_idx(s["qw_len_pos"])
-            s["q_len"] = s["q_len"].at[lanes, kw, fw].add(
-                s["qw_len_delta"], mode="drop")
-            kw, fw = qw_idx(s["qw_head_pos"])
-            s["q_head_rid"] = s["q_head_rid"].at[lanes, kw, fw].set(
-                s["qw_head_val"], mode="drop")
-            kw, fw = qw_idx(s["qw_tail_pos"])
-            s["q_tail_rid"] = s["q_tail_rid"].at[lanes, kw, fw].set(
-                s["qw_tail_val"], mode="drop")
+            if not has_churn:
+                kw, fw = qw_idx(s["qw_len_pos"])
+                s["q_len"] = s["q_len"].at[lanes, kw, fw].add(
+                    s["qw_len_delta"], mode="drop")
+                kw, fw = qw_idx(s["qw_head_pos"])
+                s["q_head_rid"] = s["q_head_rid"].at[
+                    lanes, kw, fw].set(s["qw_head_val"], mode="drop")
+                kw, fw = qw_idx(s["qw_tail_pos"])
+                s["q_tail_rid"] = s["q_tail_rid"].at[
+                    lanes, kw, fw].set(s["qw_tail_val"], mode="drop")
             ei, t_ev, t_arr = pick_events(s)
             ci = s["ci"]
             live = ((ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0)
@@ -715,12 +1120,41 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             # it reads equals the post-slot-phase state of the old
             # two-view spelling bit-for-bit
             rid_a = jnp.minimum(ci[:, CI_NEXT], N - 1)
-            j_a = fn_flat[base_n + rid_a]
+            if has_churn:
+                up = (s["ch_ix"] & 1) == 0
+                # the routed request may be the park head (orphan
+                # re-route), decided at the orphan event's time
+                ev_orph_g = live & (ei == orph_base)
+                rid_rt = jnp.where(
+                    ev_orph_g, jnp.clip(s["park_head"], 0, N - 1),
+                    rid_a)
+                t_rt = jnp.where(ev_orph_g, t_ev, t_arr)
+            else:
+                up = None
+                rid_rt, t_rt = rid_a, t_arr
+            j_rt = fn_flat[base_n + rid_rt]
+            if var_delay:
+                delay_now = _sched_delay(
+                    jnp.broadcast_to(t_rt[:, None], (L, K)),
+                    dt_b, dv_b, dp_b)
+            elif has_delay:
+                delay_now = delays
+            else:
+                delay_now = None
             k_route = jnp.clip(
                 pick_lanes(s["q_len"], s["q_tot"], s["slot_fn"],
                            s["slot_state"], cap_mask, s["est_sum"],
                            s["est_n"], s["node_gn"], s["node_gsum"],
-                           t_cold_l, j_a, rid_a, t_arr), 0, K - 1)
+                           t_cold_l, up, delay_now, j_rt, rid_rt,
+                           t_rt), 0, K - 1)
+            if has_churn:
+                # a router may still name a down node (e.g. every
+                # sampled JSQ candidate is down); re-aim at the
+                # lowest-id up node — mirrored in the reference
+                k_route = jnp.where(
+                    jnp.take_along_axis(up, k_route[:, None],
+                                        axis=1)[:, 0],
+                    k_route, jnp.argmax(up, axis=1).astype(jnp.int32))
             # the event's node: the phases are mutually exclusive, so
             # one view/commit pair serves slot, timer,
             # deferred-arrival and arrival events alike
@@ -740,7 +1174,15 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                            & (ei < pend_base + K))
                 k_ev = jnp.where(
                     ev_pend, jnp.clip(ei - pend_base, 0, K - 1), k_ev)
+            if has_churn:
+                ev_churn_g = (live & (ei >= churn_base)
+                              & (ei < churn_base + K))
+                k_ev = jnp.where(
+                    ev_churn_g, jnp.clip(ei - churn_base, 0, K - 1),
+                    k_ev)
             v = gather_nodal(s, k_ev)
+            if has_churn:
+                v["anyup"] = up.any(axis=1)
             capm_node = jnp.take_along_axis(
                 cap_mask, k_ev[:, None, None], axis=1)[:, 0]
             v = step_lanes(k_step, v, trace_ix, t_cold_l, t_evict_l,
@@ -753,6 +1195,10 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             return s
 
         s = lax.fori_loop(0, SG, step, s)
+        if has_churn:
+            # direct-link mode writes every rail in-body; nothing to
+            # flush
+            return s
         # batch-flush the staged links — the only (L, N) rail writes,
         # paid once per SG events
         s = dict(s)
@@ -794,8 +1240,10 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     if not stream:
         out["start"] = final["start"]
         out["completion"] = final["completion"]
-        if has_delay:
+        if has_delay and not has_churn:
             out["node_of"] = final["node_of"]
+    if deadlines is not None:
+        out["deadline_miss"] = final["dl_miss"]
     return out
 
 
@@ -803,29 +1251,40 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                    static_argnames=("kernel", "router", "n_nodes",
                                     "n_fns", "capacity", "queue_cap",
                                     "seed", "stream", "tl_bins",
-                                    "has_delay", "seg",
+                                    "has_delay", "has_churn",
+                                    "var_delay", "seg",
                                     "keep_responses"))
 def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                     threshold, delays=None, *, kernel, router,
-                     n_nodes, n_fns, capacity, queue_cap, seed=0,
-                     stream=True, tl_bins=0, tl_bucket=60.0,
-                     has_delay=False, seg=0, keep_responses=False):
+                     threshold, delays=None, churn_t=None, dtimes=None,
+                     dvals=None, dper=None, deadlines=None, *, kernel,
+                     router, n_nodes, n_fns, capacity, queue_cap,
+                     seed=0, stream=True, tl_bins=0, tl_bucket=60.0,
+                     has_delay=False, has_churn=False, var_delay=False,
+                     seg=0, keep_responses=False):
     """Cluster counterpart of `jax_engine._sweep_metrics`: lane-batched
     dynamic-router run + on-device metric reduction (same metric
     names, plus ``node_done``). ``delays``/``has_delay`` switch on the
     deferred-arrival rail; exact-mode responses are then measured from
-    each request's node-local (delayed) arrival."""
+    each request's node-local (delayed) arrival. ``churn_t`` +
+    ``has_churn`` switch on the failure rail (responses then measure
+    from the *raw* arrival — the user-perceived convention);
+    ``dtimes``/``dvals``/``dper`` + ``var_delay`` make the per-node
+    delay time-varying; ``deadlines`` (F,) adds the per-function
+    ``deadline_miss`` fold (attainment is derived outside jit by
+    `repro.core.jax_engine.slo_attainment`, shared by every tier)."""
     if keep_responses and stream:
         raise ValueError("keep_responses requires stream=False")
     if delays is None:
         delays = jnp.zeros((n_nodes,), jnp.float64)
     out = _simulate_cluster(fn, arr, ex, cold, ev, tix, masks, betas,
-                            prior, threshold, delays, kernel=kernel,
+                            prior, threshold, delays, churn_t, dtimes,
+                            dvals, dper, deadlines, kernel=kernel,
                             router=router, n_nodes=n_nodes,
                             n_fns=n_fns, capacity=capacity,
                             queue_cap=queue_cap, seed=seed,
                             stream=stream, tl_bins=tl_bins,
                             tl_bucket=tl_bucket, has_delay=has_delay,
+                            has_churn=has_churn, var_delay=var_delay,
                             seg=seg)
     N = fn.shape[1]
     if stream:
@@ -833,7 +1292,13 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                             out["max_response"])
     else:
         arr_l = arr[tix]
-        if has_delay:
+        if has_churn:
+            pass  # raw-arrival convention: completion - arrival
+        elif var_delay:
+            nof = out["node_of"]
+            arr_l = arr_l + _sched_delay(arr_l, dtimes[nof],
+                                         dvals[nof], dper[nof])
+        elif has_delay:
             arr_l = arr_l + delays[out["node_of"]]
         resp = out["completion"] - arr_l
         p99 = jnp.percentile(resp, 99.0, axis=1)
@@ -855,6 +1320,8 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
         res["tl_count"] = out["tl_count"]
         res["tl_resp_sum"] = out["tl_resp_sum"]
         res["tl_exec_sum"] = out["tl_exec_sum"]
+    if deadlines is not None:
+        res["deadline_miss"] = out["deadline_miss"]
     if keep_responses:
         res["response"] = resp
     return res

@@ -7,11 +7,28 @@ single-node simulations — each node is its own
 policy instance, untouched — sharing **one** global `EventQueue`, so
 simultaneous events interleave across nodes exactly like the paper's
 single-server engine orders them (EXEC_DONE < COLD_DONE < TIMER <
-ARRIVAL, FIFO within a kind). At each ARRIVAL the router picks the
-node from live global state using the *same arithmetic* (same `mix32`
-draws, same score formula, same first-argmin tie-break) as the traced
-routers in `repro.cluster.routers`, then hands the request to that
-node's policy.
+NODE_ARRIVAL < REROUTE < CHURN < ARRIVAL, FIFO within a kind). At
+each ARRIVAL the router picks the node from live global state using
+the *same arithmetic* (same `mix32` draws, same score formula, same
+first-argmin tie-break) as the traced routers in
+`repro.cluster.routers`, then hands the request to that node's policy.
+
+Churn (docs/cluster.md) is mirrored with two extra event kinds driven
+by the spec's canonical `churn_toggles` expansion: a CHURN toggle on
+an up node drains it — requests running on it (sorted by request id)
+then its queued requests (function-major, FIFO within a function)
+re-enter the router as REROUTE events at the failure instant, every
+instance dies (cold state lost; the execution-time estimator, which
+lives router-side, persists) — while a toggle on a down node re-emits
+any parked requests. A request is *parked* whenever it needs a node
+and none is up (fresh arrival, re-route, or a deferred delivery
+landing on a down node with no alternative); parked requests replay
+in FIFO order at the next NODE_UP. Routers see an ``up`` mask and
+may still name a down node (e.g. every sampled JSQ candidate is
+down); the same lowest-id-up correction as the engine then applies.
+Under churn the response convention switches to completion minus the
+*raw* arrival (the delivery leg may be paid several times; see
+docs/cluster.md), matching the engine's fold-at-EXEC_DONE.
 
 Nodes only interact through the router, so any cross-node ordering of
 same-time non-arrival events is immaterial — which is what makes this
@@ -20,17 +37,21 @@ tie-breaking.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.cluster.routers import DynamicRouter, JSQRouter
+from repro.cluster.routers import (DynamicRouter, JSQRouter,
+                                   SLOAwareRouter)
 from repro.cluster.spec import ClusterSpec
 from repro.core.events import EventKind, EventQueue
 from repro.core.policy import POLICIES
 from repro.core.request import Trace
 from repro.core.server import (EdgeServer, ExecTimeEstimator,
                                InstanceState)
+
+_I32_MAX = 2**31 - 1
+_BIG = 1e30
 
 
 def _queues(policy) -> dict:
@@ -53,14 +74,22 @@ def _busy(server: EdgeServer) -> int:
 
 def _pick_dynamic(router: DynamicRouter, servers, policies, ests,
                   functions, rid: int, fn: int, seed: int,
-                  prior: float) -> int:
-    """Python mirror of the traced `DynamicRouter.pick` arithmetic."""
+                  prior: float, up=None, delay_now=None) -> int:
+    """Python mirror of the traced `DynamicRouter.pick` arithmetic.
+
+    ``up`` (length-K bools) masks down nodes exactly like the traced
+    view: JSQ loads become I32_MAX, score routers get BIG — the
+    chosen node may still be down (caller applies the lowest-id-up
+    correction). ``delay_now`` is the per-node delay in effect at the
+    decision instant (the `slo_aware` delay term)."""
     K = len(servers)
     if K == 1:
         return 0
     if isinstance(router, JSQRouter):
         load = [sum(len(q) for q in _queues(p).values()) + _busy(s)
                 for p, s in zip(policies, servers)]
+        if up is not None:
+            load = [ld if u else _I32_MAX for ld, u in zip(load, up)]
         nodes = list(range(K))
         for i, jd in JSQRouter.sample(rid, seed, K, router.d):
             nodes[i], nodes[jd] = nodes[jd], nodes[i]
@@ -69,7 +98,9 @@ def _pick_dynamic(router: DynamicRouter, servers, policies, ests,
             if load[nodes[i]] < load[best]:
                 best = nodes[i]
         return best
-    # cold_aware: estimated time-to-start per node, first argmin
+    # cold_aware / slo_aware: estimated time-to-start per node (plus
+    # the current network delay for slo_aware), first argmin
+    slo = isinstance(router, SLOAwareRouter)
     best_k, best_score = 0, None
     for k, (srv, pol, est) in enumerate(zip(servers, policies, ests)):
         gmean = est.gsum / max(est.gn, 1) if est.gn > 0 else prior
@@ -80,6 +111,10 @@ def _pick_dynamic(router: DynamicRouter, servers, policies, ests,
         score = ((0.0 if has_idle else functions[fn].cold_start)
                  + mean_j * len(_queues(pol)[fn])
                  + gmean * (qtot + _busy(srv)))
+        if slo and delay_now is not None:
+            score += delay_now[k]
+        if up is not None and not up[k]:
+            score = _BIG
         if best_score is None or score < best_score:
             best_k, best_score = k, score
     return best_k
@@ -89,7 +124,10 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                                cspec: ClusterSpec, *,
                                capacity: Optional[int] = None,
                                exec_prior: float = 0.1,
-                               max_events: Optional[int] = None
+                               max_events: Optional[int] = None,
+                               deadlines: Optional[Sequence[float]]
+                               = None,
+                               horizon: Optional[float] = None
                                ) -> Dict[str, np.ndarray]:
     """Run ``policy_name`` on a K-node cluster over ``trace``.
 
@@ -97,7 +135,9 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
     ``node_capacity`` unset. Returns per-request ``start`` /
     ``completion`` / ``response`` (original request order), the (N,)
     node ``assign``ment, per-node ``node_done`` / ``node_cold`` counts
-    and the cluster totals.
+    and the cluster totals; with ``deadlines`` ((F,) per-function SLO
+    deadlines) also the per-function ``deadline_miss`` counts
+    (``response > deadline``, the engine's predicate).
     """
     cspec.validate()
     K = cspec.n_nodes
@@ -107,6 +147,29 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                          "or set ClusterSpec.node_capacity")
     router = cspec.get_router()
     delays = cspec.delays()
+    if horizon is None:
+        # the runner expands toggles against the horizon of the whole
+        # stacked trace axis; pass it explicitly when comparing
+        # against a multi-trace engine run
+        horizon = (max(r.arrival for r in trace.requests)
+                   if trace.requests else 0.0)
+    toggles = cspec.churn_toggles(horizon)
+    has_churn = any(len(t) for t in toggles)
+    if has_churn and not router.dynamic:
+        raise ValueError(
+            "churn requires a dynamic router (static assignment "
+            "cannot re-route around a down node); got "
+            f"router={cspec.router!r}")
+    dscheds = cspec.delay_schedule
+    var_delay = dscheds is not None and any(
+        ds is not None and len(ds.values) > 1 for ds in dscheds)
+
+    def delay_at(k: int, t: float) -> float:
+        if var_delay:
+            ds = dscheds[k]
+            if ds is not None and len(ds.values) > 1:
+                return ds.at(t)
+        return delays[k]
 
     events = EventQueue()
     servers = [EdgeServer(trace.functions, caps[k], events)
@@ -127,7 +190,7 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
         static_assign = np.asarray(
             router.assign(a["fn_id"], a["arrival"], cspec))
 
-    deferred = router.dynamic and any(delays)
+    deferred = router.dynamic and (any(delays) or var_delay)
     for r in trace.requests:
         r.start = -1.0
         r.completion = -1.0
@@ -138,12 +201,36 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             events.push(r.arrival + delays[k], EventKind.ARRIVAL, r)
         else:
             events.push(r.arrival, EventKind.ARRIVAL, r)
+    # node-major toggle pushes: same-time toggles of different nodes
+    # resolve lowest-node-first, the engine's candidate tie-break
+    up = [True] * K
+    for k in range(K):
+        for t in toggles[k]:
+            events.push(t, EventKind.CHURN, k)
+    parked: list = []   # FIFO of requests waiting for any node
 
     def owner(inst) -> int:
         for k, srv in enumerate(servers):
             if srv.instances.get(inst.inst_id) is inst:
                 return k
         raise RuntimeError(f"instance {inst.inst_id} owned by no node")
+
+    def route(req, t: float) -> None:
+        dn = [delay_at(i, t) for i in range(K)]
+        k = _pick_dynamic(router, servers, policies, ests,
+                          trace.functions, req.req_id, req.fn_id,
+                          cspec.seed, exec_prior,
+                          up=up if has_churn else None, delay_now=dn)
+        if has_churn and not up[k]:
+            k = up.index(True)   # lowest-id up node, engine's argmax
+        assign[req.req_id] = k
+        if deferred:
+            # dynamic routing under net_delay: the decision is made
+            # now, the node sees the request delay_k(t) later
+            events.push(t + delay_at(k, t), EventKind.NODE_ARRIVAL,
+                        req)
+        else:
+            policies[k].on_arrival(req, t)
 
     node_done = np.zeros((K,), np.int64)
     n_events = 0
@@ -158,23 +245,68 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             req = ev.payload
             if static_assign is not None:
                 k = int(static_assign[req.req_id])
-            else:
-                k = _pick_dynamic(router, servers, policies, ests,
-                                  trace.functions, req.req_id,
-                                  req.fn_id, cspec.seed, exec_prior)
-            assign[req.req_id] = k
-            if deferred:
-                # dynamic routing under net_delay: the decision is
-                # made now, the node sees the request delay_k later
-                events.push(ev.time + delays[k],
-                            EventKind.NODE_ARRIVAL, req)
-            else:
+                assign[req.req_id] = k
                 policies[k].on_arrival(req, ev.time)
+            elif has_churn and not any(up):
+                parked.append(req)
+            else:
+                route(req, ev.time)
         elif ev.kind == EventKind.NODE_ARRIVAL:
             req = ev.payload
-            policies[int(assign[req.req_id])].on_arrival(req, ev.time)
+            k = int(assign[req.req_id])
+            if has_churn and not up[k]:
+                # landed on a down node: back through the router (or
+                # park if there is nowhere to go)
+                if any(up):
+                    events.push(ev.time, EventKind.REROUTE, req)
+                else:
+                    parked.append(req)
+            else:
+                policies[k].on_arrival(req, ev.time)
+        elif ev.kind == EventKind.REROUTE:
+            req = ev.payload
+            if not any(up):
+                parked.append(req)
+            else:
+                route(req, ev.time)
+        elif ev.kind == EventKind.CHURN:
+            k = ev.payload
+            if up[k]:
+                # NODE_DOWN: drain running requests (by request id)
+                # then queued ones (function-major, FIFO within a
+                # function); every instance dies, cold state is lost,
+                # the estimator persists
+                up[k] = False
+                srv, pol = servers[k], policies[k]
+                running = sorted(
+                    (i for i in srv.instances.values()
+                     if i.state == InstanceState.BUSY
+                     and i.current is not None),
+                    key=lambda i: i.current.req_id)
+                drained = [i.current for i in running]
+                q = _queues(pol)
+                for fn in sorted(q):
+                    drained.extend(q[fn])
+                for inst in srv.instances.values():
+                    inst.dead = True   # pending *_DONE events no-op
+                srv.instances.clear()
+                srv.by_fn = {f.fn_id: set()
+                             for f in trace.functions}
+                fresh = POLICIES[policy_name]()
+                fresh.bind(srv, ests[k])
+                policies[k] = fresh
+                for req in drained:
+                    events.push(ev.time, EventKind.REROUTE, req)
+            else:
+                # NODE_UP: replay parked requests in arrival order
+                up[k] = True
+                for req in parked:
+                    events.push(ev.time, EventKind.REROUTE, req)
+                parked.clear()
         elif ev.kind == EventKind.EXEC_DONE:
             inst = ev.payload
+            if getattr(inst, "dead", False):
+                continue
             k = owner(inst)
             req = inst.current
             ests[k].observe(req.fn_id, req.exec_time)
@@ -182,8 +314,14 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             policies[k].on_exec_done(inst, req, ev.time)
         elif ev.kind == EventKind.COLD_DONE:
             inst = ev.payload
+            if getattr(inst, "dead", False):
+                continue
             policies[owner(inst)].on_cold_done(inst, ev.time)
         elif ev.kind == EventKind.TIMER:
+            if has_churn:
+                raise RuntimeError(
+                    "timer-armed policies are not supported under "
+                    "churn (matches the engine's rejection)")
             # timer payloads are requests; route to the node that owns
             # the request (openwhisk_v2 on the static path)
             req = ev.payload
@@ -193,17 +331,35 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
 
     start = np.array([r.start for r in trace.requests])
     completion = np.array([r.completion for r in trace.requests])
-    # response measured from the node-local (delayed) arrival, the
-    # engine's convention (docs/cluster.md)
     arr = np.array([r.arrival for r in trace.requests])
-    if static_assign is not None:
+    if has_churn:
+        # the delivery leg may be paid several times for a re-routed
+        # request, so the response baseline is the raw arrival
+        pass
+    elif static_assign is not None:
+        # response measured from the node-local (delayed) arrival,
+        # the engine's convention (docs/cluster.md)
         arr = arr + np.asarray(delays)[static_assign]
     elif deferred:
-        arr = arr + np.asarray(delays)[np.clip(assign, 0, K - 1)]
-    return dict(
-        start=start, completion=completion, response=completion - arr,
+        ka = np.clip(assign, 0, K - 1)
+        if var_delay:
+            arr = arr + np.array([delay_at(int(k), float(a))
+                                  for k, a in zip(ka, arr)])
+        else:
+            arr = arr + np.asarray(delays)[ka]
+    response = completion - arr
+    out = dict(
+        start=start, completion=completion, response=response,
         assign=assign, node_done=node_done,
         node_cold=np.array([s.stats.cold_starts for s in servers]),
         cold_starts=int(sum(s.stats.cold_starts for s in servers)),
         evictions=int(sum(s.stats.evictions for s in servers)),
         n_events=n_events)
+    if deadlines is not None:
+        dl = np.asarray(deadlines, np.float64)
+        fn = np.array([r.fn_id for r in trace.requests])
+        miss = np.zeros((trace.n_functions,), np.int32)
+        done = completion >= 0.0
+        np.add.at(miss, fn[done & (response > dl[fn])], 1)
+        out["deadline_miss"] = miss
+    return out

@@ -82,7 +82,20 @@ class ClusterView:
     estimator state ``est_sum``/``est_n`` (K, F) with node globals
     ``node_gn``/``node_gsum`` (K,), the function catalogue ``t_cold``
     (F,), the estimator ``prior`` and the static ``n_nodes``/``seed``
-    knobs of the ClusterSpec."""
+    knobs of the ClusterSpec.
+
+    Under churn / time-varying delay the view additionally carries
+    ``up`` ((K,) bool — False while a node is down) and ``delay_now``
+    ((K,) f64 — the network delay in effect at the decision time).
+    Both are ``None`` (python-level, so no-churn jaxprs are unchanged)
+    when the spec declares no churn / no delay schedule; routers must
+    treat ``None`` as all-up / all-zero. A router may still return a
+    down node (e.g. every sampled JSQ candidate is down) — the engine
+    and the reference both apply the same correction afterwards,
+    re-aiming at the lowest-id up node (all-down arrivals park)."""
+
+    up = None
+    delay_now = None
 
     def __init__(self, **kw):
         self.__dict__.update(kw)
@@ -182,12 +195,14 @@ class JSQRouter(DynamicRouter):
     def pick(self, g, j, rid, t):
         import jax.numpy as jnp
 
-        from repro.core.jax_engine import BUSY
+        from repro.core.jax_engine import BUSY, I32_MAX
         K = g.n_nodes
         if K == 1:
             return jnp.int32(0)
         load = (g.q_tot
                 + ((g.slot_state == BUSY) & g.cap_mask).sum(axis=1))
+        if g.up is not None:
+            load = jnp.where(g.up, load, I32_MAX)
         nodes = jnp.arange(K, dtype=jnp.int32)
         for i in range(min(self.d, K)):
             jdraw = i + (mix32_jax(rid, g.seed + i)
@@ -222,23 +237,61 @@ class ColdAwareRouter(DynamicRouter):
     def pick(self, g, j, rid, t):
         import jax.numpy as jnp
 
-        from repro.core.jax_engine import BUSY, IDLE
-        jc = jnp.clip(j, 0, g.q_len.shape[1] - 1)
-        gn = g.node_gn.astype(jnp.float64)
-        gmean = jnp.where(g.node_gn > 0,
-                          g.node_gsum / jnp.maximum(gn, 1), g.prior)
-        n_j = g.est_n[:, jc]
-        mean_j = jnp.where(n_j > 0,
-                           g.est_sum[:, jc]
-                           / jnp.maximum(n_j.astype(jnp.float64), 1),
-                           gmean)
-        own = (g.slot_fn == jc) & g.cap_mask
-        has_idle = (own & (g.slot_state == IDLE)).any(axis=1)
-        busy = ((g.slot_state == BUSY) & g.cap_mask).sum(axis=1)
-        qtot = g.q_tot
-        score = (jnp.where(has_idle, 0.0, g.t_cold[jc])
-                 + mean_j * g.q_len[:, jc]
-                 + gmean * (qtot + busy))
+        from repro.core.jax_engine import BIG
+        score = _startability_score(g, j)
+        if g.up is not None:
+            score = jnp.where(g.up, score, BIG)
+        return jnp.argmin(score).astype(jnp.int32)
+
+
+def _startability_score(g, j):
+    """Per-node estimate of the time until a request of fn ``j``
+    could start there (traced (K,) f64; shared by `ColdAwareRouter`
+    and `SLOAwareRouter` so their backlog term agrees exactly)."""
+    import jax.numpy as jnp
+
+    from repro.core.jax_engine import BUSY, IDLE
+    jc = jnp.clip(j, 0, g.q_len.shape[1] - 1)
+    gn = g.node_gn.astype(jnp.float64)
+    gmean = jnp.where(g.node_gn > 0,
+                      g.node_gsum / jnp.maximum(gn, 1), g.prior)
+    n_j = g.est_n[:, jc]
+    mean_j = jnp.where(n_j > 0,
+                       g.est_sum[:, jc]
+                       / jnp.maximum(n_j.astype(jnp.float64), 1),
+                       gmean)
+    own = (g.slot_fn == jc) & g.cap_mask
+    has_idle = (own & (g.slot_state == IDLE)).any(axis=1)
+    busy = ((g.slot_state == BUSY) & g.cap_mask).sum(axis=1)
+    qtot = g.q_tot
+    return (jnp.where(has_idle, 0.0, g.t_cold[jc])
+            + mean_j * g.q_len[:, jc]
+            + gmean * (qtot + busy))
+
+
+class SLOAwareRouter(DynamicRouter):
+    """SLO-attainment routing: predicted response on node k is the
+    current network delay plus the cold-aware startability estimate
+
+        pred_k = delay_now(k) + score_k(cold_aware)
+
+    and the request goes to the argmin over *up* nodes (ties: lowest
+    node id). With no delay schedule and no churn this degrades to
+    exactly `cold_aware`; under churn it is the only built-in that
+    also discounts nodes whose link is currently slow (the LEO /
+    mobile-edge case the churn rail models)."""
+
+    name = "slo_aware"
+
+    def pick(self, g, j, rid, t):
+        import jax.numpy as jnp
+
+        from repro.core.jax_engine import BIG
+        score = _startability_score(g, j)
+        if g.delay_now is not None:
+            score = score + g.delay_now
+        if g.up is not None:
+            score = jnp.where(g.up, score, BIG)
         return jnp.argmin(score).astype(jnp.int32)
 
 
@@ -249,6 +302,7 @@ ROUTERS: Dict[str, Router] = {
     "weighted_random": WeightedRandomRouter(),
     "jsq2": JSQRouter("jsq2", d=2),
     "cold_aware": ColdAwareRouter(),
+    "slo_aware": SLOAwareRouter(),
 }
 
 

@@ -29,8 +29,25 @@ from repro.cluster.spec import ClusterSpec
 from repro.cluster.static import run_static_entry
 
 
+def _churn_operand(entry: ClusterSpec, horizon: float):
+    """Lower the entry's availability schedule to the engine's (K, E)
+    BIG-padded toggle-time operand (≥ 1 all-BIG trailing column so
+    the per-node cursor can rest past its last toggle), or ``None``
+    when the schedule is trivial for this horizon — the run then
+    takes the plain no-churn loop, bitwise unchanged."""
+    from repro.core.jax_engine import BIG
+    toggles = entry.churn_toggles(horizon)
+    if not any(len(t) for t in toggles):
+        return None
+    E = max(len(t) for t in toggles) + 1
+    churn_t = np.full((entry.n_nodes, E), BIG, np.float64)
+    for k, tg in enumerate(toggles):
+        churn_t[k, : len(tg)] = tg
+    return churn_t
+
+
 def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
-                       N: int, kernels, beta_cols
+                       N: int, kernels, beta_cols, deadlines=None
                        ) -> Dict[str, np.ndarray]:
     """One dynamic-router entry over the spec grid: (P, T, KC, B)
     metric arrays from the K-node loop."""
@@ -60,8 +77,27 @@ def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                     "evict"))
     chunk = resolve_lane_chunk(spec.lane_chunk)
     delays = entry.delays()
-    has_delay = any(delays)
+    dops = entry.delay_ops()
+    var_delay = dops is not None
+    horizon = float(stacked["arrival"].max()) if N else 0.0
+    churn_t = _churn_operand(entry, horizon)
+    has_churn = churn_t is not None
+    has_delay = any(delays) or var_delay
     delays_op = jnp.asarray(delays, jnp.float64)
+    churn_op = None if churn_t is None else jnp.asarray(churn_t)
+    dt_op = dv_op = dp_op = None
+    if var_delay:
+        dt_op, dv_op, dp_op = (jnp.asarray(o) for o in dops)
+    if has_churn:
+        timered = [p for p in spec.policies
+                   if kernels[p].has_timers]
+        if timered:
+            raise ValueError(
+                f"cluster entry {entry.label!r} declares churn, but "
+                f"policies {timered} arm per-request timers — a "
+                "drained timer would fire against a dead node. Drop "
+                "the policy or the churn schedule")
+    dl_op = None if deadlines is None else jnp.asarray(deadlines)
     per_policy: Dict[str, Dict[str, np.ndarray]] = {}
     for policy in spec.policies:
         beta_l = beta_cols[policy]
@@ -72,12 +108,13 @@ def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                 *shared, jnp.asarray(tix[lo:hi]),
                 jnp.asarray(masks[lo:hi]), jnp.asarray(beta_l[lo:hi]),
                 jnp.float64(spec.prior), jnp.float64(spec.threshold),
-                delays_op,
+                delays_op, churn_op, dt_op, dv_op, dp_op, dl_op,
                 kernel=kernels[policy], router=router, n_nodes=Kn,
                 n_fns=F, capacity=C, queue_cap=spec.queue_cap,
                 seed=entry.seed, stream=spec.stream,
                 tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
-                has_delay=has_delay,
+                has_delay=has_delay, has_churn=has_churn,
+                var_delay=var_delay,
                 keep_responses=spec.keep_per_request)
             for k, v in out.items():
                 outs.setdefault(k, []).append(np.asarray(v))
@@ -131,6 +168,7 @@ def run_cluster_experiment(spec) -> "ResultSet":
 
     entries = list(spec.cluster)
     k_max = max((e.n_nodes if e is not None else 1) for e in entries)
+    deadlines = spec.deadline_ops(F)
     entry_data: List[Dict[str, np.ndarray]] = []
     for entry in entries:
         if entry is None:
@@ -139,13 +177,16 @@ def run_cluster_experiment(spec) -> "ResultSet":
             # explicit multi-device cluster runs
             rs = _run_plain(replace(spec, cluster=None, devices=1))
             d = dict(rs.data)
+            # recomputed below from the stacked counters so every
+            # entry's attainment comes from the one shared helper
+            d.pop("slo_attainment", None)
             d["node_done"] = d["done"][..., None].astype(np.int32)
         elif entry.get_router().dynamic:
             d = _run_dynamic_entry(spec, entry, stacked, F, N,
-                                   kernels, beta_cols)
+                                   kernels, beta_cols, deadlines)
         else:
             d = run_static_entry(spec, entry, stacked, F, N, kernels,
-                                 beta_cols)
+                                 beta_cols, deadlines)
         d["node_done"] = _pad_node_dim(d["node_done"], k_max)
         entry_data.append(d)
 
@@ -157,6 +198,10 @@ def run_cluster_experiment(spec) -> "ResultSet":
                 f"{sorted(keys ^ set(d))}")
     data = {m: np.stack([d[m] for d in entry_data], axis=4)
             for m in keys}
+    if deadlines is not None:
+        from repro.core.jax_engine import slo_attainment
+        data["slo_attainment"] = slo_attainment(
+            data["deadline_miss"], data["done"])
 
     labels = _unique_labels([(e.label if e is not None else "none")
                              for e in entries])
@@ -174,12 +219,18 @@ def run_cluster_experiment(spec) -> "ResultSet":
                 backend=jax.default_backend(),
                 seeds=(list(spec.seeds) if spec.seeds is not None
                        else None),
+                deadlines=(None if spec.deadlines is None else
+                           (spec.deadlines
+                            if isinstance(spec.deadlines, float)
+                            else list(spec.deadlines))),
                 cluster=[None if e is None else dict(
                     n_nodes=e.n_nodes, router=e.router,
                     node_capacity=(list(e.node_capacity)
                                    if e.node_capacity is not None
                                    else None),
-                    net_delay=list(e.delays()), seed=e.seed)
+                    net_delay=list(e.delays()), seed=e.seed,
+                    has_churn=e.has_churn(),
+                    var_delay=e.delay_ops() is not None)
                     for e in entries],
                 default_betas={p: kernels[p].default_beta
                                for p in spec.policies})

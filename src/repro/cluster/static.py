@@ -79,6 +79,17 @@ def build_node_streams(arrays: Dict[str, np.ndarray],
         raise ValueError(
             f"build_node_streams: router {cspec.router!r} is dynamic; "
             "the static path needs a StaticRouter")
+    if cspec.has_churn():
+        raise ValueError(
+            f"cluster router {cspec.router!r} is static: a fixed "
+            "assignment cannot re-route around a down node. Churn "
+            "needs a dynamic router (jsq2, cold_aware, slo_aware)")
+    if cspec.delay_ops() is not None:
+        raise ValueError(
+            f"cluster router {cspec.router!r} is static: the "
+            "pre-partition fast path only supports constant "
+            "net_delay (a time-varying DelaySchedule would unsort "
+            "the per-node sub-streams); use a dynamic router")
     fn_id = np.asarray(arrays["fn_id"])
     arrival = np.asarray(arrays["arrival"])
     N, K = len(fn_id), cspec.n_nodes
@@ -116,7 +127,7 @@ def build_node_streams(arrays: Dict[str, np.ndarray],
 # metrics sum in any order; max is order-free
 _SUM_F = ("resp_sum", "slow_sum", "cold_time", "evict_time")
 _SUM_I = ("cold_starts", "evictions", "overflow", "stalled", "done",
-          "resp_hist")
+          "resp_hist", "deadline_miss")
 _SUM_F_TL = ("tl_resp_sum", "tl_exec_sum")
 _SUM_I_TL = ("tl_count",)
 
@@ -163,8 +174,8 @@ def merge_node_metrics(per_node: Dict[str, np.ndarray], node_axis: int,
 
 def run_static_entry(spec, entry: ClusterSpec,
                      stacked: Dict[str, np.ndarray], F: int, N: int,
-                     kernels: dict, beta_cols: Dict[str, np.ndarray]
-                     ) -> Dict[str, np.ndarray]:
+                     kernels: dict, beta_cols: Dict[str, np.ndarray],
+                     deadlines=None) -> Dict[str, np.ndarray]:
     """Execute one static `ClusterSpec` over the spec's grid.
 
     Returns (P, T, KC, B)-shaped metric arrays (plus trailing dims:
@@ -205,6 +216,7 @@ def run_static_entry(spec, entry: ClusterSpec,
                                for nc in entry.node_caps(c)])
                   for c in spec.capacities}
     L = KC * B
+    dl_op = None if deadlines is None else jnp.asarray(deadlines)
     keep_resp = bool(spec.keep_per_request) or not spec.stream
     chunk = resolve_lane_chunk(spec.lane_chunk)
     per_policy: Dict[str, Dict[str, np.ndarray]] = {}
@@ -232,7 +244,7 @@ def run_static_entry(spec, entry: ClusterSpec,
                         jnp.asarray(beta_l[lo:hi]),
                         jnp.float64(spec.prior),
                         jnp.float64(spec.threshold),
-                        jnp.asarray(nl[lo:hi]),
+                        jnp.asarray(nl[lo:hi]), dl_op,
                         kernel=kernels[policy], n_fns=F, capacity=C,
                         queue_cap=spec.queue_cap, stream=spec.stream,
                         window=spec.window, tl_bins=spec.tl_bins,

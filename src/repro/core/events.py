@@ -4,14 +4,20 @@ A single binary heap of ``(time, priority, seq)`` keys. Priorities order
 simultaneous events so that capacity freed at time t is visible to an
 arrival at the same t:
 
-    EXEC_DONE < COLD_DONE < TIMER < NODE_ARRIVAL < ARRIVAL
+    EXEC_DONE < COLD_DONE < TIMER < NODE_ARRIVAL < REROUTE < CHURN
+              < ARRIVAL
 
 ``NODE_ARRIVAL`` is the deferred-delivery leg of a routed request
 (dynamic cluster routing under per-node network delay: the router
 decides at the raw ARRIVAL, the node sees the request ``delay`` later);
 it sorts before raw ARRIVALs so an in-flight request reaches its node
-before the router decides the next one at the same instant. ``seq``
-breaks remaining ties FIFO, keeping runs fully deterministic.
+before the router decides the next one at the same instant.
+``REROUTE`` carries a request orphaned by a node failure back through
+the router, and ``CHURN`` is a node availability toggle (NODE_DOWN /
+NODE_UP, see docs/cluster.md); orphans re-route before any same-time
+churn toggle or fresh arrival, and churn resolves before the router
+sees a same-time arrival. ``seq`` breaks remaining ties FIFO, keeping
+runs fully deterministic.
 """
 from __future__ import annotations
 
@@ -27,7 +33,9 @@ class EventKind(IntEnum):
     COLD_DONE = 1     # a (re)initialisation finished      -> instance ready
     TIMER = 2         # policy-armed timer (OpenWhisk V2 threshold)
     NODE_ARRIVAL = 3  # a routed request reaches its node  -> FCP hook
-    ARRIVAL = 4       # a request arrives (router decides) -> FCP hook
+    REROUTE = 4       # an orphaned request re-enters the router
+    CHURN = 5         # a node goes down / comes back up
+    ARRIVAL = 6       # a request arrives (router decides) -> FCP hook
 
 
 @dataclass(order=True)

@@ -372,7 +372,8 @@ class EngineCtx:
     def __init__(self, *, fn_id2, arrival2, exec2, cold2, evict2,
                  pos_rids2, pos_off2, slabs, win_base, win_w, tix,
                  cap_mask, beta, prior, threshold, k, n, f, c, q,
-                 stream=False, tl_bins=0, tl_bucket=60.0):
+                 stream=False, tl_bins=0, tl_bucket=60.0,
+                 deadlines=None):
         flat = lambda a: (None if a is None          # noqa: E731
                           else a.reshape(-1))
         self._fn = flat(fn_id2)     # (T*N,) shared, flattened view
@@ -410,6 +411,14 @@ class EngineCtx:
         self.stream = stream        # static: drop per-request records
         self.tl_bins = tl_bins      # static: timeline fold bins (0=off)
         self.tl_bucket = tl_bucket
+        self.deadlines = deadlines  # (F,) per-fn SLO deadlines or None
+        # fold-site gates: the cluster's churn loop folds metrics at
+        # EXEC_DONE (a drained request may be re-dispatched, so the
+        # dispatch-time record would double-count) and writes exact-
+        # mode per-request records directly per event (the d_* overlay
+        # assumes one record per rid per segment)
+        self.fold_at_dispatch = True
+        self.direct_records = False
 
     def _dual(self, full, slab, rid):
         """Windowed read of ``full[tix, rid]``: slab when ``rid`` is in
@@ -726,16 +735,27 @@ def dispatch(ctx, s, slot, rid, t, on):
     s["slot_req"] = s["slot_req"].at[si].set(
         jnp.asarray(rid, jnp.int32), mode="drop")
     s["slot_used"] = s["slot_used"].at[si].set(t, mode="drop")
-    s["ev_rid"] = jnp.where(on, jnp.asarray(rid, jnp.int32),
-                            s["ev_rid"])
-    s["ev_comp"] = jnp.where(on, comp, s["ev_comp"])
-    s["ev_exec"] = jnp.where(on, e, s["ev_exec"])
+    if ctx.fold_at_dispatch:
+        s["ev_rid"] = jnp.where(on, jnp.asarray(rid, jnp.int32),
+                                s["ev_rid"])
+        s["ev_comp"] = jnp.where(on, comp, s["ev_comp"])
+        s["ev_exec"] = jnp.where(on, e, s["ev_exec"])
     if not ctx.stream:
-        ki = jnp.where(on, ctx.k, ctx.seg_n)
-        s["d_rid"] = s["d_rid"].at[ki].set(
-            jnp.asarray(rid, jnp.int32), mode="drop")
-        s["d_start"] = s["d_start"].at[ki].set(t, mode="drop")
-        s["d_comp"] = s["d_comp"].at[ki].set(comp, mode="drop")
+        if ctx.direct_records:
+            # churn can re-dispatch a drained rid within one segment;
+            # the overlay's one-slot-per-rid assumption breaks, so pay
+            # a per-event scatter (last write wins, matching the
+            # reference's completion rewrite)
+            ri = _gidx(on, rid, ctx.N)
+            s["start"] = s["start"].at[ri].set(t, mode="drop")
+            s["completion"] = s["completion"].at[ri].set(comp,
+                                                         mode="drop")
+        else:
+            ki = jnp.where(on, ctx.k, ctx.seg_n)
+            s["d_rid"] = s["d_rid"].at[ki].set(
+                jnp.asarray(rid, jnp.int32), mode="drop")
+            s["d_start"] = s["d_start"].at[ki].set(t, mode="drop")
+            s["d_comp"] = s["d_comp"].at[ki].set(comp, mode="drop")
     return s
 
 
@@ -761,6 +781,11 @@ def _fold_event(ctx, s):
     s["hist"] = s["hist"].at[
         jnp.where(on, hist_bin(resp), jnp.int32(HIST_BINS))
     ].add(1, mode="drop")
+    if ctx.deadlines is not None:
+        fnr = ctx.fn_at(rid)
+        dl = ctx.deadlines[jnp.clip(fnr, 0, ctx.F - 1)]
+        s["dl_miss"] = s["dl_miss"].at[
+            _gidx(on & (resp > dl), fnr, ctx.F)].add(1, mode="drop")
     if ctx.tl_bins:
         tb = jnp.clip((arr / ctx.tl_bucket).astype(jnp.int32),
                       0, ctx.tl_bins - 1)
@@ -851,9 +876,9 @@ def hist_cdf(hist):
                                     "queue_cap", "stream", "window",
                                     "tl_bins"))
 def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
-              cap_mask, beta, prior, threshold, n_live=None, *, kernel,
-              n_fns, capacity, queue_cap, stream=False, window=0,
-              tl_bins=0, tl_bucket=60.0):
+              cap_mask, beta, prior, threshold, n_live=None,
+              deadlines=None, *, kernel, n_fns, capacity, queue_cap,
+              stream=False, window=0, tl_bins=0, tl_bucket=60.0):
     """Lane-batched engine. Trace arrays are shared (T, ...) operands;
     ``trace_ix``, ``cap_mask`` and ``beta`` carry the leading lane
     dimension L (one lane per sweep point). The loop nest is windows ->
@@ -962,6 +987,9 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         s["d_comp"] = jnp.zeros((L, SEG), jnp.float64)
         s["start"] = jnp.full((L, N), -1.0, jnp.float64)
         s["completion"] = jnp.full((L, N), -1.0, jnp.float64)
+    if deadlines is not None:
+        deadlines = jnp.asarray(deadlines, jnp.float64)
+        s["dl_miss"] = jnp.zeros((L, F), jnp.int32)
     if tl_bins:
         s["tl_cnt"] = jnp.zeros((L, tl_bins), jnp.int32)
         s["tl_resp"] = jnp.zeros((L, tl_bins), jnp.float64)
@@ -1050,7 +1078,7 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
                             cap_mask=cap_mask, beta=beta, prior=prior,
                             threshold=threshold, k=k, n=N, f=F, c=C,
                             q=Q, stream=stream, tl_bins=tl_bins,
-                            tl_bucket=tl_bucket)
+                            tl_bucket=tl_bucket, deadlines=deadlines)
             ci = s["ci"]
             active = (ci[CI_DONE] < nl_l) & (ci[CI_STALL] == 0)
             na = ci[CI_NEXT]
@@ -1195,6 +1223,8 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         out["tl_count"] = final["tl_cnt"]
         out["tl_resp_sum"] = final["tl_resp"]
         out["tl_exec_sum"] = final["tl_exec"]
+    if deadlines is not None:
+        out["deadline_miss"] = final["dl_miss"]
     if not stream:
         out["start"] = final["start"]
         out["completion"] = final["completion"]
@@ -1269,9 +1299,9 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
                                     "queue_cap", "stream", "window",
                                     "tl_bins", "keep_responses"))
 def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                   threshold, n_live=None, *, kernel, n_fns, capacity,
-                   queue_cap, stream=True, window=0, tl_bins=0,
-                   tl_bucket=60.0, keep_responses=False):
+                   threshold, n_live=None, deadlines=None, *, kernel,
+                   n_fns, capacity, queue_cap, stream=True, window=0,
+                   tl_bins=0, tl_bucket=60.0, keep_responses=False):
     """Lane-batched run + on-device metric reduction. Means and
     slowdowns come from the streaming accumulators in *both* modes (so
     streamed and exact sweeps agree bitwise); p99 is exact in exact
@@ -1285,8 +1315,8 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
     if keep_responses and stream:
         raise ValueError("keep_responses requires stream=False")
     out = _simulate(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                    threshold, n_live, kernel=kernel, n_fns=n_fns,
-                    capacity=capacity, queue_cap=queue_cap,
+                    threshold, n_live, deadlines, kernel=kernel,
+                    n_fns=n_fns, capacity=capacity, queue_cap=queue_cap,
                     stream=stream, window=window, tl_bins=tl_bins,
                     tl_bucket=tl_bucket)
     N = fn.shape[1]
@@ -1324,9 +1354,22 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
         res["tl_count"] = out["tl_count"]
         res["tl_resp_sum"] = out["tl_resp_sum"]
         res["tl_exec_sum"] = out["tl_exec_sum"]
+    if deadlines is not None:
+        res["deadline_miss"] = out["deadline_miss"]
     if keep_responses:
         res["response"] = resp
     return res
+
+
+def slo_attainment(deadline_miss, done):
+    """Fraction of completed requests that met their per-fn deadline:
+    ``1 - deadline_miss.sum(-1) / done``. Computed in numpy *outside*
+    jit and shared by every tier (single-node runner, dynamic cluster,
+    static merge) so the derived metric is bitwise identical no matter
+    which tier produced the counters."""
+    miss = np.asarray(deadline_miss)
+    d = np.maximum(np.asarray(done, dtype=np.float64), 1.0)
+    return 1.0 - miss.sum(axis=-1) / d
 
 
 def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],

@@ -1,0 +1,266 @@
+"""Fault-injection layer (PR 7): churn schedules, the NODE_DOWN /
+NODE_UP drain-and-re-route rail, time-varying per-node delay, the
+``slo_aware`` router, and deadline/SLO accounting — conservation,
+K=1 bitwise equivalence, and request-for-request parity against the
+Python reference cluster."""
+import numpy as np
+import pytest
+
+from repro.api import (ClusterSpec, DelaySchedule, ExperimentSpec,
+                       PeriodicChurn, SyntheticTrace, run_experiment)
+from repro.core.jax_engine import slo_attainment
+
+SRC = SyntheticTrace.make(n_functions=12, n_requests=400, seed=3,
+                          utilization=0.25)
+_ARR = SRC.arrays()["arrival"]
+SPAN = float(_ARR.max())
+# windows anchored to the trace's own timeline so they always cut
+# through live work whatever the generator produces
+T30, T45, T60 = (float(np.quantile(_ARR, q)) for q in (0.3, 0.45, 0.6))
+EXACT = dict(traces=[SRC], capacities=(3,), queue_cap=256,
+             stream=False, keep_per_request=True)
+
+
+def _ref(policy, cs, **kw):
+    from repro.cluster.reference import simulate_cluster_reference
+    return simulate_cluster_reference(SRC.to_trace(), policy, cs,
+                                      capacity=3, **kw)
+
+
+def _assert_parity(rs, ref, policy, msg=""):
+    np.testing.assert_allclose(rs.value("response", policy=policy),
+                               ref["response"], rtol=1e-9, atol=1e-9,
+                               err_msg=msg)
+    assert int(rs.value("cold_starts", policy=policy)) \
+        == ref["cold_starts"], msg
+    np.testing.assert_array_equal(
+        rs.value("node_done", policy=policy), ref["node_done"],
+        err_msg=msg)
+
+
+# ----------------------------------------------------- spec hardening
+def test_churn_spec_validation_errors():
+    with pytest.raises(ValueError, match="churn\\[1\\]"):
+        ClusterSpec(n_nodes=2, router="jsq2",
+                    churn=(None, ((3.0, 2.0),))).validate()
+    with pytest.raises(ValueError, match="strictly increasing"):
+        ClusterSpec(n_nodes=1, router="jsq2",
+                    churn=(((1.0, 5.0), (4.0, 8.0)),)).validate()
+    with pytest.raises(ValueError, match="NaN"):
+        ClusterSpec(n_nodes=1, router="jsq2",
+                    churn=(((float("nan"), 2.0),),)).validate()
+    with pytest.raises(ValueError, match="duty"):
+        ClusterSpec(router="jsq2",
+                    churn=PeriodicChurn(10.0, duty=0.0)).validate()
+    with pytest.raises(ValueError, match="period"):
+        ClusterSpec(router="jsq2",
+                    churn=PeriodicChurn(-1.0)).validate()
+    with pytest.raises(ValueError, match="churn"):
+        ClusterSpec(n_nodes=3, router="jsq2",
+                    churn=(None, ())).validate()
+    with pytest.raises(ValueError, match="net_delay"):
+        ClusterSpec(net_delay=float("nan")).validate()
+    with pytest.raises(ValueError, match="net_delay"):
+        ClusterSpec(net_delay=-0.5).validate()
+    with pytest.raises(ValueError, match="node_capacity"):
+        ClusterSpec(n_nodes=2, node_capacity=(4, 0)).validate()
+    with pytest.raises(ValueError, match="times must start at 0"):
+        DelaySchedule(times=(1.0,), values=(0.1,)).validate()
+    with pytest.raises(ValueError, match="strictly increasing"):
+        DelaySchedule(times=(0.0, 2.0, 2.0),
+                      values=(0.1, 0.2, 0.3)).validate()
+    # a PeriodicChurn broadcasts to every node
+    cs = ClusterSpec(n_nodes=3, router="jsq2",
+                     churn=PeriodicChurn(10.0, duty=0.5)).validate()
+    assert len(cs.churn) == 3 and cs.has_churn()
+    assert "+churn" in cs.label
+
+
+def test_static_tier_rejects_churn_and_delay_schedules():
+    cs = ClusterSpec(n_nodes=2, router="hash",
+                     churn=(((T30, T45),), None))
+    with pytest.raises(ValueError, match="static"):
+        run_experiment(ExperimentSpec(
+            traces=[SRC], policies=("esff",), capacities=(3,),
+            cluster=[cs]))
+    ds = DelaySchedule(times=(0.0, 5.0), values=(0.01, 0.2))
+    with pytest.raises(ValueError, match="static"):
+        run_experiment(ExperimentSpec(
+            traces=[SRC], policies=("esff",), capacities=(3,),
+            cluster=[ClusterSpec(n_nodes=2, router="hash",
+                                 delay_schedule=ds)]))
+
+
+def test_timer_policy_rejected_under_churn():
+    cs = ClusterSpec(n_nodes=2, router="jsq2",
+                     churn=(((T30, T45),), None))
+    with pytest.raises(ValueError, match="timer"):
+        run_experiment(ExperimentSpec(
+            traces=[SRC], policies=("openwhisk_v2",),
+            capacities=(3,), cluster=[cs]))
+
+
+# --------------------------------------------------- conservation
+def test_conservation_under_mid_flight_node_death():
+    """A node dies while holding running + queued work: nothing is
+    lost, nothing is double-counted — every request completes exactly
+    once, and the survivors match the Python reference request for
+    request."""
+    cs = ClusterSpec(n_nodes=4, router="jsq2",
+                     churn=(((T30, T60),), None, None, None))
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff", "sff"), cluster=[cs], **EXACT))
+    nd = rs["node_done"]
+    assert np.all(nd.sum(axis=-1) == SRC.n_requests)
+    assert np.all(rs["done"] == SRC.n_requests)
+    for policy in ("esff", "sff"):
+        resp = rs.value("response", policy=policy)
+        assert np.all(resp > 0)
+        _assert_parity(rs, _ref(policy, cs), policy, policy)
+
+
+def test_k1_always_up_churn_bitwise_identical_to_plain_dynamic():
+    """Trivial availability schedules (duty=1 periodic, empty window
+    lists) lower onto the plain dynamic loop — bitwise, not just
+    numerically."""
+    grid = dict(policies=("esff",), **EXACT)
+    plain = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=1, router="jsq2")], **grid))
+    for churn in (PeriodicChurn(10.0, duty=1.0), ((),)):
+        rs = run_experiment(ExperimentSpec(
+            cluster=[ClusterSpec(n_nodes=1, router="jsq2",
+                                 churn=churn)], **grid))
+        for m in plain.data:
+            np.testing.assert_array_equal(
+                plain.data[m], rs.data[m], err_msg=str(churn))
+
+
+# ------------------------------------------------ parity vs reference
+@pytest.mark.parametrize("router", ("jsq2", "slo_aware"))
+@pytest.mark.parametrize("policy", ("esff", "sff"))
+def test_periodic_churn_parity_vs_python_reference(router, policy):
+    """K=4 with staggered periodic availability (the LEO-pass shape):
+    drains, re-routes and parked arrivals, request for request against
+    K ordinary Python engines."""
+    cs = ClusterSpec(
+        n_nodes=4, router=router,
+        churn=(None,
+               PeriodicChurn(SPAN / 3, duty=0.7),
+               PeriodicChurn(SPAN / 3, duty=0.7, phase=SPAN / 9),
+               PeriodicChurn(SPAN / 3, duty=0.7, phase=2 * SPAN / 9)))
+    rs = run_experiment(ExperimentSpec(
+        policies=(policy,), cluster=[cs], **EXACT))
+    assert np.all(rs["done"] == SRC.n_requests)
+    _assert_parity(rs, _ref(policy, cs), policy,
+                   f"{router}/{policy}")
+
+
+def test_churn_with_net_delay_parity_vs_python_reference():
+    """Churn + heterogeneous constant delay: orphaned requests re-pay
+    the delivery leg of whichever node they re-route to; responses
+    measure from the raw arrival."""
+    cs = ClusterSpec(n_nodes=3, router="jsq2",
+                     net_delay=(0.0, 0.013, 0.027),
+                     churn=(None, ((T30, T60),), None))
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff",), cluster=[cs], **EXACT))
+    _assert_parity(rs, _ref("esff", cs), "esff")
+
+
+def test_all_down_window_parks_and_resumes():
+    """Every node down over [T30, T45]: arrivals in the window park
+    (no loss), resume in FIFO order at NODE_UP, and the whole run
+    still matches the reference."""
+    win = ((T30, T45),)
+    cs = ClusterSpec(n_nodes=2, router="jsq2", churn=(win, win))
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff",), cluster=[cs], **EXACT))
+    assert np.all(rs["done"] == SRC.n_requests)
+    resp = rs.value("response", policy="esff")
+    arr = SRC.arrays()["arrival"]
+    inside = (arr >= T30) & (arr < T45)
+    assert inside.any()
+    # a parked request cannot start before the cluster comes back
+    comp = arr + resp
+    assert np.all(comp[inside] >= T45)
+    _assert_parity(rs, _ref("esff", cs), "esff")
+
+
+def test_var_delay_parity_vs_python_reference():
+    """Time-varying per-node delay (periodic LEO-style schedule), no
+    churn: the router's slo_aware delay term and the deferred rail
+    both sample the schedule at decision time."""
+    ds = DelaySchedule(times=(0.0, SPAN / 4), values=(0.005, 0.08),
+                       period=SPAN / 2)
+    for router in ("jsq2", "slo_aware"):
+        cs = ClusterSpec(n_nodes=3, router=router,
+                         net_delay=(0.0, 0.01, 0.0),
+                         delay_schedule=(None, None, ds))
+        rs = run_experiment(ExperimentSpec(
+            policies=("esff",), cluster=[cs], **EXACT))
+        _assert_parity(rs, _ref("esff", cs), "esff", router)
+
+
+# ------------------------------------------------------ slo routing
+def test_slo_aware_registered_and_degrades_to_cold_aware():
+    from repro.cluster.routers import available_routers
+    assert "slo_aware" in available_routers()
+    grid = dict(policies=("esff",), **EXACT)
+    a = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=4, router="cold_aware")], **grid))
+    b = run_experiment(ExperimentSpec(
+        cluster=[ClusterSpec(n_nodes=4, router="slo_aware")], **grid))
+    for m in ("response", "cold_starts", "node_done"):
+        np.testing.assert_array_equal(a[m], b[m], err_msg=m)
+
+
+# --------------------------------------------------------- deadlines
+def test_deadline_miss_matches_exact_responses():
+    """Single-node tier: the folded per-function miss counters equal
+    a recount over the exact per-request responses, and the derived
+    attainment uses the shared helper."""
+    dl = 0.35
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff", "sff"), deadlines=dl, **EXACT))
+    fn = SRC.arrays()["fn_id"]
+    for pi, policy in enumerate(("esff", "sff")):
+        resp = rs.value("response", policy=policy)
+        miss = rs.value("deadline_miss", policy=policy)
+        expect = np.bincount(fn[resp > dl], minlength=12)
+        np.testing.assert_array_equal(miss, expect, err_msg=policy)
+    np.testing.assert_array_equal(
+        rs["slo_attainment"],
+        slo_attainment(rs["deadline_miss"], rs["done"]))
+
+
+def test_deadlines_through_cluster_tiers_and_reference():
+    """The deadlines= knob reaches all three cluster tiers; under
+    churn the dynamic tier's counters equal the reference's (raw
+    arrival convention)."""
+    dl = np.full((12,), 0.35)
+    cs = ClusterSpec(n_nodes=3, router="jsq2",
+                     churn=(None, ((T30, T60),), None))
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff",), deadlines=0.35,
+        cluster=[None, ClusterSpec(n_nodes=2, router="hash"), cs],
+        **EXACT))
+    assert rs["deadline_miss"].shape[-1] == 12
+    ref = _ref("esff", cs, deadlines=dl)
+    np.testing.assert_array_equal(
+        rs.value("deadline_miss", policy="esff", cluster=cs.label),
+        ref["deadline_miss"])
+    np.testing.assert_array_equal(
+        rs["slo_attainment"],
+        slo_attainment(rs["deadline_miss"], rs["done"]))
+
+
+def test_deadline_validation_errors():
+    with pytest.raises(ValueError, match="deadlines"):
+        ExperimentSpec(traces=[SRC], deadlines=-1.0).validate()
+    with pytest.raises(ValueError, match="deadlines"):
+        ExperimentSpec(traces=[SRC],
+                       deadlines=float("nan")).validate()
+    with pytest.raises(ValueError, match="12"):
+        run_experiment(ExperimentSpec(
+            traces=[SRC], policies=("esff",), capacities=(3,),
+            deadlines=(0.1, 0.2)))

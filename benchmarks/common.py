@@ -108,3 +108,13 @@ def timed(fn, *args, repeats: int = 3, **kw):
         result = fn(*args, **kw)
         best = min(best, time.perf_counter() - t0)
     return result, best
+
+
+def bench_repeats(n_requests: int) -> int:
+    """Best-of-k repeat count for a timed benchmark row, scaled to the
+    row's size: small rows have sub-second walls that flap most under
+    shared CPUs, so they get the most repeats. Shared by every
+    figure's timed pass so the ``--baseline`` regression gate sees the
+    same de-flaking everywhere."""
+    return (5 if n_requests <= 30_000
+            else 3 if n_requests <= 300_000 else 2)

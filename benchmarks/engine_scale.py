@@ -29,8 +29,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (default_trace_source, emit,
-                               enable_compilation_cache, timed)
+from benchmarks.common import (bench_repeats, default_trace_source,
+                               emit, enable_compilation_cache, timed)
 from repro.api import ExperimentSpec, NpzTrace, run_experiment
 from repro.core.jax_engine import DEFAULT_WINDOW, resolve_lane_chunk
 
@@ -53,9 +53,8 @@ def _run_one(src, policy, *, name, window, devices, t_gen=0.0):
                           capacities=(CAPACITY,), queue_cap=QUEUE_CAP,
                           stream=True, window=window, devices=devices)
     run_experiment(spec)
-    repeats = 5 if src.n_requests <= 30_000 else \
-        3 if src.n_requests <= 300_000 else 2
-    rs, dt = timed(run_experiment, spec, repeats=repeats)
+    rs, dt = timed(run_experiment, spec,
+                   repeats=bench_repeats(src.n_requests))
     n = rs.meta["n_requests"]
     rs.check()
     return dict(

@@ -24,8 +24,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import (default_trace_source, emit,
-                               enable_compilation_cache, timed)
+from benchmarks.common import (bench_repeats, default_trace_source,
+                               emit, enable_compilation_cache, timed)
 from repro.api import (ClusterSpec, ExperimentSpec, PeriodicChurn,
                        run_experiment)
 
@@ -87,7 +87,7 @@ def run(seed: int = 0, routers=ROUTERS, ks=KS, agg=AGG,
 def throughput_rows(src, entries, agg, deadline=DEADLINE,
                     queue_cap=QUEUE_CAP):
     """Timed per-(router, K) re-runs of the churn rail (jit warm from
-    the figure pass, best-of-3): the ``req_s`` rows
+    the figure pass, size-scaled best-of-k): the ``req_s`` rows
     `benchmarks/run.py --baseline` regression-gates alongside the
     no-churn cluster curve."""
     rows = []
@@ -95,9 +95,9 @@ def throughput_rows(src, entries, agg, deadline=DEADLINE,
         spec = ExperimentSpec(traces=[src], policies=("esff",),
                               capacities=(agg,), queue_cap=queue_cap,
                               deadlines=deadline, cluster=[e])
-        run_experiment(spec)                 # warm this topology
-        rs, dt = timed(run_experiment, spec, repeats=3)
-        n = rs.meta["n_requests"]
+        warm = run_experiment(spec)          # warm this topology
+        n = warm.meta["n_requests"]
+        rs, dt = timed(run_experiment, spec, repeats=bench_repeats(n))
         rows.append(dict(
             name=f"churn_{e.router}_K{e.n_nodes}", router=e.router,
             n_nodes=e.n_nodes, n_requests=n, us_per_call=dt * 1e6,

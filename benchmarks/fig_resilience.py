@@ -1,0 +1,149 @@
+"""Goodput and SLO attainment under request-level failure injection.
+
+The resilience question the churn figure cannot ask: when individual
+*requests* fail (crashes, injected faults, timeouts) rather than whole
+nodes, how much goodput does a retry policy buy back — and what does
+load-shedding admission control cost in offered work? The surface is
+fail_prob x retry-policy x K: each (fail_prob, retry) pair is one
+`repro.api.ExperimentSpec` (fault knobs are spec-level), whose
+``cluster`` axis carries jsq2 topologies at K in {1, 4, 8} with
+``node_capacity = AGG // K``, a scalar deadline for the SLO fold, and
+``on_overflow="shed"`` so pressure from retries degrades goodput
+instead of erroring the run.
+
+Emitted per (fail_prob, retry, K): goodput (done/N), SLO attainment,
+mean response, retried/shed/failed_exhausted counts. A second, timed
+pass records per-(router, K) ``req_s`` rows (``resil_<router>_K<n>``,
+plus a ``resil_breaker_K4`` circuit-breaker row) — the
+BENCH_<stamp>.json throughput trajectory of the resilience rail,
+gated by ``benchmarks/run.py --baseline``.
+
+    PYTHONPATH=src python -m benchmarks.fig_resilience [--quick]
+        [--agg 32] [--deadline 0.35]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (bench_repeats, default_trace_source,
+                               emit, enable_compilation_cache, timed)
+from repro.api import (ClusterSpec, ExperimentSpec, RetryPolicy,
+                       run_experiment)
+
+AGG = 32                      # fixed aggregate slot budget
+KS = (1, 4, 8)
+ROUTER = "jsq2"
+FAIL_PROBS = (0.0, 0.05, 0.15, 0.3)
+RETRIES = (
+    ("no_retry", RetryPolicy(max_attempts=1)),
+    ("retry3", RetryPolicy(max_attempts=3, base=0.05, cap=1.0)),
+    ("retry3_jitter", RetryPolicy(max_attempts=3, base=0.05, cap=1.0,
+                                  jitter=0.3)),
+)
+DEADLINE = 0.35
+QUEUE_CAP = 1 << 15
+FAIL_SEED = 99
+# the timed pass pins one mid-curve fault point per (router, K)
+BENCH_FAIL_PROB = 0.15
+BENCH_RETRY = RETRIES[1][1]
+
+
+def _entries(router, ks, agg):
+    return [ClusterSpec(n_nodes=k, router=router,
+                        node_capacity=(agg // k,) * k)
+            for k in ks if agg % k == 0]
+
+
+def run(seed: int = 0, ks=KS, agg=AGG, fail_probs=FAIL_PROBS,
+        retries=RETRIES, deadline=DEADLINE, head=None):
+    src = default_trace_source(seed)
+    if head:
+        src = src.head(head)
+    entries = _entries(ROUTER, ks, agg)
+    rows = []
+    for fp in fail_probs:
+        for rname, rp in retries:
+            rs = run_experiment(ExperimentSpec(
+                traces=[src], policies=("esff",), capacities=(agg,),
+                queue_cap=QUEUE_CAP, deadlines=deadline,
+                cluster=entries, fail_prob=fp, retry=rp,
+                on_overflow="shed", fail_seed=FAIL_SEED)).check()
+            n = rs.meta["n_requests"]
+            for e in entries:
+                cell = rs.sel(cluster=e.label)
+                rows.append(dict(
+                    fail_prob=fp, retry=rname, n_nodes=e.n_nodes,
+                    node_capacity=agg // e.n_nodes,
+                    goodput=cell.value("goodput"),
+                    slo_attainment=cell.value("slo_attainment"),
+                    mean_response=cell.value("mean_response"),
+                    retried=int(cell.value("retried")),
+                    shed=int(cell.value("shed")),
+                    failed_exhausted=int(
+                        cell.value("failed_exhausted")),
+                    n_requests=n,
+                ))
+    return rows, src, entries
+
+
+def throughput_rows(src, agg, ks=KS, deadline=DEADLINE,
+                    queue_cap=QUEUE_CAP):
+    """Timed per-(router, K) re-runs of the resilience rail at the
+    pinned mid-curve fault point (jit warm from the figure pass,
+    size-scaled best-of-k): the ``req_s`` rows
+    `benchmarks/run.py --baseline` regression-gates alongside the
+    cluster and churn curves."""
+    rows = []
+    entries = _entries(ROUTER, ks, agg)
+    entries += [ClusterSpec(n_nodes=4, router="breaker",
+                            node_capacity=(agg // 4,) * 4)]
+    for e in entries:
+        spec = ExperimentSpec(
+            traces=[src], policies=("esff",), capacities=(agg,),
+            queue_cap=queue_cap, deadlines=deadline, cluster=[e],
+            fail_prob=BENCH_FAIL_PROB, retry=BENCH_RETRY,
+            on_overflow="shed", fail_seed=FAIL_SEED)
+        warm = run_experiment(spec)          # warm this topology
+        n = warm.meta["n_requests"]
+        rs, dt = timed(run_experiment, spec, repeats=bench_repeats(n))
+        rows.append(dict(
+            name=f"resil_{e.router}_K{e.n_nodes}", router=e.router,
+            n_nodes=e.n_nodes, n_requests=n, us_per_call=dt * 1e6,
+            req_s=n / dt, derived=f"{n / dt:.0f} req/s"))
+    return rows
+
+
+def main(argv=None):
+    enable_compilation_cache()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 fail probs, 2 retries, K in (1, 4), "
+                         "4k-request head")
+    ap.add_argument("--agg", type=int, default=AGG)
+    ap.add_argument("--deadline", type=float, default=DEADLINE)
+    args = ap.parse_args(argv)
+    fps = (0.0, 0.15) if args.quick else FAIL_PROBS
+    retries = RETRIES[:2] if args.quick else RETRIES
+    ks = (1, 4) if args.quick else KS
+    head = 4000 if args.quick else None
+
+    rows, src, _ = run(ks=ks, agg=args.agg, fail_probs=fps,
+                       retries=retries, deadline=args.deadline,
+                       head=head)
+    emit(rows, rows[0].keys())
+    print()
+    for rname, _ in retries:
+        curve = {x["fail_prob"]: x["goodput"] for x in rows
+                 if x["retry"] == rname and x["n_nodes"] == ks[-1]}
+        pts = "  ".join(f"p={p}:{g:.3f}"
+                        for p, g in sorted(curve.items()))
+        print(f"# goodput K={ks[-1]} under {rname}: {pts}")
+    tp = throughput_rows(src, args.agg, ks=ks,
+                         deadline=args.deadline)
+    print()
+    emit(tp, tp[0].keys())
+    return rows + tp
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,10 @@ engine-scale sections) so the perf trajectory is tracked across PRs.
 engines and exits non-zero on any Python/JAX mismatch — including the
 streaming-vs-exact gate (bitwise-equal means, p99 within one histogram
 bin), the ``sweep()``-shim bitwise-parity gate against the
-`repro.api.ExperimentSpec` path, a forced 2-device CPU subprocess
+`repro.api.ExperimentSpec` path, the resilience gates (trivial fault
+knobs lower bitwise onto the unchanged engine; faults + load shedding
+conserve every request; the circuit breaker trips and recovers), a
+forced 2-device CPU subprocess
 (``--xla_force_host_platform_device_count=2``) asserting the sharded
 runner is bitwise-identical to single-device, and a static scan that
 fails on DeprecationWarning-free use of the old entry points
@@ -36,7 +39,8 @@ import sys
 import time
 
 SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "cluster",
-            "churn", "kernels", "simthroughput", "enginescale")
+            "churn", "resilience", "kernels", "simthroughput",
+            "enginescale")
 
 
 def smoke() -> int:
@@ -205,6 +209,62 @@ def smoke() -> int:
           + ("parked arrivals complete after the window  OK" if ok
              else "MISMATCH"))
 
+    # resilience gates: the request-level fault rail must (a) leave
+    # trivial-knob specs on the unchanged code path bitwise, (b)
+    # conserve every request as exactly one of done/shed/
+    # failed-exhausted under faults + load shedding across the
+    # dynamic AND static tiers, and (c) trip the circuit breaker
+    # under a high failure rate and keep completing work afterwards
+    from repro.api import RetryPolicy
+    rk = dict(traces=[src], policies=("esff",),
+              capacities=(capacity,), queue_cap=256,
+              cluster=(None, ClusterSpec(n_nodes=2, router="hash"),
+                       ClusterSpec(n_nodes=2, router="jsq2")))
+    r0 = run_experiment(ExperimentSpec(**rk))
+    r1 = run_experiment(ExperimentSpec(
+        **rk, fail_prob=0.0, timeouts=None, on_overflow="error"))
+    ok = (set(r0.data) == set(r1.data)
+          and all(np.array_equal(r0.data[m], r1.data[m])
+                  for m in r0.data)
+          and "shed" not in r0.data)
+    failures += 0 if ok else 1
+    print("trivial fault knobs: "
+          + ("lower onto the unchanged engine bitwise  OK" if ok
+             else "MISMATCH"))
+
+    faults = dict(fail_prob=0.2, timeouts=8.0, fail_seed=99,
+                  retry=RetryPolicy(max_attempts=3, base=0.05,
+                                    cap=1.0, jitter=0.3),
+                  on_overflow="shed")
+    sh = run_experiment(ExperimentSpec(
+        traces=[src], policies=("esff",), capacities=(capacity,),
+        queue_cap=8, **faults,
+        cluster=(None, ClusterSpec(n_nodes=2, router="hash"),
+                 ClusterSpec(n_nodes=2, router="jsq2")))).check()
+    tot = (sh.data["done"] + sh.data["shed"]
+           + sh.data["failed_exhausted"])
+    ok = (bool(np.all(tot == src.n_requests))
+          and bool(np.all(sh.data["goodput"]
+                          == sh.data["done"] / src.n_requests)))
+    failures += 0 if ok else 1
+    print("shed-mode conservation (dynamic + static tiers): "
+          + ("done+shed+failed_exhausted == N  OK" if ok
+             else "MISMATCH"))
+
+    br = run_experiment(ExperimentSpec(
+        traces=[src], policies=("esff",), capacities=(capacity,),
+        queue_cap=256, **dict(faults, fail_prob=0.6),
+        cluster=[ClusterSpec(n_nodes=4, router="breaker")])).check()
+    trips = int(br.data["breaker_trips"].sum())
+    tot = (br.data["done"] + br.data["shed"]
+           + br.data["failed_exhausted"])
+    ok = (trips > 0 and int(br.data["done"].sum()) > 0
+          and bool(np.all(tot == src.n_requests)))
+    failures += 0 if ok else 1
+    print("breaker trips and recovers: "
+          + (f"{trips} trips, work still completes  OK" if ok
+             else "MISMATCH"))
+
     # NpzTrace round-trip: save_npz -> NpzTrace -> run must match the
     # in-memory source bitwise (keeps the real-Azure path covered in
     # containers without the dataset)
@@ -232,7 +292,8 @@ def smoke() -> int:
           f"{len(POLICIES)} engine-equivalence checks + streaming, "
           f"shim-parity, cluster-K=1 (incl. timer rail), dynamic "
           f"conservation, churn (conservation, trivial lowering, "
-          f"all-down park), npz round-trip, 2-device and "
+          f"all-down park), resilience (trivial lowering, shed "
+          f"conservation, breaker), npz round-trip, 2-device and "
           f"deprecation gates, {failures} failures")
     return failures
 
@@ -432,17 +493,42 @@ def main() -> None:
     from benchmarks.common import enable_compilation_cache
     enable_compilation_cache()
     if args.smoke:
+        import contextlib
+        import io
+
+        class _Tee(io.TextIOBase):
+            def write(self, s):
+                sys.__stdout__.write(s)
+                buf.write(s)
+                return len(s)
+
+            def flush(self):
+                sys.__stdout__.flush()
+
         t0 = time.perf_counter()
-        failures = smoke()
-        print(f"# smoke total: {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr)
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(_Tee()):
+            failures = smoke()
+        wall = time.perf_counter() - t0
+        print(f"# smoke total: {wall:.1f}s", file=sys.stderr)
+        # machine-readable gate report: CI uploads it as an artifact
+        # so the smoke trajectory (gates + wall) is tracked per run
+        report = dict(stamp=time.strftime("%Y%m%d_%H%M%S"),
+                      smoke=True, wall_s=round(wall, 1),
+                      failures=failures,
+                      gates=[ln for ln in buf.getvalue().splitlines()
+                             if ln and not ln.startswith("#")])
+        path = args.json or f"BENCH_smoke_{report['stamp']}.json"
+        with open(path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {path}", file=sys.stderr)
         sys.exit(1 if failures else 0)
     only = set(args.only.split(",")) if args.only else set(SECTIONS)
 
     from benchmarks import (ablation_esffh, engine_scale, fig5_capacity,
                             fig6_intensity, fig7_cdf, fig8_timeline,
-                            fig_churn, fig_cluster, kernels_bench,
-                            sim_throughput)
+                            fig_churn, fig_cluster, fig_resilience,
+                            kernels_bench, sim_throughput)
     scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
     mods = dict(fig5=fig5_capacity.main, fig6=fig6_intensity.main,
                 fig7=fig7_cdf.main, fig8=fig8_timeline.main,
@@ -450,6 +536,8 @@ def main() -> None:
                 cluster=lambda: fig_cluster.main(
                     ["--quick"] if scale < 1.0 else []),
                 churn=lambda: fig_churn.main(
+                    ["--quick"] if scale < 1.0 else []),
+                resilience=lambda: fig_resilience.main(
                     ["--quick"] if scale < 1.0 else []),
                 kernels=kernels_bench.main,
                 simthroughput=sim_throughput.main,

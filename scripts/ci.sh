@@ -9,8 +9,12 @@
 # re-verifies request-for-request Python/JAX engine equivalence, the
 # streaming/exact + sweep-shim + cluster-K=1 + npz-round-trip bitwise
 # gates, the churn rail (conservation under mid-window node death,
-# trivial-schedule lowering, all-down park/resume), 2-device sharded
-# parity and the deprecated-entry-point scan in <60s.
+# trivial-schedule lowering, all-down park/resume), the resilience
+# rail (trivial fault knobs lower bitwise, faults + shedding conserve
+# every request, the circuit breaker trips and recovers), 2-device
+# sharded parity and the deprecated-entry-point scan. The smoke stage
+# writes BENCH_smoke.json (gate lines + wall), which CI uploads as an
+# artifact.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,7 +28,7 @@ fi
 
 if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     echo "== smoke gate: benchmarks/run.py --smoke =="
-    python -m benchmarks.run --smoke
+    python -m benchmarks.run --smoke --json BENCH_smoke.json
 fi
 
 echo "== ci.sh: OK =="

@@ -26,13 +26,14 @@ from repro.api.spec import (ArrayTrace, ExperimentSpec, NpzTrace,
 from repro.cluster import (ClusterSpec, DelaySchedule, PeriodicChurn,
                            available_routers, get_router,
                            register_router, unregister_router)
+from repro.core.resilience import RetryPolicy
 
 __all__ = [
     "ExperimentSpec", "TraceSource", "SyntheticTrace", "NpzTrace",
     "ArrayTrace", "as_trace_source", "ResultSet", "run",
     "run_experiment", "register_policy", "unregister_policy",
     "get_kernel", "available_policies", "ClusterSpec",
-    "PeriodicChurn", "DelaySchedule",
+    "PeriodicChurn", "DelaySchedule", "RetryPolicy",
     "register_router", "unregister_router", "get_router",
     "available_routers",
 ]

@@ -199,22 +199,64 @@ class ResultSet:
         return ",".join(header)
 
     # ----------------------------------------------------------- health
+    def _cell_label(self, cell_ix) -> str:
+        """One grid cell's full spec coordinate, e.g.
+        ``policy='esff', trace='zipf[n8000]', capacity=16,
+        beta='default'`` (plus ``cluster=...`` on cluster grids)."""
+        return ", ".join(f"{d}={self.coords[d][i]!r}"
+                         for d, i in zip(self.dims, cell_ix))
+
+    def _bad_cells(self, bad: np.ndarray, limit: int = 8) -> str:
+        cells = np.argwhere(bad)[:limit]
+        named = "; ".join(self._cell_label(tuple(c)) for c in cells)
+        more = int(bad.sum()) - len(cells)
+        return named + (f"; ... {more} more" if more > 0 else "")
+
     def check(self) -> "ResultSet":
-        """Raise if any computed cell overflowed its queue or stalled
-        (the engine's invalid-run flags); returns self for chaining."""
+        """Raise if any computed cell is invalid; returns self for
+        chaining.
+
+        Invalid means: nonzero ``overflow`` (a queue overran with
+        shedding *disabled* — requests silently dropped; deliberate
+        drops under ``on_overflow="shed"``/``"shed_oldest"`` land in
+        the ``shed`` counter instead and are by design, never an
+        error), nonzero ``stalled`` (the event loop hit its iteration
+        cap — an engine invariant violation), or — on fault-injected
+        runs — a broken conservation identity
+        ``done + shed + failed_exhausted != n_requests``. Every error
+        names the offending cells by their full spec coordinate."""
+        resil = self.meta.get("resilience") or None
         for m in HEALTH_METRICS:
             if m not in self.data:
                 continue
             bad = (self.data[m] != 0) & self.computed
-            if bad.any():
-                cells = np.argwhere(bad)[:5]
-                named = [
-                    {d: self.coords[d][i]
-                     for d, i in zip(self.dims, c)}
-                    for c in cells]
-                raise RuntimeError(
-                    f"ResultSet.check: {int(bad.sum())} cell(s) with "
-                    f"nonzero {m!r} (raise queue_cap?): first {named}")
+            if not bad.any():
+                continue
+            if m == "overflow":
+                hint = ("queue overran with shedding disabled — "
+                        "requests were dropped. Raise queue_cap, or "
+                        "opt into load shedding with "
+                        'ExperimentSpec(on_overflow="shed" / '
+                        '"shed_oldest") to count drops as `shed` '
+                        "by design")
+            else:
+                hint = ("event loop hit its iteration cap before "
+                        "draining — engine invariant violation")
+            raise RuntimeError(
+                f"ResultSet.check: {int(bad.sum())} cell(s) with "
+                f"nonzero {m!r} ({hint}): {self._bad_cells(bad)}")
+        if resil is not None and "n_requests" in self.meta:
+            need = ("done", "shed", "failed_exhausted")
+            if all(k in self.data for k in need):
+                n = int(self.meta["n_requests"])
+                tot = sum(self.data[k].astype(np.int64) for k in need)
+                bad = (tot != n) & self.computed
+                if bad.any():
+                    raise RuntimeError(
+                        f"ResultSet.check: {int(bad.sum())} cell(s) "
+                        f"break conservation (done + shed + "
+                        f"failed_exhausted != n_requests={n}): "
+                        f"{self._bad_cells(bad)}")
         return self
 
     # -------------------------------------------------------- npz io

@@ -115,6 +115,14 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
 
     spec.validate()
     sources, stacked, F, N = _lower_grid(spec)
+    rs = spec.resilience_ops(stacked, F)
+    resil = None
+    if rs is not None:
+        # faults on: the effective (timeout-clipped) exec times replace
+        # the exec operand; the pre-planned outcome operands ride the
+        # same per-device / per-row slicing as the trace operands
+        eff, rs_nfail, rs_tmo, rs_key, resil = rs
+        stacked = dict(stacked, exec_time=eff)
     T = len(sources)
     C = max(spec.capacities)
     masks = np.stack([np.arange(C) < c for c in spec.capacities])
@@ -143,6 +151,10 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
     # (a single uncommitted copy when not sharding, matching the legacy
     # single-device path exactly)
     shared0 = {k: jnp.asarray(v) for k, v in stacked.items()}
+    if rs is not None:
+        shared0["rs_nfail"] = jnp.asarray(rs_nfail, jnp.int32)
+        shared0["rs_tmo"] = jnp.asarray(rs_tmo)
+        shared0["rs_key"] = jnp.asarray(rs_key, jnp.int32)
     if multi_dev:
         shared_per_dev = [
             {k: jax.device_put(v, d) for k, v in shared0.items()}
@@ -191,6 +203,8 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
             sh["cold_start"], sh["evict"], tix_l, mask_l, beta_l,
             jnp.float64(spec.prior), jnp.float64(spec.threshold),
             deadlines=dl_op,
+            rs_nfail=sh.get("rs_nfail"), rs_tmo=sh.get("rs_tmo"),
+            rs_key=sh.get("rs_key"), resil=resil,
             kernel=kernels[policy], n_fns=F, capacity=C,
             queue_cap=spec.queue_cap, stream=spec.stream,
             window=spec.window, tl_bins=spec.tl_bins,
@@ -227,6 +241,9 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
         from repro.core.jax_engine import slo_attainment
         data["slo_attainment"] = slo_attainment(
             data["deadline_miss"], data["done"])
+    if resil is not None:
+        from repro.core.jax_engine import goodput
+        data["goodput"] = goodput(data["done"], N)
     beta_coord = (list(spec.betas) if spec.betas is not None
                   else [_BETA_DEFAULT])
     coords = dict(policy=list(spec.policies),
@@ -245,6 +262,7 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
                             if isinstance(spec.deadlines, float)
                             else list(spec.deadlines))),
                 n_devices=len(devs), backend=jax.default_backend(),
+                resilience=spec.resilience_meta(),
                 seeds=(list(spec.seeds) if spec.seeds is not None
                        else None),
                 default_betas={p: kernels[p].default_beta

@@ -303,6 +303,20 @@ class ExperimentSpec:
     ``node_capacity``, the capacity axis must have exactly one entry
     (it labels the aggregate). Cluster runs execute on the default
     device (``host_shard`` must stay (0, 1)).
+
+    Resilience (docs/cluster.md): ``fail_prob`` (scalar or one value
+    per function) injects deterministic counter-hash request failures,
+    ``timeouts`` (scalar / per function, seconds) kills attempts whose
+    execution exceeds the budget, ``retry`` (a
+    `repro.core.resilience.RetryPolicy`, default ``RetryPolicy()``
+    when faults are on) re-enters failed attempts after capped
+    exponential backoff, and ``on_overflow`` picks the admission-
+    control mode for full queues: ``"error"`` (drop + count
+    ``overflow``, `ResultSet.check` fails — the legacy behaviour),
+    ``"shed"`` (drop the arriving request, counted ``shed``) or
+    ``"shed_oldest"`` (evict the queue head). With every knob at its
+    default the resilience layer is off and every run lowers onto the
+    unchanged engine loop bitwise.
     """
 
     traces: Sequence = ()
@@ -319,6 +333,11 @@ class ExperimentSpec:
     tl_bucket: float = 60.0
     keep_per_request: bool = False
     deadlines: Union[float, Sequence[float], None] = None
+    fail_prob: Union[float, Sequence[float]] = 0.0
+    timeouts: Union[float, Sequence[float], None] = None
+    retry: Optional[object] = None
+    on_overflow: str = "error"
+    fail_seed: int = 0
     lane_chunk: Union[int, str, None] = None
     devices: Optional[int] = None
     host_shard: Tuple[int, int] = (0, 1)
@@ -348,6 +367,11 @@ class ExperimentSpec:
             if isinstance(self.cluster, ClusterSpec):
                 self.cluster = (self.cluster,)
             self.cluster = tuple(self.cluster)
+        if not np.isscalar(self.fail_prob):
+            self.fail_prob = tuple(float(p) for p in self.fail_prob)
+        if self.timeouts is not None and not np.isscalar(self.timeouts):
+            self.timeouts = tuple(float(b) for b in self.timeouts)
+        self.fail_seed = int(self.fail_seed)
 
     # ------------------------------------------------------- validation
     def validate(self) -> "ExperimentSpec":
@@ -401,6 +425,43 @@ class ExperimentSpec:
                     raise ValueError(
                         f"ExperimentSpec: deadlines must be finite "
                         f"and > 0, got {d}")
+        from repro.core.resilience import SHED_MODES, RetryPolicy
+        if self.on_overflow not in SHED_MODES:
+            raise ValueError(
+                f"ExperimentSpec: on_overflow must be one of "
+                f"{sorted(SHED_MODES)}, got {self.on_overflow!r}")
+        fp = np.atleast_1d(np.asarray(self.fail_prob, np.float64))
+        if np.any((fp < 0) | (fp > 1)) or not np.all(np.isfinite(fp)):
+            raise ValueError(
+                f"ExperimentSpec: fail_prob must be in [0, 1], got "
+                f"{self.fail_prob}")
+        if self.timeouts is not None:
+            to = np.atleast_1d(np.asarray(self.timeouts, np.float64))
+            if np.any(to <= 0) or not np.all(np.isfinite(to)):
+                raise ValueError(
+                    "ExperimentSpec: timeouts must be finite and > 0, "
+                    f"got {self.timeouts}")
+        if self.retry is not None and not isinstance(self.retry,
+                                                     RetryPolicy):
+            raise TypeError(
+                "ExperimentSpec: retry must be a RetryPolicy or None, "
+                f"got {type(self.retry).__name__}")
+        if self.resilience_active():
+            timered = [p for p in self.policies
+                       if get_kernel(p).has_timers]
+            if timered:
+                raise ValueError(
+                    f"ExperimentSpec: policies {timered} arm "
+                    "per-request timers, which the resilience layer "
+                    "does not support (a killed or retried request "
+                    "would leave a timer aimed at a stale attempt); "
+                    "drop the policy or the fail_prob/timeouts/"
+                    "on_overflow settings")
+        elif self.retry is not None:
+            raise ValueError(
+                "ExperimentSpec: retry= without fail_prob/timeouts/"
+                "on_overflow does nothing — remove it or switch a "
+                "fault knob on")
         i, n = self.host_shard
         if n < 1 or not (0 <= i < n):
             raise ValueError(
@@ -459,6 +520,71 @@ class ExperimentSpec:
                 "functions (pass one scalar or one deadline per "
                 "function)")
         return np.asarray(self.deadlines, np.float64)
+
+    # ------------------------------------------------------- resilience
+    def resilience_active(self) -> bool:
+        """True when any fault knob leaves its trivial default — the
+        engines then run their resilience rails; otherwise every run
+        lowers onto the unchanged loop bitwise."""
+        fp = np.atleast_1d(np.asarray(self.fail_prob, np.float64))
+        return (bool(np.any(fp > 0)) or self.timeouts is not None
+                or self.on_overflow != "error")
+
+    def retry_policy(self):
+        """The effective `RetryPolicy` (defaults apply when faults are
+        on), or ``None`` when the resilience layer is off."""
+        from repro.core.resilience import RetryPolicy
+        if not self.resilience_active():
+            return None
+        return self.retry if self.retry is not None else RetryPolicy()
+
+    def resilience_ops(self, stacked: Dict[str, np.ndarray],
+                       n_fns: int):
+        """Lower the fault knobs to the engines' operands, or ``None``
+        when the layer is off.
+
+        Returns ``(eff_exec, n_fail, is_tmo, rid_key, resil)``: the
+        (T, N) effective execution times (``min(exec, timeout)`` —
+        substituted for the exec operand), pre-planned leading-failure
+        counts, timeout flags and original-rid jitter keys (see
+        `repro.core.resilience.plan_outcomes`), plus the static
+        ``resil`` tuple ``(max_attempts, shed_mode, base, cap, jitter,
+        fail_seed)`` the jitted loops specialise on."""
+        from repro.core.resilience import SHED_MODES, plan_outcomes
+        rp = self.retry_policy()
+        if rp is None:
+            return None
+        fn_id = np.asarray(stacked["fn_id"])
+        ex = np.asarray(stacked["exec_time"])
+        T, N = fn_id.shape
+        eff = np.empty((T, N), np.float64)
+        nfail = np.empty((T, N), np.int32)
+        tmo = np.empty((T, N), bool)
+        for t in range(T):
+            eff[t], nfail[t], tmo[t] = plan_outcomes(
+                fn_id[t], ex[t], fail_prob=self.fail_prob,
+                timeouts=self.timeouts,
+                max_attempts=rp.max_attempts, n_fns=n_fns,
+                seed=self.fail_seed)
+        key = np.broadcast_to(np.arange(N, dtype=np.int32), (T, N))
+        resil = (int(rp.max_attempts), SHED_MODES[self.on_overflow],
+                 float(rp.base), float(rp.cap), float(rp.jitter),
+                 self.fail_seed)
+        return eff, nfail, tmo, np.ascontiguousarray(key), resil
+
+    def resilience_meta(self):
+        """JSON-friendly record of the fault knobs for `ResultSet.meta`
+        (``None`` when the resilience layer is off)."""
+        rp = self.retry_policy()
+        if rp is None:
+            return None
+        tolist = lambda v: (list(v) if isinstance(v, tuple)  # noqa: E731
+                            else v)
+        return dict(fail_prob=tolist(self.fail_prob),
+                    timeouts=tolist(self.timeouts),
+                    on_overflow=self.on_overflow,
+                    retry=list(rp.as_tuple()),
+                    fail_seed=self.fail_seed)
 
     # -------------------------------------------------------- expansion
     def expanded_traces(self) -> Tuple[TraceSource, ...]:

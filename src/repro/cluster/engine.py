@@ -105,12 +105,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.jax_engine import (BIG, BUSY, CI_DONE, CI_ITERS,
-                                   CI_NEXT, CI_OVF, CI_STALL, COLD,
+from repro.core.jax_engine import (BIG, BUSY, CI_DONE, CI_EXH,
+                                   CI_FAILED, CI_ITERS, CI_NEXT,
+                                   CI_OVF, CI_RETRY, CI_SHED, CI_STALL,
+                                   CI_TERM, CI_TMO, CI_TRIPS, COLD,
                                    HIST_BINS, I32_MAX, IDLE, NCF, NCI,
                                    SEG, EngineCtx, _fold_event, _gidx,
                                    ensure_x64, hist_quantile)
-from repro.cluster.routers import ClusterView
+from repro.core.resilience import backoff_jax
+from repro.cluster.routers import BreakerRouter, ClusterView
 
 ensure_x64()
 
@@ -323,21 +326,98 @@ class ClusterNodeCtx(EngineCtx):
         return s
 
 
+class ClusterResilCtx(ClusterNodeCtx):
+    """Cluster node ctx under the resilience layer (fail_prob /
+    timeouts / retries / shedding — see `repro.core.jax_engine
+    .ResilCtx`, whose outcome-operand reads and shed-mode queue push
+    this mirrors on the cluster's direct-link queue layout). Retries
+    re-enqueue old rids, so the engine always runs in direct-link mode
+    (``direct_links=True``) when resilience is on."""
+
+    def __init__(self, *, nfail2, tmo2, key2, resil, **kw):
+        super().__init__(**kw)
+        self._nf = nfail2.reshape(-1)
+        self._tm = tmo2.reshape(-1)
+        self._ky = key2.reshape(-1)
+        self.resil = resil  # (max_attempts, shed_mode, base, cap,
+        self.has_resil = True            # jitter, fail_seed) — static
+        self.defer_completion = True     # completion on success only
+
+    def nfail_at(self, rid):
+        return self._nf[self._b_n + jnp.clip(rid, 0, self.N - 1)]
+
+    def tmo_at(self, rid):
+        return self._tm[self._b_n + jnp.clip(rid, 0, self.N - 1)]
+
+    def key_at(self, rid):
+        return self._ky[self._b_n + jnp.clip(rid, 0, self.N - 1)]
+
+    def _q_push_direct(self, s, fn, rid, on):
+        # direct-link append with the admission-control modes: a push
+        # onto a full backlog drops-and-counts (``error``, the legacy
+        # invalid-run behaviour), sheds the arriving request (``shed``
+        # — terminal, never admitted) or evicts the queue head to
+        # admit the newcomer (``shed_oldest``)
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rid32 = jnp.asarray(rid, jnp.int32)
+        len0 = s["q_len"][fc]
+        full = len0 >= self.Q
+        mode = self.resil[1]
+        s = dict(s)
+        if mode == 2:  # shed_oldest: head out (terminal), newcomer in
+            evict = on & full
+            h = s["q_head_rid"][fc]
+            hsucc = s["nxt"][jnp.clip(h, 0, self.N - 1)]
+            fi = _gidx(evict, fn, self.F)
+            s["q_head_rid"] = s["q_head_rid"].at[fi].set(hsucc,
+                                                         mode="drop")
+            s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+            ev_i = evict.astype(jnp.int32)
+            s["q_tot"] = s["q_tot"] - ev_i
+            s["ci"] = s["ci"].at[jnp.array([CI_SHED, CI_TERM])].add(
+                jnp.stack([ev_i, ev_i]))
+            do = on
+            was_empty = (len0 - ev_i) == 0
+        else:
+            do = on & ~full
+            was_empty = len0 == 0
+            if mode == 1:  # shed the arriving request
+                sh_i = (on & full).astype(jnp.int32)
+                s["ci"] = s["ci"].at[jnp.array([CI_SHED, CI_TERM])].add(
+                    jnp.stack([sh_i, sh_i]))
+            else:
+                s["ci"] = s["ci"].at[CI_OVF].add(
+                    (on & full).astype(jnp.int32))
+        tail = s["q_tail_rid"][fc]
+        s["q_head_rid"] = s["q_head_rid"].at[
+            _gidx(do & was_empty, fn, self.F)].set(rid32, mode="drop")
+        s["nxt"] = s["nxt"].at[
+            _gidx(do & ~was_empty, tail, self.N)].set(rid32,
+                                                      mode="drop")
+        s["q_tail_rid"] = s["q_tail_rid"].at[
+            _gidx(do, fn, self.F)].set(rid32, mode="drop")
+        s["q_len"] = s["q_len"].at[_gidx(do, fn, self.F)].add(
+            1, mode="drop")
+        s["q_tot"] = s["q_tot"] + do.astype(jnp.int32)
+        return s, do
+
+
 # ------------------------------------------------------------ event loop
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "router", "n_nodes",
                                     "n_fns", "capacity", "queue_cap",
                                     "seed", "stream", "tl_bins",
                                     "has_delay", "has_churn",
-                                    "var_delay", "seg"))
+                                    "var_delay", "seg", "resil"))
 def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                       trace_ix, cap_mask, beta, prior, threshold,
                       delays, churn_t=None, dtimes=None, dvals=None,
-                      dper=None, deadlines=None, *, kernel, router,
+                      dper=None, deadlines=None, rs_nfail=None,
+                      rs_tmo=None, rs_key=None, *, kernel, router,
                       n_nodes, n_fns, capacity, queue_cap, seed=0,
                       stream=False, tl_bins=0, tl_bucket=60.0,
                       has_delay=False, has_churn=False,
-                      var_delay=False, seg=0):
+                      var_delay=False, seg=0, resil=None):
     """K-node lane-batched cluster loop (see the module docstring).
 
     ``cap_mask`` is (L, K, C) — heterogeneous node capacities are
@@ -367,9 +447,20 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     KF = K * F
     SG = int(seg) if seg else SEG
     timers = kernel.has_timers
+    has_resil = resil is not None
+    has_breaker = isinstance(router, BreakerRouter)
+    # retries re-enqueue old rids, which breaks the write-once link
+    # invariant behind the segment overlays exactly like churn does —
+    # both run the direct-link spelling (per-event rail writes)
+    direct = has_churn or has_resil
+    done_col = CI_TERM if has_resil else CI_DONE
     if timers and has_churn:
         raise ValueError("timer-rail kernels are not supported under "
                          "churn (rejected at the runner)")
+    if timers and has_resil:
+        raise ValueError("timer-rail kernels are not supported under "
+                         "the resilience layer (rejected at the "
+                         "runner)")
     if var_delay and not has_delay:
         raise ValueError("var_delay requires has_delay")
 
@@ -396,6 +487,11 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         dp_b = jnp.broadcast_to(dper[None], (L, K))
     if deadlines is not None:
         deadlines = jnp.asarray(deadlines, jnp.float64)
+    if has_resil:
+        max_att, shed_mode, rt_base, rt_cap, rt_jit, rt_seed = resil
+        rs_nfail = jnp.asarray(rs_nfail, jnp.int32)
+        rs_tmo = jnp.asarray(rs_tmo, jnp.bool_)
+        rs_key = jnp.asarray(rs_key, jnp.int32)
 
     s = dict(
         slot_fn=jnp.full((L, K, C), -1, jnp.int32),
@@ -418,13 +514,14 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         cf=jnp.zeros((L, NCF), jnp.float64),
         hist=jnp.zeros((L, HIST_BINS), jnp.int32),
     )
-    if not has_churn:
+    if not direct:
         # queue write registers, carried across steps: the previous
         # event's parked queue writes are applied at the *top* of the
         # next step (see step()), so within one step the queue arrays'
-        # only direct user is the opening in-place scatter. Under
-        # churn the trio rides the nodal row commit instead and links
-        # are written directly, so neither register family exists.
+        # only direct user is the opening in-place scatter. In
+        # direct-link mode (churn / resilience) the trio rides the
+        # nodal row commit instead and links are written directly, so
+        # neither register family exists.
         s["qw_len_pos"] = jnp.full((L,), -1, jnp.int32)
         s["qw_len_delta"] = jnp.zeros((L,), jnp.int32)
         s["qw_head_pos"] = jnp.full((L,), -1, jnp.int32)
@@ -433,7 +530,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         s["qw_tail_val"] = jnp.zeros((L,), jnp.int32)
         s["ov_q_pos"] = jnp.full((L, SG), N, jnp.int32)
         s["ov_q_val"] = jnp.zeros((L, SG), jnp.int32)
-    else:
+    if has_churn:
         # availability cursor (even parity = up) + the park FIFO of
         # requests orphaned by node failures / all-down arrivals; the
         # chain rides the nxt rail, park_t is the head's eligibility
@@ -444,11 +541,32 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         s["park_tail"] = jnp.full((L,), -1, jnp.int32)
         s["park_len"] = jnp.zeros((L,), jnp.int32)
         s["park_t"] = jnp.full((L,), BIG, jnp.float64)
-        if has_delay:
-            # landing time of each in-flight request, written at send
-            # time (an orphan's re-send samples the delay then, so the
-            # raw-arrival closed form no longer applies)
-            s["land_t"] = jnp.zeros((L, N), jnp.float64)
+    if direct and has_delay:
+        # landing time of each in-flight request, written at send
+        # time (an orphan's or retry's re-send samples the delay
+        # then, so the raw-arrival closed form no longer applies)
+        s["land_t"] = jnp.zeros((L, N), jnp.float64)
+    if has_resil:
+        # retry rail: one cluster-global FIFO per lane over the shared
+        # nxt links (a rid is queued XOR running XOR in flight XOR
+        # parked XOR awaiting retry XOR terminal), eligibility times
+        # rt_t and the armed head fire time r_fire; att counts started
+        # attempts per rid
+        s["att"] = jnp.zeros((L, N), jnp.int32)
+        s["rt_t"] = jnp.zeros((L, N), jnp.float64)
+        s["r_head"] = jnp.full((L,), -1, jnp.int32)
+        s["r_tail"] = jnp.full((L,), -1, jnp.int32)
+        s["r_len"] = jnp.zeros((L,), jnp.int32)
+        s["r_fire"] = jnp.full((L,), BIG, jnp.float64)
+    if has_breaker:
+        # per-node circuit-breaker state: tumbling-window completion /
+        # failure counts and the reopen time (0 = closed, > t = open,
+        # (0, t] = half-open probe pending); read by the router, and
+        # updated at EXEC_DONE by the event's node — so the trio is
+        # nodal state
+        s["cbr_n"] = jnp.zeros((L, K), jnp.int32)
+        s["cbr_f"] = jnp.zeros((L, K), jnp.int32)
+        s["cbr_until"] = jnp.zeros((L, K), jnp.float64)
     if deadlines is not None:
         s["dl_miss"] = jnp.zeros((L, F), jnp.int32)
     if timers:
@@ -467,15 +585,15 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         s["pend_tail"] = jnp.full((L, K), -1, jnp.int32)
         s["pend_len"] = jnp.zeros((L, K), jnp.int32)
         s["dnx"] = jnp.full((L, N), -1, jnp.int32)
-        if not has_churn:
+        if not direct:
             s["ov_d_pos"] = jnp.full((L, SG), N, jnp.int32)
             s["ov_d_val"] = jnp.zeros((L, SG), jnp.int32)
     if not stream:
         s["start"] = jnp.full((L, N), -1.0, jnp.float64)
         s["completion"] = jnp.full((L, N), -1.0, jnp.float64)
-        if not has_churn:
-            # churn writes the per-request records directly per event
-            # (ctx.direct_records) — no d_* overlays to stage
+        if not direct:
+            # direct-link mode writes the per-request records directly
+            # per event (ctx.direct_records) — no d_* overlays to stage
             s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
             s["d_start"] = jnp.zeros((L, SG), jnp.float64)
             s["d_comp"] = jnp.zeros((L, SG), jnp.float64)
@@ -489,7 +607,9 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     extra = kernel.extra_state(L, C, F)
     nodal = _NODAL + (_NODAL_TMR if timers else ()) \
         + (_NODAL_PEND if has_delay else ()) \
-        + (("ch_ix",) if has_churn else ()) + tuple(extra)
+        + (("ch_ix",) if has_churn else ()) \
+        + (("cbr_n", "cbr_f", "cbr_until") if has_breaker else ()) \
+        + tuple(extra)
     for kk, v in extra.items():
         # one copy of the kernel's per-server state per node
         s[kk] = jnp.repeat(v[:, None, ...], K, axis=1)
@@ -504,12 +624,16 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         # re-routed and re-executed — a generous stall guard, not a
         # budget
         max_iters += (4 * N + 64) * K * E
+    if has_resil:
+        # each rid can run (and re-enter) up to max_attempts times
+        max_iters *= max_att
     n_slot = 2 * KC
     tmr_base = n_slot
     pend_base = n_slot + (2 * KF if timers else 0)
     orph_base = pend_base + (K if has_delay else 0)
     churn_base = orph_base + (1 if has_churn else 0)
-    n_cand = churn_base + (K if has_churn else 0) + 1
+    rtry_base = churn_base + (K if has_churn else 0)
+    n_cand = rtry_base + (1 if has_resil else 0) + 1
     lanes = jnp.arange(L, dtype=jnp.int32)
     lane_iota = lanes[:, None]
     t_cold_l = t_cold[trace_ix]
@@ -532,9 +656,10 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     # and ride the qw_* write registers instead (scalar drop-scatters
     # in step(); the gathered view row stays for kernel full-row reads)
     _Q_TRIO = ("q_len", "q_head_rid", "q_tail_rid")
-    # under churn the write registers don't exist (direct-link mode),
-    # so the trio commits like every other nodal array
-    nodal_commit = (nodal if has_churn else
+    # under churn / resilience the write registers don't exist
+    # (direct-link mode), so the trio commits like every other nodal
+    # array
+    nodal_commit = (nodal if direct else
                     tuple(kk for kk in nodal if kk not in _Q_TRIO))
 
     def gather_nodal(s, k_ev):
@@ -555,11 +680,12 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         return out
 
     def make_ctx(tix, cold_l, evict_l, capm_node, beta, k_step, node):
-        # response convention: under churn requests are measured from
-        # the *raw* arrival (user-perceived — an orphaned request may
-        # traverse several nodes); without churn the node-local clock
-        # (+const delay, or +schedule-at-raw-arrival) is preserved
-        if has_churn:
+        # response convention: under churn / resilience requests are
+        # measured from the *raw* arrival (user-perceived — an
+        # orphaned or retried request may traverse several nodes and
+        # attempts); otherwise the node-local clock (+const delay, or
+        # +schedule-at-raw-arrival) is preserved
+        if direct:
             dly, dsc = None, None
         elif var_delay:
             kc = jnp.clip(node, 0, K - 1)
@@ -568,16 +694,20 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             dly, dsc = delays[node], None
         else:
             dly, dsc = None, None
-        ctx = ClusterNodeCtx(
+        kw = dict(
             fn_id2=fn_id, arrival2=arrival, exec2=exec_time,
             cold2=cold_l, evict2=evict_l, tix=tix, cap_mask=capm_node,
             beta=beta, prior=prior, threshold=threshold, k=k_step,
             n=N, f=F, c=C, q=Q, stream=stream, tl_bins=tl_bins,
             tl_bucket=tl_bucket, node=node, delay=dly, delay_sched=dsc,
-            deadlines=deadlines, direct_links=has_churn, seg_n=SG)
-        if has_churn:
-            # fold at EXEC_DONE (a drained request's dispatch record
-            # must not count) and write exact-mode records per event
+            deadlines=deadlines, direct_links=direct, seg_n=SG)
+        ctx = (ClusterResilCtx(nfail2=rs_nfail, tmo2=rs_tmo,
+                               key2=rs_key, resil=resil, **kw)
+               if has_resil else ClusterNodeCtx(**kw))
+        if direct:
+            # fold at EXEC_DONE (a drained / failed attempt's dispatch
+            # record must not count) and write exact-mode records per
+            # event
             ctx.fold_at_dispatch = False
             ctx.direct_records = True
         return ctx
@@ -596,7 +726,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                        s["rearm_t"].reshape(L, KF)]
         if has_delay:
             ph = jnp.clip(s["pend_head"], 0, N - 1)
-            if has_churn:
+            if direct:
                 land = jnp.take_along_axis(s["land_t"], ph, axis=1)
             elif var_delay:
                 arr_ph = arr_flat[base_n[:, None] + ph]
@@ -615,6 +745,9 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             cix = jnp.clip(s["ch_ix"], 0, E - 1)
             blocks.append(churn_t.reshape(-1)[churn_offs[None, :]
                                               + cix])
+        if has_resil:
+            # armed retry-rail head (BIG while the rail is empty)
+            blocks.append(s["r_fire"][:, None])
         blocks.append(t_arr[:, None])
         cand = jnp.concatenate(blocks, axis=1)
         ei = jnp.argmin(cand, axis=1).astype(jnp.int32)
@@ -622,23 +755,25 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         return ei, t_ev, t_arr
 
     def pick_one(q_len, q_tot, slot_fn, slot_state, capm, est_sum,
-                 est_n, node_gn, node_gsum, cold_l, up, delay_now, j,
-                 rid, t):
+                 est_n, node_gn, node_gsum, cold_l, up, delay_now, brk,
+                 j, rid, t):
         g = ClusterView(q_len=q_len, q_tot=q_tot, slot_fn=slot_fn,
                         slot_state=slot_state, cap_mask=capm,
                         est_sum=est_sum, est_n=est_n, node_gn=node_gn,
                         node_gsum=node_gsum, t_cold=cold_l,
                         prior=prior, n_nodes=K, seed=seed,
-                        up=up, delay_now=delay_now)
+                        up=up, delay_now=delay_now, brk_until=brk)
         return router.pick(g, j, rid, t)
 
-    # ``up``/``delay_now`` stay python-None (an empty pytree — any
-    # in_axes is legal) when their feature is off, so the no-churn /
-    # const-delay jaxprs are unchanged; a const (K,) delay_now is
-    # shared across lanes (in_axes None), a scheduled one is (L, K)
+    # ``up``/``delay_now``/``brk_until`` stay python-None (an empty
+    # pytree — any in_axes is legal) when their feature is off, so the
+    # no-churn / const-delay / no-breaker jaxprs are unchanged; a
+    # const (K,) delay_now is shared across lanes (in_axes None), a
+    # scheduled one is (L, K)
     pick_lanes = jax.vmap(
         pick_one, in_axes=(0,) * 10 + (0 if has_churn else None,
-                                       0 if var_delay else None)
+                                       0 if var_delay else None,
+                                       0 if has_breaker else None)
         + (0, 0, 0))
 
     def lane_step(k_step, s, tix, cold_l, evict_l, capm, beta, ei,
@@ -647,21 +782,25 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         # ``node``'s row (gather_nodal); ``capm`` is that node's (C,)
         # slot mask
         ci = s["ci"]
-        active = (ci[CI_DONE] < N) & (ci[CI_STALL] == 0)
+        active = (ci[done_col] < N) & (ci[CI_STALL] == 0)
         na = ci[CI_NEXT]
         live = active & (t_ev < BIG)
         # per-event registers: dispatch record (consumed by
         # _fold_event), link writes (staged into the overlays) and
-        # deferred link reads (resolved by the chase pass) — under
-        # churn the overlay/register families don't exist (links are
-        # written directly)
+        # deferred link reads (resolved by the chase pass) — in
+        # direct-link mode the overlay/register families don't exist
+        # (links are written directly)
         s = dict(s)
         if has_churn:
             anyup = s.pop("anyup")
         s["ev_rid"] = jnp.int32(-1)
         s["ev_comp"] = jnp.float64(0.0)
         s["ev_exec"] = jnp.float64(0.0)
-        if not has_churn:
+        if has_resil:
+            # per-lane success flag of this event (popped by step() to
+            # gate the node_done tally to successful completions)
+            s["rs_ok"] = jnp.bool_(False)
+        if not direct:
             s["lw_q_pos"] = jnp.int32(-1)
             s["lw_q_val"] = jnp.int32(0)
             s["pp_kf"] = jnp.int32(-1)
@@ -681,7 +820,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             s["lw_t_val"] = jnp.int32(0)
             s["tp_kf"] = jnp.int32(-1)
             s["tp_rid"] = jnp.int32(-1)
-        if has_delay and not has_churn:
+        if has_delay and not direct:
             s["lw_d_pos"] = jnp.int32(-1)
             s["lw_d_val"] = jnp.int32(0)
             s["dp_k"] = jnp.int32(-1)
@@ -732,16 +871,87 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         v["node_gsum"] = v["node_gsum"] + jnp.where(exec_on, e_done,
                                                     0.0)
         v["node_gn"] = v["node_gn"] + exec_i
-        v["ci"] = v["ci"].at[CI_DONE].add(exec_i)
-        if has_churn:
-            # fold at EXEC_DONE: a drained execution never reaches
-            # here, so exactly the surviving run of each request folds
-            # (response = completion - raw arrival via the ctx)
-            v["ev_rid"] = jnp.where(exec_on,
+        if not has_resil:
+            v["ci"] = v["ci"].at[CI_DONE].add(exec_i)
+            fold_on = exec_on
+        else:
+            # outcome of this attempt: the estimator observed it above
+            # (every attempt burns real slot time); success/failure is
+            # the pre-planned attempt test (see core/resilience.py)
+            att_d = v["att"][jnp.clip(rid_done, 0, N - 1)]
+            nf_d = ctx.nfail_at(rid_done)
+            ok_d = exec_on & (att_d > nf_d)
+            fail_d = exec_on & ~ok_d
+            exh_d = fail_d & (att_d >= max_att)
+            retry_d = fail_d & ~exh_d
+            tmo_d = ctx.tmo_at(rid_done)
+            ok_i = ok_d.astype(jnp.int32)
+            v["ci"] = v["ci"].at[jnp.array(
+                [CI_DONE, CI_TERM, CI_FAILED, CI_TMO, CI_RETRY,
+                 CI_EXH])].add(jnp.stack(
+                [ok_i, ok_i + exh_d.astype(jnp.int32),
+                 (fail_d & ~tmo_d).astype(jnp.int32),
+                 (fail_d & tmo_d).astype(jnp.int32),
+                 retry_d.astype(jnp.int32),
+                 exh_d.astype(jnp.int32)]))
+            v["rs_ok"] = ok_d
+            fold_on = ok_d
+        if direct:
+            # fold at EXEC_DONE: a drained / failed attempt never
+            # folds, so exactly the surviving run of each request
+            # counts (response = completion - raw arrival via the ctx)
+            v["ev_rid"] = jnp.where(fold_on,
                                     jnp.asarray(rid_done, jnp.int32),
                                     v["ev_rid"])
-            v["ev_comp"] = jnp.where(exec_on, t_ev, v["ev_comp"])
-            v["ev_exec"] = jnp.where(exec_on, e_done, v["ev_exec"])
+            v["ev_comp"] = jnp.where(fold_on, t_ev, v["ev_comp"])
+            v["ev_exec"] = jnp.where(fold_on, e_done, v["ev_exec"])
+        if has_resil:
+            if not stream:
+                # deferred exact-mode record: an exhausted / shed rid
+                # must keep completion == -1
+                v["completion"] = v["completion"].at[
+                    _gidx(ok_d, rid_done, N)].set(t_ev, mode="drop")
+            # a retrying rid re-enters after its backoff; the rail is
+            # FIFO so only an empty rail arms the fire time here
+            key_d = ctx.key_at(rid_done)
+            elig = t_ev + backoff_jax(att_d, key_d, rt_base, rt_cap,
+                                      rt_jit, rt_seed)
+            rd32 = jnp.asarray(rid_done, jnp.int32)
+            v["rt_t"] = v["rt_t"].at[
+                _gidx(retry_d, rid_done, N)].set(elig, mode="drop")
+            r_empty = v["r_len"] == 0
+            v["nxt"] = v["nxt"].at[
+                _gidx(retry_d & ~r_empty, v["r_tail"], N)].set(
+                rd32, mode="drop")
+            v["r_head"] = jnp.where(retry_d & r_empty, rd32,
+                                    v["r_head"])
+            v["r_tail"] = jnp.where(retry_d, rd32, v["r_tail"])
+            v["r_fire"] = jnp.where(retry_d & r_empty, elig,
+                                    v["r_fire"])
+            v["r_len"] = v["r_len"] + retry_d.astype(jnp.int32)
+        if has_breaker:
+            # circuit-breaker bookkeeping at the event's node: closed
+            # (until == 0) counts the attempt into the tumbling window
+            # and trips when a full window's failures reach trip_at;
+            # half-open (0 < until <= t) lets the first completed
+            # attempt decide — success closes, failure re-trips; open
+            # (until > t) completions are pre-trip stragglers, ignored
+            fail_ev = fail_d if has_resil else jnp.bool_(False)
+            until0 = v["cbr_until"]
+            half = exec_on & (until0 > 0.0) & (until0 <= t_ev)
+            closed = exec_on & (until0 == 0.0)
+            n1 = v["cbr_n"] + closed.astype(jnp.int32)
+            f1 = v["cbr_f"] + (closed & fail_ev).astype(jnp.int32)
+            boundary = closed & (n1 >= router.volume)
+            trip = (boundary & (f1 >= router.trip_at)) | (half
+                                                          & fail_ev)
+            v["cbr_until"] = jnp.where(
+                trip, t_ev + router.cooldown,
+                jnp.where(half, 0.0, until0))
+            reset = boundary | half
+            v["cbr_n"] = jnp.where(reset, 0, n1)
+            v["cbr_f"] = jnp.where(reset, 0, f1)
+            v["ci"] = v["ci"].at[CI_TRIPS].add(trip.astype(jnp.int32))
         v = kernel.on_cold_done(ctx, v, slot, t_ev, cold_on)
         v = kernel.on_exec_done(ctx, v, slot, rid_done, t_ev,
                                 exec_on)
@@ -791,6 +1001,14 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             link_b = ev_down & valid_b & (succ_b < I32_MAX)
             v["nxt"] = v["nxt"].at[_gidx(link_b, rids_b, N)].set(
                 succ_b, mode="drop")
+            if has_resil:
+                # a drained attempt never completes, so it must not
+                # consume the rid's retry budget (the reference never
+                # counts it: att increments at dispatch here but at
+                # EXEC_DONE there, and a drained run reaches neither)
+                v["att"] = v["att"].at[
+                    _gidx(ev_down & valid_b, rids_b, N)].add(
+                    -1, mode="drop")
             # queue chains: prev[f] = tail of the last nonempty fn
             # before f (exclusive cummax of nonempty fn ids), else the
             # last busy rid
@@ -864,15 +1082,38 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             v["park_len"] = v["park_len"] - ev_orph.astype(jnp.int32)
             node_up = (v["ch_ix"] & 1) == 0  # event node, post-toggle
 
+        # ------------------------------------------------- retry event
+        ev_rtry = jnp.bool_(False)
+        if has_resil:
+            # pop the retry-rail head; the successor is promoted but
+            # may not fire before this pop (FIFO, no overtaking)
+            ev_rtry = live & (ei == rtry_base)
+            rlen0 = v["r_len"]
+            rid_r = v["r_head"]
+            succ_r = v["nxt"][jnp.clip(rid_r, 0, N - 1)]
+            rid_r32 = jnp.asarray(rid_r, jnp.int32)
+            v = dict(v)
+            v["r_head"] = jnp.where(ev_rtry, succ_r, v["r_head"])
+            v["r_tail"] = jnp.where(ev_rtry & (rlen0 <= 1),
+                                    jnp.int32(-1), v["r_tail"])
+            v["r_len"] = rlen0 - ev_rtry.astype(jnp.int32)
+            nfire = jnp.maximum(
+                v["rt_t"][jnp.clip(succ_r, 0, N - 1)], t_ev)
+            v["r_fire"] = jnp.where(
+                ev_rtry, jnp.where(rlen0 > 1, nfire, BIG),
+                v["r_fire"])
+
         # ------------------------------------- node arrival / deferral
         if has_delay:
             # deferred-arrival pop: the event time is the node-local
             # (delayed) arrival; the FIFO successor resolves lazily
-            # (no-churn) or straight off the rail (churn)
+            # (overlay mode) or straight off the rail (direct mode).
+            # A retry (like a raw arrival) only *sends* here — it
+            # reaches its node via a later NODE_ARRIVAL pop
             plen0 = v["pend_len"]
             rid_p = v["pend_head"]
             v = dict(v)
-            if has_churn:
+            if direct:
                 succ_p = jnp.where(plen0 > 1,
                                    v["dnx"][jnp.clip(rid_p, 0, N - 1)],
                                    jnp.int32(-1))
@@ -882,7 +1123,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                                  - ev_pend.astype(jnp.int32))
                 # a request landing on a node that died in flight
                 # parks instead of arriving
-                na_on = ev_pend & node_up
+                na_on = (ev_pend & node_up) if has_churn else ev_pend
             else:
                 v["pend_head"] = jnp.where(ev_pend, jnp.int32(-1),
                                            v["pend_head"])
@@ -905,6 +1146,14 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                 rid_na = jnp.where(ev_orph, rid_o, rid_na)
                 t_na = jnp.where(ev_orph, t_ev, t_na)
                 na_on = (ev_arr & anyup) | ev_orph
+            if has_resil:
+                # a retry re-enters the router-picked node exactly
+                # like an arrival, at its fire time (all-down retries
+                # park instead, like fresh arrivals)
+                rid_na = jnp.where(ev_rtry, rid_r, rid_na)
+                t_na = jnp.where(ev_rtry, t_ev, t_na)
+                na_on = na_on | ((ev_rtry & anyup) if has_churn
+                                 else ev_rtry)
         rid_na32 = jnp.asarray(rid_na, jnp.int32)
         if timers:
             # chain every node arrival onto the (node, fn) timer rail
@@ -917,7 +1166,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             ni = _gidx(na_on, j_na, F)
             v["la_rid"] = v["la_rid"].at[ni].set(rid_na32, mode="drop")
             v["arr_cnt"] = v["arr_cnt"].at[ni].add(1, mode="drop")
-        progress = ev_slot | ev_timer | ev_arr
+        progress = ev_slot | ev_timer | ev_arr | ev_rtry
         if has_delay:
             progress = progress | ev_pend
         if has_churn:
@@ -928,13 +1177,22 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                        progress.astype(jnp.int32)]))
         v = kernel.on_arrival(ctx, v, rid_na, t_na, na_on)
         if has_delay:
-            # raw arrival (and, under churn, orphan re-route): the
-            # routing decision is made (``node`` is the pick) and the
-            # request goes in flight to that node
+            # raw arrival (and, under churn / resilience, orphan
+            # re-route or retry): the routing decision is made
+            # (``node`` is the pick) and the request goes in flight to
+            # that node
             rid_a32 = jnp.asarray(rid_a, jnp.int32)
-            if has_churn:
-                snd_on = (ev_arr & anyup) | ev_orph
-                rid_s = jnp.where(ev_orph, rid_o, rid_a32)
+            if direct:
+                if has_churn:
+                    snd_on = (ev_arr & anyup) | ev_orph
+                    rid_s = jnp.where(ev_orph, rid_o, rid_a32)
+                else:
+                    snd_on = ev_arr
+                    rid_s = rid_a32
+                if has_resil:
+                    snd_on = snd_on | ((ev_rtry & anyup) if has_churn
+                                       else ev_rtry)
+                    rid_s = jnp.where(ev_rtry, rid_r32, rid_s)
                 # landing time samples the delay at send time
                 kc = jnp.clip(node, 0, K - 1)
                 if var_delay:
@@ -973,8 +1231,8 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                                  + ev_arr.astype(jnp.int32))
         if has_churn:
             # park append — the one code path that grows the FIFO:
-            # all-down fresh arrivals, and (under delay) requests
-            # landing on a node that died while they were in flight
+            # all-down fresh arrivals / retries, and (under delay)
+            # requests landing on a node that died while in flight
             if has_delay:
                 park_in = (ev_arr & ~anyup) | (ev_pend & ~node_up)
                 rid_pk = jnp.where(ev_pend, rid_p,
@@ -982,6 +1240,9 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             else:
                 park_in = ev_arr & ~anyup
                 rid_pk = jnp.asarray(rid_a, jnp.int32)
+            if has_resil:
+                park_in = park_in | (ev_rtry & ~anyup)
+                rid_pk = jnp.where(ev_rtry, rid_r32, rid_pk)
             pk_empty = v["park_len"] == 0
             pk_tail = v["park_tail"]
             v = dict(v)
@@ -996,14 +1257,14 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             v["park_t"] = jnp.where(park_in & pk_empty, t_ev,
                                     v["park_t"])
         s = v
-        if has_delay and not stream and not has_churn:
+        if has_delay and not stream and not direct:
             ki = jnp.where(s["ev_rid"] >= 0, k_step, SG)
             s["d_node"] = s["d_node"].at[ki].set(
                 jnp.asarray(node, jnp.int32), mode="drop")
 
         s = _fold_event(ctx, s)
         s = dict(s)
-        if has_churn:
+        if direct:
             # direct-link mode: no overlays to stage, no reads to
             # chase — every link write already hit its rail
             stall = jnp.where(
@@ -1080,10 +1341,10 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
 
     def cond(s):
         ci = s["ci"]
-        return jnp.any((ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0))
+        return jnp.any((ci[:, done_col] < N) & (ci[:, CI_STALL] == 0))
 
     def segment(s):
-        if not stream and not has_churn:
+        if not stream and not direct:
             s = dict(s)
             s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
 
@@ -1101,7 +1362,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                         jnp.where(pos >= 0, pos % F, F))
 
             s = dict(s)
-            if not has_churn:
+            if not direct:
                 kw, fw = qw_idx(s["qw_len_pos"])
                 s["q_len"] = s["q_len"].at[lanes, kw, fw].add(
                     s["qw_len_delta"], mode="drop")
@@ -1113,7 +1374,7 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                     lanes, kw, fw].set(s["qw_tail_val"], mode="drop")
             ei, t_ev, t_arr = pick_events(s)
             ci = s["ci"]
-            live = ((ci[:, CI_DONE] < N) & (ci[:, CI_STALL] == 0)
+            live = ((ci[:, done_col] < N) & (ci[:, CI_STALL] == 0)
                     & (t_ev < BIG))
             # the router runs first, read-only: in an arrival event no
             # enabled write precedes the arrival phase, so the state
@@ -1132,6 +1393,13 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             else:
                 up = None
                 rid_rt, t_rt = rid_a, t_arr
+            if has_resil:
+                # ... or the retry-rail head, decided at its fire time
+                ev_rtry_g = live & (ei == rtry_base)
+                rid_rt = jnp.where(
+                    ev_rtry_g, jnp.clip(s["r_head"], 0, N - 1),
+                    rid_rt)
+                t_rt = jnp.where(ev_rtry_g, t_ev, t_rt)
             j_rt = fn_flat[base_n + rid_rt]
             if var_delay:
                 delay_now = _sched_delay(
@@ -1145,8 +1413,9 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                 pick_lanes(s["q_len"], s["q_tot"], s["slot_fn"],
                            s["slot_state"], cap_mask, s["est_sum"],
                            s["est_n"], s["node_gn"], s["node_gsum"],
-                           t_cold_l, up, delay_now, j_rt, rid_rt,
-                           t_rt), 0, K - 1)
+                           t_cold_l, up, delay_now,
+                           s["cbr_until"] if has_breaker else None,
+                           j_rt, rid_rt, t_rt), 0, K - 1)
             if has_churn:
                 # a router may still name a down node (e.g. every
                 # sampled JSQ candidate is down); re-aim at the
@@ -1189,13 +1458,19 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                            capm_node, beta, ei, t_ev, t_arr, k_ev)
             s = commit_nodal(s, v, k_ev)
             exec_on = ev_slot & (ei < KC)
+            if has_resil:
+                # only successful completions count toward the
+                # per-node tally (the lane body classified them)
+                nd_on = s.pop("rs_ok")
+            else:
+                nd_on = exec_on
             s["node_done"] = s["node_done"].at[
-                lanes, jnp.where(exec_on, k_ev, K)].add(
+                lanes, jnp.where(nd_on, k_ev, K)].add(
                 1, mode="drop")
             return s
 
         s = lax.fori_loop(0, SG, step, s)
-        if has_churn:
+        if direct:
             # direct-link mode writes every rail in-body; nothing to
             # flush
             return s
@@ -1240,10 +1515,18 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
     if not stream:
         out["start"] = final["start"]
         out["completion"] = final["completion"]
-        if has_delay and not has_churn:
+        if has_delay and not direct:
             out["node_of"] = final["node_of"]
     if deadlines is not None:
         out["deadline_miss"] = final["dl_miss"]
+    if has_resil:
+        out["failed"] = ci[:, CI_FAILED]
+        out["timed_out"] = ci[:, CI_TMO]
+        out["retried"] = ci[:, CI_RETRY]
+        out["shed"] = ci[:, CI_SHED]
+        out["failed_exhausted"] = ci[:, CI_EXH]
+    if has_breaker:
+        out["breaker_trips"] = ci[:, CI_TRIPS]
     return out
 
 
@@ -1253,14 +1536,16 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                                     "seed", "stream", "tl_bins",
                                     "has_delay", "has_churn",
                                     "var_delay", "seg",
-                                    "keep_responses"))
+                                    "keep_responses", "resil"))
 def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                      threshold, delays=None, churn_t=None, dtimes=None,
-                     dvals=None, dper=None, deadlines=None, *, kernel,
-                     router, n_nodes, n_fns, capacity, queue_cap,
-                     seed=0, stream=True, tl_bins=0, tl_bucket=60.0,
-                     has_delay=False, has_churn=False, var_delay=False,
-                     seg=0, keep_responses=False):
+                     dvals=None, dper=None, deadlines=None,
+                     rs_nfail=None, rs_tmo=None, rs_key=None, *,
+                     kernel, router, n_nodes, n_fns, capacity,
+                     queue_cap, seed=0, stream=True, tl_bins=0,
+                     tl_bucket=60.0, has_delay=False, has_churn=False,
+                     var_delay=False, seg=0, keep_responses=False,
+                     resil=None):
     """Cluster counterpart of `jax_engine._sweep_metrics`: lane-batched
     dynamic-router run + on-device metric reduction (same metric
     names, plus ``node_done``). ``delays``/``has_delay`` switch on the
@@ -1271,28 +1556,41 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
     ``dtimes``/``dvals``/``dper`` + ``var_delay`` make the per-node
     delay time-varying; ``deadlines`` (F,) adds the per-function
     ``deadline_miss`` fold (attainment is derived outside jit by
-    `repro.core.jax_engine.slo_attainment`, shared by every tier)."""
+    `repro.core.jax_engine.slo_attainment`, shared by every tier).
+    ``rs_nfail``/``rs_tmo``/``rs_key`` + the static ``resil`` tuple
+    switch on the resilience layer (failure injection / timeouts /
+    retries / shedding — means and quantiles then reduce over the
+    successful completions, and responses use the raw-arrival
+    convention like churn)."""
     if keep_responses and stream:
         raise ValueError("keep_responses requires stream=False")
     if delays is None:
         delays = jnp.zeros((n_nodes,), jnp.float64)
     out = _simulate_cluster(fn, arr, ex, cold, ev, tix, masks, betas,
                             prior, threshold, delays, churn_t, dtimes,
-                            dvals, dper, deadlines, kernel=kernel,
+                            dvals, dper, deadlines, rs_nfail, rs_tmo,
+                            rs_key, kernel=kernel,
                             router=router, n_nodes=n_nodes,
                             n_fns=n_fns, capacity=capacity,
                             queue_cap=queue_cap, seed=seed,
                             stream=stream, tl_bins=tl_bins,
                             tl_bucket=tl_bucket, has_delay=has_delay,
                             has_churn=has_churn, var_delay=var_delay,
-                            seg=seg)
+                            seg=seg, resil=resil)
     N = fn.shape[1]
+    if resil is not None:
+        # under faults only successes fold into the response sums and
+        # per-request records; means/quantiles reduce over those
+        denom = jnp.maximum(out["done"], 1).astype(jnp.float64)
+    else:
+        denom = N
     if stream:
-        p99 = hist_quantile(out["resp_hist"], 0.99, N,
+        nq = out["done"][:, None] if resil is not None else N
+        p99 = hist_quantile(out["resp_hist"], 0.99, nq,
                             out["max_response"])
     else:
         arr_l = arr[tix]
-        if has_churn:
+        if has_churn or resil is not None:
             pass  # raw-arrival convention: completion - arrival
         elif var_delay:
             nof = out["node_of"]
@@ -1301,9 +1599,14 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
         elif has_delay:
             arr_l = arr_l + delays[out["node_of"]]
         resp = out["completion"] - arr_l
-        p99 = jnp.percentile(resp, 99.0, axis=1)
-    res = dict(mean_response=out["resp_sum"] / N,
-               mean_slowdown=out["slow_sum"] / N,
+        if resil is not None:
+            # shed / retry-exhausted rids keep completion == -1
+            resp = jnp.where(out["completion"] >= 0, resp, jnp.nan)
+            p99 = jnp.nanpercentile(resp, 99.0, axis=1)
+        else:
+            p99 = jnp.percentile(resp, 99.0, axis=1)
+    res = dict(mean_response=out["resp_sum"] / denom,
+               mean_slowdown=out["slow_sum"] / denom,
                resp_sum=out["resp_sum"],
                slow_sum=out["slow_sum"],
                done=out["done"],
@@ -1322,6 +1625,12 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
         res["tl_exec_sum"] = out["tl_exec_sum"]
     if deadlines is not None:
         res["deadline_miss"] = out["deadline_miss"]
+    if resil is not None:
+        for key in ("failed", "timed_out", "retried", "shed",
+                    "failed_exhausted"):
+            res[key] = out[key]
+    if "breaker_trips" in out:
+        res["breaker_trips"] = out["breaker_trips"]
     if keep_responses:
         res["response"] = resp
     return res

@@ -30,6 +30,23 @@ Under churn the response convention switches to completion minus the
 *raw* arrival (the delivery leg may be paid several times; see
 docs/cluster.md), matching the engine's fold-at-EXEC_DONE.
 
+The resilience layer (docs/cluster.md) is mirrored with the shared
+pre-planned outcomes of `repro.core.resilience.plan_outcomes`: the
+effective execution time (``min(exec, timeout)``) is substituted into
+the requests, and at each EXEC_DONE the attempt counter decides
+success (``attempt > n_fail``). A failed attempt frees its slot like a
+success but erases the completion; if budget remains it re-enters
+after ``backoff_py`` through a FIFO retry rail (head-armed RETRY
+events, no overtaking — exactly the engine's rid-chain rail; one rail
+per node on the static tier, one cluster-global rail on the dynamic
+tier). ``queue_cap`` + ``on_overflow`` reproduce the admission-control
+modes post-hoc: when an admitted request leaves a per-function queue
+longer than the cap, ``shed`` removes the newcomer and ``shed_oldest``
+the queue head (terminal, counted ``shed``), while ``error`` keeps the
+legacy drop-and-count-overflow behaviour. A `BreakerRouter` keeps
+per-node (count, failures, open-until) windows updated at EXEC_DONE
+with the engine's exact closed / half-open / open transitions.
+
 Nodes only interact through the router, so any cross-node ordering of
 same-time non-arrival events is immaterial — which is what makes this
 composition a faithful reference for the JAX loop's node-major
@@ -37,12 +54,13 @@ tie-breaking.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.cluster.routers import (DynamicRouter, JSQRouter,
-                                   SLOAwareRouter)
+from repro.cluster.routers import (BreakerRouter, DynamicRouter,
+                                   JSQRouter, SLOAwareRouter)
 from repro.cluster.spec import ClusterSpec
 from repro.core.events import EventKind, EventQueue
 from repro.core.policy import POLICIES
@@ -127,7 +145,13 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                                max_events: Optional[int] = None,
                                deadlines: Optional[Sequence[float]]
                                = None,
-                               horizon: Optional[float] = None
+                               horizon: Optional[float] = None,
+                               queue_cap: Optional[int] = None,
+                               fail_prob=0.0,
+                               timeouts=None,
+                               retry=None,
+                               on_overflow: str = "error",
+                               fail_seed: int = 0
                                ) -> Dict[str, np.ndarray]:
     """Run ``policy_name`` on a K-node cluster over ``trace``.
 
@@ -138,7 +162,17 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
     and the cluster totals; with ``deadlines`` ((F,) per-function SLO
     deadlines) also the per-function ``deadline_miss`` counts
     (``response > deadline``, the engine's predicate).
+
+    ``fail_prob`` / ``timeouts`` / ``retry`` (a `RetryPolicy`) /
+    ``on_overflow`` + ``queue_cap`` switch on the resilience layer
+    (module docstring) with the same trivial-off gate as the engine:
+    all-zero ``fail_prob``, no ``timeouts`` and ``on_overflow=
+    "error"`` leaves every code path untouched. The extra counters
+    (``failed`` / ``timed_out`` / ``retried`` / ``shed`` /
+    ``failed_exhausted`` / ``breaker_trips``) are always returned.
     """
+    from repro.core.resilience import (SHED_MODES, RetryPolicy,
+                                       backoff_py, plan_outcomes)
     cspec.validate()
     K = cspec.n_nodes
     caps = cspec.node_caps(capacity if capacity is not None else 0)
@@ -164,6 +198,38 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
     var_delay = dscheds is not None and any(
         ds is not None and len(ds.values) > 1 for ds in dscheds)
 
+    # ---------------------------------------------- resilience layer
+    if on_overflow not in SHED_MODES:
+        raise ValueError(f"on_overflow must be one of "
+                         f"{sorted(SHED_MODES)}, got {on_overflow!r}")
+    shed_mode = SHED_MODES[on_overflow]
+    fp = np.atleast_1d(np.asarray(fail_prob, np.float64))
+    has_resil = (bool(np.any(fp > 0)) or timeouts is not None
+                 or on_overflow != "error")
+    has_breaker = isinstance(router, BreakerRouter)
+    N = len(trace.requests)
+    fn_ids = np.array([r.fn_id for r in trace.requests], np.int64)
+    orig_exec = np.array([r.exec_time for r in trace.requests])
+    if has_resil:
+        if retry is None:
+            retry = RetryPolicy()
+        max_att = int(retry.max_attempts)
+        eff_exec, n_fail, is_tmo = plan_outcomes(
+            fn_ids, orig_exec, fail_prob=fail_prob, timeouts=timeouts,
+            max_attempts=max_att, n_fns=trace.n_functions,
+            seed=fail_seed)
+        for r, e in zip(trace.requests, eff_exec):
+            r.exec_time = float(e)
+    att = np.zeros((N,), np.int32)
+    counts = dict(failed=0, timed_out=0, retried=0, shed=0,
+                  failed_exhausted=0, breaker_trips=0, overflow=0)
+    # one retry rail per node on the static tier (independent
+    # single-node engines), one cluster-global rail otherwise
+    retry_qs = [deque() for _ in range(K if not router.dynamic else 1)]
+    brk_n = [0] * K
+    brk_f = [0] * K
+    brk_until = [0.0] * K
+
     def delay_at(k: int, t: float) -> float:
         if var_delay:
             ds = dscheds[k]
@@ -182,7 +248,6 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
         pol.bind(servers[k], ests[k])
         policies.append(pol)
 
-    N = len(trace.requests)
     assign = np.full((N,), -1, np.int32)
     static_assign = None
     if not router.dynamic:
@@ -215,12 +280,49 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                 return k
         raise RuntimeError(f"instance {inst.inst_id} owned by no node")
 
+    def admit(k: int, req, t: float) -> None:
+        # hand the request to the node's policy, then apply the
+        # admission-control cap post-hoc: the policy's queues are
+        # uncapped, so a push that left the per-function queue longer
+        # than ``queue_cap`` is exactly an engine push onto a full
+        # queue — ``shed`` removes the newcomer (the tail), ``shed_
+        # oldest`` the head, ``error`` drops the newcomer and counts
+        # overflow (the legacy invalid-run behaviour)
+        policies[k].on_arrival(req, t)
+        if not has_resil or queue_cap is None:
+            return
+        q = _queues(policies[k]).get(req.fn_id)
+        if q is None or len(q) <= queue_cap:
+            return
+        if shed_mode == 2:
+            victim = q.popleft()
+            counts["shed"] += 1
+            victim.completion = -1.0
+        elif q[-1] is req:
+            q.pop()
+            if shed_mode == 1:
+                counts["shed"] += 1
+            else:
+                counts["overflow"] += 1
+
     def route(req, t: float) -> None:
         dn = [delay_at(i, t) for i in range(K)]
-        k = _pick_dynamic(router, servers, policies, ests,
+        pick_router = router
+        pick_up = up if has_churn else None
+        if has_breaker:
+            # mask breaker-open nodes for the inner router's pick,
+            # failing open when every live node is open — the traced
+            # `BreakerRouter.pick` arithmetic
+            base_up = pick_up if pick_up is not None else [True] * K
+            eff = [u and brk_until[i] <= t
+                   for i, u in enumerate(base_up)]
+            if not any(eff):
+                eff = list(base_up)
+            pick_router, pick_up = router.inner, eff
+        k = _pick_dynamic(pick_router, servers, policies, ests,
                           trace.functions, req.req_id, req.fn_id,
                           cspec.seed, exec_prior,
-                          up=up if has_churn else None, delay_now=dn)
+                          up=pick_up, delay_now=dn)
         if has_churn and not up[k]:
             k = up.index(True)   # lowest-id up node, engine's argmax
         assign[req.req_id] = k
@@ -230,7 +332,20 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             events.push(t + delay_at(k, t), EventKind.NODE_ARRIVAL,
                         req)
         else:
-            policies[k].on_arrival(req, t)
+            admit(k, req, t)
+
+    def retry_rail(req) -> deque:
+        return retry_qs[int(assign[req.req_id])
+                        if not router.dynamic else 0]
+
+    def retry_push(req, elig: float) -> None:
+        # FIFO rail, head-armed: only the head has a RETRY event in
+        # flight; the successor is armed at pop time with
+        # ``max(elig, pop time)`` (no overtaking)
+        rail = retry_rail(req)
+        if not rail:
+            events.push(elig, EventKind.RETRY, req)
+        rail.append((req, elig))
 
     node_done = np.zeros((K,), np.int64)
     n_events = 0
@@ -246,7 +361,7 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             if static_assign is not None:
                 k = int(static_assign[req.req_id])
                 assign[req.req_id] = k
-                policies[k].on_arrival(req, ev.time)
+                admit(k, req, ev.time)
             elif has_churn and not any(up):
                 parked.append(req)
             else:
@@ -262,7 +377,25 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                 else:
                     parked.append(req)
             else:
-                policies[k].on_arrival(req, ev.time)
+                admit(k, req, ev.time)
+        elif ev.kind == EventKind.RETRY:
+            req = ev.payload
+            rail = retry_rail(req)
+            assert rail and rail[0][0] is req
+            rail.popleft()
+            if rail:
+                nreq, nelig = rail[0]
+                events.push(max(nelig, ev.time), EventKind.RETRY,
+                            nreq)
+            if static_assign is not None:
+                # static tier: the retry re-enters its own node's
+                # queue at the fire time (the delivery leg is not
+                # re-paid — the request never left the node)
+                admit(int(assign[req.req_id]), req, ev.time)
+            elif has_churn and not any(up):
+                parked.append(req)
+            else:
+                route(req, ev.time)
         elif ev.kind == EventKind.REROUTE:
             req = ev.payload
             if not any(up):
@@ -310,18 +443,63 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             k = owner(inst)
             req = inst.current
             ests[k].observe(req.fn_id, req.exec_time)
-            node_done[k] += 1
+            ok = True
+            if has_resil:
+                # the pre-planned attempt test (core/resilience.py):
+                # the engine counts attempts at dispatch, this
+                # reference at completion — equal here because a
+                # churn-drained attempt reaches neither
+                att[req.req_id] += 1
+                a = int(att[req.req_id])
+                ok = a > int(n_fail[req.req_id])
+            if ok:
+                node_done[k] += 1
+            if has_breaker:
+                # engine-exact window transitions: closed counts the
+                # attempt and trips on a full window's failures;
+                # half-open lets the first completion decide; open
+                # completions are pre-trip stragglers, ignored
+                u0 = brk_until[k]
+                if u0 == 0.0:  # closed
+                    brk_n[k] += 1
+                    brk_f[k] += 0 if ok else 1
+                    if brk_n[k] >= router.volume:
+                        if brk_f[k] >= router.trip_at:
+                            brk_until[k] = ev.time + router.cooldown
+                            counts["breaker_trips"] += 1
+                        brk_n[k] = brk_f[k] = 0
+                elif u0 <= ev.time:  # half-open: first result decides
+                    if ok:
+                        brk_until[k] = 0.0
+                    else:
+                        brk_until[k] = ev.time + router.cooldown
+                        counts["breaker_trips"] += 1
+                    brk_n[k] = brk_f[k] = 0
             policies[k].on_exec_done(inst, req, ev.time)
+            if not ok:
+                req.completion = -1.0
+                if is_tmo[req.req_id]:
+                    counts["timed_out"] += 1
+                else:
+                    counts["failed"] += 1
+                if a >= max_att:
+                    counts["failed_exhausted"] += 1
+                else:
+                    counts["retried"] += 1
+                    retry_push(req, ev.time + backoff_py(
+                        a, req.req_id, retry.base, retry.cap,
+                        retry.jitter, fail_seed))
         elif ev.kind == EventKind.COLD_DONE:
             inst = ev.payload
             if getattr(inst, "dead", False):
                 continue
             policies[owner(inst)].on_cold_done(inst, ev.time)
         elif ev.kind == EventKind.TIMER:
-            if has_churn:
+            if has_churn or has_resil:
                 raise RuntimeError(
                     "timer-armed policies are not supported under "
-                    "churn (matches the engine's rejection)")
+                    "churn or the resilience layer (matches the "
+                    "engine's rejection)")
             # timer payloads are requests; route to the node that owns
             # the request (openwhisk_v2 on the static path)
             req = ev.payload
@@ -332,9 +510,17 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
     start = np.array([r.start for r in trace.requests])
     completion = np.array([r.completion for r in trace.requests])
     arr = np.array([r.arrival for r in trace.requests])
-    if has_churn:
+    if has_resil:
+        # restore the pre-substitution execution times so the trace
+        # can be replayed (min(exec, timeout) is not idempotent for
+        # the timeout classification)
+        for r, e in zip(trace.requests, orig_exec):
+            r.exec_time = float(e)
+    if has_churn or (has_resil and router.dynamic):
         # the delivery leg may be paid several times for a re-routed
-        # request, so the response baseline is the raw arrival
+        # or retried request, so the response baseline is the raw
+        # arrival (the static tier keeps its per-node delayed clock —
+        # a retry never leaves its node)
         pass
     elif static_assign is not None:
         # response measured from the node-local (delayed) arrival,
@@ -348,13 +534,16 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
         else:
             arr = arr + np.asarray(delays)[ka]
     response = completion - arr
+    if has_resil:
+        response = np.where(completion >= 0.0, response, np.nan)
     out = dict(
         start=start, completion=completion, response=response,
         assign=assign, node_done=node_done,
         node_cold=np.array([s.stats.cold_starts for s in servers]),
         cold_starts=int(sum(s.stats.cold_starts for s in servers)),
         evictions=int(sum(s.stats.evictions for s in servers)),
-        n_events=n_events)
+        n_events=n_events, done=int((completion >= 0.0).sum()),
+        **counts)
     if deadlines is not None:
         dl = np.asarray(deadlines, np.float64)
         fn = np.array([r.fn_id for r in trace.requests])

@@ -26,6 +26,7 @@ JAX engine, the numpy pre-pass and the pure-Python reference simulator
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List
 
 import numpy as np
@@ -96,6 +97,7 @@ class ClusterView:
 
     up = None
     delay_now = None
+    brk_until = None  # (K,) f64 circuit-breaker open-until times
 
     def __init__(self, **kw):
         self.__dict__.update(kw)
@@ -295,6 +297,57 @@ class SLOAwareRouter(DynamicRouter):
         return jnp.argmin(score).astype(jnp.int32)
 
 
+class BreakerRouter(DynamicRouter):
+    """Circuit-breaker wrapper around another dynamic router.
+
+    Per node, completed attempts are counted in tumbling windows of
+    ``volume``; when a full window's failure/timeout count reaches
+    ``ceil(threshold * volume)`` the breaker *trips*: the node stops
+    receiving routed requests for ``cooldown`` seconds. After the
+    cooldown the node is *half-open* — it is routable again, and the
+    first attempt that completes on it decides: success closes the
+    breaker (counters reset), failure re-trips it for another cooldown.
+    If every candidate node is tripped the breaker fails open (routes
+    as if no breaker existed) so requests are never lost to the wrapper
+    itself. The trip state lives in the cluster engine
+    (``brk_until`` — 0 when closed, the reopen time while open) and is
+    mirrored exactly by the Python reference cluster.
+
+    Without a failure source (``fail_prob`` / ``timeouts``) the breaker
+    never trips and the wrapper degrades to its inner router.
+    """
+
+    def __init__(self, inner: "DynamicRouter", name: str = "breaker", *,
+                 threshold: float = 0.5, volume: int = 20,
+                 cooldown: float = 30.0):
+        if not isinstance(inner, DynamicRouter):
+            raise TypeError(
+                "BreakerRouter wraps a DynamicRouter instance, got "
+                f"{type(inner).__name__}")
+        if not (0.0 < threshold <= 1.0):
+            raise ValueError("BreakerRouter threshold must be in (0, 1]")
+        if volume < 1 or cooldown <= 0:
+            raise ValueError(
+                "BreakerRouter needs volume >= 1 and cooldown > 0")
+        self.inner = inner
+        self.name = name
+        self.threshold = float(threshold)
+        self.volume = int(volume)
+        self.cooldown = float(cooldown)
+        # integer trip point: a full window trips iff fails >= trip_at
+        self.trip_at = max(1, int(math.ceil(self.volume * self.threshold)))
+
+    def pick(self, g, j, rid, t):
+        import jax.numpy as jnp
+        ok = g.brk_until <= t
+        base_up = (g.up if g.up is not None
+                   else jnp.ones(g.n_nodes, dtype=bool))
+        eff = base_up & ok
+        eff = jnp.where(eff.any(), eff, base_up)  # fail open
+        g2 = ClusterView(**{**g.__dict__, "up": eff})
+        return self.inner.pick(g2, j, rid, t)
+
+
 # --------------------------------------------------------------- registry
 ROUTERS: Dict[str, Router] = {
     "hash": HashRouter(),
@@ -303,6 +356,7 @@ ROUTERS: Dict[str, Router] = {
     "jsq2": JSQRouter("jsq2", d=2),
     "cold_aware": ColdAwareRouter(),
     "slo_aware": SLOAwareRouter(),
+    "breaker": BreakerRouter(JSQRouter("jsq2", d=2)),
 }
 
 

@@ -47,8 +47,8 @@ def _churn_operand(entry: ClusterSpec, horizon: float):
 
 
 def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
-                       N: int, kernels, beta_cols, deadlines=None
-                       ) -> Dict[str, np.ndarray]:
+                       N: int, kernels, beta_cols, deadlines=None,
+                       rs=None) -> Dict[str, np.ndarray]:
     """One dynamic-router entry over the spec grid: (P, T, KC, B)
     metric arrays from the K-node loop."""
     import jax.numpy as jnp
@@ -72,6 +72,17 @@ def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                   B, axis=0), (T, 1, 1))
     L = T * KC * B
 
+    resil = None
+    rs_kw = {}
+    if rs is not None:
+        # substitute the timeout-clipped exec operand and ship the
+        # pre-planned outcome operands (all (T, N), trace-indexed via
+        # tix inside the engine, so they are chunk-invariant)
+        eff, rs_nfail, rs_tmo, rs_key, resil = rs
+        stacked = dict(stacked, exec_time=eff)
+        rs_kw = dict(rs_nfail=jnp.asarray(rs_nfail, jnp.int32),
+                     rs_tmo=jnp.asarray(rs_tmo),
+                     rs_key=jnp.asarray(rs_key, jnp.int32))
     shared = tuple(jnp.asarray(stacked[k]) for k in
                    ("fn_id", "arrival", "exec_time", "cold_start",
                     "evict"))
@@ -109,12 +120,13 @@ def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                 jnp.asarray(masks[lo:hi]), jnp.asarray(beta_l[lo:hi]),
                 jnp.float64(spec.prior), jnp.float64(spec.threshold),
                 delays_op, churn_op, dt_op, dv_op, dp_op, dl_op,
+                **rs_kw,
                 kernel=kernels[policy], router=router, n_nodes=Kn,
                 n_fns=F, capacity=C, queue_cap=spec.queue_cap,
                 seed=entry.seed, stream=spec.stream,
                 tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
                 has_delay=has_delay, has_churn=has_churn,
-                var_delay=var_delay,
+                var_delay=var_delay, resil=resil,
                 keep_responses=spec.keep_per_request)
             for k, v in out.items():
                 outs.setdefault(k, []).append(np.asarray(v))
@@ -169,27 +181,36 @@ def run_cluster_experiment(spec) -> "ResultSet":
     entries = list(spec.cluster)
     k_max = max((e.n_nodes if e is not None else 1) for e in entries)
     deadlines = spec.deadline_ops(F)
+    rs = spec.resilience_ops(stacked, F)
     entry_data: List[Dict[str, np.ndarray]] = []
     for entry in entries:
         if entry is None:
             # devices=1 keeps plain cells on the same (default) device
             # the cluster tiers use — spec.validate() already rejects
             # explicit multi-device cluster runs
-            rs = _run_plain(replace(spec, cluster=None, devices=1))
-            d = dict(rs.data)
+            plain = _run_plain(replace(spec, cluster=None, devices=1))
+            d = dict(plain.data)
             # recomputed below from the stacked counters so every
-            # entry's attainment comes from the one shared helper
+            # entry's attainment/goodput comes from the one shared
+            # helper
             d.pop("slo_attainment", None)
+            d.pop("goodput", None)
             d["node_done"] = d["done"][..., None].astype(np.int32)
         elif entry.get_router().dynamic:
             d = _run_dynamic_entry(spec, entry, stacked, F, N,
-                                   kernels, beta_cols, deadlines)
+                                   kernels, beta_cols, deadlines, rs)
         else:
             d = run_static_entry(spec, entry, stacked, F, N, kernels,
-                                 beta_cols, deadlines)
+                                 beta_cols, deadlines, rs)
         d["node_done"] = _pad_node_dim(d["node_done"], k_max)
         entry_data.append(d)
 
+    # ``breaker_trips`` only comes out of breaker-routed dynamic
+    # entries; other entries contribute an (exact) all-zero column
+    if any("breaker_trips" in d for d in entry_data):
+        for d in entry_data:
+            d.setdefault("breaker_trips",
+                         np.zeros_like(d["done"], np.int64))
     keys = set(entry_data[0])
     for d, entry in zip(entry_data[1:], entries[1:]):
         if set(d) != keys:
@@ -202,6 +223,9 @@ def run_cluster_experiment(spec) -> "ResultSet":
         from repro.core.jax_engine import slo_attainment
         data["slo_attainment"] = slo_attainment(
             data["deadline_miss"], data["done"])
+    if rs is not None:
+        from repro.core.jax_engine import goodput
+        data["goodput"] = goodput(data["done"], N)
 
     labels = _unique_labels([(e.label if e is not None else "none")
                              for e in entries])
@@ -217,6 +241,7 @@ def run_cluster_experiment(spec) -> "ResultSet":
                 tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
                 prior=spec.prior, threshold=spec.threshold,
                 backend=jax.default_backend(),
+                resilience=spec.resilience_meta(),
                 seeds=(list(spec.seeds) if spec.seeds is not None
                        else None),
                 deadlines=(None if spec.deadlines is None else

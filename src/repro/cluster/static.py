@@ -127,7 +127,8 @@ def build_node_streams(arrays: Dict[str, np.ndarray],
 # metrics sum in any order; max is order-free
 _SUM_F = ("resp_sum", "slow_sum", "cold_time", "evict_time")
 _SUM_I = ("cold_starts", "evictions", "overflow", "stalled", "done",
-          "resp_hist", "deadline_miss")
+          "resp_hist", "deadline_miss", "failed", "timed_out",
+          "retried", "shed", "failed_exhausted")
 _SUM_F_TL = ("tl_resp_sum", "tl_exec_sum")
 _SUM_I_TL = ("tl_count",)
 
@@ -139,14 +140,19 @@ def _ordered_sum(a: np.ndarray, axis: int) -> np.ndarray:
 
 
 def merge_node_metrics(per_node: Dict[str, np.ndarray], node_axis: int,
-                       n_total: int) -> Dict[str, np.ndarray]:
+                       n_total: int, resil: bool = False
+                       ) -> Dict[str, np.ndarray]:
     """Fold per-node metric arrays (node axis ``node_axis``) into
     cluster-level metrics over ``n_total`` requests.
 
     Means and the streamed p99 are recomputed from the merged sums /
     histogram exactly the way `jax_engine._sweep_metrics` computes
     them, so a single-node "cluster" merges to the engine's own
-    numbers bit for bit."""
+    numbers bit for bit. Under ``resil`` the denominators are the
+    merged success counts (``done``) instead of ``n_total`` — an array
+    denominator, so plain IEEE division matches the engine's (the
+    jitted reciprocal-multiply fold in `_mean` only applies to
+    *constant* denominators)."""
     from repro.core.jax_engine import hist_quantile
     out: Dict[str, np.ndarray] = {}
     for m in _SUM_F:
@@ -165,17 +171,25 @@ def merge_node_metrics(per_node: Dict[str, np.ndarray], node_axis: int,
                                      if node_axis < 0 else node_axis)
     out["max_response"] = per_node["max_response"].max(axis=node_axis)
     out["node_done"] = np.moveaxis(per_node["done"], node_axis, -1)
-    out["mean_response"] = _mean(out["resp_sum"], n_total)
-    out["mean_slowdown"] = _mean(out["slow_sum"], n_total)
-    out["p99_response"] = np.asarray(hist_quantile(
-        out["resp_hist"], 0.99, n_total, out["max_response"]))
+    if resil:
+        den = np.maximum(out["done"], 1).astype(np.float64)
+        out["mean_response"] = out["resp_sum"] / den
+        out["mean_slowdown"] = out["slow_sum"] / den
+        out["p99_response"] = np.asarray(hist_quantile(
+            out["resp_hist"], 0.99, out["done"][..., None],
+            out["max_response"]))
+    else:
+        out["mean_response"] = _mean(out["resp_sum"], n_total)
+        out["mean_slowdown"] = _mean(out["slow_sum"], n_total)
+        out["p99_response"] = np.asarray(hist_quantile(
+            out["resp_hist"], 0.99, n_total, out["max_response"]))
     return out
 
 
 def run_static_entry(spec, entry: ClusterSpec,
                      stacked: Dict[str, np.ndarray], F: int, N: int,
                      kernels: dict, beta_cols: Dict[str, np.ndarray],
-                     deadlines=None) -> Dict[str, np.ndarray]:
+                     deadlines=None, rs=None) -> Dict[str, np.ndarray]:
     """Execute one static `ClusterSpec` over the spec's grid.
 
     Returns (P, T, KC, B)-shaped metric arrays (plus trailing dims:
@@ -192,17 +206,39 @@ def run_static_entry(spec, entry: ClusterSpec,
     B = 1 if spec.betas is None else len(spec.betas)
     C = max(max(entry.node_caps(c)) for c in spec.capacities)
 
-    # per-trace partition (vectorised pre-pass)
+    resil = None
+    if rs is not None:
+        eff, rs_nfail, rs_tmo, _, resil = rs
+
+    # per-trace partition (vectorised pre-pass). Under resilience the
+    # timeout-clipped exec times are partitioned instead, and each
+    # node's sub-stream carries its requests' pre-planned outcome rows
+    # sliced by the same assignment — with the *original* request ids
+    # as the jitter keys, so a request's retry backoffs are identical
+    # no matter which node (or tier) runs it.
     streams_t: List[Dict[str, np.ndarray]] = []
     n_live_rows = np.zeros((T, Kn), np.int32)
     index: List[List[np.ndarray]] = []
+    rs_rows: List[Dict[str, np.ndarray]] = []
     for t in range(T):
         a = {k: stacked[k][t] for k in ("fn_id", "arrival",
                                         "exec_time")}
+        if rs is not None:
+            a["exec_time"] = eff[t]
         _, streams, n_live, idx = build_node_streams(a, entry)
         streams_t.append(streams)
         n_live_rows[t] = n_live
         index.append(idx)
+        if rs is not None:
+            nf = np.zeros((Kn, N), np.int32)
+            tm = np.zeros((Kn, N), bool)
+            ky = np.zeros((Kn, N), np.int32)
+            for k in range(Kn):
+                i = idx[k]
+                nf[k, : len(i)] = rs_nfail[t][i]
+                tm[k, : len(i)] = rs_tmo[t][i]
+                ky[k, : len(i)] = i
+            rs_rows.append(dict(nfail=nf, tmo=tm, key=ky))
 
     # One engine call per (trace, node) sub-stream row, lanes =
     # capacity x beta. Feeding all T*K rows as one shared (T*K, N)
@@ -235,6 +271,13 @@ def run_static_entry(spec, entry: ClusterSpec,
                                   for _ in range(B)])
                 beta_l = beta_cols[policy][:L]
                 nl = np.full((L,), n_live_rows[t, k], np.int32)
+                rs_kw = {}
+                if rs is not None:
+                    rr = rs_rows[t]
+                    rs_kw = dict(
+                        rs_nfail=jnp.asarray(rr["nfail"][k][None]),
+                        rs_tmo=jnp.asarray(rr["tmo"][k][None]),
+                        rs_key=jnp.asarray(rr["key"][k][None]))
                 row_outs: Dict[str, list] = {}
                 for lo in range(0, L, chunk):
                     hi = min(lo + chunk, L)
@@ -244,7 +287,8 @@ def run_static_entry(spec, entry: ClusterSpec,
                         jnp.asarray(beta_l[lo:hi]),
                         jnp.float64(spec.prior),
                         jnp.float64(spec.threshold),
-                        jnp.asarray(nl[lo:hi]), dl_op,
+                        jnp.asarray(nl[lo:hi]), dl_op, **rs_kw,
+                        resil=resil,
                         kernel=kernels[policy], n_fns=F, capacity=C,
                         queue_cap=spec.queue_cap, stream=spec.stream,
                         window=spec.window, tl_bins=spec.tl_bins,
@@ -266,7 +310,8 @@ def run_static_entry(spec, entry: ClusterSpec,
     data: Dict[str, np.ndarray] = {}
     for pi, policy in enumerate(spec.policies):
         pn = per_policy[policy]
-        merged = merge_node_metrics(pn, node_axis=3, n_total=N)
+        merged = merge_node_metrics(pn, node_axis=3, n_total=N,
+                                    resil=resil is not None)
         if "response" in pn:
             resp = np.zeros((T, KC, B, N), np.float64)
             for t in range(T):
@@ -274,7 +319,13 @@ def run_static_entry(spec, entry: ClusterSpec,
                     nk = int(n_live_rows[t, k])
                     resp[t, :, :, index[t][k]] = np.moveaxis(
                         pn["response"][t, :, :, k, :nk], -1, 0)
-            merged["p99_response"] = np.percentile(resp, 99.0, axis=-1)
+            if resil is not None:
+                # shed / retry-exhausted rids carry NaN responses
+                merged["p99_response"] = np.nanpercentile(
+                    resp, 99.0, axis=-1)
+            else:
+                merged["p99_response"] = np.percentile(resp, 99.0,
+                                                       axis=-1)
             if spec.keep_per_request:
                 merged["response"] = resp
         for m, v in merged.items():

@@ -5,7 +5,7 @@ simultaneous events so that capacity freed at time t is visible to an
 arrival at the same t:
 
     EXEC_DONE < COLD_DONE < TIMER < NODE_ARRIVAL < REROUTE < CHURN
-              < ARRIVAL
+              < RETRY < ARRIVAL
 
 ``NODE_ARRIVAL`` is the deferred-delivery leg of a routed request
 (dynamic cluster routing under per-node network delay: the router
@@ -16,8 +16,11 @@ before the router decides the next one at the same instant.
 the router, and ``CHURN`` is a node availability toggle (NODE_DOWN /
 NODE_UP, see docs/cluster.md); orphans re-route before any same-time
 churn toggle or fresh arrival, and churn resolves before the router
-sees a same-time arrival. ``seq`` breaks remaining ties FIFO, keeping
-runs fully deterministic.
+sees a same-time arrival. ``RETRY`` re-injects a failed/timed-out
+request after its backoff delay (see `repro.core.resilience`); it
+resolves after churn (a same-time toggle settles availability first)
+but before fresh arrivals (the retried request is older). ``seq``
+breaks remaining ties FIFO, keeping runs fully deterministic.
 """
 from __future__ import annotations
 
@@ -35,7 +38,8 @@ class EventKind(IntEnum):
     NODE_ARRIVAL = 3  # a routed request reaches its node  -> FCP hook
     REROUTE = 4       # an orphaned request re-enters the router
     CHURN = 5         # a node goes down / comes back up
-    ARRIVAL = 6       # a request arrives (router decides) -> FCP hook
+    RETRY = 6         # a failed request re-enters after backoff
+    ARRIVAL = 7       # a request arrives (router decides) -> FCP hook
 
 
 @dataclass(order=True)

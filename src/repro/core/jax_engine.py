@@ -214,6 +214,7 @@ import numpy as np              # noqa: E402
 from jax import lax             # noqa: E402
 
 from repro.core.request import Trace  # noqa: E402
+from repro.core.resilience import backoff_jax  # noqa: E402
 
 BIG = 1e30
 COLD, IDLE, BUSY = 0, 1, 2
@@ -242,9 +243,15 @@ LANE_CHUNKS = {"cpu": 8, "gpu": 256, "tpu": 512}
 _AUTO_CHUNK: Dict[str, int] = {}
 
 # Packed per-lane counters: ci (NCI,) i32 and cf (NCF,) f64.
+# CI_TERM..CI_TRIPS are the resilience tallies (requests terminal for
+# any reason, injected failures, timeouts, retries, sheds, retry-budget
+# exhaustions, circuit-breaker trips) — appended so the pre-resilience
+# indices, and therefore every existing jaxpr, are unchanged; they stay
+# zero unless the run declares a failure source.
 (CI_NEXT, CI_DONE, CI_ITERS, CI_STALL, CI_SEQ, CI_GN, CI_COLD,
- CI_EVICT, CI_OVF) = range(9)
-NCI = 9
+ CI_EVICT, CI_OVF, CI_TERM, CI_FAILED, CI_TMO, CI_RETRY, CI_SHED,
+ CI_EXH, CI_TRIPS) = range(16)
+NCI = 16
 CF_GSUM, CF_COLDT, CF_EVICTT, CF_RSUM, CF_SSUM, CF_RMAX = range(6)
 NCF = 6
 
@@ -419,6 +426,12 @@ class EngineCtx:
         # assumes one record per rid per segment)
         self.fold_at_dispatch = True
         self.direct_records = False
+        # resilience gates: attempt counting at dispatch and deferring
+        # the exact-mode completion record to the (successful)
+        # EXEC_DONE — an exhausted request must keep completion == -1,
+        # not its last attempt's dispatch-time completion
+        self.has_resil = False
+        self.defer_completion = False
 
     def _dual(self, full, slab, rid):
         """Windowed read of ``full[tix, rid]``: slab when ``rid`` is in
@@ -559,6 +572,110 @@ class EngineCtx:
             _gidx(on & rail_head & ~pushed, fn, self.F)].add(
             1, mode="drop")
         return s
+
+
+class ResilCtx(EngineCtx):
+    """Engine ctx under the resilience layer (fail_prob / timeouts /
+    retries / shedding).
+
+    Retries re-enqueue an old rid, which breaks the positional-cursor
+    queue invariant (each arrival consumes exactly one position, once),
+    so the per-function queues switch to the direct rid-link layout the
+    cluster's churn loop uses: a shared ``nxt`` (N,) successor array
+    (a rid is queued XOR running XOR awaiting retry XOR terminal, so
+    one link array serves both the function queues and the retry rail)
+    plus carried ``q_tail_rid``. Resilience runs are forced
+    single-window for the same reason (a retried rid can be arbitrarily
+    far behind the arrival cursor), so the dual-source reads are the
+    flat fast path anyway.
+
+    The pre-planned outcome operands (`repro.core.resilience
+    .plan_outcomes`) ride three (T, N) rows: ``nfail_at`` (leading
+    failed attempts), ``tmo_at`` (the failure is a timeout) and
+    ``key_at`` (the request's *original* trace id — the jitter hash
+    key, so sliced/renumbered sub-streams draw identically)."""
+
+    def __init__(self, *, nfail2, tmo2, key2, resil, **kw):
+        super().__init__(**kw)
+        self._nf = nfail2.reshape(-1)
+        self._tm = tmo2.reshape(-1)
+        self._ky = key2.reshape(-1)
+        self.resil = resil  # (max_attempts, shed_mode, base, cap,
+        self.has_resil = True            # jitter, fail_seed) — static
+        self.fold_at_dispatch = False    # fold successes at EXEC_DONE
+        self.direct_records = True       # re-dispatches break the d_*
+        self.defer_completion = True     # overlay; completion on success
+
+    def nfail_at(self, rid):
+        return self._nf[self._b_n + jnp.clip(rid, 0, self.N - 1)]
+
+    def tmo_at(self, rid):
+        return self._tm[self._b_n + jnp.clip(rid, 0, self.N - 1)]
+
+    def key_at(self, rid):
+        return self._ky[self._b_n + jnp.clip(rid, 0, self.N - 1)]
+
+    def q_push(self, s, fn, rid, on):
+        """Direct-link append with the admission-control modes: a push
+        onto a full backlog drops-and-counts (``error``, the legacy
+        invalid-run behaviour), sheds the arriving request
+        (``shed`` — it becomes terminal, never admitted) or evicts the
+        queue head to admit the newcomer (``shed_oldest``)."""
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rid32 = jnp.asarray(rid, jnp.int32)
+        len0 = s["q_len"][fc]
+        full = len0 >= self.Q
+        mode = self.resil[1]
+        s = dict(s)
+        if mode == 2:  # shed_oldest: head out (terminal), newcomer in
+            evict = on & full
+            h = s["q_head_rid"][fc]
+            hsucc = s["nxt"][jnp.clip(h, 0, self.N - 1)]
+            fi = _gidx(evict, fn, self.F)
+            s["q_head_rid"] = s["q_head_rid"].at[fi].set(hsucc,
+                                                         mode="drop")
+            s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+            ev_i = evict.astype(jnp.int32)
+            s["ci"] = s["ci"].at[jnp.array([CI_SHED, CI_TERM])].add(
+                jnp.stack([ev_i, ev_i]))
+            do = on
+            was_empty = (len0 - ev_i) == 0
+        else:
+            do = on & ~full
+            was_empty = len0 == 0
+            if mode == 1:  # shed the arriving request
+                sh_i = (on & full).astype(jnp.int32)
+                s["ci"] = s["ci"].at[jnp.array([CI_SHED, CI_TERM])].add(
+                    jnp.stack([sh_i, sh_i]))
+            else:
+                s["ci"] = s["ci"].at[CI_OVF].add(
+                    (on & full).astype(jnp.int32))
+        tail = s["q_tail_rid"][fc]
+        s["q_head_rid"] = s["q_head_rid"].at[
+            _gidx(do & was_empty, fn, self.F)].set(rid32, mode="drop")
+        s["nxt"] = s["nxt"].at[
+            _gidx(do & ~was_empty, tail, self.N)].set(rid32,
+                                                      mode="drop")
+        s["q_tail_rid"] = s["q_tail_rid"].at[
+            _gidx(do, fn, self.F)].set(rid32, mode="drop")
+        s["q_len"] = s["q_len"].at[_gidx(do, fn, self.F)].add(
+            1, mode="drop")
+        return s, do
+
+    def q_consume_direct(self, s, fn, on):
+        """Direct links carry no positional cursor — nothing to
+        account for a straight-to-slot arrival."""
+        return s
+
+    def q_pop(self, s, fn, on):
+        fc = jnp.clip(fn, 0, self.F - 1)
+        rid = s["q_head_rid"][fc]
+        succ = s["nxt"][jnp.clip(rid, 0, self.N - 1)]
+        fi = _gidx(on, fn, self.F)
+        s = dict(s)
+        s["q_head_rid"] = s["q_head_rid"].at[fi].set(succ, mode="drop")
+        s["q_len"] = s["q_len"].at[fi].add(-1, mode="drop")
+        return s, rid
 
 
 class PolicyKernel:
@@ -735,6 +852,11 @@ def dispatch(ctx, s, slot, rid, t, on):
     s["slot_req"] = s["slot_req"].at[si].set(
         jnp.asarray(rid, jnp.int32), mode="drop")
     s["slot_used"] = s["slot_used"].at[si].set(t, mode="drop")
+    if ctx.has_resil:
+        # attempt counter: incremented when the request starts running,
+        # read back at its EXEC_DONE to classify the outcome
+        s["att"] = s["att"].at[_gidx(on, rid, ctx.N)].add(1,
+                                                          mode="drop")
     if ctx.fold_at_dispatch:
         s["ev_rid"] = jnp.where(on, jnp.asarray(rid, jnp.int32),
                                 s["ev_rid"])
@@ -748,8 +870,9 @@ def dispatch(ctx, s, slot, rid, t, on):
             # reference's completion rewrite)
             ri = _gidx(on, rid, ctx.N)
             s["start"] = s["start"].at[ri].set(t, mode="drop")
-            s["completion"] = s["completion"].at[ri].set(comp,
-                                                         mode="drop")
+            if not ctx.defer_completion:
+                s["completion"] = s["completion"].at[ri].set(
+                    comp, mode="drop")
         else:
             ki = jnp.where(on, ctx.k, ctx.seg_n)
             s["d_rid"] = s["d_rid"].at[ki].set(
@@ -874,11 +997,13 @@ def hist_cdf(hist):
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
                                     "queue_cap", "stream", "window",
-                                    "tl_bins"))
+                                    "tl_bins", "resil"))
 def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
               cap_mask, beta, prior, threshold, n_live=None,
-              deadlines=None, *, kernel, n_fns, capacity, queue_cap,
-              stream=False, window=0, tl_bins=0, tl_bucket=60.0):
+              deadlines=None, rs_nfail=None, rs_tmo=None, rs_key=None,
+              *, kernel, n_fns, capacity, queue_cap,
+              stream=False, window=0, tl_bins=0, tl_bucket=60.0,
+              resil=None):
     """Lane-batched engine. Trace arrays are shared (T, ...) operands;
     ``trace_ix``, ``cap_mask`` and ``beta`` carry the leading lane
     dimension L (one lane per sweep point). The loop nest is windows ->
@@ -902,6 +1027,15 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
     sub-streams of `repro.cluster`'s static routing path — share one
     padded (T, N) operand without recompilation per length. ``None``
     (every existing caller) means all N requests are live.
+
+    ``resil`` (static: ``(max_attempts, shed_mode, base, cap, jitter,
+    fail_seed)``, or None) enables the request-resilience layer; the
+    pre-planned outcome operands ``rs_nfail`` / ``rs_tmo`` / ``rs_key``
+    ((T, N), see `repro.core.resilience.plan_outcomes` and `ResilCtx`)
+    then ride along. With ``resil=None`` — every no-fault spec — none
+    of the resilience code is traced and the loop lowers bitwise
+    unchanged. A lane is finished when every live request is
+    *terminal* (done, shed, or retry-exhausted), counted in CI_TERM.
     """
     L = trace_ix.shape[0]
     T_ = fn_id.shape[0]
@@ -910,8 +1044,26 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
     nl = (jnp.full((L,), N, jnp.int32) if n_live is None
           else jnp.asarray(n_live, jnp.int32))
 
+    has_resil = resil is not None
+    if has_resil:
+        if kernel.has_timers:
+            raise NotImplementedError(
+                "resilience (fail_prob/timeouts/retries) does not "
+                "support timer-rail kernels (openwhisk_v2) — the "
+                "positional timer rail assumes each arrival position "
+                "is consumed exactly once, which retries break")
+        max_att, shed_mode, rt_base, rt_cap, rt_jit, rt_seed = resil
+        rs_nfail = rs_nfail.astype(jnp.int32)
+        rs_tmo = rs_tmo.astype(bool)
+        rs_key = rs_key.astype(jnp.int32)
+
     W = int(window) if window else DEFAULT_WINDOW
     W = max(1, min(W, N))
+    if has_resil:
+        # a retried rid can trail the arrival cursor by any distance,
+        # so the 2-source window-slab invariant doesn't hold; run the
+        # whole trace as one window (results are window-invariant)
+        W = N
     n_win = -(-N // W)
     NP = n_win * W
 
@@ -1000,11 +1152,28 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         s["tmr_next"] = jnp.full((L, F), BIG, jnp.float64)
         s["rearm_t"] = jnp.full((L, F), BIG, jnp.float64)
         s["rearm_rid"] = jnp.full((L, F), -1, jnp.int32)
+    if has_resil:
+        # direct-link queues (ResilCtx) + the retry FIFO rail: one
+        # shared successor array serves both chains (a rid is in at
+        # most one), the rail carries head/tail/len and the head fire
+        # time (BIG when empty). rt_t holds each waiter's eligible
+        # time; a head promoted behind a later-firing predecessor is
+        # clamped to the pop time (no overtaking within the rail).
+        s["q_tail_rid"] = jnp.full((L, F), -1, jnp.int32)
+        s["nxt"] = jnp.full((L, N), -1, jnp.int32)
+        s["att"] = jnp.zeros((L, N), jnp.int32)
+        s["rt_t"] = jnp.zeros((L, N), jnp.float64)
+        s["r_head"] = jnp.full((L,), -1, jnp.int32)
+        s["r_tail"] = jnp.full((L,), -1, jnp.int32)
+        s["r_len"] = jnp.zeros((L,), jnp.int32)
+        s["r_fire"] = jnp.full((L,), BIG, jnp.float64)
     s.update(kernel.extra_state(L, C, F))
 
-    max_iters = 256 * N + 4096
+    max_iters = (256 * N + 4096) * (max_att if has_resil else 1)
     n_slot = 2 * C   # candidate positions: busy slots then cold slots
-    n_cand = n_slot + (2 * F if kernel.has_timers else 0) + 1
+    # candidate order: busy | cold | (timers) | retry | arrival
+    n_cand = (n_slot + (2 * F if kernel.has_timers else 0)
+              + (1 if has_resil else 0) + 1)
     lanes = jnp.arange(L, dtype=jnp.int32)
     lane_iota = lanes[:, None]
     # per-lane (F,) cold/evict rows, gathered once (the (T, F) row
@@ -1062,6 +1231,8 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
                       jnp.where(st == COLD, ready, BIG)]
             if kernel.has_timers:
                 blocks += [s["tmr_next"], s["rearm_t"]]
+            if has_resil:
+                blocks.append(s["r_fire"][:, None])
             blocks.append(t_arr[:, None])
             cand = jnp.concatenate(blocks, axis=1)
             ei = jnp.argmin(cand, axis=1).astype(jnp.int32)
@@ -1070,17 +1241,21 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
 
         def lane_step(k, s, tix, cold_l, evict_l, cap_mask, beta,
                       nl_l, ei, t_ev, t_arr):
-            ctx = EngineCtx(fn_id2=fn_id, arrival2=arrival,
-                            exec2=exec_time, cold2=cold_l,
-                            evict2=evict_l, pos_rids2=pos_rids,
-                            pos_off2=pos_off, slabs=slabs,
-                            win_base=base, win_w=W, tix=tix,
-                            cap_mask=cap_mask, beta=beta, prior=prior,
-                            threshold=threshold, k=k, n=N, f=F, c=C,
-                            q=Q, stream=stream, tl_bins=tl_bins,
-                            tl_bucket=tl_bucket, deadlines=deadlines)
+            kw = dict(fn_id2=fn_id, arrival2=arrival,
+                      exec2=exec_time, cold2=cold_l,
+                      evict2=evict_l, pos_rids2=pos_rids,
+                      pos_off2=pos_off, slabs=slabs,
+                      win_base=base, win_w=W, tix=tix,
+                      cap_mask=cap_mask, beta=beta, prior=prior,
+                      threshold=threshold, k=k, n=N, f=F, c=C,
+                      q=Q, stream=stream, tl_bins=tl_bins,
+                      tl_bucket=tl_bucket, deadlines=deadlines)
+            ctx = (ResilCtx(nfail2=rs_nfail, tmo2=rs_tmo, key2=rs_key,
+                            resil=resil, **kw)
+                   if has_resil else EngineCtx(**kw))
             ci = s["ci"]
-            active = (ci[CI_DONE] < nl_l) & (ci[CI_STALL] == 0)
+            done_ci = CI_TERM if has_resil else CI_DONE
+            active = (ci[done_ci] < nl_l) & (ci[CI_STALL] == 0)
             na = ci[CI_NEXT]
             live = active & (t_ev < BIG)
             # per-event dispatch registers (consumed by _fold_event)
@@ -1116,8 +1291,55 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
             s["est_n"] = s["est_n"].at[ji].add(1, mode="drop")
             s["cf"] = s["cf"].at[CF_GSUM].add(
                 jnp.where(exec_on, e_done, 0.0))
-            s["ci"] = s["ci"].at[jnp.array([CI_GN, CI_DONE])].add(
-                jnp.stack([exec_i, exec_i]))
+            if not has_resil:
+                s["ci"] = s["ci"].at[jnp.array([CI_GN, CI_DONE])].add(
+                    jnp.stack([exec_i, exec_i]))
+            else:
+                # outcome of this attempt: the estimator observed the
+                # attempt above (every attempt burns real slot time);
+                # success/failure is the pre-planned attempt test
+                att_d = s["att"][jnp.clip(rid_done, 0, N - 1)]
+                nf_d = ctx.nfail_at(rid_done)
+                ok_d = exec_on & (att_d > nf_d)
+                fail_d = exec_on & ~ok_d
+                exh_d = fail_d & (att_d >= max_att)
+                retry_d = fail_d & ~exh_d
+                tmo_d = ctx.tmo_at(rid_done)
+                ok_i = ok_d.astype(jnp.int32)
+                s["ci"] = s["ci"].at[jnp.array(
+                    [CI_GN, CI_DONE, CI_TERM, CI_FAILED, CI_TMO,
+                     CI_RETRY, CI_EXH])].add(jnp.stack(
+                    [exec_i, ok_i, ok_i + exh_d.astype(jnp.int32),
+                     (fail_d & ~tmo_d).astype(jnp.int32),
+                     (fail_d & tmo_d).astype(jnp.int32),
+                     retry_d.astype(jnp.int32),
+                     exh_d.astype(jnp.int32)]))
+                # fold (and exact-record) successful completions only
+                rd32 = jnp.asarray(rid_done, jnp.int32)
+                s["ev_rid"] = jnp.where(ok_d, rd32, s["ev_rid"])
+                s["ev_comp"] = jnp.where(ok_d, t_ev, s["ev_comp"])
+                s["ev_exec"] = jnp.where(ok_d, e_done, s["ev_exec"])
+                if not stream:
+                    s["completion"] = s["completion"].at[
+                        _gidx(ok_d, rid_done, N)].set(t_ev,
+                                                      mode="drop")
+                # a retrying rid re-enters after its backoff; the rail
+                # is FIFO so only an empty rail arms the fire time here
+                key_d = ctx.key_at(rid_done)
+                elig = t_ev + backoff_jax(att_d, key_d, rt_base,
+                                          rt_cap, rt_jit, rt_seed)
+                s["rt_t"] = s["rt_t"].at[
+                    _gidx(retry_d, rid_done, N)].set(elig, mode="drop")
+                r_empty = s["r_len"] == 0
+                s["nxt"] = s["nxt"].at[
+                    _gidx(retry_d & ~r_empty, s["r_tail"], N)].set(
+                    rd32, mode="drop")
+                s["r_head"] = jnp.where(retry_d & r_empty, rd32,
+                                        s["r_head"])
+                s["r_tail"] = jnp.where(retry_d, rd32, s["r_tail"])
+                s["r_fire"] = jnp.where(retry_d & r_empty, elig,
+                                        s["r_fire"])
+                s["r_len"] = s["r_len"] + retry_d.astype(jnp.int32)
             s = kernel.on_cold_done(ctx, s, slot, t_ev, cold_on)
             s = kernel.on_exec_done(ctx, s, slot, rid_done, t_ev,
                                     exec_on)
@@ -1151,8 +1373,33 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
                 rid_t = jnp.where(fire_orig, rid_o, rid_r)
                 s = kernel.on_timer(ctx, s, rid_t, t_ev, ev_timer)
 
-            # ---------------------------------------------------- arrival
+            # ------------------------------------------------ retry event
+            ev_rtry = jnp.bool_(False)
             rid_a = jnp.minimum(na, N - 1)
+            rid_na, t_na = rid_a, t_arr
+            if has_resil:
+                ev_rtry = live & (ei == n_slot)
+                rlen0 = s["r_len"]
+                rid_r = s["r_head"]
+                succ_r = s["nxt"][jnp.clip(rid_r, 0, N - 1)]
+                s = dict(s)
+                s["r_head"] = jnp.where(ev_rtry, succ_r, s["r_head"])
+                s["r_tail"] = jnp.where(ev_rtry & (rlen0 <= 1),
+                                        jnp.int32(-1), s["r_tail"])
+                s["r_len"] = rlen0 - ev_rtry.astype(jnp.int32)
+                # promote the successor; it may not fire before this
+                # pop (FIFO, no overtaking within the rail)
+                nfire = jnp.maximum(
+                    s["rt_t"][jnp.clip(succ_r, 0, N - 1)], t_ev)
+                s["r_fire"] = jnp.where(
+                    ev_rtry, jnp.where(rlen0 > 1, nfire, BIG),
+                    s["r_fire"])
+                # a retry re-enters through the same arrival hook, at
+                # its fire time
+                rid_na = jnp.where(ev_rtry, rid_r, rid_a)
+                t_na = jnp.where(ev_rtry, t_ev, t_arr)
+
+            # ---------------------------------------------------- arrival
             s = dict(s)
             if kernel.has_timers:
                 s["arr_cnt"] = s["arr_cnt"].at[
@@ -1160,11 +1407,12 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
                     1, mode="drop")
             # n_events counts processed events (parked no-op spins are
             # excluded, so the count is window-size invariant)
-            progress = ev_slot | ev_timer | ev_arr
+            progress = ev_slot | ev_timer | ev_arr | ev_rtry
             s["ci"] = s["ci"].at[jnp.array([CI_NEXT, CI_ITERS])].add(
                 jnp.stack([ev_arr.astype(jnp.int32),
                            progress.astype(jnp.int32)]))
-            s = kernel.on_arrival(ctx, s, rid_a, t_arr, ev_arr)
+            s = kernel.on_arrival(ctx, s, rid_na, t_na,
+                                  ev_arr | ev_rtry)
 
             s = _fold_event(ctx, s)
             s = dict(s)
@@ -1180,7 +1428,8 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
 
         def cond(s):
             ci = s["ci"]
-            act = (ci[:, CI_DONE] < nl) & (ci[:, CI_STALL] == 0)
+            done_col = CI_TERM if has_resil else CI_DONE
+            act = (ci[:, done_col] < nl) & (ci[:, CI_STALL] == 0)
             return jnp.any(act & (is_last | (ci[:, CI_NEXT] < win_end)))
 
         def segment(s):
@@ -1225,6 +1474,12 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         out["tl_exec_sum"] = final["tl_exec"]
     if deadlines is not None:
         out["deadline_miss"] = final["dl_miss"]
+    if has_resil:
+        out["failed"] = ci[:, CI_FAILED]
+        out["timed_out"] = ci[:, CI_TMO]
+        out["retried"] = ci[:, CI_RETRY]
+        out["shed"] = ci[:, CI_SHED]
+        out["failed_exhausted"] = ci[:, CI_EXH]
     if not stream:
         out["start"] = final["start"]
         out["completion"] = final["completion"]
@@ -1297,11 +1552,14 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
                                     "queue_cap", "stream", "window",
-                                    "tl_bins", "keep_responses"))
+                                    "tl_bins", "keep_responses",
+                                    "resil"))
 def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                   threshold, n_live=None, deadlines=None, *, kernel,
+                   threshold, n_live=None, deadlines=None,
+                   rs_nfail=None, rs_tmo=None, rs_key=None, *, kernel,
                    n_fns, capacity, queue_cap, stream=True, window=0,
-                   tl_bins=0, tl_bucket=60.0, keep_responses=False):
+                   tl_bins=0, tl_bucket=60.0, keep_responses=False,
+                   resil=None):
     """Lane-batched run + on-device metric reduction. Means and
     slowdowns come from the streaming accumulators in *both* modes (so
     streamed and exact sweeps agree bitwise); p99 is exact in exact
@@ -1315,23 +1573,35 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
     if keep_responses and stream:
         raise ValueError("keep_responses requires stream=False")
     out = _simulate(fn, arr, ex, cold, ev, tix, masks, betas, prior,
-                    threshold, n_live, deadlines, kernel=kernel,
+                    threshold, n_live, deadlines, rs_nfail, rs_tmo,
+                    rs_key, kernel=kernel,
                     n_fns=n_fns, capacity=capacity, queue_cap=queue_cap,
                     stream=stream, window=window, tl_bins=tl_bins,
-                    tl_bucket=tl_bucket)
+                    tl_bucket=tl_bucket, resil=resil)
     N = fn.shape[1]
-    if n_live is None:
+    if resil is not None:
+        # under faults only successes fold into the response sums and
+        # per-request records; means/quantiles reduce over those
+        denom = jnp.maximum(out["done"], 1).astype(jnp.float64)
+    elif n_live is None:
         denom = N
     else:
         n_live = jnp.asarray(n_live, jnp.int32)
         denom = jnp.maximum(n_live, 1).astype(jnp.float64)
     if stream:
-        p99 = hist_quantile(out["resp_hist"], 0.99,
-                            N if n_live is None else n_live[:, None],
+        if resil is not None:
+            nq = out["done"][:, None]
+        else:
+            nq = N if n_live is None else n_live[:, None]
+        p99 = hist_quantile(out["resp_hist"], 0.99, nq,
                             out["max_response"])
     else:
         resp = out["completion"] - arr[tix]
-        if n_live is None:
+        if resil is not None:
+            # shed / retry-exhausted rids keep completion == -1
+            resp = jnp.where(out["completion"] >= 0, resp, jnp.nan)
+            p99 = jnp.nanpercentile(resp, 99.0, axis=1)
+        elif n_live is None:
             p99 = jnp.percentile(resp, 99.0, axis=1)
         else:
             live = jnp.arange(N) < n_live[:, None]
@@ -1356,9 +1626,22 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
         res["tl_exec_sum"] = out["tl_exec_sum"]
     if deadlines is not None:
         res["deadline_miss"] = out["deadline_miss"]
+    if resil is not None:
+        for key in ("failed", "timed_out", "retried", "shed",
+                    "failed_exhausted"):
+            res[key] = out[key]
     if keep_responses:
         res["response"] = resp
     return res
+
+
+def goodput(done, n):
+    """Fraction of offered requests that eventually completed
+    successfully: ``done / n``. Computed in numpy *outside* jit and
+    shared by every tier (like `slo_attainment`) so the derived metric
+    is bitwise identical no matter which tier produced the counters."""
+    return (np.asarray(done, np.float64)
+            / np.maximum(np.asarray(n, np.float64), 1.0))
 
 
 def slo_attainment(deadline_miss, done):

@@ -1,0 +1,175 @@
+"""Request-level resilience: failure injection, timeouts, retry backoff.
+
+The engine and the Python reference cluster must agree request-for-
+request, so every stochastic choice is made *outside* the simulators,
+from counter-hash draws keyed on the request id (its position in the
+original trace) and the attempt number:
+
+* ``plan_outcomes`` pre-computes, per request, the effective execution
+  time (``min(exec, timeout)``), the number of leading failed attempts
+  ``n_fail`` (attempt ``a`` fails iff ``a <= n_fail``), and whether a
+  failure is a timeout. A timed-out request fails deterministically on
+  *every* attempt (the budget does not change between attempts), so its
+  ``n_fail`` is ``max_attempts``.
+* ``backoff_py`` / ``backoff_jax`` compute the capped exponential
+  backoff delay for a failed attempt, with deterministic jitter drawn
+  from the same ``(rid, attempt)`` counter-hash stream. The two
+  implementations are bitwise-equal for float64 inputs.
+
+Both simulators then only need a deterministic rule at completion time:
+``attempt > n_fail[rid]`` means success.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.cluster.routers import mix32_np, mix32_py
+
+# Salt xor-ed into the failure seed for the jitter stream so jitter
+# draws never correlate with the fail/no-fail draws.
+JITTER_SALT = 0x5BF03635
+
+# Attempt counters are packed into the low 4 bits of the hash key.
+MAX_ATTEMPTS = 16
+
+SHED_MODES = {"error": 0, "shed": 1, "shed_oldest": 2}
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff: attempt ``a`` (1-based) that fails
+    re-enters after ``min(base * 2**(a-1), cap)`` seconds, scaled by a
+    deterministic jitter factor in ``[1 - jitter, 1 + jitter)``."""
+
+    max_attempts: int = 3
+    base: float = 1.0
+    cap: float = 30.0
+    jitter: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not (1 <= int(self.max_attempts) <= MAX_ATTEMPTS):
+            raise ValueError(
+                f"RetryPolicy.max_attempts must be in [1, {MAX_ATTEMPTS}], "
+                f"got {self.max_attempts}")
+        if self.base < 0 or self.cap < 0:
+            raise ValueError("RetryPolicy.base and cap must be >= 0")
+        if not (0.0 <= float(self.jitter) < 1.0):
+            raise ValueError("RetryPolicy.jitter must be in [0, 1)")
+
+    def as_tuple(self) -> tuple:
+        return (int(self.max_attempts), float(self.base), float(self.cap),
+                float(self.jitter))
+
+
+def per_fn(value, n_fns: int, name: str, dtype=np.float64) -> np.ndarray:
+    """Broadcast a scalar or validate a per-function sequence."""
+    if np.isscalar(value):
+        return np.full(n_fns, value, dtype=dtype)
+    arr = np.asarray(value, dtype=dtype)
+    if arr.shape != (n_fns,):
+        raise ValueError(
+            f"{name} must be a scalar or a length-{n_fns} sequence, "
+            f"got shape {arr.shape}")
+    return arr
+
+
+def plan_outcomes(
+    fn_id: np.ndarray,
+    exec_time: np.ndarray,
+    *,
+    fail_prob: Union[float, Sequence[float]],
+    timeouts: Optional[Union[float, Sequence[float]]],
+    max_attempts: int,
+    n_fns: int,
+    seed: int,
+    rid: Optional[np.ndarray] = None,
+):
+    """Pre-compute per-request outcomes.
+
+    Returns ``(eff_exec, n_fail, is_tmo)``:
+
+    * ``eff_exec`` (float64): execution time actually spent per attempt
+      — ``min(exec, timeout[fn])``. This is what the engine runs and
+      what the estimators observe.
+    * ``n_fail`` (int32): number of leading failed attempts; attempt
+      ``a`` (1-based) succeeds iff ``a > n_fail``. ``n_fail ==
+      max_attempts`` means the request exhausts its retry budget.
+    * ``is_tmo`` (bool): the failures are timeouts (``exec`` exceeded
+      the budget) rather than injected faults.
+
+    ``rid`` defaults to ``arange(N)`` — pass the original trace indices
+    when planning for a re-ordered or sliced view so that draws match
+    the unsliced run.
+    """
+    fn_id = np.asarray(fn_id, dtype=np.int64)
+    exec_time = np.asarray(exec_time, dtype=np.float64)
+    n = fn_id.shape[0]
+    if rid is None:
+        rid = np.arange(n, dtype=np.int64)
+    else:
+        rid = np.asarray(rid, dtype=np.int64)
+    a = int(max_attempts)
+    if not (1 <= a <= MAX_ATTEMPTS):
+        raise ValueError(f"max_attempts must be in [1, {MAX_ATTEMPTS}]")
+
+    p = per_fn(fail_prob, n_fns, "fail_prob")
+    if np.any((p < 0) | (p > 1)):
+        raise ValueError("fail_prob must be in [0, 1]")
+    thresh = p[fn_id] * 4294967296.0  # (N,)
+
+    # u[i, j] ~ U32 for attempt j+1 of request rid[i].
+    keys = (rid[:, None] << 4) | np.arange(a, dtype=np.int64)[None, :]
+    u = mix32_np(keys, seed).astype(np.float64)
+    fail_a = u < thresh[:, None]  # (N, A)
+    # Leading run of failures: attempt j+1 contributes iff all attempts
+    # <= j+1 failed.
+    n_fail = np.cumprod(fail_a, axis=1).sum(axis=1).astype(np.int32)
+
+    if timeouts is not None:
+        budget = per_fn(timeouts, n_fns, "timeouts")
+        if np.any(budget <= 0):
+            raise ValueError("timeouts must be > 0")
+        b = budget[fn_id]
+        is_tmo = exec_time > b
+        eff_exec = np.minimum(exec_time, b)
+        # A timeout is deterministic: every attempt burns the full
+        # budget and dies, so the retry ladder always exhausts.
+        n_fail = np.where(is_tmo, np.int32(a), n_fail)
+    else:
+        is_tmo = np.zeros(n, dtype=bool)
+        eff_exec = exec_time
+
+    return eff_exec, n_fail.astype(np.int32), is_tmo
+
+
+def backoff_py(attempt: int, key: int, base: float, cap: float,
+               jitter: float, seed: int) -> float:
+    """Backoff delay after failed attempt ``attempt`` (1-based) of the
+    request with original id ``key``. Bitwise-equal to ``backoff_jax``."""
+    d = min(base * 2.0 ** (attempt - 1), cap)
+    u = mix32_py((int(key) << 4) | ((attempt - 1) & 15),
+                 seed ^ JITTER_SALT) / 4294967296.0
+    return d * (1.0 + jitter * (2.0 * u - 1.0))
+
+
+def backoff_jax(attempt, key, base: float, cap: float, jitter: float,
+                seed: int):
+    """Vectorised twin of ``backoff_py`` (attempt/key are i32 arrays)."""
+    import jax.numpy as jnp
+
+    from repro.cluster.routers import mix32_jax
+    from repro.core.jax_engine import ensure_x64
+    ensure_x64()
+
+    a1 = (attempt - 1).astype(jnp.int32)
+    # 2**(a-1) via an exact integer shift: XLA:CPU lowers exp2 to
+    # exp(x*ln2), which is off by an ulp from exponent 3 upward and
+    # would break bitwise parity with the Python reference
+    pow2 = (jnp.int64(1) << a1.astype(jnp.int64)).astype(jnp.float64)
+    d = jnp.minimum(base * pow2, cap)
+    u = mix32_jax(((key.astype(jnp.uint32) << 4) | (a1.astype(jnp.uint32) & 15)),
+                  seed ^ JITTER_SALT).astype(jnp.float64) / 4294967296.0
+    return d * (1.0 + jitter * (2.0 * u - 1.0))

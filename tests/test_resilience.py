@@ -1,0 +1,284 @@
+"""Request-level resilience layer (PR 8): failure injection, timeouts,
+retries with capped-exponential backoff, load-shedding admission
+control and the circuit-breaker router — spec hardening, conservation
+(``done + shed + failed_exhausted == N``), bitwise no-fault lowering,
+K=1 tier equivalence and request-for-request parity against the Python
+reference cluster."""
+import numpy as np
+import pytest
+
+from repro.api import (ClusterSpec, ExperimentSpec, PeriodicChurn,
+                       ResultSet, RetryPolicy, SyntheticTrace,
+                       run_experiment)
+from tests._hypothesis_compat import given, settings, st
+
+SRC = SyntheticTrace.make(n_functions=12, n_requests=400, seed=3,
+                          utilization=0.25)
+N = 400
+SPAN = float(SRC.arrays()["arrival"].max())
+FAULTS = dict(fail_prob=0.2, timeouts=8.0,
+              retry=RetryPolicy(max_attempts=3, base=0.05, cap=1.0,
+                                jitter=0.3),
+              on_overflow="shed", fail_seed=99)
+EXACT = dict(traces=[SRC], capacities=(3,), queue_cap=64,
+             stream=False, keep_per_request=True)
+
+
+def _ref(policy, cs, **kw):
+    from repro.cluster.reference import simulate_cluster_reference
+    return simulate_cluster_reference(SRC.to_trace(), policy, cs,
+                                      capacity=3, queue_cap=64, **kw)
+
+
+def _counts(rs, **sel):
+    return {k: int(rs.value(k, **sel))
+            for k in ("done", "failed", "timed_out", "retried",
+                      "shed", "failed_exhausted")}
+
+
+# ----------------------------------------------------- spec hardening
+def test_resilience_spec_validation_errors():
+    ok = dict(traces=[SRC], policies=("esff",), capacities=(3,))
+    with pytest.raises(ValueError, match="on_overflow"):
+        ExperimentSpec(**ok, on_overflow="drop").validate()
+    with pytest.raises(ValueError, match="fail_prob"):
+        ExperimentSpec(**ok, fail_prob=1.5).validate()
+    with pytest.raises(ValueError, match="fail_prob"):
+        ExperimentSpec(**ok, fail_prob=-0.1).validate()
+    with pytest.raises(ValueError, match="timeouts"):
+        ExperimentSpec(**ok, timeouts=0.0).validate()
+    with pytest.raises(TypeError, match="RetryPolicy"):
+        ExperimentSpec(**ok, fail_prob=0.1, retry=3).validate()
+    with pytest.raises(ValueError, match="does nothing"):
+        ExperimentSpec(**ok, retry=RetryPolicy()).validate()
+    # timer-arming policies cannot ride the resilience rails
+    with pytest.raises(ValueError, match="timers"):
+        ExperimentSpec(traces=[SRC], policies=("openwhisk_v2",),
+                       capacities=(3,), fail_prob=0.1).validate()
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=17)
+    with pytest.raises(ValueError, match="jitter"):
+        RetryPolicy(jitter=1.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        RetryPolicy(base=-1.0)
+    assert RetryPolicy(max_attempts=5, base=0.5).as_tuple() \
+        == (5, 0.5, 30.0, 0.0)
+
+
+def test_backoff_py_equals_jax_bitwise():
+    from repro.core.resilience import backoff_jax, backoff_py
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 1 << 20, size=256).astype(np.int32)
+    atts = rng.integers(1, 16, size=256).astype(np.int32)
+    for base, cap, jitter, seed in ((0.05, 1.0, 0.3, 99),
+                                    (1.0, 30.0, 0.0, 0),
+                                    (0.5, 4.0, 0.99, 12345)):
+        vec = np.asarray(backoff_jax(atts, keys, base, cap, jitter,
+                                     seed))
+        ref = np.array([backoff_py(int(a), int(k), base, cap, jitter,
+                                   seed) for a, k in zip(atts, keys)])
+        np.testing.assert_array_equal(vec, ref)
+
+
+def test_plan_outcomes_semantics():
+    from repro.core.resilience import plan_outcomes
+    fn = np.zeros(1000, np.int64)
+    ex = np.full(1000, 2.0)
+    eff, nf, tmo = plan_outcomes(fn, ex, fail_prob=0.3, timeouts=None,
+                                 max_attempts=4, n_fns=1, seed=1)
+    assert not tmo.any() and (eff == ex).all()
+    # leading-failure counts follow a truncated geometric law
+    frac1 = (nf >= 1).mean()
+    assert 0.25 < frac1 < 0.35
+    # timeouts are deterministic: n_fail == max_attempts
+    eff, nf, tmo = plan_outcomes(fn, ex, fail_prob=0.0, timeouts=1.5,
+                                 max_attempts=4, n_fns=1, seed=1)
+    assert tmo.all() and (nf == 4).all() and (eff == 1.5).all()
+
+
+# ----------------------------------------------- lowering / conservation
+def test_no_fault_spec_lowers_bitwise_unchanged():
+    """fail_prob=0, timeouts=None, on_overflow='error' must leave every
+    tier on the unchanged code path — all arrays bitwise equal."""
+    base = dict(traces=[SRC], policies=("esff",), capacities=(3,),
+                queue_cap=256, cluster=(None,
+                                        ClusterSpec(n_nodes=2,
+                                                    router="hash"),
+                                        ClusterSpec(n_nodes=2,
+                                                    router="jsq2")))
+    r0 = run_experiment(ExperimentSpec(**base)).check()
+    r1 = run_experiment(ExperimentSpec(**base, fail_prob=0.0,
+                                       timeouts=None,
+                                       on_overflow="error")).check()
+    assert set(r0.data) == set(r1.data)
+    for k in r0.data:
+        np.testing.assert_array_equal(r0[k], r1[k], err_msg=k)
+    assert "shed" not in r0.data and "goodput" not in r0.data
+
+
+@pytest.mark.parametrize("mode", ["shed", "shed_oldest"])
+def test_conservation_across_tiers(mode):
+    rs = run_experiment(ExperimentSpec(
+        traces=[SRC], policies=("esff",), capacities=(3,),
+        queue_cap=8, **{**FAULTS, "on_overflow": mode},
+        cluster=(None, ClusterSpec(n_nodes=2, router="hash"),
+                 ClusterSpec(n_nodes=2, router="jsq2"),
+                 ClusterSpec(n_nodes=2, router="breaker")))).check()
+    tot = rs["done"] + rs["shed"] + rs["failed_exhausted"]
+    np.testing.assert_array_equal(tot, np.full_like(tot, N))
+    np.testing.assert_allclose(rs["goodput"], rs["done"] / N)
+
+
+def test_overflow_error_mode_flagged_with_coordinate():
+    """With shedding disabled a queue overrun is an *error* that names
+    the offending cell's full spec coordinate."""
+    rs = run_experiment(ExperimentSpec(
+        traces=[SRC], policies=("esff",), capacities=(3,),
+        queue_cap=2, fail_prob=0.2, fail_seed=99))
+    with pytest.raises(RuntimeError, match="shedding disabled"):
+        rs.check()
+    with pytest.raises(RuntimeError, match="policy='esff'"):
+        rs.check()
+    # same pressure with shedding on: drops are by design
+    ok = run_experiment(ExperimentSpec(
+        traces=[SRC], policies=("esff",), capacities=(3,),
+        queue_cap=2, fail_prob=0.2, fail_seed=99,
+        on_overflow="shed")).check()
+    assert int(ok.value("shed")) > 0
+
+
+def test_check_conservation_identity():
+    grid = dict(policy=["esff"], trace=["t"], capacity=[3],
+                beta=["default"])
+    one = lambda v: np.full((1, 1, 1, 1), v)  # noqa: E731
+    data = dict(done=one(8), shed=one(1), failed_exhausted=one(0),
+                overflow=one(0), stalled=one(0))
+    meta = dict(n_requests=10,
+                resilience=dict(on_overflow="shed"))
+    with pytest.raises(RuntimeError, match="conservation"):
+        ResultSet(data=data, coords=grid, meta=meta).check()
+    data["failed_exhausted"] = one(1)
+    ResultSet(data=data, coords=grid, meta=meta).check()
+
+
+def test_stream_equals_exact_under_faults():
+    kw = dict(traces=[SRC], policies=("esff",), capacities=(3,),
+              queue_cap=64, **FAULTS,
+              cluster=(ClusterSpec(n_nodes=2, router="jsq2"),
+                       ClusterSpec(n_nodes=2, router="hash")))
+    rs = run_experiment(ExperimentSpec(**kw)).check()
+    rx = run_experiment(ExperimentSpec(**kw, stream=False)).check()
+    np.testing.assert_array_equal(rs["done"], rx["done"])
+    np.testing.assert_array_equal(rs["shed"], rx["shed"])
+    np.testing.assert_allclose(rs["mean_response"],
+                               rx["mean_response"], rtol=1e-9)
+
+
+# -------------------------------------------------- tier equivalence
+def test_k1_cluster_tiers_equal_single_node_under_faults():
+    plain = run_experiment(ExperimentSpec(
+        traces=[SRC], policies=("esff",), capacities=(3,),
+        queue_cap=64, **FAULTS)).check()
+    both = run_experiment(ExperimentSpec(
+        traces=[SRC], policies=("esff",), capacities=(3,),
+        queue_cap=64, **FAULTS,
+        cluster=(ClusterSpec(n_nodes=1, router="jsq2"),
+                 ClusterSpec(n_nodes=1, router="hash")))).check()
+    for ci in range(2):
+        for k in ("mean_response", "p99_response", "done", "shed",
+                  "failed", "timed_out", "retried",
+                  "failed_exhausted", "goodput"):
+            np.testing.assert_array_equal(
+                both[k][..., ci], plain[k],
+                err_msg=f"{k} cluster={both.coords['cluster'][ci]}")
+
+
+# ------------------------------------------------- reference parity
+@pytest.mark.parametrize("router", ["hash", "round_robin", "jsq2",
+                                    "cold_aware"])
+def test_fault_parity_vs_reference(router):
+    """K=4 fault runs are request-for-request equal to the Python
+    reference cluster on both tiers."""
+    cs = ClusterSpec(n_nodes=4, router=router)
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff",), cluster=[cs], **EXACT, **FAULTS)).check()
+    ref = _ref("esff", cs, **FAULTS)
+    np.testing.assert_allclose(rs.value("response", policy="esff"),
+                               ref["response"], rtol=1e-9,
+                               equal_nan=True)
+    eng = _counts(rs, policy="esff")
+    assert eng == {k: int(ref[k]) for k in eng}, (router, eng)
+    assert eng["done"] + eng["shed"] + eng["failed_exhausted"] == N
+
+
+def test_breaker_trips_and_recovers_parity():
+    cs = ClusterSpec(n_nodes=4, router="breaker")
+    kw = dict(FAULTS, fail_prob=0.6)
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff",), cluster=[cs], **EXACT, **kw)).check()
+    ref = _ref("esff", cs, **kw)
+    trips = int(rs.value("breaker_trips", policy="esff"))
+    assert trips == int(ref["breaker_trips"])
+    assert trips > 0
+    # recovery: completions keep landing after the last trip
+    assert int(rs.value("done", policy="esff")) > 0
+    np.testing.assert_allclose(rs.value("response", policy="esff"),
+                               ref["response"], rtol=1e-9,
+                               equal_nan=True)
+
+
+def test_churn_plus_faults_parity():
+    cs = ClusterSpec(n_nodes=4, router="jsq2",
+                     churn=(None, PeriodicChurn(SPAN / 3, duty=0.7),
+                            None, None))
+    rs = run_experiment(ExperimentSpec(
+        policies=("esff",), cluster=[cs], **EXACT, **FAULTS)).check()
+    ref = _ref("esff", cs, **FAULTS)
+    np.testing.assert_allclose(rs.value("response", policy="esff"),
+                               ref["response"], rtol=1e-9,
+                               equal_nan=True)
+    eng = _counts(rs, policy="esff")
+    assert eng == {k: int(ref[k]) for k in eng}
+
+
+# --------------------------------------------------- property tests
+@given(fail_prob=st.floats(0.0, 0.5),
+       timeout=st.one_of(st.none(), st.floats(1.0, 20.0)),
+       max_attempts=st.integers(1, 5),
+       jitter=st.floats(0.0, 0.9),
+       mode=st.sampled_from(["shed", "shed_oldest"]),
+       churned=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_property_conservation_and_trivial_lowering(
+        fail_prob, timeout, max_attempts, jitter, mode, churned):
+    """Randomised knob combos: conservation holds exactly; all-trivial
+    knobs lower bitwise onto the unchanged engine."""
+    cs = ClusterSpec(
+        n_nodes=2, router="jsq2",
+        churn=((None, PeriodicChurn(SPAN / 3, duty=0.7))
+               if churned else None))
+    base = dict(traces=[SRC], policies=("esff",), capacities=(3,),
+                queue_cap=16, cluster=[cs])
+    trivial = fail_prob == 0.0 and timeout is None
+    spec = ExperimentSpec(
+        **base, fail_prob=fail_prob, timeouts=timeout,
+        on_overflow=("error" if trivial else mode),
+        retry=(None if trivial
+               else RetryPolicy(max_attempts=max_attempts, base=0.05,
+                                cap=1.0, jitter=jitter)),
+        fail_seed=7)
+    rs = run_experiment(spec)
+    if trivial:
+        r0 = run_experiment(ExperimentSpec(**base))
+        assert set(rs.data) == set(r0.data)
+        for k in r0.data:
+            np.testing.assert_array_equal(rs[k], r0[k], err_msg=k)
+    else:
+        rs.check()
+        tot = rs["done"] + rs["shed"] + rs["failed_exhausted"]
+        np.testing.assert_array_equal(tot, np.full_like(tot, N))

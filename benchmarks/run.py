@@ -338,87 +338,22 @@ def _sharded_parity_check() -> int:
     return 0 if ok else 1
 
 
-# files allowed to reference the deprecated entry points: the shim
-# itself, this gate, and the env-var fallback that now wraps NpzTrace
-_DEPRECATION_ALLOW = {
-    os.path.join("src", "repro", "core", "jax_engine.py"),
-    os.path.join("benchmarks", "run.py"),
-    os.path.join("benchmarks", "common.py"),
-}
-
-# benchmarks allowed to *deliberately* drive the Python event engine:
-# the engines-head-to-head microbench (its whole point is the
-# comparison) — everything else must go through repro.api
-_PY_ENGINE_ALLOW = {
-    os.path.join("benchmarks", "run.py"),
-    os.path.join("benchmarks", "sim_throughput.py"),
-}
-
-
 def deprecation_scan() -> int:
-    """Fail on DeprecationWarning-free use of the old driving surface
-    (importing ``sweep`` from the engine, or the ``REPRO_AZURE_NPZ``
-    env var) anywhere in benchmarks/, examples/, scripts/ or src/ —
-    tests are exempt (they exercise the shim deliberately). Benchmarks
-    additionally must not drive the slow Python event engine
-    (``repro.core.simulate``) — every figure/ablation runs through
-    `repro.api.ExperimentSpec` since PR 4/5; only this file's smoke
-    parity gate may import it."""
-    import re
+    """Fail on use of the old driving surface (importing ``sweep``
+    from the engine, the ``REPRO_AZURE_NPZ`` env var, benchmarks
+    driving the Python event engine) anywhere in benchmarks/,
+    examples/, scripts/ or src/ — tests are exempt (they exercise the
+    shim deliberately).
 
-    # import statements only (parenthesized or single-line), so prose
-    # mentioning "sweep" near an unrelated engine import cannot
-    # false-positive the gate
-    imp_pats = (
-        re.compile(r"from\s+repro\.core\.jax_engine\s+import"
-                   r"\s*\(([^)]*)\)", re.S),
-        re.compile(r"from\s+repro\.core\.jax_engine\s+import"
-                   r"\s+([^(\n]+)"),
-    )
-    name_sweep = re.compile(r"\bsweep\b")
-    pats = (
-        re.compile(r"REPRO_AZURE_NPZ"),
-        re.compile(r"\bjax_engine\.sweep\s*\("),
-    )
-    # benchmarks-only: the Python event engine (simulate / simulator)
-    py_engine_pats = (
-        re.compile(r"from\s+repro\.core\s+import\s*\(?[^)\n]*"
-                   r"\bsimulate\b"),
-        re.compile(r"from\s+repro\.core\.simulator\s+import"),
-        re.compile(r"\brepro\.core\.simulator\b"),
-    )
+    Since PR 9 this delegates to the AST-level lint in
+    `repro.analysis.lint` (same allowlists, same one-line-per-hit
+    failure surface): real import statements, attribute calls and
+    string constants are matched structurally, so prose can't
+    false-positive and a reformatted import can't dodge the gate."""
+    from repro.analysis.lint import scan
+
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    bad = 0
-
-    def flag(rel, what):
-        nonlocal bad
-        bad += 1
-        print(f"DEPRECATED ENTRY POINT: {rel} {what}",
-              file=sys.stderr)
-
-    for sub in ("src", "benchmarks", "examples", "scripts"):
-        for dirpath, _, files in os.walk(os.path.join(root, sub)):
-            for f in sorted(files):
-                if not f.endswith(".py"):
-                    continue
-                rel = os.path.relpath(os.path.join(dirpath, f), root)
-                if rel in _DEPRECATION_ALLOW:
-                    continue
-                with open(os.path.join(dirpath, f)) as fh:
-                    text = fh.read()
-                for p in imp_pats:
-                    for m in p.finditer(text):
-                        if name_sweep.search(m.group(1)):
-                            flag(rel, "imports sweep from jax_engine")
-                for p in pats:
-                    if p.search(text):
-                        flag(rel, f"matches /{p.pattern}/")
-                if sub == "benchmarks" and rel not in _PY_ENGINE_ALLOW:
-                    for p in py_engine_pats:
-                        if p.search(text):
-                            flag(rel, "drives the Python event engine"
-                                      " (use repro.api)")
-                            break
+    bad = scan(root)
     print("deprecation scan: " + ("OK" if not bad
                                   else f"{bad} hit(s)"))
     return bad

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 test suite + the engine smoke gate.
+# CI entrypoint: tier-1 test suite + the engine smoke gate + the
+# jaxpr/HLO invariant auditor.
 #
 #   bash scripts/ci.sh            # everything (what CI runs on push)
 #   bash scripts/ci.sh tests      # tier-1 only
 #   bash scripts/ci.sh smoke      # smoke gate only
+#   bash scripts/ci.sh analysis   # invariant gates only
 #
 # Tier-1 is the repo's correctness bar (ROADMAP.md); the smoke gate
 # re-verifies request-for-request Python/JAX engine equivalence, the
@@ -29,6 +31,11 @@ fi
 if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     echo "== smoke gate: benchmarks/run.py --smoke =="
     python -m benchmarks.run --smoke --json BENCH_smoke.json
+fi
+
+if [[ "$stage" == "all" || "$stage" == "analysis" ]]; then
+    echo "== invariant gates: python -m repro.analysis =="
+    python -m repro.analysis --out analysis_report.json
 fi
 
 echo "== ci.sh: OK =="

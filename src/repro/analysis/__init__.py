@@ -1,0 +1,30 @@
+"""Static analysis of the compiled engines: jaxpr/HLO invariant gates.
+
+The scheduling engines' throughput rests on a handful of hand-earned
+XLA:CPU invariants (ROADMAP PRs 3/5/6) that nothing used to check:
+
+* **carry budget** — streaming loop state is O(F + C + SEG +
+  HIST_BINS) per lane; any carried array that scales with the trace
+  length N must be a documented rid-chain rail (`carries`).
+* **copy insertion** — the dynamic loop's write-first cursor-register
+  spelling keeps XLA's read-then-write liveness copies to <= 2 large
+  copies per event step (`hlo`).
+* **gather cliff** — per-event gathers must never read a multi-row
+  shared operand above ``ROW_SPLIT_ELEMS`` elements; all trace reads
+  go through flattened (T*N,) views (`gathers`).
+* **recompilation** — a (router, K, heterogeneity) grid on the static
+  tier collapses onto one padded (1, N) specialisation per policy
+  (`recompile`).
+* **dtype policy** — engine programs are f64-only past the x64 import
+  guard; no f32 may appear in any traced value (`dtypes`).
+* **deprecation lint** — AST-level scan for the retired driving
+  surface (`lint`).
+
+Everything except the recompilation auditor works from `jax.jit`'s
+AOT stages (``trace`` -> ``lower`` -> ``compile``) without executing a
+single event loop. ``python -m repro.analysis`` runs the gates and
+emits a JSON report; see docs/analysis.md.
+"""
+from repro.analysis.report import GATES, run_gates
+
+__all__ = ["GATES", "run_gates"]

@@ -1,0 +1,65 @@
+"""CLI: ``python -m repro.analysis [--out report.json] [--gates ...]``.
+
+Exit status 0 iff every gate passed. ``--gates`` takes a
+comma-separated subset (e.g. ``--gates deprecation_lint`` for the
+fast lint-only run); ``--quick`` skips the two expensive stages
+(XLA compilation and the recompilation grid)."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.report import GATES, run_gates
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/HLO invariant gates for the scheduling "
+                    "engines (see docs/analysis.md)")
+    ap.add_argument("--out", metavar="PATH",
+                    help="write the JSON report here (default: "
+                         "stdout only prints the summary)")
+    ap.add_argument("--gates", metavar="G1,G2",
+                    help=f"subset of {','.join(GATES)}")
+    ap.add_argument("--quick", action="store_true",
+                    help="jaxpr + lint gates only (no XLA compile, "
+                         "no grid run)")
+    ap.add_argument("--copy-budget", type=int, default=2,
+                    help="max table-scale copies per while body "
+                         "(default: the PR-6-verified 2)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full report to stdout")
+    args = ap.parse_args(argv)
+
+    gates = None
+    if args.gates:
+        gates = [g.strip() for g in args.gates.split(",") if g.strip()]
+    if args.quick:
+        gates = [g for g in (gates or list(GATES))
+                 if g not in ("copy_insertion", "recompilation")]
+
+    report = run_gates(gates=gates, copy_budget=args.copy_budget,
+                       log=lambda msg: print(f"[analysis] {msg}",
+                                             file=sys.stderr))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    if args.json:
+        json.dump(report, sys.stdout, indent=2, sort_keys=True)
+        print()
+
+    for name, gate in report["gates"].items():
+        status = "OK" if gate["passed"] else "FAIL"
+        print(f"{name:18s} {status}")
+        for p in gate["problems"]:
+            print(f"  - {p}", file=sys.stderr)
+    print(f"analysis: {'OK' if report['passed'] else 'FAIL'} "
+          f"({report['wall_s']}s)")
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

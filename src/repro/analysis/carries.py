@@ -1,0 +1,80 @@
+"""Carry-size budget gate: no undocumented trace-length loop state.
+
+Walks every `while_loop`/`scan` in an entry's jaxpr and classifies
+each carried array by symbolic shape provenance (markers). Carries
+whose every dimension is budget-class (L, F, C, K, Q, SEG, NCI, NCF,
+HIST_BINS) are the streaming design's O(F + C + SEG + HIST_BINS)
+state. Any carry with an N-scaling dimension must match — as an exact
+multiset of (shape-class, dtype) signatures — the entry's allowlisted
+rails, each of which carries a rationale from the owning engine
+module's ``CARRY_RAILS``. Loop-invariant operands (the (T, N) trace
+itself) are jaxpr constants, not carries, so they never trip the gate.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict
+
+from repro.analysis.entrypoints import RAIL_SIGS, AuditEntry
+from repro.analysis.jaxprs import loops
+
+
+def audit_carries(entry: AuditEntry, traced) -> Dict:
+    """Gate result dict for one traced entry (see report.py for the
+    shape). Fails when any loop's N-scaling carry multiset differs
+    from the allowlist."""
+    m = entry.markers
+    sigs = RAIL_SIGS[entry.tier]
+    allowed = Counter(sigs[r] for r in entry.allow)
+    rails_by_sig: Dict = {}
+    for r in entry.allow:
+        rails_by_sig.setdefault(sigs[r], []).append(r)
+
+    loops_out = []
+    problems = []
+    for path, eqn, carry_avals in loops(traced.jaxpr.jaxpr):
+        scaling = Counter()
+        carry_bytes = 0
+        n_carries = 0
+        for aval in carry_avals:
+            shape = tuple(getattr(aval, "shape", ()))
+            dtype = str(getattr(aval, "dtype", "?"))
+            n_carries += 1
+            size = 1
+            for d in shape:
+                size *= d
+            if hasattr(aval, "dtype"):
+                carry_bytes += size * aval.dtype.itemsize
+            if any(m.scales_with_n(d) for d in shape):
+                scaling[(m.shape_class(shape), dtype)] += 1
+        loop_id = "/".join(path + (eqn.primitive.name,))
+        extra = scaling - allowed
+        missing = allowed - scaling
+        loops_out.append(dict(
+            loop=loop_id, carries=n_carries, carry_bytes=carry_bytes,
+            n_scaling={f"{'x'.join(c[0])}:{c[1]}": n
+                       for c, n in sorted(scaling.items())}))
+        for sig, count in extra.items():
+            problems.append(
+                f"{entry.name} [{loop_id}]: {count} carried "
+                f"{'x'.join(sig[0])} {sig[1]} array(s) scale with the "
+                f"trace length N and match no allowlisted rail. "
+                f"Streaming loop state must be O(F+C+SEG+HIST_BINS) "
+                f"per lane (PR 2/5/6); move per-request state to a "
+                f"loop-invariant operand, a positional cursor, or — "
+                f"if a linked rail is genuinely required — add it to "
+                f"CARRY_RAILS with a rationale and to this entry's "
+                f"allowlist.")
+        for sig, count in missing.items():
+            names = ", ".join(rails_by_sig.get(sig, ["?"]))
+            problems.append(
+                f"{entry.name} [{loop_id}]: expected {count} "
+                f"{'x'.join(sig[0])} {sig[1]} rail carry(s) "
+                f"({names}) but found none — the documented rail "
+                f"layout changed; update the allowlist and "
+                f"CARRY_RAILS together.")
+
+    return dict(entry=entry.name, passed=not problems,
+                loops=loops_out, problems=problems,
+                allowed_rails={r: entry.rail_rationales()[r]
+                               for r in entry.allow})

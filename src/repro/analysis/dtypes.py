@@ -1,0 +1,136 @@
+"""Dtype-policy gate: the engines are f64-only past the x64 guard.
+
+Every simulated timestamp is an absolute f64 second; a single f32
+intermediate would silently halve the mantissa and break the repo's
+bitwise Python/JAX parity gates. The engines guarantee this with the
+`ensure_x64` import guard, but a weakly-typed Python constant or an
+explicit narrow cast could still drag a traced value to f32. Three
+checks:
+
+* jaxpr scan — no equation in any audited entry produces a float32
+  (or float16/bfloat16) value;
+* boundary scan — the numpy operands the spec layer lowers for the
+  jitted loops (`ClusterSpec.delay_ops`, `ClusterSpec.churn_operand`,
+  `ExperimentSpec.resilience_ops`) are exactly float64/int32/bool;
+* `backoff_jax` — the one helper traced *inside* the loops from
+  Python-float statics (the resil tuple) keeps an all-f64 jaxpr.
+
+The compiled-side twin (zero ``f32[`` in optimized HLO) lives in
+`repro.analysis.hlo.audit_f32`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.entrypoints import AuditEntry
+from repro.analysis.jaxprs import walk_eqns
+
+_NARROW = ("float32", "float16", "bfloat16")
+
+
+def _narrow_outputs(jaxpr) -> List[str]:
+    hits = []
+    for path, eqn in walk_eqns(jaxpr):
+        for v in eqn.outvars:
+            dt = str(getattr(v.aval, "dtype", ""))
+            if dt in _NARROW:
+                hits.append(f"{'/'.join(path) or '.'}: "
+                            f"{eqn.primitive.name} -> {dt}"
+                            f"{tuple(v.aval.shape)}")
+    return hits
+
+
+def audit_entry_dtypes(entry: AuditEntry, traced) -> Dict:
+    hits = _narrow_outputs(traced.jaxpr.jaxpr)
+    problems = [
+        f"{entry.name}: narrow float produced by {h} — engine "
+        f"programs are f64-only (ensure_x64); pin the constant or "
+        f"operand to jnp.float64." for h in hits[:8]]
+    return dict(entry=entry.name, passed=not hits,
+                narrow_values=len(hits), problems=problems)
+
+
+def audit_boundary_dtypes() -> Dict:
+    """Check the spec layer's lowered numpy operands at a
+    representative configuration of every schedule/fault knob."""
+    import numpy as np
+
+    from repro.api.spec import ExperimentSpec, SyntheticTrace
+    from repro.cluster.spec import (ClusterSpec, DelaySchedule,
+                                    PeriodicChurn)
+
+    problems = []
+    checked = {}
+
+    def expect(name, arr, want):
+        got = str(np.asarray(arr).dtype)
+        checked[name] = got
+        if got != want:
+            problems.append(
+                f"spec lowering '{name}' produced {got}, engine "
+                f"boundary requires {want} — pin the array dtype at "
+                f"the lowering site.")
+
+    cs = ClusterSpec(
+        n_nodes=3, router="jsq2", net_delay=(0.0, 0.01, 0.02),
+        delay_schedule=(None,
+                        DelaySchedule(times=(0.0, 5.0),
+                                      values=(0.01, 0.05)),
+                        DelaySchedule(times=(0.0, 2.0, 4.0),
+                                      values=(0.0, 0.1, 0.02),
+                                      period=8.0)),
+        churn=PeriodicChurn(period=10.0, duty=0.8))
+    dops = cs.delay_ops()
+    expect("delay_ops.dtimes", dops[0], "float64")
+    expect("delay_ops.dvals", dops[1], "float64")
+    expect("delay_ops.dper", dops[2], "float64")
+    expect("delays", np.asarray(cs.delays(), np.float64), "float64")
+    churn_t = cs.churn_operand(horizon=30.0)
+    expect("churn_operand", churn_t, "float64")
+
+    spec = ExperimentSpec(
+        traces=[SyntheticTrace.make(n_functions=4, n_requests=64,
+                                    seed=1)],
+        policies=("esff",), capacities=(4,), fail_prob=0.1,
+        timeouts=5.0)
+    arrays = spec.expanded_traces()[0].arrays()
+    stacked = {k: np.asarray(arrays[k])[None]
+               for k in ("fn_id", "arrival", "exec_time")}
+    rs = spec.resilience_ops(stacked, 4)
+    eff, nfail, tmo, key, resil = rs
+    expect("resilience_ops.eff_exec", eff, "float64")
+    expect("resilience_ops.n_fail", nfail, "int32")
+    expect("resilience_ops.is_tmo", tmo, "bool")
+    expect("resilience_ops.rid_key", key, "int32")
+    for i, v in enumerate(resil[2:5]):
+        if type(v) is not float:
+            problems.append(
+                f"resil tuple slot {i + 2} is {type(v).__name__}, "
+                f"expected a Python float (it becomes a traced "
+                f"constant inside backoff_jax).")
+
+    return dict(entry="spec_boundaries", passed=not problems,
+                checked=checked, problems=problems)
+
+
+def audit_backoff_jaxpr() -> Dict:
+    """Trace `backoff_jax` exactly as the engines call it (i32 arrays,
+    Python-float statics) and hold its jaxpr to the f64-only policy —
+    the pin for the PR-9 weak-constant audit of core/resilience.py."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.resilience import backoff_jax
+
+    jaxpr = jax.make_jaxpr(
+        lambda a, k: backoff_jax(a, k, 0.5, 8.0, 0.25, 42))(
+            jax.ShapeDtypeStruct((7,), jnp.int32),
+            jax.ShapeDtypeStruct((7,), jnp.int32))
+    hits = _narrow_outputs(jaxpr.jaxpr)
+    out_dt = str(jaxpr.out_avals[0].dtype)
+    problems = [f"backoff_jax: narrow float at {h}" for h in hits]
+    if out_dt != "float64":
+        problems.append(f"backoff_jax returns {out_dt}, expected "
+                        f"float64")
+    return dict(entry="backoff_jax", passed=not problems,
+                out_dtype=out_dt, problems=problems)

@@ -1,0 +1,199 @@
+"""Traceable engine entry points for the invariant auditor.
+
+Each `AuditEntry` names one jitted event loop variant and builds the
+abstract (`jax.ShapeDtypeStruct`) operands to trace it at the marker
+shapes — `jax.jit`'s AOT stages then give the jaxpr (``.trace``) and
+optimized HLO (``.lower().compile().as_text()``) without executing a
+single event. The variant list covers every static-flag combination
+that changes the traced program: streaming/exact, timer rails,
+windowed slabs, the resilience rail, and the dynamic cluster tier with
+net-delay, churn and resilience.
+
+``allow`` names the rails (keys of the owning engine module's
+`CARRY_RAILS`) whose N-scaling carries are accepted — the carry gate
+fails on any deviation from that multiset, in either direction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Tuple
+
+from repro.analysis.markers import MARKERS, Markers
+
+# (shape-class, dtype) signature of every allowed rail, by tier. The
+# signatures are what the carry gate matches: rail *names* exist only
+# in the report (jaxpr carries are anonymous).
+RAIL_SIGS = {
+    "single": {
+        "start": (("L", "N"), "float64"),
+        "completion": (("L", "N"), "float64"),
+        "nxt": (("L", "N"), "int32"),
+        "att": (("L", "N"), "int32"),
+        "rt_t": (("L", "N"), "float64"),
+    },
+    "cluster": {
+        "nxt": (("L", "N"), "int32"),
+        "tnx": (("L", "N"), "int32"),
+        "dnx": (("L", "N"), "int32"),
+        "node_of": (("L", "N"), "int32"),
+        "att": (("L", "N"), "int32"),
+        "land_t": (("L", "N"), "float64"),
+        "rt_t": (("L", "N"), "float64"),
+        "start": (("L", "N"), "float64"),
+        "completion": (("L", "N"), "float64"),
+    },
+}
+
+# Static resil tuple (max_attempts, shed_mode, base, cap, jitter,
+# seed) — values are irrelevant to the traced structure.
+_RESIL = (3, 0, 0.5, 8.0, 0.25, 42)
+
+
+@dataclass(frozen=True)
+class AuditEntry:
+    name: str
+    tier: str                      # "single" | "cluster"
+    build: Callable[[], object]    # -> jax.stages.Traced
+    allow: Tuple[str, ...]         # rail names from CARRY_RAILS
+    compile_hlo: bool = False      # optimized-HLO gates run on these
+    # max table-scale copies per while body; None = report-only. Only
+    # the dynamic loop carries the PR-6-verified <= 2 bound — the
+    # single-node loop predates the write-first register spelling and
+    # is throughput-gated by BENCH instead.
+    copy_budget: int = None
+    markers: Markers = field(default=MARKERS)
+
+    def trace(self):
+        return self.build()
+
+    def rail_rationales(self) -> Dict[str, str]:
+        if self.tier == "single":
+            from repro.core.jax_engine import CARRY_RAILS
+        else:
+            from repro.cluster.engine import CARRY_RAILS
+        return {r: CARRY_RAILS[r] for r in self.allow}
+
+
+def _single_args(m: Markers):
+    import jax
+    import jax.numpy as jnp
+    S = jax.ShapeDtypeStruct
+    return (S((m.T, m.N), jnp.int32),      # fn_id
+            S((m.T, m.N), jnp.float64),    # arrival
+            S((m.T, m.N), jnp.float64),    # exec_time
+            S((m.T, m.F), jnp.float64),    # t_cold
+            S((m.T, m.F), jnp.float64),    # t_evict
+            S((m.L,), jnp.int32),          # trace_ix
+            S((m.L, m.C), jnp.bool_),      # cap_mask
+            S((m.L,), jnp.float64),        # beta
+            S((), jnp.float64),            # prior
+            S((), jnp.float64))            # threshold
+
+
+def _cluster_args(m: Markers):
+    import jax
+    import jax.numpy as jnp
+    S = jax.ShapeDtypeStruct
+    return (S((m.T, m.N), jnp.int32),
+            S((m.T, m.N), jnp.float64),
+            S((m.T, m.N), jnp.float64),
+            S((m.T, m.F), jnp.float64),
+            S((m.T, m.F), jnp.float64),
+            S((m.L,), jnp.int32),
+            S((m.L, m.K, m.C), jnp.bool_),  # per-node slot masks
+            S((m.L,), jnp.float64),
+            S((), jnp.float64),
+            S((), jnp.float64),
+            S((m.K,), jnp.float64))         # delays
+    # churn/delay-schedule/resilience operands are appended per entry
+
+
+def _resil_args(m: Markers):
+    import jax
+    import jax.numpy as jnp
+    S = jax.ShapeDtypeStruct
+    return dict(rs_nfail=S((m.T, m.N), jnp.int32),
+                rs_tmo=S((m.T, m.N), jnp.bool_),
+                rs_key=S((m.T, m.N), jnp.int32))
+
+
+def build_entries(m: Markers = MARKERS) -> Tuple[AuditEntry, ...]:
+    """The audited variant list. Tracing is cheap (~100 ms/entry);
+    only ``compile_hlo`` entries pay XLA compilation."""
+    import jax
+
+    from repro.cluster.engine import _cluster_metrics
+    from repro.cluster.routers import get_router
+    from repro.core.jax_engine import _sweep_metrics
+    from repro.core.jax_policies import KERNELS
+
+    def single(kernel="esff", extra=None, **kw):
+        def build():
+            args = _single_args(m)
+            kwargs = dict(kernel=KERNELS[kernel], n_fns=m.F,
+                          capacity=m.C, queue_cap=m.Q, stream=True)
+            kwargs.update(extra() if extra else {})
+            kwargs.update(kw)
+            return _sweep_metrics.trace(*args, **kwargs)
+        return build
+
+    def cluster(kernel="esff", router="jsq2", extra=None, **kw):
+        def build():
+            args = _cluster_args(m)
+            kwargs = dict(kernel=KERNELS[kernel],
+                          router=get_router(router), n_nodes=m.K,
+                          n_fns=m.F, capacity=m.C, queue_cap=m.Q,
+                          stream=True)
+            kwargs.update(extra() if extra else {})
+            kwargs.update(kw)
+            return _cluster_metrics.trace(*args, **kwargs)
+        return build
+
+    def nlive():
+        import jax.numpy as jnp
+        return dict(n_live=jax.ShapeDtypeStruct((m.L,), jnp.int32))
+
+    def churn_op():
+        import jax.numpy as jnp
+        return dict(churn_t=jax.ShapeDtypeStruct((m.K, m.E),
+                                                 jnp.float64))
+
+    return (
+        AuditEntry("single_stream", "single", single(),
+                   allow=(), compile_hlo=True, markers=m),
+        AuditEntry("single_stream_padded", "single",
+                   single(extra=nlive), allow=(), markers=m),
+        AuditEntry("single_exact", "single", single(stream=False),
+                   allow=("start", "completion"), markers=m),
+        AuditEntry("single_timers", "single",
+                   single(kernel="openwhisk_v2"), allow=(), markers=m),
+        AuditEntry("single_windowed", "single", single(window=m.W),
+                   allow=(), markers=m),
+        AuditEntry("single_resil", "single",
+                   single(resil=_RESIL, extra=_resil_args_thunk(m)),
+                   allow=("nxt", "att", "rt_t"), markers=m),
+        AuditEntry("cluster_stream", "cluster", cluster(),
+                   allow=("nxt",), compile_hlo=True, copy_budget=2,
+                   markers=m),
+        AuditEntry("cluster_timers", "cluster",
+                   cluster(kernel="openwhisk_v2"),
+                   allow=("nxt", "tnx"), markers=m),
+        AuditEntry("cluster_delay", "cluster",
+                   cluster(has_delay=True),
+                   allow=("nxt", "dnx"), markers=m),
+        AuditEntry("cluster_churn", "cluster",
+                   cluster(has_delay=True, has_churn=True,
+                           extra=churn_op),
+                   allow=("nxt", "dnx", "land_t"), markers=m),
+        AuditEntry("cluster_resil", "cluster",
+                   cluster(resil=_RESIL, extra=_resil_args_thunk(m)),
+                   allow=("nxt", "att", "rt_t"), markers=m),
+        AuditEntry("cluster_exact_delay", "cluster",
+                   cluster(stream=False, has_delay=True),
+                   allow=("nxt", "dnx", "node_of", "start",
+                          "completion"), markers=m),
+    )
+
+
+def _resil_args_thunk(m: Markers):
+    return lambda: _resil_args(m)

@@ -1,0 +1,70 @@
+"""Gather-cliff detector: no per-event reads of multi-row shared
+operands.
+
+The cliff (found in PR 5, re-found in PR 6, both at ~25x): inside a
+jitted loop, a gather whose operand is a *multi-row* array — leading
+dimension T > 1 — with more than ``ROW_SPLIT_ELEMS`` total elements
+drops XLA:CPU onto a generic gather path. The engines avoid the shape
+entirely: every per-event trace read goes through flattened ``(T*N,)``
+views with per-lane base offsets (rank-1 gathers are immune), and
+`repro.api.runner` row-splits any grid whose stacked operands would
+exceed the threshold.
+
+This analyzer re-checks the first half on every traced entry: walk the
+jaxpr for ``gather``/``dynamic_slice`` equations inside loop bodies
+and flag any whose operand is rank >= 2 with a T-sized leading
+dimension and an N-scaling dimension (symbolically above the
+threshold at production sizes — the markers keep T and N
+unambiguous). Windowed trace-slab refreshes are the one sanctioned
+dynamic-slice of that shape: a per-*window* contiguous copy of W
+columns, not a per-event random gather, recognised by its static
+``slice_sizes`` ending in W.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.analysis.entrypoints import AuditEntry
+from repro.analysis.jaxprs import in_loop, walk_eqns
+
+# Mirrors repro.api.runner.ROW_SPLIT_ELEMS (imported lazily in
+# audit_gathers to keep this module import-light for the linter).
+_PRIMS = ("gather", "dynamic_slice")
+
+
+def _cliff_shaped(shape, m) -> bool:
+    return (len(shape) >= 2 and shape[0] == m.T
+            and any(m.scales_with_n(d) for d in shape[1:]))
+
+
+def audit_gathers(entry: AuditEntry, traced) -> Dict:
+    from repro.api.runner import ROW_SPLIT_ELEMS
+    m = entry.markers
+    checked = 0
+    hits = []
+    slab_refreshes = 0
+    for path, eqn in walk_eqns(traced.jaxpr.jaxpr):
+        if eqn.primitive.name not in _PRIMS or not in_loop(path):
+            continue
+        operand = eqn.invars[0].aval
+        shape = tuple(getattr(operand, "shape", ()))
+        checked += 1
+        if not _cliff_shaped(shape, m):
+            continue
+        if eqn.primitive.name == "dynamic_slice":
+            sizes = tuple(eqn.params.get("slice_sizes", ()))
+            if sizes and sizes[-1] == m.W:
+                slab_refreshes += 1   # windowed trace-slab copy
+                continue
+        hits.append(
+            f"{entry.name} [{'/'.join(path)}]: {eqn.primitive.name} "
+            f"over a {'x'.join(m.shape_class(shape))} operand "
+            f"(leading dim T={m.T} > 1, trace-scaling row) inside a "
+            f"loop body — above ROW_SPLIT_ELEMS={ROW_SPLIT_ELEMS} "
+            f"this is the ~25x XLA:CPU generic-gather cliff (PR 5/6)."
+            f" Read through a flattened (T*N,) view with per-lane "
+            f"base offsets instead (see EngineCtx).")
+    return dict(entry=entry.name, passed=not hits,
+                loop_gathers_checked=checked,
+                sanctioned_slab_refreshes=slab_refreshes,
+                problems=hits)

@@ -1,0 +1,134 @@
+"""Optimized-HLO analyzers: copy-insertion gate and f32 leak scan.
+
+XLA's copy-insertion pass materialises a copy for every buffer that is
+read after being (aliased-)written inside a loop body — the
+read-before-write spelling costs 2 copies per event per state table,
+which PR 6 eliminated for the dynamic loop with write-first cursor
+registers (HLO-verified 8 -> 2 large copies). This gate re-verifies
+that bound mechanically on every run: parse the compiled module text,
+find each while-loop body computation, and count copies of
+*table-scale* arrays (an F-divisible or N-scaling dimension; see
+`markers.Markers.is_table_scale`). Scalar shuffles and constant-size
+counter copies are free by comparison and not counted.
+
+The f32 scan is the compiled-side half of the dtype gate: no ``f32``
+tensor may appear anywhere in an engine module's optimized HLO.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from repro.analysis.markers import Markers
+
+# `%name = f64[3,11]{1,0} copy(%operand)` — shape first, layout
+# annotation optional.
+# parameter lists and result types contain nested parens, so the
+# middle of the header is matched greedily up to the opening brace
+_COMP_HEAD = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*(?:->[^{]*)?\{")
+_COPY = re.compile(r"^\s*%?[\w.\-]+\s*=\s*(\w+)\[([\d,]*)\]"
+                   r"(?:\{[^}]*\})?\s*copy\(")
+_WHILE_BODY = re.compile(r"\bwhile\([^)]*\).*?body=%?([\w.\-]+)")
+_F32 = re.compile(r"\bf32\[")
+
+
+def split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def while_bodies(comps: Dict[str, List[str]]) -> List[str]:
+    bodies = []
+    for lines in comps.values():
+        for ln in lines:
+            m = _WHILE_BODY.search(ln)
+            if m and m.group(1) in comps:
+                bodies.append(m.group(1))
+    return sorted(set(bodies))
+
+
+def _parse_shape(dims: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in dims.split(",") if d)
+
+
+def count_large_copies(hlo_text: str, m: Markers) -> Dict:
+    """Per-while-body counts of table-scale copies, plus the max over
+    bodies (the per-event-step figure PR 6 bounded at 2)."""
+    comps = split_computations(hlo_text)
+    bodies = while_bodies(comps)
+    per_body = {}
+    for b in bodies:
+        large = []
+        for ln in comps[b]:
+            cm = _COPY.match(ln)
+            if not cm:
+                continue
+            shape = _parse_shape(cm.group(2))
+            if m.is_table_scale(shape):
+                large.append(f"{cm.group(1)}[{cm.group(2)}]")
+        if large:
+            per_body[b] = large
+    max_large = max((len(v) for v in per_body.values()), default=0)
+    return dict(while_bodies=len(bodies),
+                large_copies_per_body={b: v
+                                       for b, v in per_body.items()},
+                max_large_copies_per_body=max_large)
+
+
+def audit_copies(entry_name: str, hlo_text: str, m: Markers,
+                 budget=2) -> Dict:
+    """Copy-insertion gate: table-scale copies per while body <=
+    ``budget`` (the PR-6-verified bound for the dynamic loop).
+    ``budget=None`` measures and reports without gating — used for
+    the single-node loop, whose pre-PR-6 spelling is throughput-gated
+    by BENCH rather than by copy count."""
+    counts = count_large_copies(hlo_text, m)
+    n = counts["max_large_copies_per_body"]
+    problems = []
+    if counts["while_bodies"] == 0:
+        problems.append(
+            f"{entry_name}: no while-loop body found in the "
+            f"optimized HLO — the event loop is gone or the module "
+            f"parser regressed; either way the copy gate cannot "
+            f"measure and must not pass silently.")
+    if budget is not None and n > budget:
+        worst = max(counts["large_copies_per_body"].items(),
+                    key=lambda kv: len(kv[1]))
+        problems.append(
+            f"{entry_name}: {n} table-scale copies per iteration of "
+            f"while body '{worst[0]}' (budget {budget}): "
+            f"{worst[1]}. XLA copy-insertion charges 2 copies per "
+            f"event per state table that is read before it is "
+            f"written — keep the write-first cursor-register "
+            f"spelling (PR 6): stage per-event writes in scalar "
+            f"registers and commit them once, after the last read.")
+    return dict(entry=entry_name, passed=not problems,
+                measured=counts, budget=budget, problems=problems)
+
+
+def audit_f32(entry_name: str, hlo_text: str) -> Dict:
+    """Compiled-side dtype gate: zero f32 tensors in the module."""
+    hits = len(_F32.findall(hlo_text))
+    problems = []
+    if hits:
+        lines = [ln.strip()[:120] for ln in hlo_text.splitlines()
+                 if _F32.search(ln)][:5]
+        problems.append(
+            f"{entry_name}: {hits} f32 tensor(s) in optimized HLO — "
+            f"the engine dtype policy is f64-only past the x64 "
+            f"import guard (`ensure_x64`). First sites: {lines}")
+    return dict(entry=entry_name, passed=not problems,
+                f32_tensors=hits, problems=problems)

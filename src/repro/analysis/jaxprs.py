@@ -1,0 +1,52 @@
+"""Recursive jaxpr traversal shared by the jaxpr-level analyzers.
+
+`walk_eqns` yields every equation in a closed jaxpr and all its
+sub-jaxprs (pjit bodies, while cond/body, scan bodies, cond branches,
+custom_* rules) with a structural path, so analyzers can tell whether
+an op sits inside a loop body. `loops` yields each `while`/`scan`
+equation together with its carried output avals — for `while` the body
+jaxpr's outputs *are* the carry; for `scan` the first ``num_carry``
+outputs are.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, List, Tuple
+
+
+def _sub_jaxprs(params: dict) -> Iterator[Any]:
+    from jax.core import ClosedJaxpr, Jaxpr
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for vv in vs:
+            if isinstance(vv, ClosedJaxpr):
+                yield vv.jaxpr
+            elif isinstance(vv, Jaxpr):
+                yield vv
+
+
+def walk_eqns(jaxpr, path: Tuple[str, ...] = ()) -> Iterator[
+        Tuple[Tuple[str, ...], Any]]:
+    """Yield ``(path, eqn)`` for every equation, depth-first. ``path``
+    is the chain of enclosing primitive names (e.g. ``("pjit",
+    "while", "scan")``)."""
+    for eqn in jaxpr.eqns:
+        yield path, eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from walk_eqns(sub, path + (eqn.primitive.name,))
+
+
+def in_loop(path: Tuple[str, ...]) -> bool:
+    return "while" in path or "scan" in path
+
+
+def loops(jaxpr) -> Iterator[Tuple[Tuple[str, ...], Any, List[Any]]]:
+    """Yield ``(path, eqn, carry_avals)`` for every while/scan."""
+    for path, eqn in walk_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            yield path, eqn, [v.aval for v in body.outvars]
+        elif name == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            nc = eqn.params["num_carry"]
+            yield path, eqn, [v.aval for v in body.outvars[:nc]]

@@ -1,0 +1,164 @@
+"""AST-level deprecation lint (absorbs benchmarks/run.py's regex scan).
+
+The retired driving surface must not creep back in:
+
+* importing ``sweep`` from ``repro.core.jax_engine`` (or calling
+  ``jax_engine.sweep(...)``) — the shim exists for tests only; code
+  goes through `repro.api.ExperimentSpec`;
+* the ``REPRO_AZURE_NPZ`` env var — superseded by `NpzTrace`;
+* benchmarks driving the Python event engine (``repro.core.simulate``
+  / ``repro.core.simulator``) — every figure/ablation runs through
+  the API since PR 4/5; only the head-to-head parity benches may.
+
+The old regex scan matched raw text, so prose in a docstring could
+trip it and a parenthesised import could dodge it. This pass parses
+each file and inspects actual ``import`` statements, attribute calls
+and string constants — comments and docs are structurally exempt
+(string *constants* still count: an env-var read is a string
+constant). `scan` keeps the regex scan's exact failure surface: one
+``DEPRECATED ENTRY POINT: <path> <reason>`` line per hit on stderr,
+return value = hit count, so `benchmarks/run.py --smoke` and CI are
+unchanged consumers.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+# Files allowed to reference the deprecated entry points: the shim
+# itself, the smoke gate, the env-var fallback that now wraps
+# NpzTrace, and this linter (it names what it bans).
+DEPRECATION_ALLOW = {
+    os.path.join("src", "repro", "core", "jax_engine.py"),
+    os.path.join("src", "repro", "analysis", "lint.py"),
+    os.path.join("benchmarks", "run.py"),
+    os.path.join("benchmarks", "common.py"),
+}
+
+# Benchmarks allowed to *deliberately* drive the Python event engine:
+# the engines-head-to-head microbenches (their whole point is the
+# comparison) — everything else must go through repro.api.
+PY_ENGINE_ALLOW = {
+    os.path.join("benchmarks", "run.py"),
+    os.path.join("benchmarks", "sim_throughput.py"),
+}
+
+SCAN_DIRS = ("src", "benchmarks", "examples", "scripts")
+
+_ENGINE_MOD = "repro.core.jax_engine"
+_PY_ENGINE_MODS = ("repro.core.simulator",)
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for an Attribute/Name chain, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def lint_source(text: str, *, is_benchmark: bool,
+                py_engine_exempt: bool = False
+                ) -> List[Tuple[int, str]]:
+    """(lineno, reason) findings for one file's source text."""
+    tree = ast.parse(text)
+    out: List[Tuple[int, str]] = []
+    # docstrings/prose are bare-expression string statements — exempt
+    # (an env-var *read* passes the name as an argument, never as a
+    # free-standing expression statement)
+    doc_ids = {id(node.value) for node in ast.walk(tree)
+               if isinstance(node, ast.Expr)
+               and isinstance(node.value, ast.Constant)
+               and isinstance(node.value.value, str)}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.level == 0:
+            mod = node.module or ""
+            names = {a.name for a in node.names}
+            if mod == _ENGINE_MOD and "sweep" in names:
+                out.append((node.lineno,
+                            "imports sweep from jax_engine"))
+            if is_benchmark and not py_engine_exempt:
+                if mod == "repro.core" and "simulate" in names:
+                    out.append((node.lineno,
+                                "drives the Python event engine"
+                                " (use repro.api)"))
+                if mod in _PY_ENGINE_MODS or mod.startswith(
+                        _PY_ENGINE_MODS[0] + "."):
+                    out.append((node.lineno,
+                                "drives the Python event engine"
+                                " (use repro.api)"))
+        elif isinstance(node, ast.Import):
+            if is_benchmark and not py_engine_exempt and any(
+                    a.name in _PY_ENGINE_MODS or
+                    a.name.startswith(_PY_ENGINE_MODS[0] + ".")
+                    for a in node.names):
+                out.append((node.lineno,
+                            "drives the Python event engine"
+                            " (use repro.api)"))
+        elif isinstance(node, ast.Call):
+            chain = _dotted(node.func)
+            if chain.endswith("jax_engine.sweep"):
+                out.append((node.lineno, "calls jax_engine.sweep()"))
+        elif isinstance(node, ast.Constant):
+            if (isinstance(node.value, str)
+                    and "REPRO_AZURE_NPZ" in node.value
+                    and id(node) not in doc_ids):
+                out.append((node.lineno,
+                            "reads the REPRO_AZURE_NPZ env var "
+                            "(use NpzTrace)"))
+    return sorted(set(out))
+
+
+def repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def iter_findings(root: str) -> Iterator[Tuple[str, int, str]]:
+    for sub in SCAN_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(root, sub)):
+            for f in sorted(files):
+                if not f.endswith(".py"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, f), root)
+                if rel in DEPRECATION_ALLOW:
+                    continue
+                with open(os.path.join(dirpath, f)) as fh:
+                    text = fh.read()
+                try:
+                    findings = lint_source(
+                        text, is_benchmark=(sub == "benchmarks"),
+                        py_engine_exempt=(rel in PY_ENGINE_ALLOW))
+                except SyntaxError as e:
+                    findings = [(e.lineno or 0,
+                                 f"does not parse: {e.msg}")]
+                for lineno, reason in findings:
+                    yield rel, lineno, reason
+
+
+def scan(root: str = None, out=None) -> int:
+    """Drop-in replacement for the old regex `deprecation_scan`:
+    prints one line per hit, returns the hit count."""
+    root = root or repo_root()
+    out = out or sys.stderr
+    bad = 0
+    for rel, lineno, reason in iter_findings(root):
+        bad += 1
+        print(f"DEPRECATED ENTRY POINT: {rel}:{lineno} {reason}",
+              file=out)
+    return bad
+
+
+def audit_lint(root: str = None) -> dict:
+    """Gate wrapper for the JSON report."""
+    root = root or repo_root()
+    findings = [f"{rel}:{lineno} {reason}"
+                for rel, lineno, reason in iter_findings(root)]
+    return dict(entry="repo_tree", passed=not findings,
+                findings=len(findings), problems=findings)

@@ -1,0 +1,76 @@
+"""Marker dimensions: symbolic shape provenance from concrete shapes.
+
+The auditor traces the engines at small, pairwise-distinct dimension
+sizes so that every dimension of every traced array reveals which
+logical axis it came from — ``769`` can only be the trace length N,
+``11`` only the function count F. Classification then happens on the
+*labels*, which is what makes the gates symbolic: "no carried array
+may have an N-labeled dimension" holds at any production size, because
+the jaxpr is shape-polymorphic in nothing — the same program text is
+retraced per shape, and the small-shape trace is structurally
+identical to the production one.
+
+N is prime and strictly larger than every other marker, so an
+N-divisible (or >= N, for padded-to-window sizes) dimension cannot be
+a product of the small markers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+# Engine-owned constant dimensions (repro.core.jax_engine): these may
+# appear in carried shapes and are budget-class by construction.
+ENGINE_DIMS = {16: "NCI", 6: "NCF", 32: "SEG", 64: "HIST_BINS"}
+
+
+@dataclass(frozen=True)
+class Markers:
+    """Audit dimension sizes. All pairwise distinct; N prime > max of
+    the rest; F prime (used by the copy gate's table-scale rule)."""
+
+    T: int = 2     # trace rows (the multi-row shared-operand shape)
+    L: int = 3     # lanes
+    K: int = 4     # cluster nodes
+    C: int = 5     # per-node slots (capacity)
+    F: int = 11    # functions
+    Q: int = 97    # queue cap
+    W: int = 256   # window override for the multi-window entry
+    N: int = 769   # requests per trace row
+    E: int = 6     # churn toggle columns (operand-only, never carried)
+    D: int = 8     # delay-schedule steps (operand-only)
+
+    def label(self, dim: int) -> str:
+        """Axis label for a concrete dimension size (engine constants
+        win over coincidental marker collisions; unknown sizes keep
+        their number so report readers see the raw shape)."""
+        if self.scales_with_n(dim):
+            return "N" if dim == self.N else f"~N({dim})"
+        if dim in ENGINE_DIMS:
+            return ENGINE_DIMS[dim]
+        for name in ("T", "L", "K", "C", "F", "Q", "W"):
+            if dim == getattr(self, name):
+                return name
+        return str(dim)
+
+    def shape_class(self, shape: Tuple[int, ...]) -> Tuple[str, ...]:
+        return tuple(self.label(d) for d in shape)
+
+    def scales_with_n(self, dim: int) -> bool:
+        """True when a dimension can only come from the trace-length
+        axis: a multiple of N, or >= N (windowed paddings NP =
+        ceil(N/W)*W land here)."""
+        return dim >= self.N or (dim > 0 and dim % self.N == 0)
+
+    def is_table_scale(self, shape: Tuple[int, ...]) -> bool:
+        """True when the shape holds per-function or per-request state
+        (an F-divisible or N-scaling dimension) — the arrays whose
+        per-event liveness copies PR 6 drove to <= 2. Constant-size
+        state (slots C, counters NCI/NCF, HIST_BINS, SEG overlays)
+        never qualifies."""
+        return any(self.scales_with_n(d)
+                   or (d >= self.F and d % self.F == 0)
+                   for d in shape)
+
+
+MARKERS = Markers()

@@ -1,0 +1,90 @@
+"""Recompilation auditor: specialisation count == padding-sharing
+design.
+
+The static cluster tier's whole performance story (PR 5) is that it
+*never* re-specialises the engine: node sub-streams are PAD-padded
+back to the full (1, N) row shape and masked with ``n_live``, so
+every (router, K, heterogeneous-capacity) topology reuses ONE
+`_sweep_metrics` cache entry per policy. The dynamic tier, by
+contrast, legitimately specialises per (router, K) cell — ``router``
+and ``n_nodes`` are static arguments of a different program.
+
+This is the one analyzer that executes the engines (a few hundred
+synthetic requests — the point is the *cache count*, not the result):
+it clears every engine jit cache, runs a representative
+`ExperimentSpec` grid that crosses static routers, node counts and a
+heterogeneous topology with dynamic cells, and asserts the measured
+cache sizes against the design formula:
+
+* ``sweep_metrics`` == P_policies * (1 static-tier shape class
+  + 1 if the grid has plain single-node rows)
+* ``cluster_metrics`` == P_policies * n_dynamic_cells
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def audit_recompilation() -> Dict:
+    from repro.api import ClusterSpec, ExperimentSpec, SyntheticTrace
+    from repro.api.runner import (clear_jit_caches, jit_cache_sizes,
+                                  run_experiment)
+
+    policies = ("esff", "sff")
+    static_cells = (
+        ClusterSpec(n_nodes=2, router="hash"),
+        ClusterSpec(n_nodes=2, router="round_robin"),
+        ClusterSpec(n_nodes=4, router="hash"),
+        # heterogeneous caps ride the slot *mask*, not the shape: max
+        # node capacity matches the capacity axis so the cell shares
+        # the same C and the same specialisation
+        ClusterSpec(n_nodes=2, router="weighted_random",
+                    node_capacity=(4, 2)),
+    )
+    dynamic_cells = (
+        ClusterSpec(n_nodes=2, router="jsq2"),
+        ClusterSpec(n_nodes=4, router="jsq2"),
+        ClusterSpec(n_nodes=2, router="cold_aware"),
+    )
+    spec = ExperimentSpec(
+        traces=[SyntheticTrace.make(n_functions=6, n_requests=400,
+                                    seed=3)],
+        policies=policies, capacities=(4,),
+        cluster=(None,) + static_cells + dynamic_cells)
+
+    clear_jit_caches()
+    run_experiment(spec)
+    sizes = jit_cache_sizes()
+
+    # one shape class for all padded static cells + one for the plain
+    # single-node row (n_live=None traces a different program)
+    expect = {
+        "sweep_metrics": len(policies) * 2,
+        "cluster_metrics": len(policies) * len(dynamic_cells),
+        "simulate": 0,
+        "simulate_cluster": 0,
+    }
+    problems = []
+    for name, want in expect.items():
+        got = sizes.get(name)
+        if got != want:
+            grid = (f"{len(static_cells)} static cells x "
+                    f"{len(policies)} policies")
+            problems.append(
+                f"jit cache '{name}': {got} specialisations, design "
+                f"says {want} (grid: {grid} + 1 plain row + "
+                f"{len(dynamic_cells)} dynamic cells). A higher "
+                f"count means a previously shared shape class split "
+                f"— check that static-tier node streams are still "
+                f"padded to the full (1, N) row (static.py) and that "
+                f"operands keep stable shapes/dtypes across cells; a "
+                f"lower count means the grid no longer exercises the "
+                f"design and this audit must be updated.")
+    return dict(entry="experiment_grid", passed=not problems,
+                cache_sizes=sizes, expected=expect,
+                grid=dict(policies=list(policies),
+                          static_cells=[c.label for c in static_cells],
+                          dynamic_cells=[c.label
+                                         for c in dynamic_cells],
+                          plain_rows=1),
+                problems=problems)

@@ -1,0 +1,118 @@
+"""Gate orchestration and the JSON report for ``python -m
+repro.analysis``.
+
+One pass traces every audit entry (cheap), runs the jaxpr-level gates
+on each trace, compiles optimized HLO for the ``compile_hlo`` entries
+(the expensive step, shared by the copy and f32 gates), then the
+boundary/backoff dtype checks, the recompilation audit (the only gate
+that executes the engines) and the AST lint. The report is
+self-describing: per-gate ``passed`` + measured values + actionable
+``problems`` strings; CI uploads it next to BENCH_smoke.json.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict
+from typing import Dict, List, Optional
+
+from repro.analysis.markers import MARKERS
+
+GATES = ("carry_budget", "copy_insertion", "gather_cliff",
+         "dtype_policy", "recompilation", "deprecation_lint")
+
+
+def _merge(entries: List[Dict]) -> Dict:
+    return dict(passed=all(e["passed"] for e in entries),
+                entries=entries,
+                problems=[p for e in entries
+                          for p in e.get("problems", ())])
+
+
+def run_gates(gates: Optional[List[str]] = None,
+              copy_budget: int = 2, log=None) -> Dict:
+    gates = list(gates) if gates is not None else list(GATES)
+    unknown = set(gates) - set(GATES)
+    if unknown:
+        raise SystemExit(f"unknown gate(s) {sorted(unknown)}; "
+                         f"available: {list(GATES)}")
+    say = log or (lambda *_: None)
+    t0 = time.perf_counter()
+    report: Dict = dict(schema=1, markers=asdict(MARKERS),
+                        copy_budget=copy_budget, gates={})
+
+    need_traces = {"carry_budget", "gather_cliff",
+                   "dtype_policy"} & set(gates)
+    need_hlo = {"copy_insertion", "dtype_policy"} & set(gates)
+
+    traced = {}
+    entries = ()
+    if need_traces or need_hlo:
+        import jax
+
+        from repro.analysis.entrypoints import build_entries
+        report["jax_version"] = jax.__version__
+        entries = build_entries()
+        for e in entries:
+            say(f"tracing {e.name}")
+            traced[e.name] = e.trace()
+
+    if "carry_budget" in gates:
+        from repro.analysis.carries import audit_carries
+        say("carry budget")
+        report["gates"]["carry_budget"] = _merge(
+            [audit_carries(e, traced[e.name]) for e in entries])
+
+    if "gather_cliff" in gates:
+        from repro.analysis.gathers import audit_gathers
+        say("gather cliff")
+        report["gates"]["gather_cliff"] = _merge(
+            [audit_gathers(e, traced[e.name]) for e in entries])
+
+    hlo_texts = {}
+    if need_hlo:
+        for e in entries:
+            if e.compile_hlo:
+                say(f"compiling {e.name} (optimized HLO)")
+                hlo_texts[e.name] = (
+                    traced[e.name].lower().compile().as_text())
+
+    if "copy_insertion" in gates:
+        from repro.analysis.hlo import audit_copies
+        say("copy insertion")
+        budgets = {e.name: e.copy_budget for e in entries}
+        report["gates"]["copy_insertion"] = _merge(
+            [audit_copies(name, text, MARKERS,
+                          budget=(copy_budget
+                                  if budgets.get(name) is not None
+                                  else None))
+             for name, text in hlo_texts.items()])
+
+    if "dtype_policy" in gates:
+        from repro.analysis.dtypes import (audit_backoff_jaxpr,
+                                           audit_boundary_dtypes,
+                                           audit_entry_dtypes)
+        from repro.analysis.hlo import audit_f32
+        say("dtype policy")
+        checks = [audit_entry_dtypes(e, traced[e.name])
+                  for e in entries]
+        checks += [audit_f32(f"{name}:hlo", text)
+                   for name, text in hlo_texts.items()]
+        checks.append(audit_backoff_jaxpr())
+        checks.append(audit_boundary_dtypes())
+        report["gates"]["dtype_policy"] = _merge(checks)
+
+    if "recompilation" in gates:
+        from repro.analysis.recompile import audit_recompilation
+        say("recompilation audit (runs a tiny grid)")
+        report["gates"]["recompilation"] = _merge(
+            [audit_recompilation()])
+
+    if "deprecation_lint" in gates:
+        from repro.analysis.lint import audit_lint
+        say("deprecation lint")
+        report["gates"]["deprecation_lint"] = _merge([audit_lint()])
+
+    report["wall_s"] = round(time.perf_counter() - t0, 2)
+    report["passed"] = all(g["passed"]
+                           for g in report["gates"].values())
+    return report

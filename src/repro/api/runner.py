@@ -24,12 +24,12 @@ scale-out halves the ROADMAP called for:
 from __future__ import annotations
 
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Tuple
+from typing import Dict
 
 import numpy as np
 
 from repro.api.registry import get_kernel
-from repro.api.results import DIMS, ResultSet
+from repro.api.results import ResultSet
 from repro.api.spec import ExperimentSpec
 
 _BETA_DEFAULT = "default"
@@ -287,3 +287,29 @@ def legacy_sweep_dict(rs: ResultSet, n_traces: int) -> dict:
                        beta=(None if betas == [_BETA_DEFAULT]
                              else list(betas)))
     return out
+
+
+# ---------------------------------------------------------- audit hooks
+def jit_cache_sizes() -> Dict[str, int]:
+    """Jit cache sizes of every engine entry point (single-node +
+    cluster tiers), for `repro.analysis`'s recompilation auditor: run
+    a grid, then compare these counts against the padding-sharing
+    design's expected specialisation count."""
+    from repro.cluster.runner import jit_cache_sizes as _cluster_sizes
+    from repro.core.jax_engine import audit_jits
+    sizes = {name: fn._cache_size()
+             for name, fn in audit_jits().items()}
+    sizes.update(_cluster_sizes())
+    return sizes
+
+
+def clear_jit_caches() -> None:
+    """Reset every engine entry point's jit cache (single-node +
+    cluster tiers) so `jit_cache_sizes` counts only the grid under
+    audit."""
+    from repro.cluster import engine as _cengine
+    from repro.cluster import static as _cstatic
+    from repro.core.jax_engine import audit_jits
+    for fn in {**audit_jits(), **_cengine.audit_jits(),
+               **_cstatic.audit_jits()}.values():
+        fn.clear_cache()

@@ -1634,3 +1634,39 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
     if keep_responses:
         res["response"] = resp
     return res
+
+
+# ---------------------------------------------------------- audit hooks
+# Pure metadata for `repro.analysis`; the loops never read it. Each
+# entry names a carried array that legitimately scales with the trace
+# length N and the reason the cost is accepted (PR 5 documented the
+# rid-chain rails as the dynamic tier's one O(N) concession; PR 6 kept
+# them while moving everything else onto the segment overlay).
+CARRY_RAILS = {
+    "nxt": "per-function FIFO successor rid -- runtime routing means "
+           "queue membership is only known at dispatch time, so the "
+           "queue rail is a linked chain with one i32 link per "
+           "request (the segment overlay batches the *writes*; the "
+           "links themselves must persist).",
+    "tnx": "openwhisk_v2 timer-rail successor rid (same linked-chain "
+           "argument as `nxt`, for the per-function re-arm timers).",
+    "dnx": "deferred NODE_ARRIVAL rail under net_delay: in-flight "
+           "requests ride a time-ordered chain, one i32 link per "
+           "request.",
+    "land_t": "churn re-route landing time per in-flight rid (f64); "
+              "paired with `dnx` when the failure rail is active.",
+    "att": "resilience attempt counter per original rid (i32).",
+    "rt_t": "resilience retry-eligibility time per rid (f64).",
+    "node_of": "exact mode under net_delay records each request's "
+               "dispatching node -- an output record, not loop "
+               "bookkeeping.",
+    "start": "exact-mode per-request dispatch-time record (output).",
+    "completion": "exact-mode per-request completion-time record "
+                  "(output).",
+}
+
+
+def audit_jits():
+    """Jitted cluster entry points by name, for `repro.analysis`."""
+    return {"simulate_cluster": _simulate_cluster,
+            "cluster_metrics": _cluster_metrics}

@@ -30,20 +30,10 @@ from repro.cluster.static import run_static_entry
 
 
 def _churn_operand(entry: ClusterSpec, horizon: float):
-    """Lower the entry's availability schedule to the engine's (K, E)
-    BIG-padded toggle-time operand (≥ 1 all-BIG trailing column so
-    the per-node cursor can rest past its last toggle), or ``None``
-    when the schedule is trivial for this horizon — the run then
-    takes the plain no-churn loop, bitwise unchanged."""
-    from repro.core.jax_engine import BIG
-    toggles = entry.churn_toggles(horizon)
-    if not any(len(t) for t in toggles):
-        return None
-    E = max(len(t) for t in toggles) + 1
-    churn_t = np.full((entry.n_nodes, E), BIG, np.float64)
-    for k, tg in enumerate(toggles):
-        churn_t[k, : len(tg)] = tg
-    return churn_t
+    """Back-compat alias: the lowering moved to
+    `ClusterSpec.churn_operand` so every engine-boundary operand the
+    spec produces is built (and dtype-pinned) in one place."""
+    return entry.churn_operand(horizon)
 
 
 def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
@@ -260,3 +250,15 @@ def run_cluster_experiment(spec) -> "ResultSet":
                 default_betas={p: kernels[p].default_beta
                                for p in spec.policies})
     return ResultSet(data=data, coords=coords, meta=meta)
+
+
+# ---------------------------------------------------------- audit hooks
+def jit_cache_sizes() -> Dict[str, int]:
+    """Per-entry-point jit cache sizes for the cluster tier (dynamic
+    loop + static-tier merge helper), for `repro.analysis`'s
+    recompilation auditor."""
+    from repro.cluster import engine as _engine
+    from repro.cluster import static as _static
+    return {name: fn._cache_size()
+            for name, fn in {**_engine.audit_jits(),
+                             **_static.audit_jits()}.items()}

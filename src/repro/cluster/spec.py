@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Tuple, Union
 
 
 def _bad(field: str, msg: str):
@@ -356,6 +356,27 @@ class ClusterSpec:
                     t.append(up)
                 out.append(tuple(t))
         return tuple(out)
+
+    def churn_operand(self, horizon: float):
+        """Lower the availability schedule to the dynamic engine's
+        (K, E) BIG-padded toggle-time operand (>= 1 all-BIG trailing
+        column so the per-node cursor can rest past its last toggle),
+        or ``None`` when the schedule is trivial for this horizon —
+        the run then takes the plain no-churn loop, bitwise unchanged.
+
+        Lives next to `delay_ops` so every engine-boundary operand the
+        spec lowers is built here, explicitly ``float64`` — the dtype
+        gate in `repro.analysis` audits these lowerings directly."""
+        import numpy as np
+        from repro.core.jax_engine import BIG
+        toggles = self.churn_toggles(horizon)
+        if not any(len(t) for t in toggles):
+            return None
+        E = max(len(t) for t in toggles) + 1
+        churn_t = np.full((self.n_nodes, E), BIG, np.float64)
+        for k, tg in enumerate(toggles):
+            churn_t[k, : len(tg)] = tg
+        return churn_t
 
     def node_caps(self, capacity: int) -> Tuple[int, ...]:
         """Per-node slot counts given the capacity-axis value."""

@@ -334,3 +334,15 @@ def run_static_entry(spec, entry: ClusterSpec,
                                    v.dtype)
             data[m][pi] = v
     return data
+
+
+# ---------------------------------------------------------- audit hooks
+def audit_jits():
+    """Jitted static-tier helpers by name, for `repro.analysis`'s
+    recompilation auditor. The tier's design claim -- every (router,
+    K, heterogeneity) topology collapses onto ONE (1, N)-shaped
+    `_sweep_metrics` specialisation per policy, because node streams
+    are PAD-padded back to full length and masked via ``n_live`` --
+    is what the auditor checks by counting engine cache entries after
+    a representative grid."""
+    return {"div_by_n": _div_by_n_jit()}

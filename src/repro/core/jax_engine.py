@@ -1701,3 +1701,33 @@ def sweep(traces: Union[Trace, Sequence[Trace], dict, Sequence[dict]],
         tl_bins=tl_bins, tl_bucket=tl_bucket, lane_chunk=lane_chunk,
         devices=1)
     return legacy_sweep_dict(run_experiment(spec), len(traces))
+
+
+# ---------------------------------------------------------- audit hooks
+# Pure metadata for `repro.analysis` (the jaxpr/HLO invariant auditor):
+# nothing in the hot loops reads any of this. Every carried array that
+# is *allowed* to scale with the trace length N carries a rationale
+# here; the carry-budget analyzer fails on any N-scaling carry whose
+# (shape-class, dtype) signature is not claimed by one of these rails.
+CARRY_RAILS = {
+    "start": "exact mode records every request's dispatch time -- the "
+             "(L, N) record *is* the requested output, not loop "
+             "bookkeeping (streaming mode folds it away).",
+    "completion": "exact mode's per-request completion-time record; "
+                  "same contract as `start`.",
+    "nxt": "resilience rid-chain: per-function FIFO successor links, "
+           "one i32 per request. Retries re-enqueue old rids, which "
+           "breaks the positional-cursor invariant, so the linked "
+           "spelling is the documented O(N) cost of the layer.",
+    "att": "resilience attempt counter per original rid; i32, "
+           "written once per retry.",
+    "rt_t": "resilience retry-eligibility time per rid (backoff "
+            "target); f64, written once per retry.",
+}
+
+
+def audit_jits():
+    """Jitted engine entry points by name, for `repro.analysis` and
+    the recompilation auditor (cache introspection via
+    ``_cache_size``/``clear_cache``)."""
+    return {"simulate": _simulate, "sweep_metrics": _sweep_metrics}

@@ -165,6 +165,14 @@ def backoff_jax(attempt, key, base: float, cap: float, jitter: float,
     ensure_x64()
 
     a1 = (attempt - 1).astype(jnp.int32)
+    # base/cap/jitter arrive as Python floats from the static `resil`
+    # tuple; pin them to strongly-typed f64 at the jit boundary so a
+    # weakly-typed constant can never follow a narrower operand dtype
+    # (the engine dtype policy is f64-only past the x64 guard, and
+    # `repro.analysis`'s dtype gate traces this function to hold it).
+    base = jnp.float64(base)
+    cap = jnp.float64(cap)
+    jitter = jnp.float64(jitter)
     # 2**(a-1) via an exact integer shift: XLA:CPU lowers exp2 to
     # exp(x*ln2), which is off by an ulp from exponent 3 upward and
     # would break bitwise parity with the Python reference

@@ -28,7 +28,8 @@ from repro.utils.jit_cache import (disable_compilation_cache,
 
 # modules whose compiles are safe to persist (scheduling engine only)
 _CACHED_MODULES = ("test_jax_engine", "test_jax_sim", "test_streaming",
-                   "test_api", "test_cluster", "test_resilience")
+                   "test_api", "test_cluster", "test_resilience",
+                   "test_analysis")
 
 
 @pytest.fixture(autouse=True)

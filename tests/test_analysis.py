@@ -1,0 +1,318 @@
+"""Invariant auditor (`repro.analysis`): HEAD passes every gate, and
+seeded regressions — the exact mutations each gate exists to catch —
+are caught by that gate and no other.
+
+The mutation fixtures re-introduce, in miniature, real regressions
+from the repo's history: an O(N) while-loop carry (pre-PR-2 state
+layout), a buffer spelling that makes XLA's copy-insertion charge a
+copy per state table per event (pre-PR-6), a loop-body gather over a
+multi-row trace operand (the PR-5/6 ~25x XLA:CPU cliff shape), an f32
+intermediate (dtype-policy leak), and deprecated-entry-point imports
+(the retired regex scan's beat, now AST-level)."""
+import os
+import textwrap
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.analysis.carries import audit_carries           # noqa: E402
+from repro.analysis.dtypes import (audit_backoff_jaxpr,    # noqa: E402
+                                   audit_boundary_dtypes,
+                                   audit_entry_dtypes)
+from repro.analysis.entrypoints import (AuditEntry,        # noqa: E402
+                                        build_entries)
+from repro.analysis.gathers import audit_gathers           # noqa: E402
+from repro.analysis.hlo import (audit_copies, audit_f32,   # noqa: E402
+                                count_large_copies)
+from repro.analysis.lint import (lint_source, scan)        # noqa: E402
+from repro.analysis.markers import MARKERS                 # noqa: E402
+from repro.core.jax_engine import ensure_x64               # noqa: E402
+
+ensure_x64()
+
+import jax.numpy as jnp                                    # noqa: E402
+
+S = jax.ShapeDtypeStruct
+
+
+def _entry(name, fn, args, tier="single", allow=()):
+    """Wrap an ad-hoc jitted function as an auditable entry."""
+    jitted = jax.jit(fn)
+    return AuditEntry(name, tier, lambda: jitted.trace(*args),
+                      allow=allow)
+
+
+# ------------------------------------------------------------ fixtures
+# Each mutation is the minimal spelling of a real past regression.
+
+def _on_carry_fn(tr, n):
+    """O(N) carry: drags an (L, N) table through the while loop."""
+    def body(s):
+        i, acc = s
+        return i + 1, acc + 1.0
+    _, acc = jax.lax.while_loop(lambda s: s[0] < n, body,
+                                (0, tr * 0.0))
+    return acc.sum()
+
+
+def _rotate_tables_fn(a, b, c, n):
+    """Carry-slot rotation: each iteration returns the three (L, F)
+    state tables in permuted positions, so no while-body output can
+    alias its input buffer — XLA copy-insertion charges a copy per
+    table per event, the cost profile PR 6's write-first registers
+    eliminated."""
+    def body(s):
+        i, a, b, c = s
+        a = a.at[0, i % MARKERS.F].add(1.0)
+        return i + 1, c, a, b
+    _, a, b, c = jax.lax.while_loop(lambda s: s[0] < n, body,
+                                    (0, a, b, c))
+    return a.sum() + b.sum() + c.sum()
+
+
+def _multirow_gather_fn(tr, n):
+    """Per-event gather over the un-flattened (T, N) trace — the
+    ~25x XLA:CPU generic-gather cliff shape."""
+    def body(s):
+        i, acc = s
+        col = tr[:, i]                    # gather, operand (T, N)
+        return i + 1, acc + col.sum()
+    _, acc = jax.lax.while_loop(lambda s: s[0] < n, body, (0, 0.0))
+    return acc
+
+
+def _f32_leak_fn(x):
+    return (x.astype(jnp.float32) * jnp.float32(2.0)).sum()
+
+
+_TR = S((MARKERS.L, MARKERS.N), jnp.float64)
+_TR2 = S((MARKERS.T, MARKERS.N), jnp.float64)
+_TBL = S((MARKERS.L, MARKERS.F), jnp.float64)
+_I = S((), jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def head_traced():
+    """Every audited HEAD entry, traced once (abstract args — no
+    events execute)."""
+    entries = build_entries()
+    return [(e, e.trace()) for e in entries]
+
+
+# -------------------------------------------------- HEAD passes gates
+def test_head_entries_cover_every_variant(head_traced):
+    names = {e.name for e, _ in head_traced}
+    for expected in ("single_stream", "single_exact", "single_resil",
+                     "cluster_stream", "cluster_churn",
+                     "cluster_resil", "cluster_exact_delay"):
+        assert expected in names
+
+
+def test_head_passes_carry_budget(head_traced):
+    for entry, traced in head_traced:
+        res = audit_carries(entry, traced)
+        assert res["passed"], res["problems"]
+        assert res["loops"], f"{entry.name}: no loops audited"
+
+
+def test_head_passes_gather_cliff(head_traced):
+    for entry, traced in head_traced:
+        res = audit_gathers(entry, traced)
+        assert res["passed"], res["problems"]
+        assert res["loop_gathers_checked"] > 0, (
+            f"{entry.name}: gather audit saw no loop reads at all — "
+            f"detector or tracing regressed")
+
+
+def test_head_passes_dtype_policy(head_traced):
+    for entry, traced in head_traced:
+        res = audit_entry_dtypes(entry, traced)
+        assert res["passed"], res["problems"]
+
+
+def test_head_dynamic_loop_within_copy_budget(head_traced):
+    """The PR-6-verified bound: <= 2 table-scale copies per event step
+    in the dynamic cluster loop's optimized HLO."""
+    entry, traced = next((e, t) for e, t in head_traced
+                         if e.name == "cluster_stream")
+    hlo = traced.lower().compile().as_text()
+    res = audit_copies(entry.name, hlo, MARKERS,
+                       budget=entry.copy_budget)
+    assert res["passed"], res["problems"]
+    assert res["measured"]["while_bodies"] > 0
+    f32 = audit_f32(entry.name, hlo)
+    assert f32["passed"], f32["problems"]
+
+
+def test_head_passes_boundary_and_backoff_dtypes():
+    res = audit_boundary_dtypes()
+    assert res["passed"], res["problems"]
+    res = audit_backoff_jaxpr()
+    assert res["passed"], res["problems"]
+    assert res["out_dtype"] == "float64"
+
+
+def test_head_repo_tree_passes_lint(capsys):
+    assert scan() == 0
+
+
+# ------------------------------------------- seeded regressions caught
+def test_on_carry_caught_by_carry_gate_only():
+    e = _entry("mut_on_carry", _on_carry_fn, (_TR, _I))
+    traced = e.trace()
+    res = audit_carries(e, traced)
+    assert not res["passed"]
+    assert any("scale with the trace length N" in p
+               for p in res["problems"])
+    # ...and by that gate only: the fixture has no loop gathers or
+    # narrow floats, so the sibling analyzers stay quiet.
+    assert audit_gathers(e, traced)["passed"]
+    assert audit_entry_dtypes(e, traced)["passed"]
+
+
+def test_missing_documented_rail_also_fails():
+    """The allowlist is an exact multiset: a rail that disappears is
+    as loud as one that appears (the documented layout changed)."""
+    e = _entry("mut_missing_rail",
+               lambda n: jax.lax.while_loop(
+                   lambda s: s[0] < n,
+                   lambda s: (s[0] + 1, s[1] + 1.0), (0, 0.0))[1],
+               (_I,), allow=("start",))
+    res = audit_carries(e, e.trace())
+    assert not res["passed"]
+    assert any("found none" in p for p in res["problems"])
+
+
+def test_table_rotation_caught_by_copy_gate_only():
+    e = _entry("mut_rotate", _rotate_tables_fn,
+               (_TBL, _TBL, _TBL, _I))
+    traced = e.trace()
+    hlo = traced.lower().compile().as_text()
+    counts = count_large_copies(hlo, MARKERS)
+    assert counts["max_large_copies_per_body"] > 2, counts
+    res = audit_copies(e.name, hlo, MARKERS, budget=2)
+    assert not res["passed"]
+    assert any("write-first" in p for p in res["problems"])
+    # (L, F) tables don't scale with N and nothing gathers: the carry
+    # and gather gates pass this fixture.
+    assert audit_carries(e, traced)["passed"]
+    assert audit_gathers(e, traced)["passed"]
+
+
+def test_copy_gate_never_passes_without_a_loop():
+    """A parser regression (or a loop-free program) must fail loudly,
+    not pass vacuously."""
+    res = audit_copies("mut_no_loop", "ENTRY %main () -> f64[] {\n}\n",
+                       MARKERS, budget=2)
+    assert not res["passed"]
+    assert any("no while-loop body" in p for p in res["problems"])
+
+
+def test_multirow_gather_caught_by_gather_gate_only():
+    e = _entry("mut_gather", _multirow_gather_fn, (_TR2, _I))
+    traced = e.trace()
+    res = audit_gathers(e, traced)
+    assert not res["passed"]
+    assert any("generic-gather cliff" in p for p in res["problems"])
+    assert audit_carries(e, traced)["passed"]
+    assert audit_entry_dtypes(e, traced)["passed"]
+
+
+def test_flattened_gather_is_sanctioned():
+    """The engines' actual spelling — rank-1 gather over the (T*N,)
+    flattened view — must stay clean."""
+    flat = S((MARKERS.T * MARKERS.N,), jnp.float64)
+
+    def fn(tr, n):
+        def body(s):
+            i, acc = s
+            return i + 1, acc + tr[i]
+        return jax.lax.while_loop(lambda s: s[0] < n, body,
+                                  (0, 0.0))[1]
+
+    e = _entry("flat_gather", fn, (flat, _I))
+    res = audit_gathers(e, e.trace())
+    assert res["passed"], res["problems"]
+    assert res["loop_gathers_checked"] > 0
+
+
+def test_f32_leak_caught_by_dtype_gate_only():
+    e = _entry("mut_f32", _f32_leak_fn, (_TR,))
+    traced = e.trace()
+    res = audit_entry_dtypes(e, traced)
+    assert not res["passed"]
+    assert any("narrow float" in p for p in res["problems"])
+    assert audit_carries(e, traced)["passed"]
+    assert audit_gathers(e, traced)["passed"]
+
+
+def test_f32_hlo_scan_catches_compiled_leak():
+    res = audit_f32("mut_f32_hlo",
+                    "%x = f32[3,769]{1,0} convert(%y)\n")
+    assert not res["passed"]
+    assert res["f32_tensors"] == 1
+
+
+# ----------------------------------------------------------- AST lint
+def test_lint_flags_each_retired_entry_point():
+    src = textwrap.dedent("""\
+        from repro.core.jax_engine import sweep
+        import os
+        path = os.environ.get("REPRO_AZURE_NPZ")
+        def run(engine):
+            return engine.jax_engine.sweep(path)
+    """)
+    reasons = [r for _, r in lint_source(src, is_benchmark=False)]
+    assert "imports sweep from jax_engine" in reasons
+    assert any("REPRO_AZURE_NPZ" in r for r in reasons)
+    assert "calls jax_engine.sweep()" in reasons
+
+
+def test_lint_is_ast_level_not_textual():
+    """Prose can't trip it; a reformatted import can't dodge it."""
+    prose = ('"""Discussion of repro.core.jax_engine and its sweep '
+             'helper, plus the REPRO_AZURE_NPZ era."""\n')
+    assert lint_source(prose, is_benchmark=False) == []
+    dodged = ("from repro.core.jax_engine import (\n"
+              "    simulate,\n    sweep,\n)\n")
+    assert lint_source(dodged, is_benchmark=False)
+
+
+def test_lint_py_engine_rule_is_benchmarks_only():
+    src = "from repro.core import simulate\n"
+    assert lint_source(src, is_benchmark=True)
+    assert lint_source(src, is_benchmark=False) == []
+    assert lint_source(src, is_benchmark=True,
+                       py_engine_exempt=True) == []
+
+
+def test_lint_scan_walks_tree_and_honours_allowlist(tmp_path, capsys):
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    (bench / "bad.py").write_text(
+        "from repro.core.simulator import EventSim\n")
+    # same content at an allowlisted path -> exempt
+    (bench / "sim_throughput.py").write_text(
+        "from repro.core.simulator import EventSim\n")
+    srcdir = tmp_path / "src"
+    srcdir.mkdir()
+    (srcdir / "ok.py").write_text("from repro.api import run\n")
+    assert scan(str(tmp_path)) == 1
+    err = capsys.readouterr().err
+    assert "DEPRECATED ENTRY POINT: " + os.path.join(
+        "benchmarks", "bad.py") in err
+    assert "sim_throughput" not in err
+
+
+# --------------------------------------------------------- CLI surface
+def test_cli_quick_runs_lint_gate(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "report.json"
+    rc = main(["--gates", "deprecation_lint", "--out", str(out)])
+    assert rc == 0
+    import json
+    report = json.loads(out.read_text())
+    assert report["passed"]
+    assert set(report["gates"]) == {"deprecation_lint"}
+    assert report["schema"] == 1

@@ -45,14 +45,17 @@ QUEUE_CAP = 1 << 17
 
 
 def _run_one(src, policy, *, name, window, devices, t_gen=0.0):
-    """One warm pass per jit specialisation, then best-of-k timed
+    """One warm pass per jit specialisation (timed, so the BENCH row
+    records the compile cost separately), then best-of-k timed
     passes — k scales down with N because the small-N rows finish in
     ~50-150 ms, where single-pass timing flaps by 30%+ under shared
     CPUs and trips the 20% regression gate spuriously."""
     spec = ExperimentSpec(traces=[src], policies=(policy,),
                           capacities=(CAPACITY,), queue_cap=QUEUE_CAP,
                           stream=True, window=window, devices=devices)
-    run_experiment(spec)
+    t0 = time.perf_counter()
+    run_experiment(spec)                  # warm pass: compile + run
+    cold = time.perf_counter() - t0
     rs, dt = timed(run_experiment, spec,
                    repeats=bench_repeats(src.n_requests))
     n = rs.meta["n_requests"]
@@ -63,6 +66,9 @@ def _run_one(src, policy, *, name, window, devices, t_gen=0.0):
         # depend on whether the default was spelled out
         window=(window or DEFAULT_WINDOW),
         us_per_call=dt * 1e6, req_s=n / dt,
+        # first-call wall minus steady-state wall ≈ trace+lower+compile
+        # (0 when the persistent jit cache already held the program)
+        compile_s=max(cold - dt, 0.0), run_s=dt,
         mean_response=rs.value("mean_response", policy=policy),
         p99_response=rs.value("p99_response", policy=policy),
         derived=f"{n / dt:.0f} req/s (gen {t_gen:.1f}s)")
@@ -88,7 +94,9 @@ def _run_multi(policy, *, window, devices, n=MULTI_N, t=MULTI_T):
     spec = ExperimentSpec(traces=srcs, policies=(policy,),
                           capacities=(CAPACITY,), queue_cap=QUEUE_CAP,
                           stream=True, window=window, devices=devices)
+    t0 = time.perf_counter()
     run_experiment(spec)
+    cold = time.perf_counter() - t0
     rs, dt = timed(run_experiment, spec, repeats=3)
     rs.check()
     total = n * t
@@ -96,6 +104,7 @@ def _run_multi(policy, *, window, devices, n=MULTI_N, t=MULTI_T):
         name=f"{policy}_T{t}xN{n}", n_requests=total, policy=policy,
         window=(window or DEFAULT_WINDOW), us_per_call=dt * 1e6,
         req_s=total / dt,
+        compile_s=max(cold - dt, 0.0), run_s=dt,
         mean_response=float(np.mean(rs.data["mean_response"])),
         p99_response=float(np.max(rs.data["p99_response"])),
         derived=f"{total / dt:.0f} req/s ({t} traces)"))
@@ -142,7 +151,8 @@ def main(argv=None):
     rows = run(ns=ns, window=args.window, trace_npz=args.trace,
                devices=args.devices)
     emit(rows, ("name", "n_requests", "policy", "window", "us_per_call",
-                "req_s", "mean_response", "p99_response", "derived"))
+                "req_s", "compile_s", "run_s", "mean_response",
+                "p99_response", "derived"))
     return rows
 
 

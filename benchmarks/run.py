@@ -40,7 +40,7 @@ import time
 
 SECTIONS = ("fig5", "fig6", "fig7", "fig8", "ablation", "cluster",
             "churn", "resilience", "kernels", "simthroughput",
-            "enginescale")
+            "enginescale", "telemetry")
 
 
 def smoke() -> int:
@@ -286,6 +286,46 @@ def smoke() -> int:
           + ("save_npz -> NpzTrace bitwise  OK" if ok
              else "MISMATCH"))
 
+    # telemetry gates: (a) trace_events=False is the default and
+    # trace_events=True must leave every metric bitwise unchanged on
+    # every tier (plain + static + dynamic cluster) — the rail only
+    # *observes*; (b) the traced event stream must conserve work:
+    # one ARRIVAL per request, one EXEC-done per completion, span
+    # reassembly agreeing with the done counters; (c) the Perfetto
+    # export must validate (the written file is the CI trace artifact)
+    from repro.telemetry import save_trace, validate_trace
+    tk = dict(traces=[src], policies=("esff",),
+              capacities=(capacity,), queue_cap=256,
+              cluster=(None, ClusterSpec(n_nodes=2, router="hash"),
+                       ClusterSpec(n_nodes=2, router="jsq2")))
+    t0r = run_experiment(ExperimentSpec(**tk))
+    t1r = run_experiment(ExperimentSpec(**tk, trace_events=True))
+    ok = all(np.array_equal(t0r.data[m], t1r.data[m])
+             for m in t0r.data)
+    failures += 0 if ok else 1
+    print("disabled/enabled tracing: "
+          + ("metrics bitwise unchanged on all tiers  OK" if ok
+             else "MISMATCH"))
+    ok = True
+    for lab in t1r.coords["cluster"]:
+        ev = t1r.trace.events(cluster=lab)
+        spans = t1r.trace.spans(cluster=lab)
+        dn = int(t0r.value("done", cluster=lab))
+        ok = (ok and int((ev["kind"] == 0).sum()) == src.n_requests
+              and int((ev["kind"] == 1).sum()) == dn
+              and sum(1 for s in spans.values()
+                      if s.completion >= 0) == dn)
+    try:
+        n_ev = validate_trace(save_trace(
+            t1r.trace.events(cluster=t1r.coords["cluster"][-1]),
+            "trace_sample_perfetto.json", label="smoke"))
+    except ValueError:
+        ok, n_ev = False, 0
+    failures += 0 if ok else 1
+    print("traced-run conservation + Perfetto schema: "
+          + (f"spans match done counters, {n_ev} trace events  OK"
+             if ok else "MISMATCH"))
+
     failures += _sharded_parity_check()
     failures += deprecation_scan()
     print(f"# smoke: {len(POLICIES)} policies, "
@@ -293,7 +333,8 @@ def smoke() -> int:
           f"shim-parity, cluster-K=1 (incl. timer rail), dynamic "
           f"conservation, churn (conservation, trivial lowering, "
           f"all-down park), resilience (trivial lowering, shed "
-          f"conservation, breaker), npz round-trip, 2-device and "
+          f"conservation, breaker), telemetry (bitwise-off, "
+          f"conservation, Perfetto), npz round-trip, 2-device and "
           f"deprecation gates, {failures} failures")
     return failures
 
@@ -357,6 +398,36 @@ def deprecation_scan() -> int:
     print("deprecation scan: " + ("OK" if not bad
                                   else f"{bad} hit(s)"))
     return bad
+
+
+def _provenance() -> dict:
+    """Run-provenance metadata folded into every BENCH report (and
+    from there into BENCH_history.jsonl): backend/device, jax
+    version, x64 flag and the engines' jit cache sizes — enough to
+    tell apart rows produced on different machines or lowering
+    configurations when reading the perf trajectory."""
+    from repro.telemetry import provenance
+    return provenance()
+
+
+def append_history(path: str, report: dict) -> None:
+    """Append one compact summary row of ``report`` to the cumulative
+    ``BENCH_history.jsonl`` — one json object per line, so the perf
+    trajectory across PRs is a single greppable file (CI appends to a
+    persisted copy on every run)."""
+    row = dict(stamp=report.get("stamp"),
+               smoke=bool(report.get("smoke", False)),
+               failures=report.get("failures"),
+               wall_s=report.get("wall_s"),
+               backend=report.get("provenance", {}).get("backend"),
+               req_s={f"{sec}/{r['name']}": round(float(r["req_s"]))
+                      for sec, sd in report.get("sections", {}).items()
+                      for r in sd.get("rows", [])
+                      if isinstance(r, dict) and "req_s" in r
+                      and r.get("name")})
+    with open(path, "a") as f:
+        f.write(json.dumps(row, default=str) + "\n")
+    print(f"# appended history row to {path}", file=sys.stderr)
 
 
 def check_regression(baseline_path: str, report: dict,
@@ -424,6 +495,9 @@ def main() -> None:
                          "section row's req_s drops > --regress-tol")
     ap.add_argument("--regress-tol", type=float, default=0.20,
                     help="allowed fractional req/s drop (default 0.20)")
+    ap.add_argument("--history", default="",
+                    help="append a one-line summary of this run to a "
+                         "cumulative BENCH_history.jsonl")
     args = ap.parse_args()
     from benchmarks.common import enable_compilation_cache
     enable_compilation_cache()
@@ -451,19 +525,23 @@ def main() -> None:
         report = dict(stamp=time.strftime("%Y%m%d_%H%M%S"),
                       smoke=True, wall_s=round(wall, 1),
                       failures=failures,
+                      provenance=_provenance(),
                       gates=[ln for ln in buf.getvalue().splitlines()
                              if ln and not ln.startswith("#")])
         path = args.json or f"BENCH_smoke_{report['stamp']}.json"
         with open(path, "w") as f:
             json.dump(report, f, indent=1)
         print(f"# wrote {path}", file=sys.stderr)
+        if args.history:
+            append_history(args.history, report)
         sys.exit(1 if failures else 0)
     only = set(args.only.split(",")) if args.only else set(SECTIONS)
 
     from benchmarks import (ablation_esffh, engine_scale, fig5_capacity,
                             fig6_intensity, fig7_cdf, fig8_timeline,
                             fig_churn, fig_cluster, fig_resilience,
-                            kernels_bench, sim_throughput)
+                            kernels_bench, sim_throughput,
+                            telemetry_bench)
     scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
     mods = dict(fig5=fig5_capacity.main, fig6=fig6_intensity.main,
                 fig7=fig7_cdf.main, fig8=fig8_timeline.main,
@@ -478,9 +556,11 @@ def main() -> None:
                 simthroughput=sim_throughput.main,
                 # scaled-down aggregate runs skip the 10^6 tier
                 enginescale=lambda: engine_scale.main(
-                    ["--quick"] if scale < 1.0 else []))
+                    ["--quick"] if scale < 1.0 else []),
+                telemetry=lambda: telemetry_bench.main(
+                    ["--n", str(max(int(30_000 * scale), 2_000))]))
     report = dict(stamp=time.strftime("%Y%m%d_%H%M%S"), scale=scale,
-                  sections={})
+                  provenance=_provenance(), sections={})
     for name in SECTIONS:
         if name not in only:
             continue
@@ -496,6 +576,8 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(report, f, indent=1, default=str)
     print(f"# wrote {path}", file=sys.stderr)
+    if args.history:
+        append_history(args.history, report)
     if args.baseline:
         sys.exit(1 if check_regression(args.baseline, report,
                                        args.regress_tol) else 0)

@@ -13,10 +13,14 @@
 # gates, the churn rail (conservation under mid-window node death,
 # trivial-schedule lowering, all-down park/resume), the resilience
 # rail (trivial fault knobs lower bitwise, faults + shedding conserve
-# every request, the circuit breaker trips and recovers), 2-device
-# sharded parity and the deprecated-entry-point scan. The smoke stage
-# writes BENCH_smoke.json (gate lines + wall), which CI uploads as an
-# artifact.
+# every request, the circuit breaker trips and recovers), the
+# telemetry rail (trace_events=False bitwise on every tier, traced-run
+# conservation + span reassembly, Perfetto schema), 2-device sharded
+# parity and the deprecated-entry-point scan. The smoke stage writes
+# BENCH_smoke.json (gate lines + wall + provenance), appends a row to
+# the cumulative BENCH_history.jsonl, and emits
+# trace_sample_perfetto.json — CI uploads all three as artifacts (the
+# trace opens directly in ui.perfetto.dev).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -30,7 +34,8 @@ fi
 
 if [[ "$stage" == "all" || "$stage" == "smoke" ]]; then
     echo "== smoke gate: benchmarks/run.py --smoke =="
-    python -m benchmarks.run --smoke --json BENCH_smoke.json
+    python -m benchmarks.run --smoke --json BENCH_smoke.json \
+        --history BENCH_history.jsonl
 fi
 
 if [[ "$stage" == "all" || "$stage" == "analysis" ]]; then

@@ -18,7 +18,8 @@ from typing import Dict, List, Optional
 from repro.analysis.markers import MARKERS
 
 GATES = ("carry_budget", "copy_insertion", "gather_cliff",
-         "dtype_policy", "recompilation", "deprecation_lint")
+         "dtype_policy", "recompilation", "deprecation_lint",
+         "telemetry_lowering")
 
 
 def _merge(entries: List[Dict]) -> Dict:
@@ -41,8 +42,9 @@ def run_gates(gates: Optional[List[str]] = None,
                         copy_budget=copy_budget, gates={})
 
     need_traces = {"carry_budget", "gather_cliff",
-                   "dtype_policy"} & set(gates)
-    need_hlo = {"copy_insertion", "dtype_policy"} & set(gates)
+                   "dtype_policy", "telemetry_lowering"} & set(gates)
+    need_hlo = {"copy_insertion", "dtype_policy",
+                "telemetry_lowering"} & set(gates)
 
     traced = {}
     entries = ()
@@ -100,6 +102,12 @@ def run_gates(gates: Optional[List[str]] = None,
         checks.append(audit_backoff_jaxpr())
         checks.append(audit_boundary_dtypes())
         report["gates"]["dtype_policy"] = _merge(checks)
+
+    if "telemetry_lowering" in gates:
+        from repro.analysis.telemetry_gate import audit_telemetry
+        say("telemetry lowering (untraced HLO callback-free)")
+        report["gates"]["telemetry_lowering"] = _merge(
+            audit_telemetry(hlo_texts))
 
     if "recompilation" in gates:
         from repro.analysis.recompile import audit_recompilation

@@ -1,0 +1,59 @@
+"""Telemetry-lowering gate: tracing must be structurally free when off.
+
+``trace_events=False`` is a *static* jit flag, so the disabled path
+must lower onto the unchanged event loops — machine-checked here at
+the compiled-HLO level: the untraced engines' optimized HLO must
+contain **zero** callback custom calls (the trace rail's only escape
+to the host is `jax.experimental.io_callback`). The complementary
+positive check traces the ``trace=True`` variants and asserts the
+ordered callback IS present — so the gate cannot rot into vacuously
+passing if the rail's flush mechanism is renamed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.markers import MARKERS, Markers
+
+_NEEDLE = "callback"
+
+
+def audit_telemetry(hlo_texts: Dict[str, str],
+                    m: Markers = MARKERS) -> List[dict]:
+    """One check per untraced compiled entry (zero callback custom
+    calls) plus one positive traced-jaxpr check per tier."""
+    checks: List[dict] = []
+    for name, text in hlo_texts.items():
+        hits = text.lower().count(_NEEDLE)
+        checks.append(dict(
+            name=f"{name}:untraced_hlo", passed=hits == 0,
+            callback_hits=hits,
+            problems=([] if hits == 0 else
+                      [f"{name}: untraced compiled HLO contains "
+                       f"{hits} callback reference(s) — the disabled "
+                       "trace rail must lower onto the unchanged "
+                       "loop"])))
+
+    from repro.analysis.entrypoints import _cluster_args, _single_args
+    from repro.cluster.engine import _cluster_metrics
+    from repro.cluster.routers import get_router
+    from repro.core.jax_engine import _sweep_metrics
+    from repro.core.jax_policies import KERNELS
+
+    jx_single = str(_sweep_metrics.trace(
+        *_single_args(m), kernel=KERNELS["esff"], n_fns=m.F,
+        capacity=m.C, queue_cap=m.Q, stream=True, trace=True).jaxpr)
+    jx_cluster = str(_cluster_metrics.trace(
+        *_cluster_args(m), kernel=KERNELS["esff"],
+        router=get_router("jsq2"), n_nodes=m.K, n_fns=m.F,
+        capacity=m.C, queue_cap=m.Q, stream=True, trace=True).jaxpr)
+    for tier, jx in (("single_stream", jx_single),
+                     ("cluster_stream", jx_cluster)):
+        ok = _NEEDLE in jx.lower()
+        checks.append(dict(
+            name=f"{tier}:traced_jaxpr", passed=ok,
+            problems=([] if ok else
+                      [f"{tier}: trace=True jaxpr has no callback — "
+                       "the flush mechanism changed; update the "
+                       "telemetry gate needle"])))
+    return checks

@@ -41,6 +41,10 @@ class ResultSet:
     coords: Dict[str, list]
     computed: Optional[np.ndarray] = None    # (P, T, K, B) bool
     meta: dict = field(default_factory=dict)
+    # per-cell event streams of a trace_events=True run
+    # (`repro.telemetry.TraceRun`); not part of the npz payload —
+    # export separately with `trace.save_npz`
+    trace: Optional[object] = None
 
     def __post_init__(self):
         shape = self.grid_shape
@@ -151,6 +155,37 @@ class ResultSet:
                 "is a host shard — merge() the other shards first)")
         cell = sub[metric][(0,) * nd]
         return cell.item() if np.ndim(cell) == 0 else np.asarray(cell)
+
+    # -------------------------------------------------------- telemetry
+    def timeline(self, bucket: float = 60.0, *, deadlines=None,
+                 **sel) -> Dict[str, np.ndarray]:
+        """Streaming per-bin time series of one traced grid cell.
+
+        Requires a run with ``trace_events=True`` (the attached
+        `repro.telemetry.TraceRun`). ``sel`` selects one cell exactly
+        like `value` (axes of length one resolve implicitly); returns
+        the `repro.telemetry.metrics.timeline` dict — per-node queue
+        depth, warm occupancy, utilization, throughput, goodput and
+        SLO attainment per ``bucket``-second bin. ``deadlines``
+        defaults to the producing spec's (from ``meta``)."""
+        if self.trace is None:
+            raise ValueError(
+                "ResultSet.timeline: no event streams attached — run "
+                "with ExperimentSpec(trace_events=True)")
+        from repro.telemetry import metrics as _tmet
+        ev = self.trace.events(**sel)
+        key = self.trace._cell_key(**sel)
+        tr_coords = self.trace.coords
+        cap = None
+        if "capacity" in tr_coords:
+            c = tr_coords["capacity"][
+                key[list(tr_coords).index("capacity")]]
+            if isinstance(c, (int, np.integer)):
+                cap = int(c)
+        if deadlines is None:
+            deadlines = self.meta.get("deadlines")
+        return _tmet.timeline(ev, bucket=bucket, capacity=cap,
+                              deadlines=deadlines)
 
     # ------------------------------------------------------- tidy rows
     def rows(self, metrics: Optional[Sequence[str]] = None

@@ -145,6 +145,11 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
                 f"ExperimentSpec: devices={spec.devices} but only "
                 f"{len(devs)} local device(s) present")
         devs = devs[: spec.devices]
+    if spec.trace_events:
+        # traced chunks run serially on the default device so the
+        # ordered-callback flushes of different chunks cannot
+        # interleave in one collect scope
+        devs = devs[:1]
     multi_dev = len(devs) > 1
 
     # shared (T, ...) trace operands — one committed copy per device
@@ -209,15 +214,31 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
             queue_cap=spec.queue_cap, stream=spec.stream,
             window=spec.window, tl_bins=spec.tl_bins,
             tl_bucket=spec.tl_bucket,
-            keep_responses=spec.keep_per_request)
+            keep_responses=spec.keep_per_request,
+            trace=spec.trace_events)
         return ci, jax.device_get(out)
 
-    # device calls overlap on the host thread pool (XLA releases the
-    # GIL while a computation runs); at least 2 workers even on one
-    # device so transfer/compile of chunk k+1 hides behind chunk k
-    workers = max(2, len(devs))
-    with ThreadPoolExecutor(max_workers=workers) as tp:
-        outs = dict(tp.map(run_chunk, mine))
+    if spec.trace_events:
+        # one collect scope per chunk: device_get inside run_chunk
+        # blocks, so every ordered flush lands before the scope closes
+        from repro.telemetry import rail
+        outs = {}
+        lane_events: Dict[tuple, dict] = {}
+        for ci in mine:
+            with rail.collect() as sink:
+                _, out = run_chunk(ci)
+            outs[ci] = out
+            pi, lo, hi = plan[ci]
+            for j in range(hi - lo):
+                lane_events[(pi, lo + j)] = sink.lane_events(j)
+    else:
+        # device calls overlap on the host thread pool (XLA releases
+        # the GIL while a computation runs); at least 2 workers even on
+        # one device so transfer/compile of chunk k+1 hides behind
+        # chunk k
+        workers = max(2, len(devs))
+        with ThreadPoolExecutor(max_workers=workers) as tp:
+            outs = dict(tp.map(run_chunk, mine))
 
     # ------------------------------------------------------- assembly
     P = len(spec.policies)
@@ -265,10 +286,20 @@ def run_experiment(spec: ExperimentSpec) -> ResultSet:
                 resilience=spec.resilience_meta(),
                 seeds=(list(spec.seeds) if spec.seeds is not None
                        else None),
+                trace_events=spec.trace_events,
                 default_betas={p: kernels[p].default_beta
                                for p in spec.policies})
+    trace_run = None
+    if spec.trace_events:
+        from repro.telemetry.spans import TraceRun
+        trace_run = TraceRun(coords)
+        for (pi, lane), ev in lane_events.items():
+            t_i, rest = divmod(lane, K * B)
+            kc, b = divmod(rest, B)
+            trace_run.add_cell((pi, t_i, kc, b), ev)
     return ResultSet(data=data, coords=coords,
-                     computed=grid(computed), meta=meta)
+                     computed=grid(computed), meta=meta,
+                     trace=trace_run)
 
 
 # short alias — `from repro.api import run`

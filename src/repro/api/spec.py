@@ -317,6 +317,15 @@ class ExperimentSpec:
     ``"shed_oldest"`` (evict the queue head). With every knob at its
     default the resilience layer is off and every run lowers onto the
     unchanged engine loop bitwise.
+
+    Observability (docs/observability.md): ``trace_events=True``
+    records one fixed-width record per processed event inside every
+    jitted loop and attaches a `repro.telemetry.TraceRun` to the
+    result (``ResultSet.trace``) — per-request spans, Perfetto
+    export, and `ResultSet.timeline` time series all hang off it.
+    Traced runs execute lane chunks serially on the default device
+    (``devices`` must be None or 1, ``host_shard`` (0, 1));
+    ``trace_events=False`` lowers onto the unchanged loops bitwise.
     """
 
     traces: Sequence = ()
@@ -342,6 +351,7 @@ class ExperimentSpec:
     devices: Optional[int] = None
     host_shard: Tuple[int, int] = (0, 1)
     cluster: Optional[Sequence] = None
+    trace_events: bool = False
     meta: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -462,6 +472,16 @@ class ExperimentSpec:
                 "ExperimentSpec: retry= without fail_prob/timeouts/"
                 "on_overflow does nothing — remove it or switch a "
                 "fault knob on")
+        if self.trace_events:
+            if self.host_shard != (0, 1):
+                raise ValueError(
+                    "ExperimentSpec: trace_events needs every lane "
+                    "on this host; host_shard must stay (0, 1)")
+            if self.devices not in (None, 1):
+                raise ValueError(
+                    "ExperimentSpec: traced runs execute serially on "
+                    "the default device; devices must be None or 1, "
+                    f"got {self.devices}")
         i, n = self.host_shard
         if n < 1 or not (0 <= i < n):
             raise ValueError(

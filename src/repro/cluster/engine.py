@@ -408,7 +408,8 @@ class ClusterResilCtx(ClusterNodeCtx):
                                     "n_fns", "capacity", "queue_cap",
                                     "seed", "stream", "tl_bins",
                                     "has_delay", "has_churn",
-                                    "var_delay", "seg", "resil"))
+                                    "var_delay", "seg", "resil",
+                                    "trace"))
 def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                       trace_ix, cap_mask, beta, prior, threshold,
                       delays, churn_t=None, dtimes=None, dvals=None,
@@ -417,7 +418,8 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                       n_nodes, n_fns, capacity, queue_cap, seed=0,
                       stream=False, tl_bins=0, tl_bucket=60.0,
                       has_delay=False, has_churn=False,
-                      var_delay=False, seg=0, resil=None):
+                      var_delay=False, seg=0, resil=None,
+                      trace=False):
     """K-node lane-batched cluster loop (see the module docstring).
 
     ``cap_mask`` is (L, K, C) — heterogeneous node capacities are
@@ -604,6 +606,13 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         s["tl_cnt"] = jnp.zeros((L, tl_bins), jnp.int32)
         s["tl_resp"] = jnp.zeros((L, tl_bins), jnp.float64)
         s["tl_exec"] = jnp.zeros((L, tl_bins), jnp.float64)
+    if trace:
+        # event-trace segment overlay: one fixed-width record per
+        # processed event, flushed to the host per segment — lane
+        # global (rides gather/commit untouched), O(SG) carried state
+        from repro.telemetry.rail import TR_RF, TR_RI
+        s["tr_i"] = jnp.full((L, SG, TR_RI), -1, jnp.int32)
+        s["tr_f"] = jnp.zeros((L, SG, TR_RF), jnp.float64)
     extra = kernel.extra_state(L, C, F)
     nodal = _NODAL + (_NODAL_TMR if timers else ()) \
         + (_NODAL_PEND if has_delay else ()) \
@@ -782,6 +791,8 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         # ``node``'s row (gather_nodal); ``capm`` is that node's (C,)
         # slot mask
         ci = s["ci"]
+        if trace:
+            tr_q0 = s["q_tot"]  # event node's queue total, pre-event
         active = (ci[done_col] < N) & (ci[CI_STALL] == 0)
         na = ci[CI_NEXT]
         live = active & (t_ev < BIG)
@@ -1264,6 +1275,73 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
 
         s = _fold_event(ctx, s)
         s = dict(s)
+        if trace:
+            # stage this event's trace record (shared by both link
+            # modes); non-progress steps park on the SG guard row
+            from repro.core.jax_engine import CI_COLD
+            from repro.telemetry.rail import (AUX_COLD,
+                AUX_FAIL_EXHAUSTED, AUX_FAIL_RETRY, AUX_OVERFLOW,
+                AUX_QUEUED, AUX_SHED, AUX_TIMEOUT, TraceKind)
+            ci1 = s["ci"]
+            dlt = ci1 - ci
+            kind = jnp.where(exec_on, TraceKind.EXEC, jnp.where(
+                cold_on, TraceKind.COLD, jnp.int32(-1)))
+            if timers:
+                kind = jnp.where(ev_timer, TraceKind.TIMER, kind)
+            if has_churn:
+                kind = jnp.where(
+                    ev_churn, TraceKind.CHURN,
+                    jnp.where(ev_orph, TraceKind.REROUTE, kind))
+            if has_resil:
+                kind = jnp.where(ev_rtry, TraceKind.RETRY, kind)
+            if has_delay:
+                kind = jnp.where(ev_pend, TraceKind.NODE_ARRIVAL,
+                                 kind)
+            kind = jnp.where(ev_arr, TraceKind.ARRIVAL, kind)
+            rid_tr = jnp.where(ev_slot,
+                               jnp.asarray(rid_done, jnp.int32),
+                               jnp.int32(-1))
+            if timers:
+                rid_tr = jnp.where(ev_timer, rid_t, rid_tr)
+            if has_churn:
+                rid_tr = jnp.where(
+                    ev_orph, jnp.asarray(rid_o, jnp.int32), rid_tr)
+            if has_resil:
+                rid_tr = jnp.where(ev_rtry, rid_r32, rid_tr)
+            if has_delay:
+                rid_tr = jnp.where(
+                    ev_pend, jnp.asarray(rid_p, jnp.int32), rid_tr)
+            rid_tr = jnp.where(ev_arr, jnp.asarray(rid_a, jnp.int32),
+                               rid_tr)
+            fn_tr = jnp.where(
+                ev_slot, j_done,
+                jnp.where(rid_tr >= 0,
+                          ctx.fn_at(jnp.clip(rid_tr, 0, N - 1)),
+                          jnp.int32(-1)))
+            fail_i = dlt[CI_FAILED] + dlt[CI_TMO]
+            aux_ex = (jnp.where(dlt[CI_EXH] > 0, AUX_FAIL_EXHAUSTED,
+                                jnp.where(fail_i > 0, AUX_FAIL_RETRY,
+                                          0))
+                      + jnp.where(dlt[CI_TMO] > 0, AUX_TIMEOUT, 0))
+            aux = (jnp.where(dlt[CI_COLD] > 0, AUX_COLD, 0)
+                   + jnp.where(s["q_tot"] > tr_q0, AUX_QUEUED, 0)
+                   + jnp.where(dlt[CI_SHED] > 0, AUX_SHED, 0)
+                   + jnp.where(dlt[CI_OVF] > 0, AUX_OVERFLOW, 0))
+            aux = jnp.where(exec_on, aux_ex, aux)
+            if has_churn:
+                aux = jnp.where(ev_churn, node_up.astype(jnp.int32),
+                                aux)
+            busy = ((s["slot_state"] == BUSY) & capm).sum()
+            warm = ((s["slot_state"] == IDLE) & (s["slot_fn"] >= 0)
+                    & capm).sum()
+            rec_i = jnp.stack(
+                [kind, rid_tr, fn_tr, jnp.asarray(node, jnp.int32),
+                 aux, s["q_tot"], busy, warm,
+                 ci1[CI_ITERS]]).astype(jnp.int32)
+            rec_f = jnp.stack([t_ev, jnp.where(exec_on, e_done, 0.0)])
+            ki_tr = jnp.where(progress, k_step, SG)
+            s["tr_i"] = s["tr_i"].at[ki_tr].set(rec_i, mode="drop")
+            s["tr_f"] = s["tr_f"].at[ki_tr].set(rec_f, mode="drop")
         if direct:
             # direct-link mode: no overlays to stage, no reads to
             # chase — every link write already hit its rail
@@ -1347,6 +1425,13 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
         if not stream and not direct:
             s = dict(s)
             s["d_rid"] = jnp.full((L, SG), N, jnp.int32)
+        if trace:
+            # clear the trace overlay: non-progress steps leave their
+            # slot untouched, so stale rows must read as unused (-1)
+            from repro.telemetry.rail import TR_RF, TR_RI
+            s = dict(s)
+            s["tr_i"] = jnp.full((L, SG, TR_RI), -1, jnp.int32)
+            s["tr_f"] = jnp.zeros((L, SG, TR_RF), jnp.float64)
 
         def step(k_step, s):
             # apply the previous event's parked queue writes before
@@ -1470,6 +1555,9 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
             return s
 
         s = lax.fori_loop(0, SG, step, s)
+        if trace:
+            from repro.telemetry.rail import emit_flush
+            emit_flush(s["tr_i"], s["tr_f"])
         if direct:
             # direct-link mode writes every rail in-body; nothing to
             # flush
@@ -1536,7 +1624,8 @@ def _simulate_cluster(fn_id, arrival, exec_time, t_cold, t_evict,
                                     "seed", "stream", "tl_bins",
                                     "has_delay", "has_churn",
                                     "var_delay", "seg",
-                                    "keep_responses", "resil"))
+                                    "keep_responses", "resil",
+                                    "trace"))
 def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                      threshold, delays=None, churn_t=None, dtimes=None,
                      dvals=None, dper=None, deadlines=None,
@@ -1545,7 +1634,7 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                      queue_cap, seed=0, stream=True, tl_bins=0,
                      tl_bucket=60.0, has_delay=False, has_churn=False,
                      var_delay=False, seg=0, keep_responses=False,
-                     resil=None):
+                     resil=None, trace=False):
     """Cluster counterpart of `jax_engine._sweep_metrics`: lane-batched
     dynamic-router run + on-device metric reduction (same metric
     names, plus ``node_done``). ``delays``/``has_delay`` switch on the
@@ -1576,7 +1665,7 @@ def _cluster_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                             stream=stream, tl_bins=tl_bins,
                             tl_bucket=tl_bucket, has_delay=has_delay,
                             has_churn=has_churn, var_delay=var_delay,
-                            seg=seg, resil=resil)
+                            seg=seg, resil=resil, trace=trace)
     N = fn.shape[1]
     if resil is not None:
         # under faults only successes fold into the response sums and
@@ -1663,6 +1752,13 @@ CARRY_RAILS = {
     "start": "exact-mode per-request dispatch-time record (output).",
     "completion": "exact-mode per-request completion-time record "
                   "(output).",
+    "tr_i": "event-trace overlay (trace=True only): one int32 record "
+            "per event in an O(SG) segment buffer, flushed to the "
+            "host per segment via an ordered io_callback -- never "
+            "N-scaling.",
+    "tr_f": "event-trace overlay float half (see `tr_i`): per-event "
+            "simulation time and execution time, O(SG) carried "
+            "state.",
 }
 
 

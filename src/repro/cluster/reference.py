@@ -151,7 +151,8 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                                timeouts=None,
                                retry=None,
                                on_overflow: str = "error",
-                               fail_seed: int = 0
+                               fail_seed: int = 0,
+                               event_log: Optional[list] = None
                                ) -> Dict[str, np.ndarray]:
     """Run ``policy_name`` on a K-node cluster over ``trace``.
 
@@ -170,6 +171,13 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
     "error"`` leaves every code path untouched. The extra counters
     (``failed`` / ``timed_out`` / ``retried`` / ``shed`` /
     ``failed_exhausted`` / ``breaker_trips``) are always returned.
+
+    ``event_log``, when a list, receives one ``(kind, rid, fn, node,
+    t)`` tuple per processed event in pop order, with
+    `repro.telemetry.rail.TraceKind` codes — the ground truth the
+    engines' trace rail is parity-tested against. ``node`` is -1
+    where no node is defined (a parked request, a rid-less churn
+    toggle's request field).
     """
     from repro.core.resilience import (SHED_MODES, RetryPolicy,
                                        backoff_py, plan_outcomes)
@@ -347,6 +355,20 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             events.push(elig, EventKind.RETRY, req)
         rail.append((req, elig))
 
+    from repro.telemetry.rail import TraceKind
+
+    if event_log is not None:
+        def log(kind, req, node, t, fn=None):
+            event_log.append((
+                int(kind),
+                -1 if req is None else int(req.req_id),
+                (int(fn) if fn is not None
+                 else -1 if req is None else int(req.fn_id)),
+                int(node), float(t)))
+    else:
+        def log(kind, req, node, t, fn=None):
+            pass
+
     node_done = np.zeros((K,), np.int64)
     n_events = 0
     while True:
@@ -362,13 +384,18 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                 k = int(static_assign[req.req_id])
                 assign[req.req_id] = k
                 admit(k, req, ev.time)
+                log(TraceKind.ARRIVAL, req, k, ev.time)
             elif has_churn and not any(up):
                 parked.append(req)
+                log(TraceKind.ARRIVAL, req, -1, ev.time)
             else:
                 route(req, ev.time)
+                log(TraceKind.ARRIVAL, req, assign[req.req_id],
+                    ev.time)
         elif ev.kind == EventKind.NODE_ARRIVAL:
             req = ev.payload
             k = int(assign[req.req_id])
+            log(TraceKind.NODE_ARRIVAL, req, k, ev.time)
             if has_churn and not up[k]:
                 # landed on a down node: back through the router (or
                 # park if there is nowhere to go)
@@ -392,18 +419,27 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                 # queue at the fire time (the delivery leg is not
                 # re-paid — the request never left the node)
                 admit(int(assign[req.req_id]), req, ev.time)
+                log(TraceKind.RETRY, req, assign[req.req_id],
+                    ev.time)
             elif has_churn and not any(up):
                 parked.append(req)
+                log(TraceKind.RETRY, req, -1, ev.time)
             else:
                 route(req, ev.time)
+                log(TraceKind.RETRY, req, assign[req.req_id],
+                    ev.time)
         elif ev.kind == EventKind.REROUTE:
             req = ev.payload
             if not any(up):
                 parked.append(req)
+                log(TraceKind.REROUTE, req, -1, ev.time)
             else:
                 route(req, ev.time)
+                log(TraceKind.REROUTE, req, assign[req.req_id],
+                    ev.time)
         elif ev.kind == EventKind.CHURN:
             k = ev.payload
+            log(TraceKind.CHURN, None, k, ev.time)
             if up[k]:
                 # NODE_DOWN: drain running requests (by request id)
                 # then queued ones (function-major, FIFO within a
@@ -442,6 +478,7 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
                 continue
             k = owner(inst)
             req = inst.current
+            log(TraceKind.EXEC, req, k, ev.time)
             ests[k].observe(req.fn_id, req.exec_time)
             ok = True
             if has_resil:
@@ -493,7 +530,9 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             inst = ev.payload
             if getattr(inst, "dead", False):
                 continue
-            policies[owner(inst)].on_cold_done(inst, ev.time)
+            ko = owner(inst)
+            log(TraceKind.COLD, None, ko, ev.time, fn=inst.fn_id)
+            policies[ko].on_cold_done(inst, ev.time)
         elif ev.kind == EventKind.TIMER:
             if has_churn or has_resil:
                 raise RuntimeError(
@@ -504,6 +543,7 @@ def simulate_cluster_reference(trace: Trace, policy_name: str,
             # the request (openwhisk_v2 on the static path)
             req = ev.payload
             k = int(assign[req.req_id])
+            log(TraceKind.TIMER, req, k, ev.time)
             if k >= 0:
                 policies[k].on_timer(req, ev.time)
 

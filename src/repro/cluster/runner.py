@@ -21,7 +21,7 @@ the stacked arrays stay rectangular.
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -38,9 +38,15 @@ def _churn_operand(entry: ClusterSpec, horizon: float):
 
 def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                        N: int, kernels, beta_cols, deadlines=None,
-                       rs=None) -> Dict[str, np.ndarray]:
+                       rs=None,
+                       trace_cells=None) -> Dict[str, np.ndarray]:
     """One dynamic-router entry over the spec grid: (P, T, KC, B)
-    metric arrays from the K-node loop."""
+    metric arrays from the K-node loop.
+
+    ``trace_cells`` (a dict, only under ``spec.trace_events``) is
+    filled with one event stream per (pi, t, kc, b) cell; chunks run
+    serially, each inside its own collect scope, so the ordered
+    flushes of one chunk never interleave with another's."""
     import jax.numpy as jnp
 
     from repro.cluster.engine import _cluster_metrics
@@ -99,25 +105,45 @@ def _run_dynamic_entry(spec, entry: ClusterSpec, stacked, F: int,
                 "drained timer would fire against a dead node. Drop "
                 "the policy or the churn schedule")
     dl_op = None if deadlines is None else jnp.asarray(deadlines)
+    traced = trace_cells is not None
+    if traced:
+        from repro.telemetry import rail
     per_policy: Dict[str, Dict[str, np.ndarray]] = {}
-    for policy in spec.policies:
+    for pi, policy in enumerate(spec.policies):
         beta_l = beta_cols[policy]
         outs: Dict[str, list] = {}
         for lo in range(0, L, chunk):
             hi = min(lo + chunk, L)
-            out = _cluster_metrics(
-                *shared, jnp.asarray(tix[lo:hi]),
-                jnp.asarray(masks[lo:hi]), jnp.asarray(beta_l[lo:hi]),
-                jnp.float64(spec.prior), jnp.float64(spec.threshold),
-                delays_op, churn_op, dt_op, dv_op, dp_op, dl_op,
-                **rs_kw,
-                kernel=kernels[policy], router=router, n_nodes=Kn,
-                n_fns=F, capacity=C, queue_cap=spec.queue_cap,
-                seed=entry.seed, stream=spec.stream,
-                tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
-                has_delay=has_delay, has_churn=has_churn,
-                var_delay=var_delay, resil=resil,
-                keep_responses=spec.keep_per_request)
+
+            def call():
+                return _cluster_metrics(
+                    *shared, jnp.asarray(tix[lo:hi]),
+                    jnp.asarray(masks[lo:hi]),
+                    jnp.asarray(beta_l[lo:hi]),
+                    jnp.float64(spec.prior),
+                    jnp.float64(spec.threshold),
+                    delays_op, churn_op, dt_op, dv_op, dp_op, dl_op,
+                    **rs_kw,
+                    kernel=kernels[policy], router=router, n_nodes=Kn,
+                    n_fns=F, capacity=C, queue_cap=spec.queue_cap,
+                    seed=entry.seed, stream=spec.stream,
+                    tl_bins=spec.tl_bins, tl_bucket=spec.tl_bucket,
+                    has_delay=has_delay, has_churn=has_churn,
+                    var_delay=var_delay, resil=resil,
+                    keep_responses=spec.keep_per_request,
+                    trace=traced)
+            if traced:
+                with rail.collect() as sink:
+                    out = {k: np.asarray(v) for k, v
+                           in call().items()}
+                for j in range(hi - lo):
+                    lane = lo + j
+                    t_i, rest = divmod(lane, KC * B)
+                    kc, b = divmod(rest, B)
+                    trace_cells[(pi, t_i, kc, b)] = \
+                        sink.lane_events(j)
+            else:
+                out = call()
             for k, v in out.items():
                 outs.setdefault(k, []).append(np.asarray(v))
         per_policy[policy] = {
@@ -173,7 +199,9 @@ def run_cluster_experiment(spec) -> "ResultSet":
     deadlines = spec.deadline_ops(F)
     rs = spec.resilience_ops(stacked, F)
     entry_data: List[Dict[str, np.ndarray]] = []
+    entry_cells: List[Optional[dict]] = []
     for entry in entries:
+        cells = {} if spec.trace_events else None
         if entry is None:
             # devices=1 keeps plain cells on the same (default) device
             # the cluster tiers use — spec.validate() already rejects
@@ -186,14 +214,19 @@ def run_cluster_experiment(spec) -> "ResultSet":
             d.pop("slo_attainment", None)
             d.pop("goodput", None)
             d["node_done"] = d["done"][..., None].astype(np.int32)
+            if cells is not None:
+                cells.update(plain.trace.cells)
         elif entry.get_router().dynamic:
             d = _run_dynamic_entry(spec, entry, stacked, F, N,
-                                   kernels, beta_cols, deadlines, rs)
+                                   kernels, beta_cols, deadlines, rs,
+                                   trace_cells=cells)
         else:
             d = run_static_entry(spec, entry, stacked, F, N, kernels,
-                                 beta_cols, deadlines, rs)
+                                 beta_cols, deadlines, rs,
+                                 trace_cells=cells)
         d["node_done"] = _pad_node_dim(d["node_done"], k_max)
         entry_data.append(d)
+        entry_cells.append(cells)
 
     # ``breaker_trips`` only comes out of breaker-routed dynamic
     # entries; other entries contribute an (exact) all-zero column
@@ -247,9 +280,18 @@ def run_cluster_experiment(spec) -> "ResultSet":
                     has_churn=e.has_churn(),
                     var_delay=e.delay_ops() is not None)
                     for e in entries],
+                trace_events=spec.trace_events,
                 default_betas={p: kernels[p].default_beta
                                for p in spec.policies})
-    return ResultSet(data=data, coords=coords, meta=meta)
+    trace_run = None
+    if spec.trace_events:
+        from repro.telemetry.spans import TraceRun
+        trace_run = TraceRun(coords)
+        for ei, cells in enumerate(entry_cells):
+            for key, ev in (cells or {}).items():
+                trace_run.add_cell(key + (ei,), ev)
+    return ResultSet(data=data, coords=coords, meta=meta,
+                     trace=trace_run)
 
 
 # ---------------------------------------------------------- audit hooks

@@ -189,12 +189,22 @@ def merge_node_metrics(per_node: Dict[str, np.ndarray], node_axis: int,
 def run_static_entry(spec, entry: ClusterSpec,
                      stacked: Dict[str, np.ndarray], F: int, N: int,
                      kernels: dict, beta_cols: Dict[str, np.ndarray],
-                     deadlines=None, rs=None) -> Dict[str, np.ndarray]:
+                     deadlines=None, rs=None,
+                     trace_cells=None) -> Dict[str, np.ndarray]:
     """Execute one static `ClusterSpec` over the spec's grid.
 
     Returns (P, T, KC, B)-shaped metric arrays (plus trailing dims:
     ``node_done`` (.., K), ``resp_hist`` (.., bins), optional
     ``response`` (.., N)) for this cluster entry.
+
+    ``trace_cells`` (a dict, only under ``spec.trace_events``) is
+    filled with one merged event stream per (pi, t, kc, b) cell: the
+    tier is K independent single-node simulations, so each node's
+    stream is collected separately, its node id patched in host-side
+    (the single-node rail records node −1), its sub-stream-local
+    request ids mapped back to global ids through the partition
+    index, and the K streams merged time-ordered
+    (`repro.telemetry.rail.merge_events`).
     """
     import jax.numpy as jnp
 
@@ -255,12 +265,16 @@ def run_static_entry(spec, entry: ClusterSpec,
     dl_op = None if deadlines is None else jnp.asarray(deadlines)
     keep_resp = bool(spec.keep_per_request) or not spec.stream
     chunk = resolve_lane_chunk(spec.lane_chunk)
+    traced = trace_cells is not None
+    if traced:
+        from repro.telemetry import rail
     per_policy: Dict[str, Dict[str, np.ndarray]] = {}
-    for policy in spec.policies:
+    for pi, policy in enumerate(spec.policies):
         outs: Dict[str, list] = {}
         for t in range(T):
             cold = jnp.asarray(stacked["cold_start"][t][None])
             evict = jnp.asarray(stacked["evict"][t][None])
+            lane_nodes: Dict[int, list] = {}
             for k in range(Kn):
                 shared = tuple(
                     jnp.asarray(streams_t[t][key][k][None])
@@ -281,24 +295,52 @@ def run_static_entry(spec, entry: ClusterSpec,
                 row_outs: Dict[str, list] = {}
                 for lo in range(0, L, chunk):
                     hi = min(lo + chunk, L)
-                    out = _sweep_metrics(
-                        *shared, jnp.zeros((hi - lo,), jnp.int32),
-                        jnp.asarray(masks[lo:hi]),
-                        jnp.asarray(beta_l[lo:hi]),
-                        jnp.float64(spec.prior),
-                        jnp.float64(spec.threshold),
-                        jnp.asarray(nl[lo:hi]), dl_op, **rs_kw,
-                        resil=resil,
-                        kernel=kernels[policy], n_fns=F, capacity=C,
-                        queue_cap=spec.queue_cap, stream=spec.stream,
-                        window=spec.window, tl_bins=spec.tl_bins,
-                        tl_bucket=spec.tl_bucket,
-                        keep_responses=keep_resp and not spec.stream)
+
+                    def call():
+                        return _sweep_metrics(
+                            *shared, jnp.zeros((hi - lo,), jnp.int32),
+                            jnp.asarray(masks[lo:hi]),
+                            jnp.asarray(beta_l[lo:hi]),
+                            jnp.float64(spec.prior),
+                            jnp.float64(spec.threshold),
+                            jnp.asarray(nl[lo:hi]), dl_op, **rs_kw,
+                            resil=resil,
+                            kernel=kernels[policy], n_fns=F,
+                            capacity=C, queue_cap=spec.queue_cap,
+                            stream=spec.stream, window=spec.window,
+                            tl_bins=spec.tl_bins,
+                            tl_bucket=spec.tl_bucket,
+                            keep_responses=(keep_resp
+                                            and not spec.stream),
+                            trace=traced)
+                    if traced:
+                        with rail.collect() as sink:
+                            out = {m: np.asarray(v) for m, v
+                                   in call().items()}
+                        idxk = index[t][k]
+                        for j in range(hi - lo):
+                            ev = sink.lane_events(j)
+                            ev["node"] = np.full_like(ev["node"], k)
+                            r = ev["rid"]
+                            if len(idxk):
+                                gl = idxk[np.clip(r, 0,
+                                                  len(idxk) - 1)]
+                                ev["rid"] = np.where(
+                                    r >= 0, gl, -1).astype(np.int32)
+                            lane_nodes.setdefault(lo + j,
+                                                  []).append(ev)
+                    else:
+                        out = call()
                     for m, v in out.items():
                         row_outs.setdefault(m, []).append(
                             np.asarray(v))
                 for m, v in row_outs.items():
                     outs.setdefault(m, []).append(np.concatenate(v))
+            if traced:
+                for lane, evs in lane_nodes.items():
+                    kc, b = divmod(lane, B)
+                    trace_cells[(pi, t, kc, b)] = rail.merge_events(
+                        evs)
         # outs[m]: T*Kn blocks of (KC*B, ...) in (t, node) order
         per_policy[policy] = {
             m: np.stack(v).reshape((T, Kn, KC, B) + v[0].shape[1:])

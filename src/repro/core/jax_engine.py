@@ -997,13 +997,13 @@ def hist_cdf(hist):
 @functools.partial(jax.jit,
                    static_argnames=("kernel", "n_fns", "capacity",
                                     "queue_cap", "stream", "window",
-                                    "tl_bins", "resil"))
+                                    "tl_bins", "resil", "trace"))
 def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
               cap_mask, beta, prior, threshold, n_live=None,
               deadlines=None, rs_nfail=None, rs_tmo=None, rs_key=None,
               *, kernel, n_fns, capacity, queue_cap,
               stream=False, window=0, tl_bins=0, tl_bucket=60.0,
-              resil=None):
+              resil=None, trace=False):
     """Lane-batched engine. Trace arrays are shared (T, ...) operands;
     ``trace_ix``, ``cap_mask`` and ``beta`` carry the leading lane
     dimension L (one lane per sweep point). The loop nest is windows ->
@@ -1036,6 +1036,13 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
     of the resilience code is traced and the loop lowers bitwise
     unchanged. A lane is finished when every live request is
     *terminal* (done, shed, or retry-exhausted), counted in CI_TERM.
+
+    ``trace`` (static) enables the telemetry event-trace rail
+    (`repro.telemetry.rail`): every processed event stages a
+    fixed-width record into an (L, SEG, ·) overlay, flushed to the
+    host sink once per segment through an ordered ``io_callback``.
+    ``trace=False`` traces none of it — the loop lowers bitwise onto
+    the unchanged program, exactly like the other optional rails.
     """
     L = trace_ix.shape[0]
     T_ = fn_id.shape[0]
@@ -1167,6 +1174,10 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
         s["r_tail"] = jnp.full((L,), -1, jnp.int32)
         s["r_len"] = jnp.zeros((L,), jnp.int32)
         s["r_fire"] = jnp.full((L,), BIG, jnp.float64)
+    if trace:
+        from repro.telemetry.rail import TR_RF, TR_RI
+        s["tr_i"] = jnp.full((L, SEG, TR_RI), -1, jnp.int32)
+        s["tr_f"] = jnp.zeros((L, SEG, TR_RF), jnp.float64)
     s.update(kernel.extra_state(L, C, F))
 
     max_iters = (256 * N + 4096) * (max_att if has_resil else 1)
@@ -1256,6 +1267,8 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
             ci = s["ci"]
             done_ci = CI_TERM if has_resil else CI_DONE
             active = (ci[done_ci] < nl_l) & (ci[CI_STALL] == 0)
+            if trace:
+                tr_q0 = s["q_len"].sum()
             na = ci[CI_NEXT]
             live = active & (t_ev < BIG)
             # per-event dispatch registers (consumed by _fold_event)
@@ -1416,6 +1429,55 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
 
             s = _fold_event(ctx, s)
             s = dict(s)
+            if trace:
+                # telemetry record: one fixed-width row per processed
+                # event, staged at the segment-step slot (parked spins
+                # drop). Outcome detail comes from the counter deltas
+                # of this event, so every rail reports through one
+                # code path.
+                from repro.telemetry.rail import (
+                    AUX_COLD, AUX_FAIL_EXHAUSTED, AUX_FAIL_RETRY,
+                    AUX_OVERFLOW, AUX_QUEUED, AUX_SHED, AUX_TIMEOUT,
+                    TraceKind)
+                ci1 = s["ci"]
+                dlt = ci1 - ci
+                kind = jnp.where(exec_on, TraceKind.EXEC, jnp.where(
+                    cold_on, TraceKind.COLD, jnp.where(
+                        ev_timer, TraceKind.TIMER, jnp.where(
+                            ev_rtry, TraceKind.RETRY, jnp.where(
+                                ev_arr, TraceKind.ARRIVAL, -1)))))
+                rid_tr = jnp.where(
+                    ev_slot, rid_done,
+                    jnp.where(ev_arr | ev_rtry, rid_na, -1))
+                if kernel.has_timers:
+                    rid_tr = jnp.where(ev_timer, rid_t, rid_tr)
+                fn_tr = jnp.where(ev_slot, j_done, jnp.where(
+                    rid_tr >= 0, ctx.fn_at(rid_tr), -1))
+                fail_i = dlt[CI_FAILED] + dlt[CI_TMO]
+                aux_ex = (jnp.where(
+                    dlt[CI_EXH] > 0, AUX_FAIL_EXHAUSTED,
+                    jnp.where(fail_i > 0, AUX_FAIL_RETRY, 0))
+                    + jnp.where(dlt[CI_TMO] > 0, AUX_TIMEOUT, 0))
+                aux_arr = (
+                    jnp.where(dlt[CI_COLD] > 0, AUX_COLD, 0)
+                    + jnp.where(s["q_len"].sum() > tr_q0,
+                                AUX_QUEUED, 0)
+                    + jnp.where(dlt[CI_SHED] > 0, AUX_SHED, 0)
+                    + jnp.where(dlt[CI_OVF] > 0, AUX_OVERFLOW, 0))
+                busy = ((s["slot_state"] == BUSY)
+                        & cap_mask).sum()
+                warm = ((s["slot_state"] == IDLE) & (s["slot_fn"] >= 0)
+                        & cap_mask).sum()
+                rec_i = jnp.stack([
+                    kind, rid_tr, fn_tr, jnp.int32(-1),
+                    jnp.where(exec_on, aux_ex, aux_arr),
+                    s["q_len"].sum(), busy, warm,
+                    ci1[CI_ITERS]]).astype(jnp.int32)
+                rec_f = jnp.stack([
+                    t_ev, jnp.where(exec_on, e_done, 0.0)])
+                ki = jnp.where(progress, k, SEG)
+                s["tr_i"] = s["tr_i"].at[ki].set(rec_i, mode="drop")
+                s["tr_f"] = s["tr_f"].at[ki].set(rec_f, mode="drop")
             stall = jnp.where(
                 active & ~live, 1,
                 jnp.where(active & (s["ci"][CI_ITERS] >= max_iters), 2,
@@ -1441,6 +1503,11 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
             if not stream:
                 s = dict(s)
                 s["d_rid"] = jnp.full((L, SEG), N, jnp.int32)
+            if trace:
+                from repro.telemetry.rail import TR_RF, TR_RI
+                s = dict(s)
+                s["tr_i"] = jnp.full((L, SEG, TR_RI), -1, jnp.int32)
+                s["tr_f"] = jnp.zeros((L, SEG, TR_RF), jnp.float64)
 
             def step(k, s):
                 ei, t_ev, t_arr = pick_events(s)
@@ -1454,6 +1521,9 @@ def _simulate(fn_id, arrival, exec_time, t_cold, t_evict, trace_ix,
                     s["d_start"], mode="drop")
                 s["completion"] = s["completion"].at[
                     lane_iota, s["d_rid"]].set(s["d_comp"], mode="drop")
+            if trace:
+                from repro.telemetry.rail import emit_flush
+                emit_flush(s["tr_i"], s["tr_f"])
             return s
 
         return lax.while_loop(cond, segment, s)
@@ -1553,13 +1623,13 @@ def simulate_policy_from_trace(trace: Trace, policy: str, capacity: int,
                    static_argnames=("kernel", "n_fns", "capacity",
                                     "queue_cap", "stream", "window",
                                     "tl_bins", "keep_responses",
-                                    "resil"))
+                                    "resil", "trace"))
 def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                    threshold, n_live=None, deadlines=None,
                    rs_nfail=None, rs_tmo=None, rs_key=None, *, kernel,
                    n_fns, capacity, queue_cap, stream=True, window=0,
                    tl_bins=0, tl_bucket=60.0, keep_responses=False,
-                   resil=None):
+                   resil=None, trace=False):
     """Lane-batched run + on-device metric reduction. Means and
     slowdowns come from the streaming accumulators in *both* modes (so
     streamed and exact sweeps agree bitwise); p99 is exact in exact
@@ -1577,7 +1647,7 @@ def _sweep_metrics(fn, arr, ex, cold, ev, tix, masks, betas, prior,
                     rs_key, kernel=kernel,
                     n_fns=n_fns, capacity=capacity, queue_cap=queue_cap,
                     stream=stream, window=window, tl_bins=tl_bins,
-                    tl_bucket=tl_bucket, resil=resil)
+                    tl_bucket=tl_bucket, resil=resil, trace=trace)
     N = fn.shape[1]
     if resil is not None:
         # under faults only successes fold into the response sums and
@@ -1723,6 +1793,12 @@ CARRY_RAILS = {
            "written once per retry.",
     "rt_t": "resilience retry-eligibility time per rid (backoff "
             "target); f64, written once per retry.",
+    "tr_i": "telemetry trace rail (trace=True only): (L, SEG, TR_RI) "
+            "i32 record overlay, reset per segment and flushed to "
+            "the host through an ordered io_callback -- O(SEG) "
+            "carried state, never N-scaling.",
+    "tr_f": "telemetry trace rail float half ((L, SEG, TR_RF) f64); "
+            "same contract as `tr_i`.",
 }
 
 

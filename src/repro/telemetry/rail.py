@@ -1,0 +1,181 @@
+"""The in-loop event-trace rail: record layout, host sink, flush.
+
+The engines stage one fixed-width record per *processed* event into a
+(L, SEG, ·) segment overlay — the same shape class as exact mode's
+``d_*`` dispatch overlay, so the carried state stays O(SEG) per lane
+regardless of trace length — and flush the overlay to the host once
+per segment through an **ordered** `jax.experimental.io_callback`.
+Ordered callbacks serialise with the surrounding computation, so the
+host receives segment blocks in simulation order and per-lane record
+order is simply flush order x row order.
+
+``trace`` is a *static* jit argument on every engine entry point: with
+``trace=False`` (the default) none of this module's code is traced and
+the loops lower bitwise onto the unchanged program — the analysis
+gate (`repro.analysis.telemetry_gate`) asserts zero callback custom
+calls appear in the compiled HLO of the untraced engines.
+
+Record layout (int32 x TR_RI + float64 x TR_RF):
+
+===========  ===========================================================
+field        meaning
+===========  ===========================================================
+TR_KIND      `TraceKind` code; -1 rows are unused overlay slots
+TR_RID       request id (-1 for rid-less events: cold-done, churn)
+TR_FN        function id (-1 when not applicable)
+TR_NODE      node id (-1 on the single-node tier; the static cluster
+             tier patches the node in host-side)
+TR_AUX       kind-dependent detail. EXEC: 0 ok / 1 fail-retry /
+             2 fail-exhausted, +4 timeout. CHURN: 1 node came up /
+             0 went down. Arrival-class events: bitfield — 1 cold
+             start begun, 2 queued, 4 shed, 8 overflow-dropped.
+TR_QLEN      queued requests after the event (event node's total)
+TR_BUSY      busy slots after the event (event node)
+TR_WARM      warm idle containers after the event (event node)
+TR_SEQ       per-lane processed-event sequence number (1-based)
+TF_T         simulation time of the event
+TF_DT        execution time (EXEC events; 0 otherwise)
+===========  ===========================================================
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class TraceKind:
+    """Event-kind codes shared by the jitted rails, the Python
+    reference cluster's event log and the span reassembler."""
+    ARRIVAL = 0        # fresh arrival consumed (routed/admitted/parked)
+    EXEC = 1           # an execution finished (any outcome; see AUX)
+    COLD = 2           # a cold container finished warming
+    TIMER = 3          # a keep-alive / re-arm timer fired
+    RETRY = 4          # a retry-rail head fired (re-entry)
+    NODE_ARRIVAL = 5   # a delayed send landed on its node
+    REROUTE = 6        # a churn-drained request re-entered routing
+    CHURN = 7          # a node toggled up/down
+
+    NAMES = ("ARRIVAL", "EXEC", "COLD", "TIMER", "RETRY",
+             "NODE_ARRIVAL", "REROUTE", "CHURN")
+
+
+# int32 record fields
+(TR_KIND, TR_RID, TR_FN, TR_NODE, TR_AUX, TR_QLEN, TR_BUSY, TR_WARM,
+ TR_SEQ) = range(9)
+TR_RI = 9
+# float64 record fields
+TF_T, TF_DT = range(2)
+TR_RF = 2
+
+# TR_AUX bits on arrival-class events (ARRIVAL / RETRY / NODE_ARRIVAL
+# / REROUTE / TIMER)
+AUX_COLD = 1       # the event started a cold container
+AUX_QUEUED = 2     # a request was pushed onto a queue
+AUX_SHED = 4       # a request was shed (terminal)
+AUX_OVERFLOW = 8   # a request was dropped on a full queue (error mode)
+# TR_AUX on EXEC events
+AUX_FAIL_RETRY = 1
+AUX_FAIL_EXHAUSTED = 2
+AUX_TIMEOUT = 4
+
+_FIELDS_I = ("kind", "rid", "fn", "node", "aux", "qlen", "busy",
+             "warm", "seq")
+_FIELDS_F = ("t", "dt")
+
+
+class TraceSink:
+    """Per-collection-scope accumulator of flushed overlay blocks.
+
+    ``blocks`` holds (tr_i, tr_f) pairs of (L, SEG, TR_RI) int32 /
+    (L, SEG, TR_RF) float64 host copies in flush order."""
+
+    def __init__(self):
+        self.blocks: List[Tuple[np.ndarray, np.ndarray]] = []
+
+    def append(self, tr_i: np.ndarray, tr_f: np.ndarray) -> None:
+        self.blocks.append((np.array(tr_i, np.int32),
+                            np.array(tr_f, np.float64)))
+
+    @property
+    def n_lanes(self) -> int:
+        return self.blocks[0][0].shape[0] if self.blocks else 0
+
+    def lane_events(self, lane: int) -> dict:
+        """Per-lane columnar event arrays (unused overlay rows — kind
+        -1 — filtered), in processed-event order."""
+        ii = [bi[lane] for bi, _ in self.blocks]
+        ff = [bf[lane] for _, bf in self.blocks]
+        if not ii:
+            i = np.zeros((0, TR_RI), np.int32)
+            f = np.zeros((0, TR_RF), np.float64)
+        else:
+            i = np.concatenate(ii)
+            f = np.concatenate(ff)
+        keep = i[:, TR_KIND] >= 0
+        i, f = i[keep], f[keep]
+        out = {name: i[:, col].copy()
+               for col, name in enumerate(_FIELDS_I)}
+        out.update({name: f[:, col].copy()
+                    for col, name in enumerate(_FIELDS_F)})
+        return out
+
+
+# active sink — a module global, NOT thread-local: ordered
+# io_callbacks run on JAX-internal runtime threads, so the callback
+# cannot see a sink pinned to the caller's thread. The lock keeps
+# nested/concurrent collect() scopes honest (the runners serialise
+# traced engine calls, so one scope is active at a time).
+_SINK: Optional[TraceSink] = None
+_SCOPE_LOCK = threading.Lock()
+
+
+def _active_sink() -> Optional[TraceSink]:
+    return _SINK
+
+
+@contextmanager
+def collect():
+    """Scope that captures every trace-rail flush issued by engine
+    calls made (and completed — callers must block on the device
+    result inside the scope) within it. Scopes are exclusive: traced
+    engine calls must not run concurrently."""
+    global _SINK
+    sink = TraceSink()
+    with _SCOPE_LOCK:
+        prev, _SINK = _SINK, sink
+        try:
+            yield sink
+        finally:
+            _SINK = prev
+
+
+def _flush_cb(tr_i, tr_f) -> None:
+    sink = _active_sink()
+    if sink is not None:
+        sink.append(np.asarray(tr_i), np.asarray(tr_f))
+
+
+def emit_flush(tr_i, tr_f) -> None:
+    """Flush one segment overlay to the active host sink, *in order*
+    with the surrounding computation. Called from inside the jitted
+    event loops; only traced (``trace=True``) programs contain it."""
+    from jax.experimental import io_callback
+    io_callback(_flush_cb, None, tr_i, tr_f, ordered=True)
+
+
+def merge_events(events: List[dict]) -> dict:
+    """Merge several per-lane event streams into one, stably sorted by
+    (time, sequence) — used by the static cluster tier, where one
+    logical cell is K independent single-node streams."""
+    if not events:
+        return {name: np.zeros((0,),
+                               np.int32 if name in _FIELDS_I
+                               else np.float64)
+                for name in _FIELDS_I + _FIELDS_F}
+    cat = {k: np.concatenate([e[k] for e in events])
+           for k in events[0]}
+    order = np.lexsort((cat["seq"], cat["t"]))
+    return {k: v[order] for k, v in cat.items()}

@@ -316,3 +316,23 @@ def test_cli_quick_runs_lint_gate(tmp_path, capsys):
     assert report["passed"]
     assert set(report["gates"]) == {"deprecation_lint"}
     assert report["schema"] == 1
+
+
+# ------------------------------------------------ telemetry lowering
+def test_telemetry_gate_catches_callback_leak():
+    """Seed: an untraced compiled HLO that leaked the trace rail's
+    io_callback must fail the telemetry_lowering gate; a clean text
+    passes and the positive traced-jaxpr checks hold on HEAD."""
+    from repro.analysis.telemetry_gate import audit_telemetry
+    checks = audit_telemetry({
+        "clean": "HloModule m\nwhile.body { add } ",
+        "leaky": ("HloModule m\ncustom-call(), "
+                  "custom_call_target=\"xla_python_cpu_callback\""),
+    })
+    by = {c["name"]: c for c in checks}
+    assert by["clean:untraced_hlo"]["passed"]
+    assert not by["leaky:untraced_hlo"]["passed"]
+    assert by["leaky:untraced_hlo"]["problems"]
+    # gate is not vacuous: trace=True builds do contain the callback
+    assert by["single_stream:traced_jaxpr"]["passed"]
+    assert by["cluster_stream:traced_jaxpr"]["passed"]
